@@ -1,0 +1,105 @@
+//! Asynchronous push-sum average consensus via window operations
+//! (paper §IV-C, Listing 3).
+//!
+//! Every node owns `x_i^(0)`; the goal is for all nodes to learn the global
+//! average **without any synchronization between neighbors**. Naive
+//! asynchronous gossip is biased; push-sum fixes it by propagating an extra
+//! scalar weight `p` alongside `x` (the extended vector `x_ext = [x; p]`)
+//! with *column-stochastic* (mass-conserving) weights: each node's
+//! `x/p` converges to the unbiased average.
+//!
+//! The asynchronous primitives are exactly the paper's:
+//! `win_create` → loop { `win_accumulate` (with mutex),
+//! `win_update_then_collect` } → `barrier` → `win_free`.
+//! Nodes deliberately run different speeds (per-rank extra work) to
+//! exercise asynchrony.
+//!
+//! Run: `cargo run --release --example async_push_sum`
+
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::topology::{builders, WeightMatrix};
+
+const N: usize = 8;
+const D: usize = 4; // payload dimension
+const ITERS: usize = 150;
+
+fn main() -> anyhow::Result<()> {
+    let g = builders::exponential_two(N);
+    let w = WeightMatrix::uniform_pull(&g);
+    let cfg = SpmdConfig::new(N).with_topology(g, w);
+
+    let results = run_spmd(cfg, |ctx| {
+        let rank = ctx.rank();
+        // Node-local initial vector: deterministic, distinct per rank.
+        let x0: Vec<f32> = (0..D).map(|j| (rank * D + j) as f32).collect();
+
+        // x_ext = [x; p] with the push-sum weight p initialized to 1
+        // (Listing 3, lines 1-3).
+        let mut x_ext: Vec<f32> = x0.clone();
+        x_ext.push(1.0);
+        ctx.win_create("x_ext", &x_ext, /*zero_init=*/ true)?;
+
+        // Push-style weights: split mass evenly over out-neighbors + self
+        // (Listing 3, lines 6-8). Column-stochastic by construction.
+        let out = ctx.out_neighbor_ranks();
+        let self_weight = 1.0 / (out.len() + 1) as f64;
+        let dst_weights: Vec<(usize, f64)> =
+            out.iter().map(|&r| (r, self_weight)).collect();
+
+        for i in 0..ITERS {
+            // Simulated speed heterogeneity: per-rank pacing, so windows
+            // fill asynchronously but with bounded delay
+            // (100 us + rank-dependent jitter). Without it, the 1-core
+            // scheduler can run one node's whole loop before its peers get
+            // CPU time — the unbounded-delay regime where push-sum's weight
+            // decays to floating-point zero before any mass arrives. Real
+            // clusters (and BlueFog's MPI windows) have rough fairness.
+            std::thread::sleep(std::time::Duration::from_micros(100 + 37 * rank as u64 % 100));
+            // Push a share of (x, p) into every out-neighbor's window
+            // buffer; the mutex prevents read/write races (require_mutex).
+            ctx.win_accumulate("x_ext", &mut x_ext, self_weight, &dst_weights)?;
+            // Drain whatever neighbors have pushed so far; reset the
+            // buffers so mass is counted exactly once.
+            ctx.win_update_then_collect("x_ext", &mut x_ext)?;
+            // Invariant check (any time, any node): p stays positive.
+            anyhow::ensure!(
+                x_ext[D] > 0.0,
+                "push-sum weight collapsed at iter {i} (unbounded asynchrony)"
+            );
+        }
+
+        // Different processes may end at different times (Listing 3 line 16).
+        ctx.barrier()?;
+        ctx.win_update_then_collect("x_ext", &mut x_ext)?;
+        ctx.win_free("x_ext")?;
+
+        // Unbiased estimate: y = x / p (eq. (21)).
+        let p = x_ext[D];
+        let y: Vec<f32> = x_ext[..D].iter().map(|v| v / p).collect();
+        Ok((y, p))
+    })?;
+
+    // True average of the initial vectors.
+    let want: Vec<f32> = (0..D)
+        .map(|j| (0..N).map(|r| (r * D + j) as f32).sum::<f32>() / N as f32)
+        .collect();
+    println!("true average: {want:?}");
+    let mut worst = 0.0f64;
+    for (rank, (y, p)) in results.iter().enumerate() {
+        let err: f64 = y
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (*a as f64 - *b as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        println!("rank {rank}: y = {y:?} (p = {p:.3}), error {err:.2e}");
+        worst = worst.max(err);
+    }
+    // Mass conservation across the network: sum of p must remain N.
+    let p_total: f64 = results.iter().map(|(_, p)| *p as f64).sum();
+    println!("sum of push-sum weights: {p_total:.6} (expected {N})");
+    assert!((p_total - N as f64).abs() < 1e-3, "push-sum mass leaked");
+    assert!(worst < 1e-3, "asynchronous push-sum did not reach consensus: {worst}");
+    println!("async_push_sum OK");
+    Ok(())
+}

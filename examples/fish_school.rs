@@ -1,0 +1,176 @@
+//! Mobile adaptive network: the fish-school simulation (paper §IV-B,
+//! Figs. 5–6).
+//!
+//! Each fish is one SPMD node. Neighborhoods are *spatial* — fish within a
+//! distance threshold — so the topology changes every iteration as the
+//! school moves. Each fish holds a noisy local measurement of the distance
+//! and azimuth to a predator, and the school estimates the predator's
+//! position `w*` by decentralized SGD over the time-varying
+//! Metropolis–Hastings topology (paper Listing 2), then **disperses** from
+//! it, and — once a second predator appears stationary — **encircles** it.
+//!
+//! Position exchange uses `neighbor_allgather`; the estimate uses
+//! dynamic `neighbor_allreduce` with per-iteration `src/dst` weights.
+//!
+//! Run: `cargo run --release --example fish_school`
+
+use bluefog::collective::neighbor::NeighborWeights;
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::tensor::axpy;
+use bluefog::topology::{builders, WeightMatrix};
+
+const N_FISH: usize = 16;
+const THRESHOLD: f64 = 3.0; // neighborhood radius
+const GAMMA: f32 = 0.25; // estimation step size
+
+/// Metropolis–Hastings weights from the current spatial neighborhoods
+/// (paper: "src_weights is updated at each iteration through the neighbor
+/// location collections function and Metropolis-Hastings Rule").
+fn mh_weights(my_rank: usize, neighbors: &[usize], degrees: &[usize]) -> (f64, Vec<(usize, f64)>) {
+    let my_deg = degrees[my_rank];
+    let mut src = Vec::with_capacity(neighbors.len());
+    let mut total = 0.0;
+    for &j in neighbors {
+        let w = 1.0 / (1 + my_deg.max(degrees[j])) as f64;
+        src.push((j, w));
+        total += w;
+    }
+    (1.0 - total, src)
+}
+
+/// All pairwise spatial neighborhoods from gathered positions.
+fn neighborhoods(positions: &[(f64, f64)]) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let n = positions.len();
+    let mut nbrs = vec![vec![]; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                let dx = positions[i].0 - positions[j].0;
+                let dy = positions[i].1 - positions[j].1;
+                if (dx * dx + dy * dy).sqrt() <= THRESHOLD {
+                    nbrs[i].push(j);
+                }
+            }
+        }
+    }
+    let degrees = nbrs.iter().map(|v| v.len()).collect();
+    (nbrs, degrees)
+}
+
+fn main() -> anyhow::Result<()> {
+    // Fully-connected graph as the *window* for allgather of positions (the
+    // spatial neighborhood is applied on top of the gathered locations).
+    let g = builders::fully_connected(N_FISH);
+    let w = WeightMatrix::metropolis_hastings(&g);
+    let cfg = SpmdConfig::new(N_FISH).with_topology(g, w);
+
+    let results = run_spmd(cfg, |ctx| {
+        let rank = ctx.rank();
+        let n = ctx.size();
+        // Initial school: a tight cluster around the origin.
+        let mut pos = (
+            (rank % 4) as f64 * 1.2 - 1.8 + 0.1 * ctx.rng.normal(),
+            (rank / 4) as f64 * 1.2 - 1.8 + 0.1 * ctx.rng.normal(),
+        );
+        let predator = (6.0f64, 5.0f64);
+        let mut w_est = vec![0.0f32; 2]; // local estimate of predator position
+        let mut spread_log = vec![];
+        let mut err_log = vec![];
+
+        for iter in 0..120 {
+            // 1. Collect all fish locations (system-level neighbor_allgather
+            //    over the fully-connected window).
+            let mine = vec![pos.0 as f32, pos.1 as f32];
+            let gathered = ctx.neighbor_allgather(&mine)?;
+            let mut positions = vec![(0.0f64, 0.0f64); n];
+            positions[rank] = pos;
+            for (src, p) in &gathered {
+                positions[*src] = (p[0] as f64, p[1] as f64);
+            }
+
+            // 2. Dynamic spatial topology + Metropolis-Hastings weights.
+            let (nbrs, degrees) = neighborhoods(&positions);
+            let (self_w, src_w) = mh_weights(rank, &nbrs[rank], &degrees);
+
+            // 3. Noisy local observation: distance + direction to predator.
+            let dx = predator.0 - pos.0;
+            let dy = predator.1 - pos.1;
+            let dist = (dx * dx + dy * dy).sqrt();
+            let theta = dy.atan2(dx) + 0.05 * ctx.rng.normal();
+            let d_obs = dist + 0.1 * ctx.rng.normal();
+            let u = [theta.cos() as f32, theta.sin() as f32];
+
+            // 4. D-SGD step on f_i(w) = 0.5 (d - u^T (w - x_i))^2.
+            let proj = u[0] * (w_est[0] - pos.0 as f32) + u[1] * (w_est[1] - pos.1 as f32);
+            let resid = proj - d_obs as f32;
+            let grad = [resid * u[0], resid * u[1]];
+            axpy(-GAMMA, &grad, &mut w_est);
+
+            // 5. Partial averaging over the *time-varying* topology
+            //    (pull-style dynamic neighbor_allreduce, paper Listing 2).
+            let weights = NeighborWeights::push_pull(
+                self_w,
+                src_w.clone(),
+                src_w.iter().map(|&(r, _)| (r, 1.0)).collect(),
+            );
+            w_est = ctx.neighbor_allreduce_dynamic(&w_est, &weights)?;
+
+            // 6. Behavior: disperse for the first 60 iters, then encircle.
+            let to_pred = (w_est[0] as f64 - pos.0, w_est[1] as f64 - pos.1);
+            let dist_est = (to_pred.0 * to_pred.0 + to_pred.1 * to_pred.1).sqrt().max(1e-6);
+            if iter < 60 {
+                // escape: move away from the estimated predator position.
+                pos.0 -= 0.08 * to_pred.0 / dist_est;
+                pos.1 -= 0.08 * to_pred.1 / dist_est;
+            } else {
+                // encircle: approach a ring of radius 2 around the estimate.
+                let target_r = 2.0;
+                let radial = dist_est - target_r;
+                pos.0 += 0.10 * radial * to_pred.0 / dist_est;
+                pos.1 += 0.10 * radial * to_pred.1 / dist_est;
+                // tangential motion to spread around the ring
+                pos.0 += 0.05 * (-to_pred.1 / dist_est);
+                pos.1 += 0.05 * (to_pred.0 / dist_est);
+            }
+
+            // Logs: school spread and estimation error.
+            if iter % 20 == 19 {
+                let cx: f64 = positions.iter().map(|p| p.0).sum::<f64>() / n as f64;
+                let cy: f64 = positions.iter().map(|p| p.1).sum::<f64>() / n as f64;
+                let spread = positions
+                    .iter()
+                    .map(|p| ((p.0 - cx).powi(2) + (p.1 - cy).powi(2)).sqrt())
+                    .sum::<f64>()
+                    / n as f64;
+                let err = ((w_est[0] as f64 - predator.0).powi(2)
+                    + (w_est[1] as f64 - predator.1).powi(2))
+                .sqrt();
+                spread_log.push(spread);
+                err_log.push(err);
+            }
+        }
+        // Final ring radius around the true predator.
+        let r_final = ((pos.0 - predator.0).powi(2) + (pos.1 - predator.1).powi(2)).sqrt();
+        Ok((spread_log, err_log, r_final))
+    })?;
+
+    let (spread, err, _) = &results[0];
+    println!("# iter-window  school-spread  predator-estimate-error (rank 0)");
+    for (i, (s, e)) in spread.iter().zip(err).enumerate() {
+        println!("{:>4}..{:<4}   {s:10.3}     {e:10.3}", i * 20, i * 20 + 19);
+    }
+    let radii: Vec<f64> = results.iter().map(|(_, _, r)| *r).collect();
+    let mean_r: f64 = radii.iter().sum::<f64>() / radii.len() as f64;
+    let spread_r: f64 =
+        radii.iter().map(|r| (r - mean_r).abs()).fold(0.0, f64::max);
+    println!("final encircle radius: mean {mean_r:.2} (target 2.0), max dev {spread_r:.2}");
+
+    // The estimate must converge despite the dynamic topology (Fig. 5/6).
+    assert!(err.last().unwrap() < &0.5, "predator estimate did not converge: {err:?}");
+    // Disperse phase (windows 0..2 cover iters 0..59) must grow the spread.
+    assert!(spread[2] > spread[0], "school did not disperse: {spread:?}");
+    // Encircle phase must put every fish near the radius-2 ring.
+    assert!((mean_r - 2.0).abs() < 0.7, "school did not encircle (mean radius {mean_r})");
+    println!("fish_school OK");
+    Ok(())
+}

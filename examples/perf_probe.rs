@@ -1,0 +1,19 @@
+// L3 hot-path probe: wall time of large neighbor_allreduce + training step marshalling.
+use bluefog::launcher::{run_spmd, SpmdConfig};
+fn main() -> anyhow::Result<()> {
+    let n = 8;
+    let numel = 1 << 20; // 4 MB
+    let reps = 30;
+    let t0 = std::time::Instant::now();
+    run_spmd(SpmdConfig::new(n).with_topo_check(false), move |ctx| {
+        let data = vec![1.0f32; numel];
+        for _ in 0..reps {
+            let out = ctx.neighbor_allreduce(&data)?;
+            std::hint::black_box(&out);
+        }
+        Ok(())
+    })?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("neighbor_allreduce 4MB x{reps} x{n} nodes: total {:.3}s, {:.2} ms/op/node, {:.2} GB/s effective", dt, dt*1e3/reps as f64, (reps*n*3*numel*4) as f64/dt/1e9);
+    Ok(())
+}

@@ -1,0 +1,61 @@
+"""Pallas kernel: fused momentum-SGD update.
+
+One VMEM pass computes ``m' = beta*m + g`` and ``x' = x - lr*m'`` instead of
+three elementwise kernels (the fusion CUDA training stacks get from fused
+optimizers). lr/beta enter as a tiny ``[2]`` f32 operand replicated to every
+block, so the same compiled artifact serves any schedule — the Rust
+coordinator owns the learning-rate policy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 16384
+
+
+def _fused_sgd_kernel(h_ref, x_ref, g_ref, m_ref, xo_ref, mo_ref):
+    lr = h_ref[0]
+    beta = h_ref[1]
+    m_new = beta * m_ref[...] + g_ref[...]
+    xo_ref[...] = x_ref[...] - lr * m_new
+    mo_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_sgd(x, grad, momentum, lr_beta, *, block=DEFAULT_BLOCK):
+    """Fused momentum update.
+
+    Args:
+      x, grad, momentum: ``[d]`` tensors of the same dtype.
+      lr_beta: ``[2]`` f32 tensor ``[lr, beta]``.
+      block: flat tile size.
+
+    Returns:
+      ``(x_new, m_new)``.
+    """
+    d = x.shape[0]
+    assert grad.shape == (d,) and momentum.shape == (d,)
+    assert lr_beta.shape == (2,)
+    grid = (pl.cdiv(d, block),)
+    return pl.pallas_call(
+        _fused_sgd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((d,), x.dtype),
+        ],
+        interpret=True,
+    )(lr_beta.astype(jnp.float32), x, grad, momentum)

@@ -1,0 +1,107 @@
+"""Pallas kernel: MXU-tiled matmul.
+
+The transformer MLP's GEMM, tiled for the TPU systolic array: 128x128
+output tiles with a k-loop grid axis accumulating in the output block
+(f32). This is the TPU re-think of the paper's cuBLAS/tensor-core GEMMs
+(DESIGN.md §Hardware-Adaptation): ``BlockSpec`` expresses the HBM<->VMEM
+schedule that CUDA expresses with threadblocks + shared memory.
+
+Working set per grid step at 128^3: 3 tiles x 64 KB = 192 KB of VMEM,
+leaving room for double buffering; the MXU sees one 128x128x128 multiply
+per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k"))
+def matmul(a, b, *, tile_m=TILE_M, tile_n=TILE_N, tile_k=TILE_K):
+    """Tiled ``a @ b`` with f32 accumulation.
+
+    Args:
+      a: ``[m, k]``; b: ``[k, n]`` (f32 or bf16).
+
+    Returns:
+      ``[m, n]`` in ``a``'s dtype.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    # Zero-pad to tile multiples: interpret-mode pallas pads out-of-bounds
+    # *loads* with NaN (to catch padding bugs), which would poison the k-axis
+    # accumulation. Padding with explicit zeros keeps edge tiles exact.
+    mp, kp, np_ = (
+        pl.cdiv(m, tile_m) * tile_m,
+        pl.cdiv(k, tile_k) * tile_k,
+        pl.cdiv(n, tile_n) * tile_n,
+    )
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // tile_m, np_ // tile_n, kp // tile_k)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul_diff(a, b):
+    """Differentiable wrapper: the interpret-mode kernel's grid accumulation
+    (`program_id` inside the block) has no JVP rule, so backward re-uses the
+    kernel itself: dA = dY @ B^T, dB = A^T @ dY."""
+    return matmul(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_bwd(res, dy):
+    a, b = res
+    da = matmul(dy, b.T)
+    db = matmul(a.T, dy)
+    return da, db
+
+
+matmul_diff.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def mxu_utilization_estimate(m, k, n, tile=128):
+    """Fraction of MXU issue slots doing useful work (edge-tile padding
+    accounted). Used for the DESIGN.md §Perf roofline estimate."""
+    import math
+
+    tiles = math.ceil(m / tile) * math.ceil(n / tile) * math.ceil(k / tile)
+    useful = m * k * n
+    issued = tiles * tile**3
+    return useful / issued

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here; pytest
+checks `assert_allclose(kernel(...), ref(...))` across shapes and dtypes
+(hypothesis sweeps). The Rust integration tests check the same numerics a
+third time through the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+
+
+def partial_average_ref(x, neighbors, weights):
+    """Weighted combine: ``w[0] * x + sum_k w[k+1] * neighbors[k]``.
+
+    Args:
+      x: ``[d]`` local tensor.
+      neighbors: ``[k, d]`` stacked neighbor tensors.
+      weights: ``[k+1]`` combine weights, self weight first.
+
+    Returns:
+      ``[d]`` combined tensor (paper eq. (5)).
+    """
+    x = jnp.asarray(x)
+    neighbors = jnp.asarray(neighbors)
+    weights = jnp.asarray(weights)
+    acc = weights[0] * x
+    if neighbors.shape[0]:
+        acc = acc + jnp.tensordot(weights[1:], neighbors, axes=1)
+    return acc.astype(x.dtype)
+
+
+def fused_sgd_ref(x, grad, momentum, lr, beta):
+    """Fused momentum-SGD update.
+
+    ``m' = beta * m + g``; ``x' = x - lr * m'``.
+
+    Returns ``(x', m')``.
+    """
+    x = jnp.asarray(x)
+    m_new = beta * jnp.asarray(momentum) + jnp.asarray(grad)
+    x_new = x - lr * m_new
+    return x_new.astype(x.dtype), m_new.astype(x.dtype)
+
+
+def matmul_ref(a, b):
+    """Plain matmul with f32 accumulation."""
+    return jnp.matmul(
+        jnp.asarray(a), jnp.asarray(b), preferred_element_type=jnp.float32
+    ).astype(jnp.asarray(a).dtype)

@@ -1,0 +1,197 @@
+"""L2: the training computation — a decoder-only transformer LM in JAX.
+
+The forward/backward step is the per-node compute of the paper's DNN
+experiments (the ImageNet/BERT workloads, substituted per DESIGN.md with a
+config-scalable char-level LM). The MLP blocks route their GEMMs through
+the L1 Pallas matmul kernel when ``use_pallas=True``, so the kernel lowers
+into the same HLO artifact the Rust runtime executes.
+
+Parameters travel as a *list* of named arrays (stable positional order) so
+the Rust coordinator can marshal flat f32 buffers against the manifest —
+see ``aot.py`` and ``rust/src/runtime/manifest.rs``.
+
+Presets here must stay in sync with ``rust/src/config.rs::PRESETS``.
+"""
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul_diff as pallas_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    batch: int
+
+    @property
+    def d_ff(self):
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "nano": ModelConfig("nano", vocab=96, d_model=32, n_layers=1, n_heads=2, seq=32, batch=4),
+    "tiny": ModelConfig("tiny", vocab=96, d_model=64, n_layers=2, n_heads=2, seq=64, batch=8),
+    "small": ModelConfig("small", vocab=96, d_model=128, n_layers=4, n_heads=4, seq=128, batch=8),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the manifest contract with Rust."""
+    d, ff, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
+    specs = [("p.embed", (v, d)), ("p.pos", (t, d))]
+    for i in range(cfg.n_layers):
+        p = f"p.l{i}."
+        specs += [
+            (p + "ln1_s", (d,)),
+            (p + "ln1_b", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2_s", (d,)),
+            (p + "ln2_b", (d,)),
+            (p + "w1", (d, ff)),
+            (p + "b1", (ff,)),
+            (p + "w2", (ff, d)),
+            (p + "b2", (d,)),
+        ]
+    specs += [("p.lnf_s", (d,)), ("p.lnf_b", (d,)), ("p.head", (d, v))]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Scaled-normal init, deterministic in `seed`."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_s",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", "b1", "b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = (1.0 / fan_in) ** 0.5
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _mm(a2d, w, use_pallas):
+    """[N, d_in] @ [d_in, d_out] through the Pallas kernel when requested."""
+    if use_pallas:
+        return pallas_matmul(a2d, w)
+    return jnp.matmul(a2d, w, preferred_element_type=jnp.float32)
+
+
+def forward(params: List[jnp.ndarray], tokens, cfg: ModelConfig, use_pallas=False):
+    """Logits ``[B, T, V]`` for int32 tokens ``[B, T]``."""
+    specs = param_specs(cfg)
+    p = {name: arr for (name, _), arr in zip(specs, params)}
+    b, t = tokens.shape
+    d, h = cfg.d_model, cfg.n_heads
+    hd = cfg.head_dim
+
+    x = p["p.embed"][tokens] + p["p.pos"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    for i in range(cfg.n_layers):
+        pre = f"p.l{i}."
+        # Attention block.
+        xn = _layer_norm(x, p[pre + "ln1_s"], p[pre + "ln1_b"])
+        flat = xn.reshape(b * t, d)
+        q = _mm(flat, p[pre + "wq"], use_pallas).reshape(b, t, h, hd)
+        k = _mm(flat, p[pre + "wk"], use_pallas).reshape(b, t, h, hd)
+        v = _mm(flat, p[pre + "wv"], use_pallas).reshape(b, t, h, hd)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd**0.5)
+        att = jnp.where(mask[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * t, d)
+        x = x + _mm(ctx, p[pre + "wo"], use_pallas).reshape(b, t, d)
+        # MLP block (the GEMM hot-spot — Pallas kernel target).
+        xn = _layer_norm(x, p[pre + "ln2_s"], p[pre + "ln2_b"])
+        flat = xn.reshape(b * t, d)
+        hdn = jax.nn.gelu(_mm(flat, p[pre + "w1"], use_pallas) + p[pre + "b1"])
+        x = x + (_mm(hdn, p[pre + "w2"], use_pallas) + p[pre + "b2"]).reshape(b, t, d)
+
+    x = _layer_norm(x, p["p.lnf_s"], p["p.lnf_b"])
+    return _mm(x.reshape(b * t, d), p["p.head"], use_pallas).reshape(b, t, cfg.vocab)
+
+
+def loss_fn(params, tokens, targets, cfg: ModelConfig, use_pallas=False):
+    """Mean next-token cross-entropy."""
+    logits = forward(params, tokens, cfg, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step_fn(cfg: ModelConfig, use_pallas=False):
+    """Returns f(params..., tokens, targets) -> (loss, *grads) for AOT."""
+
+    def step(*args):
+        n_params = len(param_specs(cfg))
+        params = list(args[:n_params])
+        tokens, targets = args[n_params], args[n_params + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(ps, tokens, targets, cfg, use_pallas)
+        )(params)
+        return (loss, *grads)
+
+    return step
+
+
+def eval_loss_fn(cfg: ModelConfig, use_pallas=False):
+    """Returns f(params..., tokens, targets) -> (loss, accuracy) for AOT."""
+
+    def evaluate(*args):
+        n_params = len(param_specs(cfg))
+        params = list(args[:n_params])
+        tokens, targets = args[n_params], args[n_params + 1]
+        logits = forward(params, tokens, cfg, use_pallas)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+        return (jnp.mean(nll), acc)
+
+    return evaluate
+
+
+def linreg_grad_fn():
+    """Decentralized linear regression (paper eq. (15)/(16)):
+    f(A, x, b) -> (grad, loss) with grad = A^T (A x - b) / m."""
+
+    def grad(a_mat, x, b_vec):
+        r = a_mat @ x - b_vec
+        m = a_mat.shape[0]
+        return (a_mat.T @ r / m, 0.5 * jnp.mean(r * r))
+
+    return grad
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_loss(cfg: ModelConfig, use_pallas=False):
+    return jax.jit(lambda params, tok, tgt: loss_fn(params, tok, tgt, cfg, use_pallas))

@@ -1,0 +1,94 @@
+"""AOT pipeline checks: artifacts exist, manifests are consistent, HLO text
+has the expected entry computation."""
+
+import os
+
+import pytest
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, ".stamp")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def parse_manifest(path):
+    inputs, outputs, meta = [], [], {}
+    with open(path) as f:
+        for line in f:
+            fields = line.split()
+            if not fields or fields[0].startswith("#"):
+                continue
+            if fields[0] == "meta":
+                meta[fields[1]] = " ".join(fields[2:])
+            elif fields[0] == "input":
+                inputs.append(tuple(fields[1:]))
+            elif fields[0] == "output":
+                outputs.append(tuple(fields[1:]))
+    return inputs, outputs, meta
+
+
+def artifacts():
+    return sorted(f[: -len(".hlo.txt")] for f in os.listdir(ART) if f.endswith(".hlo.txt"))
+
+
+def test_expected_artifacts_present():
+    names = artifacts()
+    assert "train_step_nano" in names
+    assert "train_step_tiny" in names
+    assert "train_step_nano_pallas" in names
+    assert "linreg_grad" in names
+    assert any(n.startswith("combine_k") for n in names)
+    assert any(n.startswith("fused_sgd_") for n in names)
+    assert any(n.startswith("matmul_") for n in names)
+
+
+def test_every_artifact_has_manifest():
+    for name in artifacts():
+        man = os.path.join(ART, f"{name}.manifest")
+        assert os.path.exists(man), f"missing manifest for {name}"
+        inputs, outputs, _ = parse_manifest(man)
+        assert inputs and outputs, name
+
+
+def test_hlo_text_parses_structurally():
+    for name in artifacts():
+        with open(os.path.join(ART, f"{name}.hlo.txt")) as f:
+            text = f.read()
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+
+
+def test_train_step_manifest_matches_model():
+    from compile import model
+
+    cfg = model.PRESETS["nano"]
+    inputs, outputs, meta = parse_manifest(os.path.join(ART, "train_step_nano.manifest"))
+    specs = model.param_specs(cfg)
+    # params..., tokens, targets
+    assert len(inputs) == len(specs) + 2
+    for (mname, mdtype, mdims), (sname, sshape) in zip(inputs, specs):
+        assert mname == sname
+        assert mdtype == "f32"
+        want = "-" if not sshape else "x".join(str(d) for d in sshape)
+        assert mdims == want, (mname, mdims, want)
+    assert inputs[-2][0] == "tokens" and inputs[-2][1] == "i32"
+    # loss + one grad per param
+    assert len(outputs) == 1 + len(specs)
+    assert outputs[0][0] == "loss"
+    assert int(meta["param_count"]) == model.param_count(cfg)
+
+
+def test_hlo_entry_parameter_count_matches_manifest():
+    import re
+
+    for name in ["train_step_nano", "combine_k2_d16384", "linreg_grad"]:
+        inputs, _, _ = parse_manifest(os.path.join(ART, f"{name}.manifest"))
+        with open(os.path.join(ART, f"{name}.hlo.txt")) as f:
+            text = f.read()
+        entry = text[text.index("ENTRY") :]
+        # ENTRY is the last computation in the dump; count its parameter
+        # instructions.
+        n_params = len(re.findall(r"parameter\(\d+\)", entry))
+        assert n_params == len(inputs), (name, n_params, len(inputs))

@@ -1,0 +1,149 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes, per the testing contract: the kernel
+path must be bit-compatible (up to accumulation tolerance) with ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_sgd import fused_sgd
+from compile.kernels.matmul import matmul, matmul_diff, mxu_utilization_estimate
+from compile.kernels.partial_average import partial_average, vmem_bytes
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=700),
+    k=st.integers(min_value=0, max_value=6),
+    dtype_i=st.integers(min_value=0, max_value=1),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partial_average_matches_ref(d, k, dtype_i, seed):
+    dtype = DTYPES[dtype_i]
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (d,), dtype)
+    nb = rand(rng, (k, d), dtype)
+    w = jnp.asarray(rng.dirichlet(np.ones(k + 1)), jnp.float32)
+    got = partial_average(x, nb, w, block=128)
+    want = ref.partial_average_ref(x, nb, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=900),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_sgd_matches_ref(d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (d,), jnp.float32)
+    g = rand(rng, (d,), jnp.float32)
+    m = rand(rng, (d,), jnp.float32)
+    lr, beta = float(rng.uniform(1e-4, 1.0)), float(rng.uniform(0.0, 0.999))
+    xo, mo = fused_sgd(x, g, m, jnp.array([lr, beta], jnp.float32), block=256)
+    rx, rm = ref.fused_sgd_ref(x, g, m, lr, beta)
+    np.testing.assert_allclose(np.asarray(xo), np.asarray(rx), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(rm), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=200),
+    n=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (m, k), jnp.float32)
+    b = rand(rng, (k, n), jnp.float32)
+    got = matmul(a, b, tile_m=64, tile_n=64, tile_k=64)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16_vs_f32_reference():
+    rng = np.random.default_rng(0)
+    a = rand(rng, (256, 128), jnp.bfloat16)
+    b = rand(rng, (128, 256), jnp.bfloat16)
+    got = matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_matmul_diff_gradients_match_jnp():
+    rng = np.random.default_rng(1)
+    a = rand(rng, (64, 32), jnp.float32)
+    b = rand(rng, (32, 48), jnp.float32)
+
+    def f_pallas(a, b):
+        return jnp.sum(matmul_diff(a, b) ** 2)
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.matmul(a, b) ** 2)
+
+    ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga_p), np.asarray(ga_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb_p), np.asarray(gb_r), rtol=1e-4, atol=1e-4)
+
+
+def test_partial_average_degenerate_no_neighbors():
+    x = jnp.arange(130, dtype=jnp.float32)
+    nb = jnp.zeros((0, 130), jnp.float32)
+    w = jnp.array([1.0], jnp.float32)
+    out = partial_average(x, nb, w, block=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+
+
+def test_partial_average_doubly_stochastic_preserves_mean():
+    # The combine with convex weights keeps values in the convex hull.
+    rng = np.random.default_rng(2)
+    x = rand(rng, (512,), jnp.float32)
+    nb = rand(rng, (3, 512), jnp.float32)
+    w = jnp.array([0.25, 0.25, 0.25, 0.25], jnp.float32)
+    out = np.asarray(partial_average(x, nb, w))
+    stacked = np.concatenate([np.asarray(x)[None], np.asarray(nb)], axis=0)
+    assert (out <= stacked.max(axis=0) + 1e-5).all()
+    assert (out >= stacked.min(axis=0) - 1e-5).all()
+
+
+def test_vmem_estimate_within_budget():
+    # k=8 neighbors at the default block: comfortably under 16 MB VMEM.
+    assert vmem_bytes(8) < 16 * 2**20 / 8
+
+
+def test_mxu_utilization_estimate():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert 0.4 < mxu_utilization_estimate(100, 128, 128) < 1.0
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_partial_average_weights_linear(k):
+    # Linearity: combine(x, nb, 2w) == 2 * combine(x, nb, w).
+    rng = np.random.default_rng(3)
+    x = rand(rng, (256,), jnp.float32)
+    nb = rand(rng, (k, 256), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 1, k + 1), jnp.float32)
+    one = np.asarray(partial_average(x, nb, w))
+    two = np.asarray(partial_average(x, nb, 2.0 * w))
+    np.testing.assert_allclose(two, 2.0 * one, rtol=1e-5, atol=1e-5)

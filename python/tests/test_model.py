@@ -1,0 +1,123 @@
+"""L2 model checks: shapes, gradient sanity, learnability, pallas parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), jnp.int32)
+    return tokens, targets
+
+
+def test_param_specs_count_matches_init():
+    for name, cfg in model.PRESETS.items():
+        params = model.init_params(cfg)
+        specs = model.param_specs(cfg)
+        assert len(params) == len(specs), name
+        for p, (_, shape) in zip(params, specs):
+            assert p.shape == shape
+
+
+def test_param_count_matches_rust_formula():
+    # Mirrors rust/src/config.rs::ModelPreset::param_count.
+    cfg = model.PRESETS["tiny"]
+    d, ff = cfg.d_model, 4 * cfg.d_model
+    per_layer = 2 * d + 4 * d * d + 2 * d + d * ff + ff + ff * d + d
+    expected = cfg.vocab * d + cfg.seq * d + cfg.n_layers * per_layer + 2 * d + d * cfg.vocab
+    assert model.param_count(cfg) == expected
+
+
+def test_forward_shapes_and_loss_near_uniform_at_init():
+    cfg = model.PRESETS["nano"]
+    params = model.init_params(cfg)
+    tokens, targets = batch(cfg)
+    logits = model.forward(params, tokens, cfg)
+    assert logits.shape == (cfg.batch, cfg.seq, cfg.vocab)
+    loss = model.loss_fn(params, tokens, targets, cfg)
+    # Roughly log(V) at random init.
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+def test_causality():
+    """Changing future tokens must not change past logits."""
+    cfg = model.PRESETS["nano"]
+    params = model.init_params(cfg)
+    tokens, _ = batch(cfg)
+    logits_a = model.forward(params, tokens, cfg)
+    tokens_b = tokens.at[:, -1].set((tokens[:, -1] + 1) % cfg.vocab)
+    logits_b = model.forward(params, tokens_b, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits_a[:, :-1]), np.asarray(logits_b[:, :-1]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_train_step_outputs_loss_and_grads():
+    cfg = model.PRESETS["nano"]
+    params = model.init_params(cfg)
+    tokens, targets = batch(cfg)
+    step = model.train_step_fn(cfg)
+    outs = step(*params, tokens, targets)
+    assert len(outs) == 1 + len(params)
+    assert np.isfinite(float(outs[0]))
+    for g, p in zip(outs[1:], params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_sgd_reduces_loss():
+    cfg = model.PRESETS["nano"]
+    params = model.init_params(cfg)
+    tokens, targets = batch(cfg)
+    step = jax.jit(model.train_step_fn(cfg))
+    first = None
+    for _ in range(30):
+        outs = step(*params, tokens, targets)
+        loss, grads = float(outs[0]), outs[1:]
+        if first is None:
+            first = loss
+        params = [p - 0.5 * g for p, g in zip(params, grads)]
+    assert loss < first - 0.5, f"loss did not decrease: {first} -> {loss}"
+
+
+def test_pallas_forward_matches_jnp():
+    cfg = model.PRESETS["nano"]
+    params = model.init_params(cfg)
+    tokens, targets = batch(cfg)
+    loss_jnp = float(model.loss_fn(params, tokens, targets, cfg, use_pallas=False))
+    loss_pallas = float(model.loss_fn(params, tokens, targets, cfg, use_pallas=True))
+    assert abs(loss_jnp - loss_pallas) < 1e-3, (loss_jnp, loss_pallas)
+
+
+def test_pallas_grads_match_jnp():
+    cfg = model.PRESETS["nano"]
+    params = model.init_params(cfg)
+    tokens, targets = batch(cfg)
+    g_jnp = jax.grad(lambda ps: model.loss_fn(ps, tokens, targets, cfg, False))(params)
+    g_pal = jax.grad(lambda ps: model.loss_fn(ps, tokens, targets, cfg, True))(params)
+    for a, b in zip(g_jnp, g_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-3)
+
+
+def test_eval_fn_accuracy_bounds():
+    cfg = model.PRESETS["nano"]
+    params = model.init_params(cfg)
+    tokens, targets = batch(cfg)
+    loss, acc = model.eval_loss_fn(cfg)(*params, tokens, targets)
+    assert 0.0 <= float(acc) <= 1.0
+    assert np.isfinite(float(loss))
+
+
+def test_linreg_grad_matches_closed_form():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(8), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(32), jnp.float32)
+    grad, loss = model.linreg_grad_fn()(a, x, b)
+    want = np.asarray(a).T @ (np.asarray(a) @ np.asarray(x) - np.asarray(b)) / 32
+    np.testing.assert_allclose(np.asarray(grad), want, rtol=1e-5, atol=1e-5)
+    assert float(loss) >= 0.0

@@ -1,0 +1,73 @@
+//! Ablation A4 — hierarchical vs flat neighbor allreduce (paper §V-B,
+//! Fig. 7/10).
+//!
+//! Measures the executed virtual time of `neighbor_allreduce` (flat, over
+//! the machine-blind exponential graph) vs `hierarchical_neighbor_allreduce`
+//! (intra-machine ring + machine-level exchange + broadcast) as the number
+//! of machines grows with 4 ranks each. The hierarchical variant pays fast
+//! NVLink prices for most of its steps, so it wins once several machines
+//! are involved and inter-machine bandwidth dominates.
+//!
+//! Run: `cargo bench --bench ablation_hierarchical`
+
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::simnet::NetworkModel;
+use bluefog::topology::{builders, WeightMatrix};
+
+const RANKS_PER_MACHINE: usize = 4;
+const NUMEL: usize = 262_144; // 1 MB
+
+fn measure(machines: usize, hierarchical: bool) -> f64 {
+    let n = machines * RANKS_PER_MACHINE;
+    let g = builders::exponential_two(n);
+    let w = WeightMatrix::uniform_pull(&g);
+    let cfg = SpmdConfig::new(n)
+        .with_net(NetworkModel::aws_p3(RANKS_PER_MACHINE))
+        .with_topology(g, w)
+        .with_topo_check(false);
+    let per_rank = run_spmd(cfg, move |ctx| {
+        let data = vec![1.0f32; NUMEL];
+        let mut vtotal = 0.0;
+        for _ in 0..5 {
+            ctx.barrier()?; // align clocks between reps
+            let v0 = ctx.vtime();
+            if hierarchical {
+                ctx.hierarchical_neighbor_allreduce(&data)?;
+            } else {
+                ctx.neighbor_allreduce(&data)?;
+            }
+            vtotal += ctx.vtime() - v0;
+        }
+        Ok(vtotal / 5.0)
+    })
+    .expect("run failed");
+    per_rank.iter().cloned().fold(0.0, f64::max)
+}
+
+fn main() {
+    println!(
+        "## hierarchical ablation: 1 MB, {RANKS_PER_MACHINE} ranks/machine (NVLink intra, 25 Gbps inter)"
+    );
+    println!("{:<10} {:>6} {:>14} {:>14} {:>8}", "machines", "n", "flat", "hierarchical", "ratio");
+    let mut multi_machine_win = false;
+    for machines in [1usize, 2, 4, 8] {
+        let flat = measure(machines, false);
+        let hier = measure(machines, true);
+        println!(
+            "{:<10} {:>6} {:>11.3} ms {:>11.3} ms {:>8.2}",
+            machines,
+            machines * RANKS_PER_MACHINE,
+            flat * 1e3,
+            hier * 1e3,
+            flat / hier
+        );
+        if machines >= 4 && hier < flat {
+            multi_machine_win = true;
+        }
+    }
+    assert!(
+        multi_machine_win,
+        "hierarchical must beat flat once several machines are involved"
+    );
+    println!("\nablation_hierarchical OK");
+}

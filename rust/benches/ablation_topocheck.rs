@@ -1,0 +1,79 @@
+//! Ablation A3 — negotiation-service topology check overhead (paper §VI-C).
+//!
+//! The paper claims the check "only adds a small overhead compared to the
+//! actual communication since it is just a scalar", and notes users can
+//! turn it off. We measure dynamic `neighbor_allreduce` with the check on
+//! and off across message sizes: the *absolute* overhead should stay
+//! roughly constant (a scalar round) while the *relative* overhead shrinks
+//! as the tensor grows.
+//!
+//! Run: `cargo bench --bench ablation_topocheck`
+
+use bluefog::collective::neighbor::NeighborWeights;
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::simnet::NetworkModel;
+use bluefog::topology::dynamic::{DynamicTopology, OnePeerExpo};
+
+const ITERS: usize = 20;
+
+fn measure(numel: usize, check: bool) -> (f64, f64) {
+    let cfg = SpmdConfig::new(8)
+        .with_net(NetworkModel::flat(25e9 / 8.0, 50e-6))
+        .with_topo_check(check);
+    let per_rank = run_spmd(cfg, move |ctx| {
+        let data = vec![1.0f32; numel];
+        let topo = OnePeerExpo::new(ctx.size());
+        let t0 = std::time::Instant::now();
+        let mut vtotal = 0.0;
+        for i in 0..ITERS {
+            ctx.barrier()?; // keep rank clocks aligned between iterations
+            let v0 = ctx.vtime();
+            let view = topo.view(i, ctx.rank());
+            let w = NeighborWeights::from_view(&view);
+            ctx.neighbor_allreduce_dynamic(&data, &w)?;
+            vtotal += ctx.vtime() - v0;
+        }
+        Ok((vtotal / ITERS as f64, t0.elapsed().as_secs_f64() / ITERS as f64))
+    })
+    .expect("run failed");
+    let v = per_rank.iter().map(|r| r.0).fold(0.0, f64::max);
+    let w = per_rank.iter().map(|r| r.1).fold(0.0, f64::max);
+    (v, w)
+}
+
+fn main() {
+    println!("## topology-check ablation: dynamic neighbor_allreduce, 8 nodes, {ITERS} iters");
+    println!(
+        "{:<12} {:>14} {:>14} {:>12} {:>10}",
+        "size", "check ON", "check OFF", "overhead", "relative"
+    );
+    let mut overheads = vec![];
+    for numel in [1024usize, 16_384, 262_144, 1_048_576] {
+        let (on, _) = measure(numel, true);
+        let (off, _) = measure(numel, false);
+        let overhead = on - off;
+        println!(
+            "{:>8} KB {:>11.3} ms {:>11.3} ms {:>9.3} ms {:>9.1}%",
+            numel * 4 / 1024,
+            on * 1e3,
+            off * 1e3,
+            overhead * 1e3,
+            overhead / off * 100.0
+        );
+        overheads.push((numel, off, overhead));
+    }
+    // The scalar negotiation round costs ~2 link latencies regardless of
+    // tensor size; at the largest size it must be a small fraction.
+    let (_, off_large, ovh_large) = overheads[overheads.len() - 1];
+    assert!(
+        ovh_large / off_large < 0.25,
+        "check overhead should be small vs large-tensor comm: {ovh_large} vs {off_large}"
+    );
+    // Absolute overhead should not grow with the tensor (it's a scalar).
+    let ovh_small = overheads[0].2;
+    assert!(
+        ovh_large < ovh_small * 4.0 + 2e-4,
+        "overhead should not scale with tensor size: {ovh_small} -> {ovh_large}"
+    );
+    println!("\nablation_topocheck OK");
+}

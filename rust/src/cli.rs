@@ -1,0 +1,142 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag`, and positional
+//! arguments; typed accessors with defaults and error messages listing
+//! valid options.
+
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                anyhow::ensure!(!key.is_empty(), "bare '--' is not a valid flag");
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> anyhow::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => anyhow::bail!("--{key} {v}: expected true/false"),
+        }
+    }
+
+    /// Value constrained to a fixed choice set.
+    pub fn choice_or<'a>(
+        &'a self,
+        key: &str,
+        default: &'a str,
+        choices: &[&str],
+    ) -> anyhow::Result<&'a str> {
+        let v = self.str_or(key, default);
+        if choices.contains(&v) {
+            Ok(v)
+        } else {
+            anyhow::bail!("--{key} {v}: expected one of {}", choices.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("train --nodes 8 --algo=atc --verbose --lr 0.1");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("nodes", 1).unwrap(), 8);
+        assert_eq!(a.str_or("algo", "x"), "atc");
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.usize_or("nodes", 4).unwrap(), 4);
+        assert!(!a.has("anything"));
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("--nodes eight");
+        assert!(a.usize_or("nodes", 1).is_err());
+        let a = parse("--flag maybe");
+        assert!(a.bool_or("flag", false).is_err());
+    }
+
+    #[test]
+    fn choices_validated() {
+        let a = parse("--topo ring");
+        assert_eq!(a.choice_or("topo", "expo2", &["ring", "expo2"]).unwrap(), "ring");
+        let a = parse("--topo blob");
+        assert!(a.choice_or("topo", "expo2", &["ring", "expo2"]).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse("--offset -3");
+        // "-3" doesn't start with "--", so it's consumed as the value.
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

@@ -1,0 +1,246 @@
+//! Global-averaging collectives (paper §II-B, Table I).
+//!
+//! These are the baselines the paper compares partial averaging against.
+//! Each is implemented over the point-to-point [`crate::transport`] with the
+//! real message schedule, so the virtual clock reproduces the structural
+//! cost:
+//!
+//! - [`NodeContext::allreduce`] with [`AllreduceAlgo::Ring`]: chunked
+//!   reduce-scatter + allgather, `2(n-1)` rounds of `M/n` bytes —
+//!   `2M/B + 2nL` (the Horovod baseline).
+//! - [`AllreduceAlgo::ParameterServer`]: all ranks push to rank 0 which sums
+//!   and pushes back — the server NIC serializes `n` messages: `nM/B + nL`.
+//! - [`AllreduceAlgo::BytePs`]: tensor sharded into `n` chunks, chunk `i`
+//!   served by rank `i` — every NIC carries `M/n * n = M`: `M/B + nL`.
+
+use crate::collective::{AllreduceAlgo, ReduceOp};
+use crate::context::NodeContext;
+use crate::negotiation::{OpKind, OpRequest};
+
+impl NodeContext {
+    /// Dissemination barrier (`bf.barrier()`): ceil(log2 n) rounds.
+    pub fn barrier(&mut self) -> anyhow::Result<()> {
+        let n = self.size();
+        if n == 1 {
+            return Ok(());
+        }
+        let tag = self.next_tag("barrier");
+        let mut hop = 1;
+        let mut round = 0u32;
+        while hop < n {
+            let dst = (self.rank() + hop) % n;
+            let src = (self.rank() + n - hop) % n;
+            let rtag = tag + u64::from(round);
+            self.send_tensor(dst, rtag, vec![])?;
+            let _ = self.recv_tensor(src, rtag)?;
+            hop *= 2;
+            round += 1;
+        }
+        Ok(())
+    }
+
+    /// Broadcast `data` from `root` to all ranks (binomial tree).
+    pub fn broadcast(&mut self, data: &mut Vec<f32>, root: usize) -> anyhow::Result<()> {
+        let n = self.size();
+        if n == 1 {
+            return Ok(());
+        }
+        let tag = self.next_tag("broadcast");
+        // Virtual rank so that root = 0; binomial tree over virtual ranks
+        // (MPICH scheme: parent clears the lowest set bit; after receiving,
+        // a node fans out to vrank + mask for decreasing mask).
+        let vrank = (self.rank() + n - root) % n;
+        let mut mask = 1usize;
+        while mask < n {
+            if vrank & mask != 0 {
+                let parent = ((vrank - mask) + root) % n;
+                *data = (*self.recv_tensor(parent, tag)?).clone();
+                break;
+            }
+            mask <<= 1;
+        }
+        mask >>= 1;
+        while mask > 0 {
+            if vrank + mask < n {
+                let child = ((vrank + mask) + root) % n;
+                self.send_tensor(child, tag, data.clone())?;
+            }
+            mask >>= 1;
+        }
+        Ok(())
+    }
+
+    /// Global allreduce (`bf.allreduce`) with the configured algorithm.
+    /// Returns the elementwise sum or average across all ranks.
+    pub fn allreduce(&mut self, data: &[f32], op: ReduceOp, algo: AllreduceAlgo) -> anyhow::Result<Vec<f32>> {
+        let name = self.next_collective_name("allreduce");
+        self.negotiate(&name, OpKind::Allreduce, data.len(), None, None)?;
+        let wall = self.timeline.now_us();
+        let v0 = self.vtime();
+        let mut out = match algo {
+            AllreduceAlgo::Ring => self.ring_allreduce(data)?,
+            AllreduceAlgo::ParameterServer => self.ps_allreduce(data)?,
+            AllreduceAlgo::BytePs => self.byteps_allreduce(data)?,
+        };
+        if op == ReduceOp::Average {
+            let inv = 1.0 / self.size() as f32;
+            for x in out.iter_mut() {
+                *x *= inv;
+            }
+        }
+        self.timeline.record(self.rank(), "allreduce", "comm", wall, v0, self.vtime());
+        Ok(out)
+    }
+
+    /// Chunked ring allreduce: reduce-scatter then allgather.
+    fn ring_allreduce(&mut self, data: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let n = self.size();
+        let me = self.rank();
+        if n == 1 {
+            return Ok(data.to_vec());
+        }
+        let tag = self.next_tag("ring_allreduce");
+        let len = data.len();
+        // Chunk boundaries (n chunks, nearly equal).
+        let bounds: Vec<(usize, usize)> = (0..n)
+            .map(|c| {
+                let lo = c * len / n;
+                let hi = (c + 1) * len / n;
+                (lo, hi)
+            })
+            .collect();
+        let mut buf = data.to_vec();
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+        // Reduce-scatter: in round r, send chunk (me - r) and accumulate
+        // chunk (me - r - 1) arriving from prev.
+        for r in 0..(n - 1) {
+            let send_c = (me + n - r) % n;
+            let recv_c = (me + n - r - 1) % n;
+            let (slo, shi) = bounds[send_c];
+            let rtag = tag + r as u64;
+            self.send_tensor(next, rtag, buf[slo..shi].to_vec())?;
+            let incoming = self.recv_tensor(prev, rtag)?;
+            let (rlo, rhi) = bounds[recv_c];
+            for (x, y) in buf[rlo..rhi].iter_mut().zip(incoming.iter()) {
+                *x += y;
+            }
+        }
+        // Allgather: circulate the reduced chunks.
+        for r in 0..(n - 1) {
+            let send_c = (me + 1 + n - r) % n;
+            let recv_c = (me + n - r) % n;
+            let (slo, shi) = bounds[send_c];
+            let rtag = tag + n as u64 + r as u64;
+            self.send_tensor(next, rtag, buf[slo..shi].to_vec())?;
+            let incoming = self.recv_tensor(prev, rtag)?;
+            let (rlo, rhi) = bounds[recv_c];
+            buf[rlo..rhi].copy_from_slice(&incoming);
+        }
+        Ok(buf)
+    }
+
+    /// Parameter-server allreduce: push to rank 0, sum, pull back.
+    fn ps_allreduce(&mut self, data: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let n = self.size();
+        if n == 1 {
+            return Ok(data.to_vec());
+        }
+        let tag = self.next_tag("ps_allreduce");
+        let rtag = tag + 1;
+        if self.rank() == 0 {
+            let mut acc = data.to_vec();
+            for src in 1..n {
+                let part = self.recv_tensor(src, tag)?;
+                for (a, p) in acc.iter_mut().zip(part.iter()) {
+                    *a += p;
+                }
+            }
+            for dst in 1..n {
+                self.send_tensor(dst, rtag, acc.clone())?;
+            }
+            Ok(acc)
+        } else {
+            self.send_tensor(0, tag, data.to_vec())?;
+            self.recv_tensor(0, rtag).map(|a| (*a).clone())
+        }
+    }
+
+    /// BytePS-style allreduce: chunk `c` is served by rank `c` — every rank
+    /// pushes its chunk `c` to server `c` and pulls the sum back.
+    fn byteps_allreduce(&mut self, data: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let n = self.size();
+        let me = self.rank();
+        if n == 1 {
+            return Ok(data.to_vec());
+        }
+        let tag = self.next_tag("byteps_allreduce");
+        let rtag = tag + 1;
+        let len = data.len();
+        let bounds: Vec<(usize, usize)> = (0..n)
+            .map(|c| (c * len / n, (c + 1) * len / n))
+            .collect();
+        // Push phase: send chunk c to rank c (keep own chunk local).
+        for c in 0..n {
+            if c != me {
+                let (lo, hi) = bounds[c];
+                self.send_tensor(c, tag, data[lo..hi].to_vec())?;
+            }
+        }
+        // Serve own chunk: sum the n-1 incoming contributions.
+        let (mlo, mhi) = bounds[me];
+        let mut served = data[mlo..mhi].to_vec();
+        for _ in 0..(n - 1) {
+            let (_, part) = self.recv_tensor_any(tag)?;
+            for (a, p) in served.iter_mut().zip(part.iter()) {
+                *a += p;
+            }
+        }
+        // Pull phase: broadcast the served chunk to everyone else, receive
+        // the other chunks.
+        for c in 0..n {
+            if c != me {
+                self.send_tensor(c, rtag, served.clone())?;
+            }
+        }
+        let mut out = data.to_vec();
+        out[mlo..mhi].copy_from_slice(&served);
+        for _ in 0..(n - 1) {
+            let (src, part) = self.recv_tensor_any(rtag)?;
+            let (lo, hi) = bounds[src];
+            out[lo..hi].copy_from_slice(&part);
+        }
+        Ok(out)
+    }
+
+    /// Announce an op to the negotiation service (when enabled) and advance
+    /// the virtual clock by the scalar round. Errors on validation failure;
+    /// returns the clearance with resolved src/dst edge sets, or `None` when
+    /// the topology check is disabled.
+    pub(crate) fn negotiate(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        numel: usize,
+        dsts: Option<Vec<usize>>,
+        srcs: Option<Vec<usize>>,
+    ) -> anyhow::Result<Option<crate::negotiation::OpClearance>> {
+        if !self.enable_topo_check {
+            return Ok(None);
+        }
+        let clearance = self.negotiation.submit(OpRequest {
+            rank: self.rank(),
+            name: name.to_string(),
+            kind,
+            numel,
+            dsts,
+            srcs,
+            vtime: self.vtime(),
+        })?;
+        self.clock().advance_to(clearance.start_vtime);
+        if let Some(err) = &clearance.error {
+            anyhow::bail!("negotiation failed: {err}");
+        }
+        Ok(Some(clearance))
+    }
+}

@@ -1,0 +1,159 @@
+//! Hierarchical neighbor allreduce (paper §V-B, Fig. 7; §VI-B, Fig. 10).
+//!
+//! For two-tier networks (fast NVLink inside a machine, slow NIC between
+//! machines) the flat `neighbor_allreduce` wastes inter-machine bandwidth.
+//! The hierarchical variant runs four steps:
+//!
+//! 1. **Intra-machine allreduce** (sum) over the machine's local ranks —
+//!    cheap on NVLink;
+//! 2. **Inter-machine neighbor communication**: local rank 0 of each
+//!    machine performs partial averaging over the *machine-level* topology;
+//! 3. **Intra-machine broadcast** of the received neighbor average;
+//! 4. Every local rank adopts the machine-level result.
+//!
+//! Note (paper): this is **not** functionally equivalent to the flat
+//! operation — the neighborhood is defined at machine level.
+
+use crate::context::NodeContext;
+use crate::negotiation::OpKind;
+use crate::tensor::weighted_combine_into;
+use crate::topology::WeightMatrix;
+
+impl NodeContext {
+    /// `bf.hierarchical_neighbor_allreduce(tensor)` over the machine-level
+    /// topology (set via [`NodeContext::set_machine_topology`], defaulting
+    /// to the exponential-2 graph over machines).
+    ///
+    /// With a single machine this degrades to a plain intra-machine average
+    /// (matching the paper's Fig. 12 note that 4/8-GPU points reuse the
+    /// flat result).
+    pub fn hierarchical_neighbor_allreduce(&mut self, data: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let wall = self.timeline.now_us();
+        let v0 = self.vtime();
+        let g = self.local_size();
+        let n_machines = (self.size() + g - 1) / g;
+        anyhow::ensure!(
+            self.size() % g == 0,
+            "hierarchical_neighbor_allreduce is ill-defined when machines have \
+             different numbers of processes (size {} not divisible by local size {g})",
+            self.size()
+        );
+        let name = self.next_collective_name("hier_neighbor_allreduce");
+        self.negotiate(&name, OpKind::HierarchicalNeighborAllreduce, data.len(), None, None)?;
+
+        let machine = self.machine_rank();
+        let members: Vec<usize> = (machine * g..(machine + 1) * g).collect();
+
+        // Step 1: intra-machine allreduce (average) over NVLink.
+        let mut local_avg = self.ring_allreduce_group(&members, data, "hier.intra")?;
+        let inv = 1.0 / g as f32;
+        for x in local_avg.iter_mut() {
+            *x *= inv;
+        }
+
+        // Step 2: machine-level neighbor averaging, local rank 0 only.
+        let machine_weights = {
+            let topo = self.load_topology();
+            match &topo.machine_weights {
+                Some(w) => w.clone(),
+                None => WeightMatrix::exponential_two(n_machines),
+            }
+        };
+        let mut result = local_avg.clone();
+        if self.local_rank() == 0 && n_machines > 1 {
+            let (self_w, srcs) = machine_weights.pull_view(machine);
+            let (_, dsts) = machine_weights.push_view(machine);
+            let tag = self.next_tag("hier.inter");
+            let shared = std::sync::Arc::new(local_avg.clone());
+            for &(dst_machine, _) in &dsts {
+                self.send_shared(dst_machine * g, tag, shared.clone())?;
+            }
+            let mut incoming = Vec::with_capacity(srcs.len());
+            for &(src_machine, w) in &srcs {
+                let y = self.recv_tensor(src_machine * g, tag)?;
+                incoming.push((w as f32, y));
+            }
+            let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
+            let ws: Vec<f32> = incoming.iter().map(|(w, _)| *w).collect();
+            weighted_combine_into(&mut result, self_w as f32, &parts, &ws);
+        }
+
+        // Steps 3-4: intra-machine broadcast of the machine-level result.
+        if g > 1 {
+            self.broadcast_group(&members, &mut result, members[0], "hier.bcast")?;
+        }
+        self.timeline
+            .record(self.rank(), "hierarchical_neighbor_allreduce", "comm", wall, v0, self.vtime());
+        Ok(result)
+    }
+
+    /// Ring allreduce (sum) restricted to `members` (which must contain this
+    /// rank). Used for the intra-machine phase.
+    pub(crate) fn ring_allreduce_group(
+        &mut self,
+        members: &[usize],
+        data: &[f32],
+        op_name: &str,
+    ) -> anyhow::Result<Vec<f32>> {
+        let k = members.len();
+        let me_idx = members
+            .iter()
+            .position(|&r| r == self.rank())
+            .ok_or_else(|| anyhow::anyhow!("rank {} not in group", self.rank()))?;
+        if k == 1 {
+            return Ok(data.to_vec());
+        }
+        let tag = self.next_tag(op_name);
+        let len = data.len();
+        let bounds: Vec<(usize, usize)> =
+            (0..k).map(|c| (c * len / k, (c + 1) * len / k)).collect();
+        let mut buf = data.to_vec();
+        let next = members[(me_idx + 1) % k];
+        let prev = members[(me_idx + k - 1) % k];
+        for r in 0..(k - 1) {
+            let send_c = (me_idx + k - r) % k;
+            let recv_c = (me_idx + k - r - 1) % k;
+            let (slo, shi) = bounds[send_c];
+            let rtag = tag + r as u64;
+            self.send_tensor(next, rtag, buf[slo..shi].to_vec())?;
+            let incoming = self.recv_tensor(prev, rtag)?;
+            let (rlo, rhi) = bounds[recv_c];
+            for (x, y) in buf[rlo..rhi].iter_mut().zip(incoming.iter()) {
+                *x += y;
+            }
+        }
+        for r in 0..(k - 1) {
+            let send_c = (me_idx + 1 + k - r) % k;
+            let recv_c = (me_idx + k - r) % k;
+            let (slo, shi) = bounds[send_c];
+            let rtag = tag + k as u64 + r as u64;
+            self.send_tensor(next, rtag, buf[slo..shi].to_vec())?;
+            let incoming = self.recv_tensor(prev, rtag)?;
+            let (rlo, rhi) = bounds[recv_c];
+            buf[rlo..rhi].copy_from_slice(&incoming);
+        }
+        Ok(buf)
+    }
+
+    /// Broadcast within `members` from `root` (linear fan-out — fine for
+    /// machine-sized groups over NVLink).
+    pub(crate) fn broadcast_group(
+        &mut self,
+        members: &[usize],
+        data: &mut Vec<f32>,
+        root: usize,
+        op_name: &str,
+    ) -> anyhow::Result<()> {
+        let tag = self.next_tag(op_name);
+        if self.rank() == root {
+            for &m in members {
+                if m != root {
+                    self.send_tensor(m, tag, data.clone())?;
+                }
+            }
+        } else {
+            *data = (*self.recv_tensor(root, tag)?).clone();
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,43 @@
+//! Collective communication (paper §II-B, §III, §V-B, §VI-B).
+//!
+//! - [`global`] — global-averaging primitives the paper compares against:
+//!   ring allreduce (the Horovod baseline), parameter server, BytePS,
+//!   broadcast, barrier.
+//! - [`neighbor`] — partial averaging: `neighbor_allreduce` over the static
+//!   global topology or a dynamic local view (`self/src/dst` weights), and
+//!   `neighbor_allgather`.
+//! - [`hierarchical`] — `hierarchical_neighbor_allreduce`, the two-tier
+//!   variant exploiting fast intra-machine links (paper §V-B, Fig. 7/10).
+
+pub mod global;
+pub mod hierarchical;
+pub mod neighbor;
+
+/// How `allreduce` averages are computed by the global primitives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Average,
+}
+
+/// Which global-averaging algorithm `allreduce` uses (paper Table I rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllreduceAlgo {
+    /// Chunked ring allreduce — the Horovod/NCCL algorithm: `2M/B + 2nL`.
+    #[default]
+    Ring,
+    /// Central parameter server at rank 0: `nM/B + nL`.
+    ParameterServer,
+    /// BytePS-style sharded servers: `M/B + nL`.
+    BytePs,
+}
+
+/// Communication style selector mirrored from the BlueFog optimizer API.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommunicationType {
+    Allreduce,
+    NeighborAllreduce,
+    HierarchicalNeighborAllreduce,
+    /// No communication this step (local SGD step).
+    Empty,
+}

@@ -1,0 +1,213 @@
+//! Partial averaging — `neighbor_allreduce` (paper §III-A/B, eq. (5), (10)–(12)).
+//!
+//! The static form uses the global topology's weight matrix: each node sends
+//! its raw tensor to its out-neighbors and combines the in-coming copies
+//! with its row of `W`:
+//!
+//! `x_i <- w_ii x_i + sum_{j in N(i)} w_ij x_j`.
+//!
+//! The dynamic form takes the *local view* — `self_weight`, `src_weights`
+//! (receive-side scaling `r_ij`) and/or `dst_weights` (send-side scaling
+//! `s_ij`) — per call, supporting the paper's four configurations
+//! (footnote 2): static default, pure push, pure pull, and push-pull. When
+//! one side is omitted, the negotiation service resolves the matching ranks
+//! (it "synchronizes the ranks of sending and receiving among the entire
+//! network").
+
+use crate::context::NodeContext;
+use crate::negotiation::OpKind;
+use crate::tensor::weighted_combine_from;
+
+/// Arguments of a dynamic `neighbor_allreduce` (BlueFog's optional
+/// `self_weight` / `src_weights` / `dst_weights`).
+#[derive(Debug, Clone, Default)]
+pub struct NeighborWeights {
+    pub self_weight: f64,
+    /// `(src_rank, r_ij)` receive-side scales; `None` = not declared.
+    pub src_weights: Option<Vec<(usize, f64)>>,
+    /// `(dst_rank, s_ij)` send-side scales; `None` = not declared.
+    pub dst_weights: Option<Vec<(usize, f64)>>,
+}
+
+impl NeighborWeights {
+    /// Pure pull-style: receiver scales (`r_ij = w_ij`, senders send raw).
+    pub fn pull(self_weight: f64, src_weights: Vec<(usize, f64)>) -> Self {
+        NeighborWeights { self_weight, src_weights: Some(src_weights), dst_weights: None }
+    }
+
+    /// Pure push-style: sender scales (`s_ij = w_ij`, receivers sum raw).
+    pub fn push(self_weight: f64, dst_weights: Vec<(usize, f64)>) -> Self {
+        NeighborWeights { self_weight, src_weights: None, dst_weights: Some(dst_weights) }
+    }
+
+    /// Push-pull: both sides scale (`w_ij = r_ij * s_ij`).
+    pub fn push_pull(
+        self_weight: f64,
+        src_weights: Vec<(usize, f64)>,
+        dst_weights: Vec<(usize, f64)>,
+    ) -> Self {
+        NeighborWeights {
+            self_weight,
+            src_weights: Some(src_weights),
+            dst_weights: Some(dst_weights),
+        }
+    }
+
+    /// From a [`crate::topology::dynamic::LocalView`].
+    pub fn from_view(v: &crate::topology::dynamic::LocalView) -> Self {
+        NeighborWeights {
+            self_weight: v.self_weight,
+            src_weights: Some(v.src_weights.clone()),
+            dst_weights: Some(v.dst_weights.clone()),
+        }
+    }
+}
+
+impl NodeContext {
+    /// Static-topology partial averaging (`bf.neighbor_allreduce(tensor)`),
+    /// paper eq. (5): combine with this rank's row of the global weight
+    /// matrix.
+    pub fn neighbor_allreduce(&mut self, data: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let (self_w, srcs, dsts) = {
+            let topo = self.load_topology();
+            let (self_w, srcs) = topo.weights.pull_view(self.rank());
+            let dsts: Vec<(usize, f64)> =
+                topo.graph.out_neighbors(self.rank()).into_iter().map(|r| (r, 1.0)).collect();
+            (self_w, srcs, dsts)
+        };
+        self.neighbor_allreduce_impl(
+            data,
+            self_w,
+            Some(srcs),
+            Some(dsts),
+            /*scale_on_send=*/ false,
+        )
+    }
+
+    /// Dynamic partial averaging
+    /// (`bf.neighbor_allreduce(tensor, self_weight, src_weights, dst_weights)`),
+    /// paper eq. (10)–(12).
+    pub fn neighbor_allreduce_dynamic(
+        &mut self,
+        data: &[f32],
+        weights: &NeighborWeights,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.neighbor_allreduce_impl(
+            data,
+            weights.self_weight,
+            weights.src_weights.clone(),
+            weights.dst_weights.clone(),
+            /*scale_on_send=*/ true,
+        )
+    }
+
+    /// Shared implementation. `scale_on_send` distinguishes the static form
+    /// (receiver applies `w_ij`; senders send raw) from the dynamic form
+    /// (senders apply `s_ij` from `dst_weights`, receivers apply `r_ij`
+    /// from `src_weights`, missing side defaults to scale 1).
+    fn neighbor_allreduce_impl(
+        &mut self,
+        data: &[f32],
+        self_weight: f64,
+        src_weights: Option<Vec<(usize, f64)>>,
+        dst_weights: Option<Vec<(usize, f64)>>,
+        scale_on_send: bool,
+    ) -> anyhow::Result<Vec<f32>> {
+        let wall = self.timeline.now_us();
+        let v0 = self.vtime();
+        let name = self.next_collective_name("neighbor_allreduce");
+        let clearance = self.negotiate(
+            &name,
+            OpKind::NeighborAllreduce,
+            data.len(),
+            dst_weights.as_ref().map(|v| v.iter().map(|&(r, _)| r).collect()),
+            src_weights.as_ref().map(|v| v.iter().map(|&(r, _)| r).collect()),
+        )?;
+        // Resolve missing sides from the negotiation service.
+        let dsts: Vec<(usize, f64)> = match (&dst_weights, &clearance) {
+            (Some(d), _) => d.clone(),
+            (None, Some(c)) => c.resolved_dsts.iter().map(|&r| (r, 1.0)).collect(),
+            (None, None) => anyhow::bail!(
+                "neighbor_allreduce: dst_weights not declared and topology check disabled — \
+                 senders cannot be resolved (enable the check or pass dst_weights)"
+            ),
+        };
+        let srcs: Vec<(usize, f64)> = match (&src_weights, &clearance) {
+            (Some(s), _) => s.clone(),
+            (None, Some(c)) => c.resolved_srcs.iter().map(|&r| (r, 1.0)).collect(),
+            (None, None) => anyhow::bail!(
+                "neighbor_allreduce: src_weights not declared and topology check disabled — \
+                 receivers cannot be resolved (enable the check or pass src_weights)"
+            ),
+        };
+        let tag = self.next_tag("neighbor_allreduce");
+        // Sort destinations by ring distance from own rank to de-conflict
+        // convergent sends (paper §VI-B: "the destination order at each
+        // process is sorted based on the difference between its own rank
+        // and the destination rank").
+        let n = self.size();
+        let me = self.rank();
+        let mut dsts_sorted = dsts.clone();
+        dsts_sorted.sort_by_key(|&(d, _)| (d + n - me) % n);
+        // Unscaled sends share one Arc'd buffer across all destinations
+        // (zero-copy fan-out; EXPERIMENTS.md §Perf).
+        let shared = std::sync::Arc::new(data.to_vec());
+        for &(dst, s) in &dsts_sorted {
+            if scale_on_send && s != 1.0 {
+                let payload: Vec<f32> = data.iter().map(|&x| (s as f32) * x).collect();
+                self.send_tensor(dst, tag, payload)?;
+            } else {
+                self.send_shared(dst, tag, shared.clone())?;
+            }
+        }
+        // Combine: out = self_weight * x + sum_j r_ij * y_ij.
+        let mut incoming: Vec<(f32, std::sync::Arc<Vec<f32>>)> = Vec::with_capacity(srcs.len());
+        for &(src, r) in &srcs {
+            let y = self.recv_tensor(src, tag)?;
+            anyhow::ensure!(
+                y.len() == data.len(),
+                "neighbor_allreduce: rank {src} sent {} elements, expected {}",
+                y.len(),
+                data.len()
+            );
+            incoming.push((r as f32, y));
+        }
+        let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
+        let ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
+        let out = weighted_combine_from(data, self_weight as f32, &parts, &ws);
+        self.timeline.record(me, "neighbor_allreduce", "comm", wall, v0, self.vtime());
+        Ok(out)
+    }
+
+    /// `bf.neighbor_allgather(tensor)` — collect the raw tensors of all
+    /// in-neighbors (MPI_Neighbor_allgatherv: sizes may vary per neighbor).
+    /// Returns `(src_rank, tensor)` pairs sorted by source rank.
+    pub fn neighbor_allgather(
+        &mut self,
+        data: &[f32],
+    ) -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        let (srcs, dsts) = {
+            let topo = self.load_topology();
+            (topo.graph.in_neighbors(self.rank()), topo.graph.out_neighbors(self.rank()))
+        };
+        let name = self.next_collective_name("neighbor_allgather");
+        self.negotiate(
+            &name,
+            OpKind::NeighborAllgather,
+            data.len(),
+            Some(dsts.clone()),
+            Some(srcs.clone()),
+        )?;
+        let tag = self.next_tag("neighbor_allgather");
+        let shared = std::sync::Arc::new(data.to_vec());
+        for &dst in &dsts {
+            self.send_shared(dst, tag, shared.clone())?;
+        }
+        let mut out = Vec::with_capacity(srcs.len());
+        for &src in &srcs {
+            let y = self.recv_tensor(src, tag)?;
+            out.push((src, (*y).clone()));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,193 @@
+//! Model presets and workload descriptions.
+//!
+//! Two families:
+//! - [`ModelPreset`] — real transformer-LM configurations that `aot.py`
+//!   lowers to executable artifacts (the E2E training path).
+//! - [`WorkloadModel`] — *cost-model* descriptions of the paper's benchmark
+//!   DNNs (ResNet-50, VGG-16, BERT-large): parameter count, per-layer
+//!   bucket sizes and per-sample FLOPs. The throughput benches (Fig. 12,
+//!   Table II) time the communication schedule of these workloads on the
+//!   virtual network without executing the actual DNN — the substitution
+//!   documented in DESIGN.md.
+
+/// A transformer-LM configuration matching `python/compile/model.py`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+impl ModelPreset {
+    pub fn by_name(name: &str) -> Option<ModelPreset> {
+        PRESETS.iter().find(|p| p.name == name).cloned()
+    }
+
+    /// Parameter count (must agree with `model.py::param_specs`).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let ff = 4 * d;
+        let per_layer = 2 * d            // ln1 scale+bias
+            + 4 * d * d                  // wq wk wv wo
+            + 2 * d                      // ln2
+            + d * ff + ff                // w1 b1
+            + ff * d + d;                // w2 b2
+        self.vocab * d                   // embed
+            + self.seq * d               // pos
+            + self.n_layers * per_layer
+            + 2 * d                      // final ln
+            + d * self.vocab             // head
+    }
+
+    /// Approximate forward+backward FLOPs per step (6 * params * tokens,
+    /// the standard transformer estimate).
+    pub fn flops_per_step(&self) -> f64 {
+        6.0 * self.param_count() as f64 * (self.batch * self.seq) as f64
+    }
+
+    /// Artifact base name (`train_step_<name>`).
+    pub fn artifact(&self) -> String {
+        format!("train_step_{}", self.name)
+    }
+}
+
+/// The presets `aot.py` knows how to lower. Keep in sync with model.py.
+pub const PRESETS: &[ModelPreset] = &[
+    ModelPreset { name: "nano", vocab: 96, d_model: 32, n_layers: 1, n_heads: 2, seq: 32, batch: 4 },
+    ModelPreset { name: "tiny", vocab: 96, d_model: 64, n_layers: 2, n_heads: 2, seq: 64, batch: 8 },
+    ModelPreset { name: "small", vocab: 96, d_model: 128, n_layers: 4, n_heads: 4, seq: 128, batch: 8 },
+];
+
+/// Cost-model description of a benchmark DNN (paper §VII-B).
+#[derive(Debug, Clone)]
+pub struct WorkloadModel {
+    pub name: &'static str,
+    /// Total parameters.
+    pub params: usize,
+    /// Per-layer parameter buckets, output-side first (the order gradients
+    /// become available during backprop).
+    pub layer_params: Vec<usize>,
+    /// Forward+backward FLOPs per sample.
+    pub flops_per_sample: f64,
+    /// Per-GPU batch size used in the paper's Fig. 12.
+    pub batch: usize,
+}
+
+impl WorkloadModel {
+    /// ResNet-50: ~23 M params (paper quotes "around 23 million"), batch 64.
+    pub fn resnet50() -> Self {
+        // 16 residual stages + stem + fc, parameter mass concentrated late.
+        let layer_params = geometric_buckets(23_000_000, 18, 1.35);
+        WorkloadModel {
+            name: "ResNet-50",
+            params: 23_000_000,
+            layer_params,
+            flops_per_sample: 3.8e9 * 3.0, // fwd 3.8 GFLOPs, bwd ~2x
+            batch: 64,
+        }
+    }
+
+    /// VGG-16: 138 M params, batch 32.
+    pub fn vgg16() -> Self {
+        let layer_params = geometric_buckets(138_000_000, 16, 1.8);
+        WorkloadModel {
+            name: "VGG-16",
+            params: 138_000_000,
+            layer_params,
+            flops_per_sample: 15.5e9 * 3.0,
+            batch: 32,
+        }
+    }
+
+    /// BERT-large: 345 M params, per-GPU tokens 4096 (batch 8 x seq 512).
+    pub fn bert_large() -> Self {
+        // 24 uniform encoder layers + embeddings.
+        let mut layer_params = vec![345_000_000 / 26; 24];
+        layer_params.push(345_000_000 / 13); // embeddings
+        layer_params.push(345_000_000 - layer_params.iter().sum::<usize>());
+        WorkloadModel {
+            name: "BERT-large",
+            params: 345_000_000,
+            layer_params,
+            flops_per_sample: 6.0 * 345e6 * 512.0, // 6*N*T per sample (seq 512)
+            batch: 8,
+        }
+    }
+
+    pub fn all() -> Vec<WorkloadModel> {
+        vec![Self::resnet50(), Self::vgg16(), Self::bert_large()]
+    }
+
+    /// Message size in bytes for a full-gradient exchange (f32).
+    pub fn message_bytes(&self) -> usize {
+        self.params * 4
+    }
+
+    /// Per-step compute time on a device with `device_flops` peak and
+    /// `efficiency` utilization.
+    pub fn step_compute_time(&self, device_flops: f64, efficiency: f64) -> f64 {
+        self.flops_per_sample * self.batch as f64 / (device_flops * efficiency)
+    }
+}
+
+/// Split `total` into `k` buckets with geometric ratio `r` (later buckets
+/// larger), summing exactly to `total`.
+fn geometric_buckets(total: usize, k: usize, r: f64) -> Vec<usize> {
+    let mut weights: Vec<f64> = (0..k).map(|i| r.powi(i as i32)).collect();
+    let s: f64 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w /= s;
+    }
+    let mut out: Vec<usize> = weights.iter().map(|w| (w * total as f64) as usize).collect();
+    let assigned: usize = out.iter().sum();
+    *out.last_mut().unwrap() += total - assigned;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolvable_by_name() {
+        assert!(ModelPreset::by_name("tiny").is_some());
+        assert!(ModelPreset::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn param_count_formula_sane() {
+        let p = ModelPreset::by_name("tiny").unwrap();
+        let count = p.param_count();
+        // embed + head dominate at this size: 96*64*2 = 12288 plus layers.
+        assert!(count > 50_000 && count < 500_000, "count={count}");
+        assert!(p.flops_per_step() > 1e6);
+    }
+
+    #[test]
+    fn workload_buckets_sum_to_total() {
+        for w in WorkloadModel::all() {
+            let sum: usize = w.layer_params.iter().sum();
+            assert_eq!(sum, w.params, "{}", w.name);
+            assert!(w.layer_params.iter().all(|&b| b > 0), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn workload_params_match_paper() {
+        assert_eq!(WorkloadModel::resnet50().params, 23_000_000);
+        assert_eq!(WorkloadModel::vgg16().params, 138_000_000);
+        assert_eq!(WorkloadModel::bert_large().params, 345_000_000);
+    }
+
+    #[test]
+    fn compute_time_scales_with_flops() {
+        let r = WorkloadModel::resnet50();
+        let b = WorkloadModel::bert_large();
+        let dev = 125e12; // V100 bf16 peak
+        assert!(b.step_compute_time(dev, 0.4) > r.step_compute_time(dev, 0.4));
+    }
+}

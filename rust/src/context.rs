@@ -1,0 +1,261 @@
+//! Per-node handle — the Rust analogue of `import bluefog.torch as bf`.
+//!
+//! A [`NodeContext`] is what each SPMD node function receives from the
+//! [`crate::launcher`]. It bundles the node's rank, the transport endpoints,
+//! the shared topology state, the virtual clock, the negotiation client and
+//! (optionally) the PJRT device service. All communication primitives
+//! (`neighbor_allreduce`, `allreduce`, window ops, …) are implemented as
+//! methods on this type, in the [`crate::collective`] and [`crate::window`]
+//! modules.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::negotiation::NegotiationClient;
+use crate::rng::Rng;
+use crate::runtime::DeviceHandle;
+use crate::simnet::NetworkModel;
+use crate::timeline::Timeline;
+use crate::topology::{Graph, WeightMatrix};
+use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, Tag, VClock};
+use crate::window::WindowTable;
+
+/// Shared topology state, set by `set_topology` / `set_machine_topology`.
+#[derive(Debug, Clone)]
+pub struct TopologyState {
+    pub graph: Graph,
+    pub weights: WeightMatrix,
+    /// Machine-level (super-node) topology for hierarchical ops.
+    pub machine_graph: Option<Graph>,
+    pub machine_weights: Option<WeightMatrix>,
+}
+
+impl TopologyState {
+    pub fn new(graph: Graph, weights: WeightMatrix) -> Self {
+        assert!(weights.respects_graph(&graph), "weight matrix does not respect topology");
+        TopologyState { graph, weights, machine_graph: None, machine_weights: None }
+    }
+}
+
+/// The per-node context handed to SPMD node functions.
+pub struct NodeContext {
+    rank: usize,
+    size: usize,
+    pub(crate) mailbox: Mailbox,
+    pub(crate) postman: Postman,
+    /// Virtual clocks of *all* ranks (senders reserve receiver ports).
+    pub(crate) clocks: Arc<Vec<VClock>>,
+    pub net: Arc<NetworkModel>,
+    pub(crate) topology: Arc<RwLock<TopologyState>>,
+    pub(crate) negotiation: NegotiationClient,
+    pub timeline: Arc<Timeline>,
+    pub(crate) windows: Arc<WindowTable>,
+    /// Per-op-name round counters for tag generation.
+    pub(crate) rounds: HashMap<u32, u32>,
+    /// Run the negotiation-service topology check before dynamic ops
+    /// (paper §VI-C); can be disabled for peak performance.
+    pub enable_topo_check: bool,
+    /// Tensor-fusion threshold in bytes (0 disables fusion).
+    pub fusion_threshold: usize,
+    /// Optional PJRT device service for executing AOT artifacts.
+    pub device: Option<DeviceHandle>,
+    /// Enqueue side of this node's communication thread (non-blocking ops).
+    pub(crate) comm: Option<crate::nonblocking::CommQueue>,
+    /// Deterministic fusion-group assignment state (see nonblocking).
+    /// Shared atomics so a [`crate::nonblocking::Handle`]'s `wait()` can
+    /// close the open group (only this node's threads touch them).
+    pub(crate) fusion_group: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    pub(crate) fusion_acc_bytes: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    /// Per-node deterministic RNG.
+    pub rng: Rng,
+}
+
+impl NodeContext {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        rank: usize,
+        size: usize,
+        mailbox: Mailbox,
+        postman: Postman,
+        clocks: Arc<Vec<VClock>>,
+        net: Arc<NetworkModel>,
+        topology: Arc<RwLock<TopologyState>>,
+        negotiation: NegotiationClient,
+        timeline: Arc<Timeline>,
+        windows: Arc<WindowTable>,
+        device: Option<DeviceHandle>,
+        seed: u64,
+    ) -> Self {
+        NodeContext {
+            rank,
+            size,
+            mailbox,
+            postman,
+            clocks,
+            net,
+            topology,
+            negotiation,
+            timeline,
+            windows,
+            rounds: HashMap::new(),
+            enable_topo_check: true,
+            fusion_threshold: 2 << 20,
+            device,
+            comm: None,
+            fusion_group: std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0)),
+            fusion_acc_bytes: std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            rng: Rng::new(seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+        }
+    }
+
+    /// Enqueue side of the node's communication thread; errors when the
+    /// launcher was configured without one.
+    pub(crate) fn comm_queue(&self) -> anyhow::Result<&crate::nonblocking::CommQueue> {
+        self.comm
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("node launched without a communication thread"))
+    }
+
+    /// This node's unique id (`bf.rank()`).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Total number of nodes (`bf.size()`).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Local rank within this node's machine (`bf.local_rank()`).
+    pub fn local_rank(&self) -> usize {
+        self.net.local_rank(self.rank)
+    }
+
+    /// Ranks per machine (`bf.local_size()`).
+    pub fn local_size(&self) -> usize {
+        self.net.ranks_per_machine.max(1)
+    }
+
+    /// Machine (super node) index (`bf.machine_rank()`).
+    pub fn machine_rank(&self) -> usize {
+        self.net.machine_of(self.rank)
+    }
+
+    /// Replace the global topology (`bf.set_topology`). Collective in
+    /// spirit: every rank must call it with the same arguments.
+    pub fn set_topology(&self, graph: Graph, weights: WeightMatrix) {
+        assert!(weights.respects_graph(&graph), "weight matrix does not respect topology");
+        let mut t = self.topology.write().unwrap();
+        t.graph = graph;
+        t.weights = weights;
+    }
+
+    /// Set the machine-level topology for hierarchical ops
+    /// (`bf.set_machine_topology`).
+    pub fn set_machine_topology(&self, graph: Graph, weights: WeightMatrix) {
+        assert!(weights.respects_graph(&graph), "machine weights do not respect machine topology");
+        let mut t = self.topology.write().unwrap();
+        t.machine_graph = Some(graph);
+        t.machine_weights = Some(weights);
+    }
+
+    /// Snapshot of the current topology state (`bf.load_topology`).
+    pub fn load_topology(&self) -> TopologyState {
+        self.topology.read().unwrap().clone()
+    }
+
+    /// In-coming neighbor ranks under the current global topology.
+    pub fn in_neighbor_ranks(&self) -> Vec<usize> {
+        self.topology.read().unwrap().graph.in_neighbors(self.rank)
+    }
+
+    /// Out-going neighbor ranks under the current global topology.
+    pub fn out_neighbor_ranks(&self) -> Vec<usize> {
+        self.topology.read().unwrap().graph.out_neighbors(self.rank)
+    }
+
+    /// This node's virtual clock.
+    pub fn clock(&self) -> &VClock {
+        &self.clocks[self.rank]
+    }
+
+    /// Current virtual time in seconds.
+    pub fn vtime(&self) -> f64 {
+        self.clock().now()
+    }
+
+    /// Account `dt` seconds of local computation on the virtual clock.
+    pub fn simulate_compute(&self, dt: f64) {
+        self.clock().elapse(dt);
+    }
+
+    /// Per-kind negotiation sequence number. Unlike the tag counters (which
+    /// may diverge across ranks when only some ranks perform an internal
+    /// sub-operation, e.g. the inter-machine leg of hierarchical ops), this
+    /// is bumped exactly once per *collective call*, which every rank makes,
+    /// so the negotiation name is globally consistent.
+    pub(crate) fn next_collective_name(&mut self, kind: &str) -> String {
+        let id = op_id(&format!("negotiation.{kind}"));
+        let seq = self.rounds.entry(id).or_insert(0);
+        let name = format!("{kind}.{seq}");
+        *seq = seq.wrapping_add(1);
+        name
+    }
+
+    /// Next base tag for the operation `name`, bumping its call counter.
+    /// The low 12 bits are left free for per-call sub-rounds: multi-round
+    /// collectives use `base + r` with `r < 4096`.
+    pub(crate) fn next_tag(&mut self, name: &str) -> Tag {
+        let id = op_id(name);
+        let round = self.rounds.entry(id).or_insert(0);
+        let tag = make_tag(id, round.wrapping_mul(4096));
+        *round = round.wrapping_add(1);
+        tag
+    }
+
+    /// Send an owned payload (convenience wrapper over [`Self::send_shared`]).
+    pub(crate) fn send_tensor(&self, dst: usize, tag: Tag, payload: Vec<f32>) -> anyhow::Result<()> {
+        self.send_shared(dst, tag, std::sync::Arc::new(payload))
+    }
+
+    /// Send `payload` to `dst` with virtual-clock accounting: the message
+    /// occupies this node's egress port and the destination's ingress port
+    /// for its serialization time, then arrives after the link latency.
+    /// `Arc`-shared so multi-destination sends avoid copying.
+    pub(crate) fn send_shared(
+        &self,
+        dst: usize,
+        tag: Tag,
+        payload: std::sync::Arc<Vec<f32>>,
+    ) -> anyhow::Result<()> {
+        let bytes = payload.len() * 4;
+        let now = self.clock().now();
+        let ser = self.net.port_time(self.rank, dst, bytes);
+        let send_done = self.clock().reserve_send(now, ser);
+        let recv_done = self.clocks[dst].reserve_recv(send_done - ser, ser);
+        let arrival = send_done.max(recv_done) + self.net.latency(self.rank, dst);
+        self.postman.send(dst, Message { src: self.rank, tag, payload, arrival_vtime: arrival })
+    }
+
+    /// Blocking receive from `(src, tag)`, advancing the virtual clock to
+    /// the message's arrival time.
+    pub(crate) fn recv_tensor(
+        &mut self,
+        src: usize,
+        tag: Tag,
+    ) -> anyhow::Result<std::sync::Arc<Vec<f32>>> {
+        let msg = self.mailbox.recv_match(src, tag)?;
+        self.clock().advance_to(msg.arrival_vtime);
+        Ok(msg.payload)
+    }
+
+    /// Blocking receive from any source with `tag`; returns `(src, data)`.
+    pub(crate) fn recv_tensor_any(
+        &mut self,
+        tag: Tag,
+    ) -> anyhow::Result<(usize, std::sync::Arc<Vec<f32>>)> {
+        let msg = self.mailbox.recv_any(tag)?;
+        self.clock().advance_to(msg.arrival_vtime);
+        Ok((msg.src, msg.payload))
+    }
+}

@@ -1,0 +1,184 @@
+//! Tensor fusion (paper §VI-C).
+//!
+//! Batches several small tensors into one contiguous buffer so one message
+//! pays one latency: 1) copy tensors into the fusion buffer, 2) communicate
+//! the buffer, 3) scatter the results back. BlueFog applies it to
+//! `allreduce`, `neighbor_allreduce` and the hierarchical variant; the paper
+//! notes the optimal buffer size is *smaller* for neighbor communication
+//! because its latency term is O(1) rather than O(n).
+//!
+//! [`FusionBuffer`] implements the pack/unpack steps; the non-blocking
+//! communication thread ([`crate::nonblocking`]) applies the policy, fusing
+//! queued requests with identical communication structure up to the
+//! threshold.
+
+/// Layout record of one fused tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusedSlot {
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// A contiguous pack of several tensors.
+#[derive(Debug, Clone, Default)]
+pub struct FusionBuffer {
+    data: Vec<f32>,
+    slots: Vec<FusedSlot>,
+}
+
+impl FusionBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack a list of tensors; the i-th slot corresponds to the i-th input.
+    pub fn pack(tensors: &[&[f32]]) -> Self {
+        let total: usize = tensors.iter().map(|t| t.len()).sum();
+        let mut data = Vec::with_capacity(total);
+        let mut slots = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            slots.push(FusedSlot { offset: data.len(), len: t.len() });
+            data.extend_from_slice(t);
+        }
+        FusionBuffer { data, slots }
+    }
+
+    /// Append one more tensor, returning its slot index.
+    pub fn push(&mut self, tensor: &[f32]) -> usize {
+        self.slots.push(FusedSlot { offset: self.data.len(), len: tensor.len() });
+        self.data.extend_from_slice(tensor);
+        self.slots.len() - 1
+    }
+
+    /// The fused payload.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Number of fused tensors.
+    pub fn count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Total bytes of the fused payload.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Split a *result* buffer (same layout) back into per-tensor vectors.
+    pub fn unpack(&self, result: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(result.len(), self.data.len(), "fused result length mismatch");
+        self.slots
+            .iter()
+            .map(|s| result[s.offset..s.offset + s.len].to_vec())
+            .collect()
+    }
+
+    /// View of slot `i` inside a result buffer.
+    pub fn slot<'a>(&self, result: &'a [f32], i: usize) -> &'a [f32] {
+        let s = &self.slots[i];
+        &result[s.offset..s.offset + s.len]
+    }
+}
+
+/// Greedy fusion policy: group consecutive requests while the packed size
+/// stays under `threshold_bytes`. Returns group boundaries `[start, end)`.
+/// `threshold_bytes == 0` disables fusion (every request alone).
+pub fn fusion_groups(sizes_bytes: &[usize], threshold_bytes: usize) -> Vec<(usize, usize)> {
+    let mut groups = vec![];
+    let mut start = 0;
+    while start < sizes_bytes.len() {
+        let mut end = start + 1;
+        if threshold_bytes > 0 {
+            let mut acc = sizes_bytes[start];
+            while end < sizes_bytes.len() && acc + sizes_bytes[end] <= threshold_bytes {
+                acc += sizes_bytes[end];
+                end += 1;
+            }
+        }
+        groups.push((start, end));
+        start = end;
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32];
+        let c = vec![4.0f32, 5.0, 6.0];
+        let buf = FusionBuffer::pack(&[&a, &b, &c]);
+        assert_eq!(buf.len(), 6);
+        assert_eq!(buf.count(), 3);
+        let out = buf.unpack(buf.data());
+        assert_eq!(out, vec![a, b, c]);
+    }
+
+    #[test]
+    fn unpack_of_transformed_result() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let buf = FusionBuffer::pack(&[&a, &b]);
+        let doubled: Vec<f32> = buf.data().iter().map(|x| x * 2.0).collect();
+        let out = buf.unpack(&doubled);
+        assert_eq!(out[0], vec![2.0, 4.0]);
+        assert_eq!(out[1], vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn push_returns_slot_indices() {
+        let mut buf = FusionBuffer::new();
+        assert_eq!(buf.push(&[1.0]), 0);
+        assert_eq!(buf.push(&[2.0, 3.0]), 1);
+        assert_eq!(buf.slot(buf.data(), 1), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_tensor_slots_are_preserved() {
+        let a: Vec<f32> = vec![];
+        let b = vec![1.0f32];
+        let buf = FusionBuffer::pack(&[&a, &b]);
+        let out = buf.unpack(buf.data());
+        assert!(out[0].is_empty());
+        assert_eq!(out[1], vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn unpack_validates_length() {
+        let buf = FusionBuffer::pack(&[&[1.0f32, 2.0][..]]);
+        buf.unpack(&[1.0]);
+    }
+
+    #[test]
+    fn fusion_groups_respect_threshold() {
+        // sizes in bytes: 4 tensors of 100B each, threshold 250B.
+        let groups = fusion_groups(&[100, 100, 100, 100], 250);
+        assert_eq!(groups, vec![(0, 2), (2, 4)]);
+    }
+
+    #[test]
+    fn zero_threshold_disables_fusion() {
+        let groups = fusion_groups(&[10, 10, 10], 0);
+        assert_eq!(groups, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn oversized_tensor_gets_own_group() {
+        let groups = fusion_groups(&[1000, 10, 10], 100);
+        assert_eq!(groups, vec![(0, 1), (1, 3)]);
+    }
+}

@@ -1,0 +1,210 @@
+//! SPMD launcher — the `bfrun` analogue (paper §VI-A).
+//!
+//! `bfrun -np N python prog.py` starts N processes running the same
+//! program; here [`run_spmd`] spawns N OS threads, each with its own
+//! [`NodeContext`], over a shared in-process fabric: transport endpoints,
+//! virtual clocks, the negotiation service, the window table, per-node
+//! communication threads and (optionally) the PJRT device service.
+
+use std::sync::{Arc, RwLock};
+
+use crate::context::{NodeContext, TopologyState};
+use crate::negotiation::NegotiationService;
+use crate::nonblocking::CommThread;
+use crate::runtime::DeviceHandle;
+use crate::simnet::NetworkModel;
+use crate::timeline::Timeline;
+use crate::topology::{builders, Graph, WeightMatrix};
+use crate::transport::{fabric, VClock};
+use crate::window::WindowTable;
+
+/// Configuration of an SPMD run.
+#[derive(Clone)]
+pub struct SpmdConfig {
+    /// Number of simulated nodes.
+    pub nodes: usize,
+    /// Network model (bandwidth/latency tiers).
+    pub net: NetworkModel,
+    /// Initial global topology; default: static exponential-2 with its
+    /// doubly-stochastic weights (the paper's recommended default).
+    pub topology: Option<(Graph, WeightMatrix)>,
+    /// Base seed for per-node RNGs.
+    pub seed: u64,
+    /// Shared timeline recorder (pass one to collect traces).
+    pub timeline: Option<Arc<Timeline>>,
+    /// Shared PJRT device service handle (None = no XLA execution).
+    pub device: Option<DeviceHandle>,
+    /// Spawn per-node communication threads (required for non-blocking ops).
+    pub comm_threads: bool,
+    /// Tensor-fusion threshold in bytes for the communication threads.
+    pub fusion_threshold: usize,
+    /// Run the negotiation-service topology check before collectives.
+    pub enable_topo_check: bool,
+}
+
+impl SpmdConfig {
+    /// A sensible default: flat fast network, expo2 topology, topo check on.
+    pub fn new(nodes: usize) -> Self {
+        SpmdConfig {
+            nodes,
+            net: NetworkModel::flat(10e9, 10e-6),
+            topology: None,
+            seed: 0xb1fe_f06,
+            timeline: None,
+            device: None,
+            comm_threads: true,
+            fusion_threshold: 2 << 20,
+            enable_topo_check: true,
+        }
+    }
+
+    pub fn with_net(mut self, net: NetworkModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    pub fn with_topology(mut self, graph: Graph, weights: WeightMatrix) -> Self {
+        self.topology = Some((graph, weights));
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_device(mut self, device: DeviceHandle) -> Self {
+        self.device = Some(device);
+        self
+    }
+
+    pub fn with_timeline(mut self, timeline: Arc<Timeline>) -> Self {
+        self.timeline = Some(timeline);
+        self
+    }
+
+    pub fn with_topo_check(mut self, enabled: bool) -> Self {
+        self.enable_topo_check = enabled;
+        self
+    }
+
+    pub fn with_fusion_threshold(mut self, bytes: usize) -> Self {
+        self.fusion_threshold = bytes;
+        self
+    }
+}
+
+/// Run `f` as a single program on `cfg.nodes` simulated nodes and return
+/// the per-rank results (index = rank). Any node error aborts the run.
+pub fn run_spmd<T, F>(cfg: SpmdConfig, f: F) -> anyhow::Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(&mut NodeContext) -> anyhow::Result<T> + Send + Sync + 'static,
+{
+    let n = cfg.nodes;
+    assert!(n > 0, "run_spmd needs at least one node");
+    let net = Arc::new(cfg.net.clone());
+    let (mailboxes, postman) = fabric(n);
+    let (comm_mailboxes, comm_postman) = fabric(n);
+    let clocks: Arc<Vec<VClock>> = Arc::new((0..n).map(|_| VClock::new()).collect());
+    let negotiation = NegotiationService::spawn(n, cfg.net.clone());
+    let timeline = cfg.timeline.clone().unwrap_or_else(|| Arc::new(Timeline::new(false)));
+    let windows = Arc::new(WindowTable::new());
+
+    let (graph, weights) = cfg.topology.clone().unwrap_or_else(|| {
+        let g = builders::exponential_two(n);
+        let w = WeightMatrix::uniform_pull(&g);
+        (g, w)
+    });
+    let topology = Arc::new(RwLock::new(TopologyState::new(graph, weights)));
+
+    // Communication threads own the second endpoint fabric.
+    let mut comm_threads = vec![];
+    let mut comm_queues = vec![];
+    if cfg.comm_threads {
+        for (rank, mb) in comm_mailboxes.into_iter().enumerate() {
+            let t = CommThread::spawn(
+                rank,
+                n,
+                mb,
+                comm_postman.clone(),
+                clocks.clone(),
+                net.clone(),
+                cfg.fusion_threshold,
+            );
+            comm_queues.push(Some(t.queue()));
+            comm_threads.push(t);
+        }
+    } else {
+        comm_queues = (0..n).map(|_| None).collect();
+    }
+
+    let f = Arc::new(f);
+    let mut handles = vec![];
+    for (rank, (mailbox, comm_queue)) in
+        mailboxes.into_iter().zip(comm_queues.into_iter()).enumerate()
+    {
+        let f = f.clone();
+        let mut ctx = NodeContext::new(
+            rank,
+            n,
+            mailbox,
+            postman.clone(),
+            clocks.clone(),
+            net.clone(),
+            topology.clone(),
+            negotiation.client(),
+            timeline.clone(),
+            windows.clone(),
+            cfg.device.clone(),
+            cfg.seed,
+        );
+        ctx.enable_topo_check = cfg.enable_topo_check;
+        ctx.fusion_threshold = cfg.fusion_threshold;
+        ctx.comm = comm_queue;
+        let handle = std::thread::Builder::new()
+            .name(format!("bf-node-{rank}"))
+            .stack_size(8 << 20)
+            .spawn(move || f(&mut ctx))
+            .expect("spawn node thread");
+        handles.push(handle);
+    }
+
+    let mut results = Vec::with_capacity(n);
+    let mut first_err: Option<anyhow::Error> = None;
+    for (rank, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(v)) => results.push(v),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e.context(format!("node {rank} failed")));
+                }
+            }
+            Err(panic) => {
+                if first_err.is_none() {
+                    let msg = panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "unknown panic".into());
+                    first_err = Some(anyhow::anyhow!("node {rank} panicked: {msg}"));
+                }
+            }
+        }
+    }
+    // Keep comm threads alive until all nodes joined, then drop (shutdown).
+    drop(comm_threads);
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(results),
+    }
+}
+
+/// Convenience: run with default flat network and expo2 topology.
+pub fn run_simple<T, F>(nodes: usize, f: F) -> anyhow::Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(&mut NodeContext) -> anyhow::Result<T> + Send + Sync + 'static,
+{
+    run_spmd(SpmdConfig::new(nodes), f)
+}

@@ -1,0 +1,65 @@
+//! # bluefog — decentralized optimization and deep-learning runtime
+//!
+//! A Rust + JAX + Pallas reproduction of *BlueFog: Make Decentralized
+//! Algorithms Practical for Optimization and Deep Learning* (Ying, Yuan, Hu,
+//! Chen, Yin; 2021).
+//!
+//! The crate provides:
+//!
+//! - [`topology`] — directed/undirected graph topologies and weight matrices
+//!   (pull/push/doubly-stochastic), including the exponential graphs the
+//!   paper champions.
+//! - [`transport`] — in-process point-to-point message passing between
+//!   simulated nodes (the MPI/NCCL substitute).
+//! - [`simnet`] — a virtual-clock network cost model (bandwidth/latency per
+//!   link, two-tier NVLink/NIC hierarchy) standing in for the paper's AWS
+//!   testbed.
+//! - [`collective`] — global collectives (ring allreduce, parameter server,
+//!   BytePS) and partial averaging (`neighbor_allreduce`, dynamic and
+//!   hierarchical variants).
+//! - [`window`] — asynchronous one-sided window operations
+//!   (`win_create`/`put`/`get`/`accumulate`/`update`) with distributed
+//!   mutexes, used by asynchronous push-sum.
+//! - [`negotiation`] — the rank-0 negotiation service: readiness, operation
+//!   matching and dynamic-topology validity checks.
+//! - [`fusion`] — tensor-fusion buffers batching small messages.
+//! - [`nonblocking`] — non-blocking communication handles backed by a
+//!   dedicated per-node communication thread (compute/comm overlap).
+//! - [`optim`] — decentralized optimizers: DGD, Exact-Diffusion,
+//!   Gradient-Tracking, push-sum, D-SGD (ATC/AWC), DmSGD, QG-DmSGD and the
+//!   periodic-global-averaging wrapper.
+//! - [`runtime`] — the PJRT runtime executing AOT-compiled JAX/Pallas
+//!   artifacts from the Rust hot path.
+//! - [`launcher`] — the SPMD launcher (`bfrun` analogue) spawning one thread
+//!   per simulated node.
+//! - [`training`] — the deep-learning training driver used by the paper's
+//!   DNN experiments.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
+//! reproduced tables and figures.
+
+pub mod cli;
+pub mod collective;
+pub mod config;
+pub mod context;
+pub mod fusion;
+pub mod launcher;
+pub mod metrics;
+pub mod negotiation;
+pub mod nonblocking;
+pub mod optim;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod simnet;
+pub mod tensor;
+pub mod timeline;
+pub mod topology;
+pub mod training;
+pub mod transport;
+pub mod window;
+
+pub use context::NodeContext;
+pub use launcher::{run_spmd, SpmdConfig};
+pub use topology::graph::Graph;
+pub use topology::weights::WeightMatrix;

@@ -1,0 +1,179 @@
+//! `bfrun` — the BlueFog-rs launcher CLI (paper §VI-A).
+//!
+//! Subcommands:
+//! - `train`     decentralized DNN training on simulated nodes (E2E driver)
+//! - `consensus` average-consensus demo over a chosen topology
+//! - `info`      artifact + preset inventory
+//!
+//! Examples:
+//! ```text
+//! bfrun train --preset tiny --nodes 8 --steps 200 --algo atc --topology expo2
+//! bfrun consensus --nodes 16 --topology ring --iters 200
+//! bfrun info
+//! ```
+
+use std::sync::Arc;
+
+use bluefog::cli::Args;
+use bluefog::collective::AllreduceAlgo;
+use bluefog::config::ModelPreset;
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::optim::{make_optimizer, CommSpec, PeriodicGlobalAveraging};
+use bluefog::runtime::DeviceService;
+use bluefog::simnet::NetworkModel;
+use bluefog::tensor::norm2;
+use bluefog::topology::dynamic::OnePeerExpo;
+use bluefog::topology::builders;
+use bluefog::training::{train_node, TrainRun};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("bfrun: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("consensus") => cmd_consensus(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'");
+            }
+            eprintln!(
+                "usage: bfrun <train|consensus|info> [--nodes N] [--preset P] [--algo A] ..."
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let nodes = args.usize_or("nodes", 8)?;
+    let steps = args.usize_or("steps", 100)?;
+    let preset_name = args.choice_or("preset", "nano", &["nano", "tiny", "small"])?;
+    let algo = args.str_or("algo", "atc").to_string();
+    let topo_name = args.str_or("topology", "expo2").to_string();
+    let dynamic = args.bool_or("dynamic", false)?;
+    let lr = args.f64_or("lr", 0.3)? as f32;
+    let beta = args.f64_or("beta", 0.9)? as f32;
+    let period = args.usize_or("global-period", 0)?;
+    let pallas = args.bool_or("pallas", false)?;
+    let artifacts_dir = args.str_or("artifacts", "artifacts").to_string();
+    let ranks_per_machine = args.usize_or("local-size", nodes.min(8))?;
+
+    let preset = ModelPreset::by_name(preset_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset_name}"))?;
+    let device = DeviceService::new();
+    let (graph, weights) = builders::by_name(&topo_name, nodes)?;
+
+    let net = NetworkModel::aws_p3(ranks_per_machine.max(1));
+    let cfg = SpmdConfig::new(nodes)
+        .with_net(net)
+        .with_topology(graph, weights)
+        .with_device(device.handle());
+
+    let mut run = TrainRun::new(preset.clone(), steps);
+    run.artifacts_dir = artifacts_dir;
+    run.use_pallas = pallas;
+    let algo2 = algo.clone();
+
+    println!(
+        "# train preset={} nodes={nodes} steps={steps} algo={algo} topology={topo_name}{} lr={lr}",
+        preset.name,
+        if dynamic { " (dynamic)" } else { "" },
+    );
+    println!("# params={} flops/step={:.3e}", preset.param_count(), preset.flops_per_step());
+
+    let results = run_spmd(cfg, move |ctx| {
+        let comm = if dynamic {
+            CommSpec::Dynamic(Arc::new(OnePeerExpo::new(ctx.size())))
+        } else {
+            CommSpec::Static
+        };
+        let opt = make_optimizer(&algo2, lr, beta, comm)?;
+        let (logs, params) = if period > 0 {
+            let mut wrapped = PeriodicGlobalAveraging::new(opt, period, AllreduceAlgo::Ring);
+            train_node(ctx, &run, &mut wrapped)?
+        } else {
+            let mut opt = opt;
+            train_node(ctx, &run, &mut opt)?
+        };
+        Ok((logs, params, ctx.vtime()))
+    })?;
+
+    // Report from rank 0 (the paper's convention: "we take the solution at
+    // the rank-0 node").
+    let (logs, _, vtime) = &results[0];
+    println!("# step, loss, vtime_s, wall_s");
+    for l in logs {
+        println!("{:6} {:8.4} {:10.4} {:8.2}", l.step, l.loss, l.vtime, l.wall);
+    }
+    let first = logs.first().map(|l| l.loss).unwrap_or(f32::NAN);
+    let last = logs.last().map(|l| l.loss).unwrap_or(f32::NAN);
+    println!("# loss {first:.4} -> {last:.4}; simulated time {vtime:.3}s");
+    Ok(())
+}
+
+fn cmd_consensus(args: &Args) -> anyhow::Result<()> {
+    let nodes = args.usize_or("nodes", 16)?;
+    let iters = args.usize_or("iters", 100)?;
+    let topo_name = args.str_or("topology", "expo2").to_string();
+    let (graph, weights) = builders::by_name(&topo_name, nodes)?;
+    println!("# consensus nodes={nodes} topology={topo_name} iters={iters}");
+    println!("# spectral gap: {:.4}", weights.spectral_gap());
+    let cfg = SpmdConfig::new(nodes).with_topology(graph, weights);
+    let results = run_spmd(cfg, move |ctx| {
+        let mut x = vec![ctx.rank() as f32; 4];
+        for _ in 0..iters {
+            x = ctx.neighbor_allreduce(&x)?;
+        }
+        Ok(x[0])
+    })?;
+    let mean = (nodes as f32 - 1.0) / 2.0;
+    let err: f64 = results.iter().map(|&x| (x - mean) as f64).map(|e| e * e).sum::<f64>().sqrt();
+    println!("values: {results:?}");
+    println!("consensus error vs true mean {mean}: {err:.3e}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    println!("model presets:");
+    for p in bluefog::config::PRESETS {
+        println!(
+            "  {:8} d_model={:4} layers={} seq={:4} batch={:2} params={}",
+            p.name,
+            p.d_model,
+            p.n_layers,
+            p.seq,
+            p.batch,
+            p.param_count()
+        );
+    }
+    println!("workload cost models (Fig. 12 / Table II):");
+    for w in bluefog::config::WorkloadModel::all() {
+        println!("  {:12} params={:>11} batch={}", w.name, w.params, w.batch);
+    }
+    println!("artifacts in {dir}:");
+    match std::fs::read_dir(dir) {
+        Ok(entries) => {
+            let mut names: Vec<String> = entries
+                .filter_map(|e| e.ok())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| n.ends_with(".hlo.txt"))
+                .collect();
+            names.sort();
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("  (unavailable: {e})"),
+    }
+    // Sanity demo of the tensor module so `info` exercises the library.
+    let _ = norm2(&[3.0, 4.0]);
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Lightweight measurement utilities for the benchmark harness.
+//!
+//! Criterion is unavailable offline; this module provides the statistics
+//! the paper's figures report: mean, percentiles and the 90% confidence
+//! interval of Fig. 11 ("solid points … shaded areas represent 90%
+//! confidence interval").
+
+/// Summary statistics over a sample of measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    /// Half-width of the 90% confidence interval of the mean
+    /// (normal approximation, z = 1.645).
+    pub ci90: f64,
+}
+
+impl Stats {
+    /// Compute statistics from raw samples. Panics on empty input.
+    pub fn from(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "Stats::from on empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let std = var.sqrt();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            n,
+            mean,
+            std,
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            ci90: 1.645 * std / (n as f64).sqrt(),
+        }
+    }
+}
+
+/// Percentile by linear interpolation on a pre-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Measure a closure `reps` times after `warmup` discarded runs, returning
+/// per-run wall-clock seconds.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format a rate (items/s) with an adaptive unit.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} k/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} /s")
+    }
+}
+
+/// Render a fixed-width table row (used by the bench binaries so the output
+/// matches the paper's tables).
+pub fn table_row(cells: &[String], widths: &[usize]) -> String {
+    let mut out = String::from("|");
+    for (c, w) in cells.iter().zip(widths) {
+        out.push_str(&format!(" {c:<w$} |", w = w));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_sample() {
+        let s = Stats::from(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.ci90, 0.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn stats_of_known_sample() {
+        let s = Stats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert_eq!(percentile(&sorted, 0.25), 2.5);
+        assert_eq!(percentile(&sorted, 1.0), 10.0);
+        assert_eq!(percentile(&[7.0], 0.9), 7.0);
+    }
+
+    #[test]
+    fn measure_runs_expected_times() {
+        let mut count = 0;
+        let samples = measure(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn formatting_units() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 µs");
+        assert!(fmt_rate(3.2e6).contains("M/s"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn stats_empty_panics() {
+        Stats::from(&[]);
+    }
+}

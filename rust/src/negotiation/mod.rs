@@ -1,0 +1,448 @@
+//! Negotiation service (paper §VI-C).
+//!
+//! In BlueFog, rank 0 runs a negotiation daemon: every collective request is
+//! announced to it; the daemon waits until *all* ranks announced the same
+//! operation (readiness — ranks may issue ops in different orders), sanity
+//! checks that the operations match (same kind, same element count), and —
+//! for dynamic topologies — that the user-provided `src_weights` /
+//! `dst_weights` are globally consistent, so a mismatched declaration
+//! surfaces as an **error** instead of a hang. Only then does it release the
+//! ranks to run the heavy tensor communication.
+//!
+//! The service additionally performs *resolution* for one-sided
+//! declarations: in pure push-style partial averaging only the senders know
+//! the edges (`dst_weights`), so the service tells every receiver which
+//! ranks will push to it — the "synchronizes the ranks of sending and
+//! receiving among the entire network" step of §VI-C. Symmetrically for
+//! pure pull-style.
+//!
+//! Here the daemon is a dedicated thread owned by the launcher. The
+//! virtual-clock cost of a negotiation round is that of a scalar
+//! gather-to-0 + broadcast, which the service computes from the announced
+//! per-rank times — matching the paper's claim that the check "only adds a
+//! small overhead … since it is just a scalar".
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::simnet::NetworkModel;
+
+/// Operation kinds the service can match.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Allreduce,
+    NeighborAllreduce,
+    HierarchicalNeighborAllreduce,
+    NeighborAllgather,
+    Broadcast,
+    Barrier,
+    WinOp,
+}
+
+impl OpKind {
+    fn name(&self) -> &'static str {
+        match self {
+            OpKind::Allreduce => "allreduce",
+            OpKind::NeighborAllreduce => "neighbor_allreduce",
+            OpKind::HierarchicalNeighborAllreduce => "hierarchical_neighbor_allreduce",
+            OpKind::NeighborAllgather => "neighbor_allgather",
+            OpKind::Broadcast => "broadcast",
+            OpKind::Barrier => "barrier",
+            OpKind::WinOp => "win_op",
+        }
+    }
+}
+
+/// A rank's announcement of a pending collective.
+///
+/// `dsts`/`srcs` use `Option`: `None` means *not declared* — the service
+/// resolves the side from the other ranks' declarations; `Some(ranks)` is a
+/// binding declaration that must be globally consistent.
+#[derive(Debug, Clone)]
+pub struct OpRequest {
+    pub rank: usize,
+    /// Operation name (unique per call site + round).
+    pub name: String,
+    pub kind: OpKind,
+    /// Elements in the tensor (0 for barrier).
+    pub numel: usize,
+    /// Ranks this node will send to.
+    pub dsts: Option<Vec<usize>>,
+    /// Ranks this node expects to receive from.
+    pub srcs: Option<Vec<usize>>,
+    /// Announcer's virtual time at submission.
+    pub vtime: f64,
+}
+
+/// Outcome returned to every participating rank.
+#[derive(Debug, Clone)]
+pub struct OpClearance {
+    /// Virtual time at which the rank may start the tensor communication
+    /// (after the scalar negotiation round completed).
+    pub start_vtime: f64,
+    /// Error message when validation failed.
+    pub error: Option<String>,
+    /// Ranks that will send to this rank (resolved union of declarations).
+    pub resolved_srcs: Vec<usize>,
+    /// Ranks this rank must send to (resolved union of declarations).
+    pub resolved_dsts: Vec<usize>,
+}
+
+enum ServiceMsg {
+    Submit(OpRequest, Sender<OpClearance>),
+    Shutdown,
+}
+
+/// Cloneable client handle used by [`crate::context::NodeContext`].
+#[derive(Clone)]
+pub struct NegotiationClient {
+    tx: Sender<ServiceMsg>,
+}
+
+impl NegotiationClient {
+    /// Announce an operation and block until all ranks are ready and the
+    /// sanity checks pass. Returns the clearance (with the negotiated start
+    /// virtual time and resolved edges) or the validation error.
+    pub fn submit(&self, req: OpRequest) -> anyhow::Result<OpClearance> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(ServiceMsg::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("negotiation service down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("negotiation service dropped request"))
+    }
+}
+
+/// The rank-0 negotiation daemon.
+pub struct NegotiationService {
+    tx: Sender<ServiceMsg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl NegotiationService {
+    /// Spawn the service for `size` ranks over the given network model.
+    pub fn spawn(size: usize, net: NetworkModel) -> Self {
+        let (tx, rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name("bf-negotiation".into())
+            .spawn(move || service_loop(size, net, rx))
+            .expect("spawn negotiation service");
+        NegotiationService { tx, handle: Some(handle) }
+    }
+
+    pub fn client(&self) -> NegotiationClient {
+        NegotiationClient { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for NegotiationService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ServiceMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn service_loop(size: usize, net: NetworkModel, rx: Receiver<ServiceMsg>) {
+    // Pending announcements per op name (readiness across ranks).
+    let mut pending: HashMap<String, Vec<(OpRequest, Sender<OpClearance>)>> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ServiceMsg::Shutdown => break,
+            ServiceMsg::Submit(req, reply) => {
+                let name = req.name.clone();
+                let entry = pending.entry(name.clone()).or_default();
+                entry.push((req, reply));
+                if entry.len() == size {
+                    let batch = pending.remove(&name).unwrap();
+                    respond(&batch, &net, size);
+                }
+            }
+        }
+    }
+}
+
+/// Validate a complete batch, resolve one-sided declarations, release ranks.
+fn respond(batch: &[(OpRequest, Sender<OpClearance>)], net: &NetworkModel, size: usize) {
+    let error = validate(batch, size);
+    // Resolve edge sets: a send edge i->j exists when i declared j as dst
+    // or j declared i as src.
+    let mut send_edges: Vec<Vec<usize>> = vec![vec![]; size]; // by sender
+    let mut recv_edges: Vec<Vec<usize>> = vec![vec![]; size]; // by receiver
+    if error.is_none() {
+        for (r, _) in batch {
+            if let Some(dsts) = &r.dsts {
+                for &d in dsts {
+                    push_unique(&mut send_edges[r.rank], d);
+                    push_unique(&mut recv_edges[d], r.rank);
+                }
+            }
+            if let Some(srcs) = &r.srcs {
+                for &s in srcs {
+                    push_unique(&mut send_edges[s], r.rank);
+                    push_unique(&mut recv_edges[r.rank], s);
+                }
+            }
+        }
+        for v in send_edges.iter_mut().chain(recv_edges.iter_mut()) {
+            v.sort_unstable();
+        }
+    }
+    // Scalar negotiation round: gather to rank 0, broadcast back.
+    let gather_done = batch
+        .iter()
+        .map(|(r, _)| r.vtime + net.latency(r.rank, 0))
+        .fold(0.0f64, f64::max);
+    for (req, reply) in batch {
+        let start_vtime = gather_done + net.latency(0, req.rank);
+        let _ = reply.send(OpClearance {
+            start_vtime,
+            error: error.clone(),
+            resolved_srcs: recv_edges.get(req.rank).cloned().unwrap_or_default(),
+            resolved_dsts: send_edges.get(req.rank).cloned().unwrap_or_default(),
+        });
+    }
+}
+
+fn push_unique(v: &mut Vec<usize>, x: usize) {
+    if !v.contains(&x) {
+        v.push(x);
+    }
+}
+
+fn validate(batch: &[(OpRequest, Sender<OpClearance>)], size: usize) -> Option<String> {
+    let kind = batch[0].0.kind;
+    if let Some((r, _)) = batch.iter().find(|(r, _)| r.kind != kind) {
+        return Some(format!(
+            "operation mismatch for '{}': rank {} issued {} while others issued {}",
+            r.name,
+            r.rank,
+            r.kind.name(),
+            kind.name()
+        ));
+    }
+    let numel = batch[0].0.numel;
+    if kind != OpKind::NeighborAllgather {
+        if let Some((r, _)) = batch.iter().find(|(r, _)| r.numel != numel) {
+            return Some(format!(
+                "tensor size mismatch for '{}': rank {} announced {} elements, rank {} announced {}",
+                r.name, batch[0].0.rank, numel, r.rank, r.numel
+            ));
+        }
+    }
+    // Index declarations by rank for the topology cross-check.
+    let mut by_rank: Vec<Option<&OpRequest>> = vec![None; size];
+    for (r, _) in batch {
+        if r.rank >= size {
+            return Some(format!("invalid rank {} (size {})", r.rank, size));
+        }
+        by_rank[r.rank] = Some(r);
+    }
+    // Topology check (paper §VI-C): a declared send i->j conflicts when j
+    // *also declared* its sources and did not list i; symmetrically for
+    // declared receives. One-sided declarations are resolved, not errors.
+    for (r, _) in batch {
+        if let Some(dsts) = &r.dsts {
+            for &dst in dsts {
+                if dst >= size {
+                    return Some(format!(
+                        "invalid destination {} from rank {} (size {})",
+                        dst, r.rank, size
+                    ));
+                }
+                if let Some(Some(peer)) = by_rank.get(dst) {
+                    if let Some(peer_srcs) = &peer.srcs {
+                        if !peer_srcs.contains(&r.rank) {
+                            return Some(format!(
+                                "topology mismatch for '{}': rank {} pushes to rank {dst} but rank {dst} does not list it in src_weights",
+                                r.name, r.rank
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(srcs) = &r.srcs {
+            for &src in srcs {
+                if src >= size {
+                    return Some(format!(
+                        "invalid source {} at rank {} (size {})",
+                        src, r.rank, size
+                    ));
+                }
+                if let Some(Some(peer)) = by_rank.get(src) {
+                    if let Some(peer_dsts) = &peer.dsts {
+                        if !peer_dsts.contains(&r.rank) {
+                            return Some(format!(
+                                "topology mismatch for '{}': rank {} pulls from rank {src} but rank {src} does not list it in dst_weights",
+                                r.name, r.rank
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::NetworkModel;
+
+    fn req(
+        rank: usize,
+        name: &str,
+        dsts: Option<Vec<usize>>,
+        srcs: Option<Vec<usize>>,
+    ) -> OpRequest {
+        OpRequest {
+            rank,
+            name: name.into(),
+            kind: OpKind::NeighborAllreduce,
+            numel: 16,
+            dsts,
+            srcs,
+            vtime: rank as f64 * 1e-6,
+        }
+    }
+
+    fn submit_all(reqs: Vec<OpRequest>) -> Vec<OpClearance> {
+        let n = reqs.len();
+        let svc = NegotiationService::spawn(n, NetworkModel::flat(1e9, 1e-5));
+        let handles: Vec<_> = reqs
+            .into_iter()
+            .map(|r| {
+                let c = svc.client();
+                let rank = r.rank;
+                (rank, std::thread::spawn(move || c.submit(r).unwrap()))
+            })
+            .collect();
+        let mut out = vec![None; n];
+        for (rank, h) in handles {
+            out[rank] = Some(h.join().unwrap());
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    #[test]
+    fn consistent_ring_clears() {
+        let n = 4;
+        let reqs: Vec<_> = (0..n)
+            .map(|i| req(i, "nar.0", Some(vec![(i + 1) % n]), Some(vec![(i + n - 1) % n])))
+            .collect();
+        let outs = submit_all(reqs);
+        assert!(outs.iter().all(|o| o.error.is_none()));
+        // Clearance time includes the scalar round-trip latency.
+        assert!(outs.iter().all(|o| o.start_vtime > 0.0));
+    }
+
+    #[test]
+    fn missing_src_declaration_is_detected_not_hung() {
+        // Rank 0 pushes to 1, but rank 1 declared its sources without 0 (the
+        // paper's example of a program that would hang without the check).
+        let reqs = vec![
+            req(0, "nar.0", Some(vec![1]), Some(vec![1])),
+            req(1, "nar.0", Some(vec![0]), Some(vec![])),
+        ];
+        let outs = submit_all(reqs);
+        assert!(outs.iter().all(|o| o.error.is_some()));
+        let msg = outs[0].error.clone().unwrap();
+        assert!(msg.contains("topology mismatch"), "{msg}");
+    }
+
+    #[test]
+    fn pure_push_style_resolves_receivers() {
+        // Only senders declare: the service must tell rank 2 who pushes.
+        let reqs = vec![
+            req(0, "push.0", Some(vec![2]), None),
+            req(1, "push.0", Some(vec![2]), None),
+            req(2, "push.0", Some(vec![0]), None),
+        ];
+        let outs = submit_all(reqs);
+        assert!(outs.iter().all(|o| o.error.is_none()));
+        assert_eq!(outs[2].resolved_srcs, vec![0, 1]);
+        assert_eq!(outs[0].resolved_srcs, vec![2]);
+        assert_eq!(outs[0].resolved_dsts, vec![2]);
+    }
+
+    #[test]
+    fn pure_pull_style_resolves_senders() {
+        let reqs = vec![
+            req(0, "pull.0", None, Some(vec![1, 2])),
+            req(1, "pull.0", None, Some(vec![])),
+            req(2, "pull.0", None, Some(vec![0])),
+        ];
+        let outs = submit_all(reqs);
+        assert!(outs.iter().all(|o| o.error.is_none()));
+        assert_eq!(outs[1].resolved_dsts, vec![0]);
+        assert_eq!(outs[2].resolved_dsts, vec![0]);
+        assert_eq!(outs[0].resolved_dsts, vec![2]);
+        assert_eq!(outs[0].resolved_srcs, vec![1, 2]);
+    }
+
+    #[test]
+    fn size_mismatch_detected() {
+        let mut a = req(0, "nar.1", Some(vec![1]), Some(vec![1]));
+        let mut b = req(1, "nar.1", Some(vec![0]), Some(vec![0]));
+        a.numel = 16;
+        b.numel = 32;
+        let outs = submit_all(vec![a, b]);
+        assert!(outs[0].error.as_ref().unwrap().contains("size mismatch"));
+    }
+
+    #[test]
+    fn kind_mismatch_detected() {
+        let a = req(0, "op.2", None, None);
+        let mut b = req(1, "op.2", None, None);
+        b.kind = OpKind::Allreduce;
+        let outs = submit_all(vec![a, b]);
+        assert!(outs[0].error.as_ref().unwrap().contains("operation mismatch"));
+    }
+
+    #[test]
+    fn out_of_range_destination_detected() {
+        let a = req(0, "op.3", Some(vec![9]), None);
+        let b = req(1, "op.3", None, None);
+        let outs = submit_all(vec![a, b]);
+        assert!(outs[0].error.as_ref().unwrap().contains("invalid destination"));
+    }
+
+    #[test]
+    fn interleaved_ops_are_matched_by_name() {
+        // The announcements for ops A and B arrive at the service in an
+        // arbitrary interleaving (in BlueFog, requests are *enqueued* by the
+        // background thread, so rank 1's B announcement can reach rank 0's
+        // before its A): the readiness logic must pair them by name.
+        let svc = NegotiationService::spawn(2, NetworkModel::flat(1e9, 1e-5));
+        let submissions = vec![
+            req(1, "B", Some(vec![0]), Some(vec![0])),
+            req(0, "A", Some(vec![1]), Some(vec![1])),
+            req(1, "A", Some(vec![0]), Some(vec![0])),
+            req(0, "B", Some(vec![1]), Some(vec![1])),
+        ];
+        let handles: Vec<_> = submissions
+            .into_iter()
+            .map(|r| {
+                let c = svc.client();
+                std::thread::spawn(move || c.submit(r).unwrap())
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap().error.is_none());
+        }
+    }
+
+    #[test]
+    fn clearance_time_reflects_slowest_rank() {
+        let mut reqs = vec![
+            req(0, "t.0", Some(vec![1]), Some(vec![1])),
+            req(1, "t.0", Some(vec![0]), Some(vec![0])),
+        ];
+        reqs[1].vtime = 1.0; // rank 1 arrives late
+        let outs = submit_all(reqs);
+        assert!(outs[0].start_vtime >= 1.0, "negotiation waits for the slowest rank");
+    }
+}

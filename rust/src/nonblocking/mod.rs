@@ -1,0 +1,482 @@
+//! Non-blocking communication (paper §V-A, §VI-A).
+//!
+//! BlueFog's key system optimization: a dedicated per-node **communication
+//! thread** consumes a shared request queue, so tensor communication
+//! overlaps with local computation. The non-blocking API returns a
+//! [`Handle`] immediately; [`Handle::wait`] joins the result
+//! (`x = bf.wait(handle)` in Listing 5).
+//!
+//! Implementation notes:
+//! - Each node owns a *second* transport endpoint dedicated to its comm
+//!   thread, so in-flight asynchronous exchanges never collide with
+//!   blocking ops on the main endpoint. Peers of a non-blocking op must
+//!   also issue it non-blocking (as all the provided optimizers do).
+//! - The virtual clock models overlap faithfully: a queued op starts at the
+//!   *enqueue* virtual time and completes at the communication finish time;
+//!   the compute thread's clock only advances to that finish time when it
+//!   actually `wait()`s — time spent computing in between is overlapped.
+//! - The comm thread applies **tensor fusion** (paper §VI-C). Fusion groups
+//!   are assigned *deterministically at enqueue time* from the request
+//!   sizes (which follow the SPMD program order, identical on every rank):
+//!   a group closes when adding the next tensor would exceed the threshold.
+//!   In BlueFog the rank-0 negotiation service plays this coordinating
+//!   role; the deterministic size-stream rule achieves the same global
+//!   agreement without a round trip. A group is transmitted when the first
+//!   request of the *next* group arrives, or when the caller `wait()`s on
+//!   one of its handles (which enqueues a flush marker).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::context::NodeContext;
+use crate::fusion::FusionBuffer;
+use crate::simnet::NetworkModel;
+use crate::tensor::weighted_combine_from;
+use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, VClock};
+
+/// A non-blocking operation's completion token.
+pub struct Handle {
+    rx: Receiver<CommResult>,
+    /// Fusion group of the request (flushed on wait).
+    group: u64,
+    flush_tx: Sender<CommRequest>,
+    /// The node's group counter/accumulator: waiting on a handle closes the
+    /// open group so later requests start a fresh one (every rank waits in
+    /// the same program order, so grouping stays globally deterministic).
+    group_counter: Arc<std::sync::atomic::AtomicU64>,
+    acc_bytes: Arc<std::sync::atomic::AtomicUsize>,
+}
+
+impl Handle {
+    fn flush(&self) {
+        use std::sync::atomic::Ordering;
+        if self.group_counter.load(Ordering::Relaxed) == self.group {
+            self.group_counter.store(self.group + 1, Ordering::Relaxed);
+            self.acc_bytes.store(0, Ordering::Relaxed);
+        }
+        let _ = self.flush_tx.send(CommRequest::Flush(self.group));
+    }
+}
+
+#[derive(Debug)]
+pub(crate) struct CommResult {
+    data: Vec<f32>,
+    done_vtime: f64,
+}
+
+impl Handle {
+    /// Block until the communication finishes; returns the reduced tensor
+    /// and advances the caller's virtual clock to the completion time
+    /// (`bf.wait(handle)`).
+    pub fn wait(self, ctx: &NodeContext) -> anyhow::Result<Vec<f32>> {
+        self.flush();
+        let res = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("communication thread dropped the request"))?;
+        ctx.clock().advance_to(res.done_vtime);
+        Ok(res.data)
+    }
+
+    /// Non-advancing wait, for callers that manage virtual time themselves.
+    pub fn wait_raw(self) -> anyhow::Result<(Vec<f32>, f64)> {
+        self.flush();
+        let res = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("communication thread dropped the request"))?;
+        Ok((res.data, res.done_vtime))
+    }
+}
+
+/// The exchange structure of a queued request (determines fusability).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct ExchangePlan {
+    pub self_weight: f64,
+    /// `(src, r_ij)` receive scales.
+    pub srcs: Vec<(usize, f64)>,
+    /// `(dst, s_ij)` send scales.
+    pub dsts: Vec<(usize, f64)>,
+}
+
+pub(crate) enum CommRequest {
+    NeighborAllreduce {
+        group: u64,
+        data: Vec<f32>,
+        plan: ExchangePlan,
+        enqueue_vtime: f64,
+        reply: Sender<CommResult>,
+    },
+    RingAllreduceAvg {
+        group: u64,
+        data: Vec<f32>,
+        enqueue_vtime: f64,
+        reply: Sender<CommResult>,
+    },
+    /// Transmit group `g` even if no later request has arrived.
+    Flush(u64),
+    Shutdown,
+}
+
+/// Cloneable enqueue side of a node's communication thread.
+#[derive(Clone)]
+pub struct CommQueue {
+    tx: Sender<CommRequest>,
+}
+
+/// The per-node communication thread.
+pub struct CommThread {
+    tx: Sender<CommRequest>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl CommThread {
+    /// Spawn the communication thread for `rank`, owning the node's second
+    /// transport endpoint.
+    pub fn spawn(
+        rank: usize,
+        size: usize,
+        mailbox: Mailbox,
+        postman: Postman,
+        clocks: Arc<Vec<VClock>>,
+        net: Arc<NetworkModel>,
+        _fusion_threshold: usize,
+    ) -> Self {
+        let (tx, rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name(format!("bf-comm-{rank}"))
+            .spawn(move || comm_loop(rank, size, mailbox, postman, clocks, net, rx))
+            .expect("spawn comm thread");
+        CommThread { tx, handle: Some(handle) }
+    }
+
+    pub fn queue(&self) -> CommQueue {
+        CommQueue { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for CommThread {
+    fn drop(&mut self) {
+        let _ = self.tx.send(CommRequest::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One group of fusable neighbor requests.
+struct PendingGroup {
+    group: u64,
+    plan: ExchangePlan,
+    items: Vec<(Vec<f32>, f64, Sender<CommResult>)>,
+}
+
+fn comm_loop(
+    rank: usize,
+    size: usize,
+    mut mailbox: Mailbox,
+    postman: Postman,
+    clocks: Arc<Vec<VClock>>,
+    net: Arc<NetworkModel>,
+    rx: Receiver<CommRequest>,
+) {
+    let mut rounds: HashMap<u32, u32> = HashMap::new();
+    // Groups are issued in nondecreasing order; at most one is open.
+    let mut pending: Option<PendingGroup> = None;
+    let mut flushed_below: u64 = 0; // groups < this are already done
+
+    let mut transmit = |pg: PendingGroup,
+                        mailbox: &mut Mailbox,
+                        rounds: &mut HashMap<u32, u32>| {
+        let tensors: Vec<&[f32]> = pg.items.iter().map(|(d, _, _)| d.as_slice()).collect();
+        let buf = FusionBuffer::pack(&tensors);
+        let start_vtime =
+            pg.items.iter().map(|(_, t, _)| *t).fold(f64::NEG_INFINITY, f64::max);
+        let mut ep = Endpoint::new(rank, size, mailbox, &postman, &clocks, &net, start_vtime);
+        let out = ep.neighbor_exchange(buf.data(), &pg.plan, next_tag(rounds, "nb.neighbor"));
+        let parts = buf.unpack(&out);
+        for ((_, _, reply), part) in pg.items.iter().zip(parts) {
+            let _ = reply.send(CommResult { data: part, done_vtime: ep.completion });
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            CommRequest::Shutdown => {
+                if let Some(pg) = pending.take() {
+                    transmit(pg, &mut mailbox, &mut rounds);
+                }
+                break;
+            }
+            CommRequest::Flush(g) => {
+                if g >= flushed_below {
+                    if let Some(pg) = pending.take() {
+                        if pg.group <= g {
+                            flushed_below = pg.group + 1;
+                            transmit(pg, &mut mailbox, &mut rounds);
+                        } else {
+                            pending = Some(pg);
+                        }
+                    }
+                }
+            }
+            CommRequest::RingAllreduceAvg { group, data, enqueue_vtime, reply } => {
+                // Ring ops are never fused; close any open group first.
+                if let Some(pg) = pending.take() {
+                    flushed_below = pg.group + 1;
+                    transmit(pg, &mut mailbox, &mut rounds);
+                }
+                flushed_below = flushed_below.max(group + 1);
+                let mut ep =
+                    Endpoint::new(rank, size, &mut mailbox, &postman, &clocks, &net, enqueue_vtime);
+                let mut out = ep.ring_allreduce(&data, next_tag(&mut rounds, "nb.ring"));
+                let inv = 1.0 / size as f32;
+                for x in out.iter_mut() {
+                    *x *= inv;
+                }
+                let _ = reply.send(CommResult { data: out, done_vtime: ep.completion });
+            }
+            CommRequest::NeighborAllreduce { group, data, plan, enqueue_vtime, reply } => {
+                // A request for a newer group closes the previous one.
+                if let Some(pg) = pending.take() {
+                    if pg.group < group || pg.plan != plan {
+                        flushed_below = pg.group + 1;
+                        transmit(pg, &mut mailbox, &mut rounds);
+                        pending = None;
+                    } else {
+                        pending = Some(pg);
+                    }
+                }
+                match pending.as_mut() {
+                    Some(pg) => pg.items.push((data, enqueue_vtime, reply)),
+                    None => {
+                        pending = Some(PendingGroup {
+                            group,
+                            plan,
+                            items: vec![(data, enqueue_vtime, reply)],
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn next_tag(rounds: &mut HashMap<u32, u32>, name: &str) -> u64 {
+    let id = op_id(name);
+    let round = rounds.entry(id).or_insert(0);
+    let tag = make_tag(id, round.wrapping_mul(4096));
+    *round = round.wrapping_add(1);
+    tag
+}
+
+/// A transport endpoint with virtual-time tracking decoupled from the
+/// node's compute clock: ops start at the enqueue time, reserve the shared
+/// NIC ports, and record their own completion time.
+struct Endpoint<'a> {
+    rank: usize,
+    size: usize,
+    mailbox: &'a mut Mailbox,
+    postman: &'a Postman,
+    clocks: &'a Arc<Vec<VClock>>,
+    net: &'a Arc<NetworkModel>,
+    /// Virtual time the operation became eligible to run.
+    base_vtime: f64,
+    /// Running completion time (max over receives).
+    completion: f64,
+}
+
+impl<'a> Endpoint<'a> {
+    fn new(
+        rank: usize,
+        size: usize,
+        mailbox: &'a mut Mailbox,
+        postman: &'a Postman,
+        clocks: &'a Arc<Vec<VClock>>,
+        net: &'a Arc<NetworkModel>,
+        base_vtime: f64,
+    ) -> Self {
+        Endpoint { rank, size, mailbox, postman, clocks, net, base_vtime, completion: base_vtime }
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, payload: Arc<Vec<f32>>) {
+        let bytes = payload.len() * 4;
+        let ser = self.net.port_time(self.rank, dst, bytes);
+        let send_done = self.clocks[self.rank].reserve_send(self.base_vtime, ser);
+        let recv_done = self.clocks[dst].reserve_recv(send_done - ser, ser);
+        let arrival = send_done.max(recv_done) + self.net.latency(self.rank, dst);
+        let _ = self.postman.send(
+            dst,
+            Message { src: self.rank, tag, payload, arrival_vtime: arrival },
+        );
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) -> Arc<Vec<f32>> {
+        let msg = self.mailbox.recv_match(src, tag).expect("comm endpoint closed");
+        self.completion = self.completion.max(msg.arrival_vtime);
+        msg.payload
+    }
+
+    /// Partial-averaging exchange with explicit plan (srcs/dsts resolved by
+    /// the caller).
+    fn neighbor_exchange(&mut self, data: &[f32], plan: &ExchangePlan, tag: u64) -> Vec<f32> {
+        let n = self.size;
+        let me = self.rank;
+        let mut dsts = plan.dsts.clone();
+        dsts.sort_by_key(|&(d, _)| (d + n - me) % n);
+        let shared = Arc::new(data.to_vec());
+        for &(dst, s) in &dsts {
+            if s != 1.0 {
+                let payload: Vec<f32> = data.iter().map(|&x| (s as f32) * x).collect();
+                self.send(dst, tag, Arc::new(payload));
+            } else {
+                self.send(dst, tag, shared.clone());
+            }
+        }
+        let mut incoming: Vec<(f32, Arc<Vec<f32>>)> = Vec::with_capacity(plan.srcs.len());
+        for &(src, r) in &plan.srcs {
+            let y = self.recv(src, tag);
+            incoming.push((r as f32, y));
+        }
+        let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
+        let ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
+        weighted_combine_from(data, plan.self_weight as f32, &parts, &ws)
+    }
+
+    /// Chunked ring allreduce (sum) over all ranks.
+    fn ring_allreduce(&mut self, data: &[f32], tag: u64) -> Vec<f32> {
+        let n = self.size;
+        let me = self.rank;
+        if n == 1 {
+            return data.to_vec();
+        }
+        let len = data.len();
+        let bounds: Vec<(usize, usize)> =
+            (0..n).map(|c| (c * len / n, (c + 1) * len / n)).collect();
+        let mut buf = data.to_vec();
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+        for r in 0..(n - 1) {
+            let send_c = (me + n - r) % n;
+            let recv_c = (me + n - r - 1) % n;
+            let (slo, shi) = bounds[send_c];
+            self.send(next, tag + r as u64, Arc::new(buf[slo..shi].to_vec()));
+            let incoming = self.recv(prev, tag + r as u64);
+            let (rlo, rhi) = bounds[recv_c];
+            for (x, y) in buf[rlo..rhi].iter_mut().zip(incoming.iter()) {
+                *x += y;
+            }
+        }
+        for r in 0..(n - 1) {
+            let send_c = (me + 1 + n - r) % n;
+            let recv_c = (me + n - r) % n;
+            let (slo, shi) = bounds[send_c];
+            self.send(
+                next,
+                tag + n as u64 + r as u64,
+                Arc::new(buf[slo..shi].to_vec()),
+            );
+            let incoming = self.recv(prev, tag + n as u64 + r as u64);
+            let (rlo, rhi) = bounds[recv_c];
+            buf[rlo..rhi].copy_from_slice(&incoming);
+        }
+        buf
+    }
+}
+
+impl NodeContext {
+    /// Deterministic fusion-group assignment: a group closes when adding
+    /// this request would exceed the fusion threshold (threshold 0: every
+    /// request is its own group). Driven purely by the program-order size
+    /// stream, so all ranks agree.
+    fn assign_fusion_group(&mut self, bytes: usize) -> u64 {
+        use std::sync::atomic::Ordering;
+        if self.fusion_threshold == 0 {
+            return self.fusion_group.fetch_add(1, Ordering::Relaxed) + 1;
+        }
+        let acc = self.fusion_acc_bytes.load(Ordering::Relaxed);
+        if acc > 0 && acc + bytes > self.fusion_threshold {
+            self.fusion_group.fetch_add(1, Ordering::Relaxed);
+            self.fusion_acc_bytes.store(0, Ordering::Relaxed);
+        }
+        self.fusion_acc_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.fusion_group.load(Ordering::Relaxed)
+    }
+
+    /// `bf.neighbor_allreduce_nonblocking(...)` — enqueue a partial
+    /// averaging on the communication thread and return immediately.
+    ///
+    /// The plan must be fully specified: pass explicit weights, or omit
+    /// them to use the static topology's local view.
+    pub fn neighbor_allreduce_nonblocking(
+        &mut self,
+        data: &[f32],
+        weights: Option<&crate::collective::neighbor::NeighborWeights>,
+    ) -> anyhow::Result<Handle> {
+        let plan = match weights {
+            Some(w) => {
+                let srcs = w.src_weights.clone().ok_or_else(|| {
+                    anyhow::anyhow!("non-blocking dynamic neighbor_allreduce requires src_weights")
+                })?;
+                let dsts = w.dst_weights.clone().ok_or_else(|| {
+                    anyhow::anyhow!("non-blocking dynamic neighbor_allreduce requires dst_weights")
+                })?;
+                ExchangePlan { self_weight: w.self_weight, srcs, dsts }
+            }
+            None => {
+                let topo = self.load_topology();
+                let (self_weight, srcs) = topo.weights.pull_view(self.rank());
+                let dsts: Vec<(usize, f64)> =
+                    topo.graph.out_neighbors(self.rank()).into_iter().map(|r| (r, 1.0)).collect();
+                ExchangePlan { self_weight, srcs, dsts }
+            }
+        };
+        let group = self.assign_fusion_group(data.len() * 4);
+        let (tx, rx) = channel();
+        let q = self.comm_queue()?;
+        let flush_tx = q.tx.clone();
+        q.tx.send(CommRequest::NeighborAllreduce {
+            group,
+            data: data.to_vec(),
+            plan,
+            enqueue_vtime: self.vtime(),
+            reply: tx,
+        })
+        .map_err(|_| anyhow::anyhow!("communication thread down"))?;
+        Ok(Handle {
+            rx,
+            group,
+            flush_tx,
+            group_counter: self.fusion_group.clone(),
+            acc_bytes: self.fusion_acc_bytes.clone(),
+        })
+    }
+
+    /// Non-blocking global average via ring allreduce (the overlapped
+    /// Horovod baseline).
+    pub fn allreduce_nonblocking(&mut self, data: &[f32]) -> anyhow::Result<Handle> {
+        use std::sync::atomic::Ordering;
+        // Ring ops close the open fusion group.
+        let group = self.fusion_group.fetch_add(1, Ordering::Relaxed) + 1;
+        self.fusion_acc_bytes.store(0, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let q = self.comm_queue()?;
+        let flush_tx = q.tx.clone();
+        q.tx.send(CommRequest::RingAllreduceAvg {
+            group,
+            data: data.to_vec(),
+            enqueue_vtime: self.vtime(),
+            reply: tx,
+        })
+        .map_err(|_| anyhow::anyhow!("communication thread down"))?;
+        Ok(Handle {
+            rx,
+            group,
+            flush_tx,
+            group_counter: self.fusion_group.clone(),
+            acc_bytes: self.fusion_acc_bytes.clone(),
+        })
+    }
+}

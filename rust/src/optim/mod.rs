@@ -1,0 +1,503 @@
+//! Decentralized optimizers (paper §II, §IV, §V-C, Appendices A/B).
+//!
+//! Every optimizer operates on a flat `f32` parameter vector plus a caller-
+//! supplied stochastic gradient, and communicates through a [`CommSpec`]:
+//! static topology, per-iteration dynamic topology, hierarchical, or global
+//! averaging (the parallel-SGD baseline). This mirrors BlueFog's
+//! `Distributed*Optimizer` wrappers, where the communication type and
+//! topology weights are swappable per step (paper Listing 4).
+//!
+//! Implemented algorithms:
+//! - [`Dgd`] — decentralized (stochastic) gradient descent, ATC and AWC
+//!   orders (paper eq. (22)/(23));
+//! - [`ExactDiffusion`] — bias-corrected diffusion (Appendix A);
+//! - [`GradientTracking`] — DIGing-style tracking of the global gradient;
+//! - [`PushSumGradientTracking`] — push-style tracking over directed
+//!   time-varying graphs (Appendix B);
+//! - [`DmSgd`] — decentralized momentum SGD in three flavors: vanilla
+//!   (local momentum, [3]), synchronized momentum ([61]: the momentum
+//!   buffer is partially averaged too) and quasi-global momentum
+//!   (QG-DmSGD, [67]);
+//! - [`PeriodicGlobalAveraging`] — wrapper that swaps partial averaging for
+//!   a global allreduce every `period` steps (paper Listing 4 / [4]).
+
+use std::sync::Arc;
+
+use crate::collective::neighbor::NeighborWeights;
+use crate::collective::{AllreduceAlgo, ReduceOp};
+use crate::context::NodeContext;
+use crate::tensor::axpy;
+use crate::topology::dynamic::DynamicTopology;
+
+/// How an optimizer communicates each iteration.
+#[derive(Clone)]
+pub enum CommSpec {
+    /// Partial averaging over the static global topology.
+    Static,
+    /// Partial averaging over a per-iteration dynamic topology.
+    Dynamic(Arc<dyn DynamicTopology>),
+    /// Hierarchical neighbor allreduce (machine-level topology).
+    Hierarchical,
+    /// Global averaging — the centralized baseline.
+    Global(AllreduceAlgo),
+    /// No communication (local SGD step).
+    None,
+}
+
+impl CommSpec {
+    /// Perform the combine step `x <- W x` for iteration `iter`.
+    pub fn combine(
+        &self,
+        ctx: &mut NodeContext,
+        iter: usize,
+        data: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        match self {
+            CommSpec::Static => ctx.neighbor_allreduce(data),
+            CommSpec::Dynamic(topo) => {
+                let view = topo.view(iter, ctx.rank());
+                // Pull-style realization of the view: receivers scale.
+                let w = NeighborWeights::push_pull(
+                    view.self_weight,
+                    view.src_weights.clone(),
+                    view.dst_weights.iter().map(|&(d, _)| (d, 1.0)).collect(),
+                );
+                ctx.neighbor_allreduce_dynamic(data, &w)
+            }
+            CommSpec::Hierarchical => ctx.hierarchical_neighbor_allreduce(data),
+            CommSpec::Global(algo) => ctx.allreduce(data, ReduceOp::Average, *algo),
+            CommSpec::None => Ok(data.to_vec()),
+        }
+    }
+
+    /// Short label for logs and tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CommSpec::Static => "static",
+            CommSpec::Dynamic(_) => "dynamic",
+            CommSpec::Hierarchical => "hierarchical",
+            CommSpec::Global(_) => "global",
+            CommSpec::None => "none",
+        }
+    }
+}
+
+/// Common interface: one optimization step given the local gradient.
+pub trait DecentralizedOptimizer: Send {
+    /// Apply one step in place.
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32])
+        -> anyhow::Result<()>;
+    /// Display name.
+    fn name(&self) -> String;
+}
+
+impl DecentralizedOptimizer for Box<dyn DecentralizedOptimizer> {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32])
+        -> anyhow::Result<()> {
+        (**self).step(ctx, x, grad)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
+}
+
+/// Execution order of communication vs adaptation (paper §V-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOrder {
+    /// Adapt-Then-Communicate: `x <- W (x - γ g)` (eq. 23).
+    Atc,
+    /// Adapt-While-Communicate: `x <- W x - γ g` (eq. 22) — the combine can
+    /// overlap the gradient computation.
+    Awc,
+}
+
+/// Decentralized (stochastic) gradient descent — paper eq. (16)/(17).
+pub struct Dgd {
+    pub gamma: f32,
+    pub order: StepOrder,
+    pub comm: CommSpec,
+    iter: usize,
+}
+
+impl Dgd {
+    pub fn new(gamma: f32, order: StepOrder, comm: CommSpec) -> Self {
+        Dgd { gamma, order, comm, iter: 0 }
+    }
+}
+
+impl DecentralizedOptimizer for Dgd {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        match self.order {
+            StepOrder::Atc => {
+                let mut half = x.clone();
+                axpy(-self.gamma, grad, &mut half);
+                *x = self.comm.combine(ctx, self.iter, &half)?;
+            }
+            StepOrder::Awc => {
+                let combined = self.comm.combine(ctx, self.iter, x)?;
+                *x = combined;
+                axpy(-self.gamma, grad, x);
+            }
+        }
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("DGD-{:?}({})", self.order, self.comm.label())
+    }
+}
+
+/// Exact-Diffusion (Appendix A): corrects DGD's steady-state bias.
+///
+/// `psi_k = x_k - γ g_k`; `phi_k = psi_k + x_k - psi_{k-1}`;
+/// `x_{k+1} = W phi_k`.
+pub struct ExactDiffusion {
+    pub gamma: f32,
+    pub comm: CommSpec,
+    prev_psi: Option<Vec<f32>>,
+    iter: usize,
+}
+
+impl ExactDiffusion {
+    pub fn new(gamma: f32, comm: CommSpec) -> Self {
+        ExactDiffusion { gamma, comm, prev_psi: None, iter: 0 }
+    }
+}
+
+impl DecentralizedOptimizer for ExactDiffusion {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let mut psi = x.clone();
+        axpy(-self.gamma, grad, &mut psi);
+        let phi: Vec<f32> = match &self.prev_psi {
+            None => psi.clone(),
+            Some(prev) => psi
+                .iter()
+                .zip(x.iter())
+                .zip(prev.iter())
+                .map(|((p, xi), pp)| p + xi - pp)
+                .collect(),
+        };
+        *x = self.comm.combine(ctx, self.iter, &phi)?;
+        self.prev_psi = Some(psi);
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("ExactDiffusion({})", self.comm.label())
+    }
+}
+
+/// Gradient tracking (DIGing): `y` tracks the network-average gradient so
+/// the fixed point is exact even under heterogeneous data.
+///
+/// `y_{k+1} = W(y_k + g_{k+1} - g_k)` (y_0 = g_0);
+/// `x_{k+1} = W(x_k - γ y_{k+1})`.
+pub struct GradientTracking {
+    pub gamma: f32,
+    pub comm: CommSpec,
+    y: Option<Vec<f32>>,
+    prev_grad: Option<Vec<f32>>,
+    iter: usize,
+}
+
+impl GradientTracking {
+    pub fn new(gamma: f32, comm: CommSpec) -> Self {
+        GradientTracking { gamma, comm, y: None, prev_grad: None, iter: 0 }
+    }
+
+    /// The tracked global-gradient estimate (tests verify the tracking
+    /// invariant `mean_i y_i = mean_i g_i`).
+    pub fn tracker(&self) -> Option<&Vec<f32>> {
+        self.y.as_ref()
+    }
+}
+
+impl DecentralizedOptimizer for GradientTracking {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let y = match (&mut self.y, &self.prev_grad) {
+            (None, _) => grad.to_vec(),
+            (Some(y), Some(pg)) => {
+                let mut q = y.clone();
+                for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg) {
+                    *qi += g - p;
+                }
+                self.comm.combine(ctx, self.iter, &q)?
+            }
+            (Some(_), None) => unreachable!("prev_grad set with y"),
+        };
+        let mut half = x.clone();
+        axpy(-self.gamma, &y, &mut half);
+        *x = self.comm.combine(ctx, self.iter, &half)?;
+        self.y = Some(y);
+        self.prev_grad = Some(grad.to_vec());
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("GradientTracking({})", self.comm.label())
+    }
+}
+
+/// Push-sum gradient tracking (Appendix B, eq. (27)–(31)) — runs over
+/// *directed, time-varying* graphs using column-stochastic (push) weights,
+/// with the push-sum weight `v` correcting the bias.
+pub struct PushSumGradientTracking {
+    pub gamma: f32,
+    pub topo: Arc<dyn DynamicTopology>,
+    u: Option<Vec<f32>>,
+    v: f32,
+    y: Option<Vec<f32>>,
+    prev_grad: Option<Vec<f32>>,
+    iter: usize,
+}
+
+impl PushSumGradientTracking {
+    pub fn new(gamma: f32, topo: Arc<dyn DynamicTopology>) -> Self {
+        PushSumGradientTracking { gamma, topo, u: None, v: 1.0, y: None, prev_grad: None, iter: 0 }
+    }
+
+    /// Push-style combine: senders scale by the column-stochastic weights.
+    fn push_combine(
+        &self,
+        ctx: &mut NodeContext,
+        iter: usize,
+        data: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let view = self.topo.view(iter, ctx.rank());
+        // Column-stochastic: self keeps self_weight, sends s_ij to dsts;
+        // receivers apply r = 1.
+        let w = NeighborWeights::push_pull(
+            view.self_weight,
+            view.src_weights.iter().map(|&(s, _)| (s, 1.0)).collect(),
+            view.dst_weights.clone(),
+        );
+        ctx.neighbor_allreduce_dynamic(data, &w)
+    }
+}
+
+impl DecentralizedOptimizer for PushSumGradientTracking {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        // Initialize u from the current x, y from the first gradient.
+        if self.u.is_none() {
+            self.u = Some(x.clone());
+            self.y = Some(grad.to_vec());
+            self.prev_grad = Some(grad.to_vec());
+        } else {
+            // y_{k+1} = W^k (y_k + g_{k+1} - g_k)
+            let mut q = self.y.clone().unwrap();
+            let pg = self.prev_grad.as_ref().unwrap();
+            for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg) {
+                *qi += g - p;
+            }
+            self.y = Some(self.push_combine(ctx, self.iter, &q)?);
+            self.prev_grad = Some(grad.to_vec());
+        }
+        // u_{k+1} = W^k (u_k - γ y_k)
+        let mut w = self.u.clone().unwrap();
+        axpy(-self.gamma, self.y.as_ref().unwrap(), &mut w);
+        let u_new = self.push_combine(ctx, self.iter, &w)?;
+        // v_{k+1} = W^k v_k  (scalar push-sum weight)
+        let v_new = self.push_combine(ctx, self.iter, &[self.v])?[0];
+        // x_{k+1} = u_{k+1} / v_{k+1}
+        self.u = Some(u_new);
+        self.v = v_new;
+        let u = self.u.as_ref().unwrap();
+        x.clear();
+        x.extend(u.iter().map(|ui| ui / self.v));
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        "PushSumGradientTracking(dynamic)".into()
+    }
+}
+
+/// Momentum flavor of [`DmSgd`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MomentumKind {
+    /// Local momentum buffer (vanilla DmSGD, [3]).
+    Vanilla,
+    /// Momentum buffer is partially averaged together with the parameters
+    /// ([61] — "DmSGD" row of Table III).
+    Synced,
+    /// Quasi-global momentum ([67]): the buffer tracks the *global*
+    /// parameter displacement instead of the noisy local gradient.
+    QuasiGlobal,
+}
+
+/// Decentralized momentum SGD (Table III's algorithm family).
+pub struct DmSgd {
+    pub gamma: f32,
+    pub beta: f32,
+    pub kind: MomentumKind,
+    pub order: StepOrder,
+    pub comm: CommSpec,
+    m: Option<Vec<f32>>,
+    iter: usize,
+}
+
+impl DmSgd {
+    pub fn new(gamma: f32, beta: f32, kind: MomentumKind, order: StepOrder, comm: CommSpec) -> Self {
+        DmSgd { gamma, beta, kind, order, comm, m: None, iter: 0 }
+    }
+}
+
+impl DecentralizedOptimizer for DmSgd {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let d = x.len();
+        if self.m.is_none() {
+            self.m = Some(vec![0.0; d]);
+        }
+        match self.kind {
+            MomentumKind::Vanilla | MomentumKind::Synced => {
+                let m = self.m.as_mut().unwrap();
+                for (mi, g) in m.iter_mut().zip(grad) {
+                    *mi = self.beta * *mi + g;
+                }
+                let m_snapshot = m.clone();
+                match self.order {
+                    StepOrder::Atc => {
+                        let mut half = x.clone();
+                        axpy(-self.gamma, &m_snapshot, &mut half);
+                        *x = self.comm.combine(ctx, self.iter, &half)?;
+                    }
+                    StepOrder::Awc => {
+                        *x = self.comm.combine(ctx, self.iter, x)?;
+                        axpy(-self.gamma, &m_snapshot, x);
+                    }
+                }
+                if self.kind == MomentumKind::Synced {
+                    let synced = self.comm.combine(ctx, self.iter, &m_snapshot)?;
+                    *self.m.as_mut().unwrap() = synced;
+                }
+            }
+            MomentumKind::QuasiGlobal => {
+                // [67]: d_k = g_k + beta * m_k ; x half-step, combine, then
+                // m_{k+1} = beta * m_k + (1 - beta) * (x_k - x_{k+1}) / gamma.
+                let x_prev = x.clone();
+                let m = self.m.as_ref().unwrap().clone();
+                let mut half = x.clone();
+                for ((h, g), mi) in half.iter_mut().zip(grad).zip(&m) {
+                    *h -= self.gamma * (g + self.beta * mi);
+                }
+                *x = self.comm.combine(ctx, self.iter, &half)?;
+                let m = self.m.as_mut().unwrap();
+                for ((mi, xp), xn) in m.iter_mut().zip(&x_prev).zip(x.iter()) {
+                    *mi = self.beta * *mi + (1.0 - self.beta) * (xp - xn) / self.gamma;
+                }
+            }
+        }
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        let kind = match self.kind {
+            MomentumKind::Vanilla => "DmSGD-vanilla",
+            MomentumKind::Synced => "DmSGD",
+            MomentumKind::QuasiGlobal => "QG-DmSGD",
+        };
+        format!("{kind}({})", self.comm.label())
+    }
+}
+
+/// Wrapper that periodically replaces partial averaging with a global
+/// allreduce (paper Listing 4: `allreduce if batch_idx % 20 == 0`).
+pub struct PeriodicGlobalAveraging<O: DecentralizedOptimizer> {
+    pub inner: O,
+    pub period: usize,
+    pub algo: AllreduceAlgo,
+    iter: usize,
+}
+
+impl<O: DecentralizedOptimizer> PeriodicGlobalAveraging<O> {
+    pub fn new(inner: O, period: usize, algo: AllreduceAlgo) -> Self {
+        assert!(period > 0);
+        PeriodicGlobalAveraging { inner, period, algo, iter: 0 }
+    }
+}
+
+impl<O: DecentralizedOptimizer> DecentralizedOptimizer for PeriodicGlobalAveraging<O> {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        self.inner.step(ctx, x, grad)?;
+        self.iter += 1;
+        if self.iter % self.period == 0 {
+            *x = ctx.allreduce(x, ReduceOp::Average, self.algo)?;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("{}+global/{}", self.inner.name(), self.period)
+    }
+}
+
+/// Optimizer factory by name (CLI / bench convenience).
+///
+/// Names: `atc`, `awc` (D-SGD orders), `dmsgd-vanilla`, `dmsgd`,
+/// `qg-dmsgd` (momentum family, ATC order), `ed` (Exact-Diffusion),
+/// `gt` (Gradient-Tracking), `psgd` (parallel SGD baseline).
+pub fn make_optimizer(
+    algo: &str,
+    gamma: f32,
+    beta: f32,
+    comm: CommSpec,
+) -> anyhow::Result<Box<dyn DecentralizedOptimizer>> {
+    Ok(match algo {
+        "atc" => Box::new(Dgd::new(gamma, StepOrder::Atc, comm)),
+        "awc" => Box::new(Dgd::new(gamma, StepOrder::Awc, comm)),
+        "dmsgd-vanilla" => {
+            Box::new(DmSgd::new(gamma, beta, MomentumKind::Vanilla, StepOrder::Atc, comm))
+        }
+        "dmsgd" => Box::new(DmSgd::new(gamma, beta, MomentumKind::Synced, StepOrder::Atc, comm)),
+        "qg-dmsgd" => {
+            Box::new(DmSgd::new(gamma, beta, MomentumKind::QuasiGlobal, StepOrder::Atc, comm))
+        }
+        "ed" | "exact-diffusion" => Box::new(ExactDiffusion::new(gamma, comm)),
+        "gt" | "gradient-tracking" => Box::new(GradientTracking::new(gamma, comm)),
+        "psgd" | "parallel" => {
+            Box::new(ParallelMomentumSgd::new(gamma, beta, AllreduceAlgo::Ring))
+        }
+        other => anyhow::bail!(
+            "unknown algorithm '{other}' (expected atc, awc, dmsgd-vanilla, dmsgd, \
+             qg-dmsgd, ed, gt, psgd)"
+        ),
+    })
+}
+
+/// Parallel SGD with momentum — the centralized baseline of Table III
+/// (global averaging of gradients every step).
+pub struct ParallelMomentumSgd {
+    pub gamma: f32,
+    pub beta: f32,
+    pub algo: AllreduceAlgo,
+    m: Option<Vec<f32>>,
+}
+
+impl ParallelMomentumSgd {
+    pub fn new(gamma: f32, beta: f32, algo: AllreduceAlgo) -> Self {
+        ParallelMomentumSgd { gamma, beta, algo, m: None }
+    }
+}
+
+impl DecentralizedOptimizer for ParallelMomentumSgd {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let g_avg = ctx.allreduce(grad, ReduceOp::Average, self.algo)?;
+        let m = self.m.get_or_insert_with(|| vec![0.0; x.len()]);
+        for (mi, g) in m.iter_mut().zip(&g_avg) {
+            *mi = self.beta * *mi + g;
+        }
+        let m_snapshot = m.clone();
+        axpy(-self.gamma, &m_snapshot, x);
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        "ParallelSGD".into()
+    }
+}

@@ -1,0 +1,209 @@
+//! Artifact manifests — the shape/dtype contract between `aot.py` and the
+//! Rust runtime.
+//!
+//! A manifest is a plain text file next to each `.hlo.txt` artifact:
+//!
+//! ```text
+//! # comment
+//! meta key value
+//! input  <name> <f32|i32> <d0>x<d1>x...   (scalar: "-")
+//! output <name> <f32|i32> <dims>
+//! ```
+//!
+//! Lines appear in the artifact's positional input/output order. `meta`
+//! lines carry free-form key/value pairs (e.g. parameter counts, flops).
+
+use std::collections::HashMap;
+
+/// Element types crossing the boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// One input or output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: HashMap<String, String>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match fields[0] {
+                "meta" => {
+                    anyhow::ensure!(fields.len() >= 3, "line {}: malformed meta", lineno + 1);
+                    m.meta.insert(fields[1].to_string(), fields[2..].join(" "));
+                }
+                kind @ ("input" | "output") => {
+                    anyhow::ensure!(
+                        fields.len() == 4,
+                        "line {}: expected '{kind} <name> <dtype> <dims>'",
+                        lineno + 1
+                    );
+                    let spec = TensorSpec {
+                        name: fields[1].to_string(),
+                        dtype: DType::parse(fields[2])?,
+                        dims: parse_dims(fields[3])
+                            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?,
+                    };
+                    if kind == "input" {
+                        m.inputs.push(spec);
+                    } else {
+                        m.outputs.push(spec);
+                    }
+                }
+                other => anyhow::bail!("line {}: unknown directive '{other}'", lineno + 1),
+            }
+        }
+        Ok(m)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read manifest {path}: {e}"))?;
+        Manifest::parse(&text)
+    }
+
+    /// Positional index of the input named `name`.
+    pub fn input_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("input '{name}' not in manifest"))
+    }
+
+    /// Positional index of the output named `name`.
+    pub fn output_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("output '{name}' not in manifest"))
+    }
+
+    /// Inputs whose names start with `prefix` (e.g. the parameter tensors
+    /// of a train step), in positional order.
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<(usize, &TensorSpec)> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.name.starts_with(prefix))
+            .collect()
+    }
+
+    /// Integer metadata accessor.
+    pub fn meta_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("meta '{key}' missing"))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("meta '{key}' not an integer: {e}"))
+    }
+}
+
+fn parse_dims(s: &str) -> anyhow::Result<Vec<usize>> {
+    if s == "-" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow::anyhow!("bad dim '{d}': {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# train step artifact
+meta param_count 123456
+meta flops_per_step 7.5e9
+input  tokens i32 8x128
+input  targets i32 8x128
+input  p.embed f32 256x64
+input  lr f32 -
+output loss f32 -
+output g.embed f32 256x64
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.inputs.len(), 4);
+        assert_eq!(m.outputs.len(), 2);
+        assert_eq!(m.inputs[0].dtype, DType::I32);
+        assert_eq!(m.inputs[0].dims, vec![8, 128]);
+        assert_eq!(m.inputs[3].dims, Vec::<usize>::new());
+        assert_eq!(m.meta["param_count"], "123456");
+        assert_eq!(m.meta_usize("param_count").unwrap(), 123456);
+    }
+
+    #[test]
+    fn indices_and_prefix_queries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.input_index("lr").unwrap(), 3);
+        assert_eq!(m.output_index("loss").unwrap(), 0);
+        let params = m.inputs_with_prefix("p.");
+        assert_eq!(params.len(), 1);
+        assert_eq!(params[0].0, 2);
+        assert_eq!(params[0].1.numel(), 256 * 64);
+    }
+
+    #[test]
+    fn scalar_dims() {
+        assert_eq!(parse_dims("-").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_dims("3").unwrap(), vec![3]);
+        assert_eq!(parse_dims("2x3x4").unwrap(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Manifest::parse("input x f32").is_err());
+        assert!(Manifest::parse("frobnicate y").is_err());
+        assert!(Manifest::parse("input x f64 3").is_err());
+        assert!(Manifest::parse("input x f32 3xq").is_err());
+    }
+
+    #[test]
+    fn missing_lookups_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.input_index("nope").is_err());
+        assert!(m.meta_usize("nope").is_err());
+        assert!(m.meta_usize("flops_per_step").is_err(), "float meta is not usize");
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT runtime — executes AOT-compiled JAX/Pallas artifacts (L2/L1) from
+//! the Rust coordinator (L3).
+//!
+//! Artifacts are HLO **text** files produced by `python/compile/aot.py`
+//! (text, not serialized proto: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids). Each
+//! artifact ships with a `.manifest` describing its inputs/outputs so the
+//! coordinator can marshal flat `f32`/`i32` buffers.
+//!
+//! The `xla` crate's PJRT client is `Rc`-based (not `Send`), so a single
+//! **device-service thread** owns the client and all compiled executables;
+//! node threads submit [`ExecuteRequest`]s over a channel. This mirrors
+//! BlueFog's own split between the Python compute thread and the C++
+//! background thread — and on the 1-core simulation host, serializing XLA
+//! execution costs nothing.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+pub use manifest::{DType, Manifest, TensorSpec};
+
+/// A flat input buffer with shape/dtype, marshalled to an `xla::Literal`.
+#[derive(Debug, Clone)]
+pub enum InputBuf {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl InputBuf {
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let lit = match self {
+            InputBuf::F32(data, dims) => {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims_i64)?
+                }
+            }
+            InputBuf::I32(data, dims) => {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims_i64)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            InputBuf::F32(d, _) => d.len(),
+            InputBuf::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+enum ServiceMsg {
+    Load { name: String, hlo_path: String, reply: Sender<anyhow::Result<()>> },
+    Execute { name: String, inputs: Vec<InputBuf>, reply: Sender<anyhow::Result<Vec<Vec<f32>>>> },
+    Shutdown,
+}
+
+/// Cloneable handle to the device service, held by node contexts.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: Sender<ServiceMsg>,
+}
+
+impl DeviceHandle {
+    /// Compile an HLO-text artifact under `name`. Idempotent per name.
+    pub fn load(&self, name: &str, hlo_path: &str) -> anyhow::Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(ServiceMsg::Load { name: name.into(), hlo_path: hlo_path.into(), reply: tx })
+            .map_err(|_| anyhow::anyhow!("device service down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("device service dropped request"))?
+    }
+
+    /// Execute a loaded artifact; returns each output flattened to `f32`.
+    pub fn execute(&self, name: &str, inputs: Vec<InputBuf>) -> anyhow::Result<Vec<Vec<f32>>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(ServiceMsg::Execute { name: name.into(), inputs, reply: tx })
+            .map_err(|_| anyhow::anyhow!("device service down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("device service dropped request"))?
+    }
+}
+
+/// The device-service thread owning the PJRT client.
+pub struct DeviceService {
+    tx: Sender<ServiceMsg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Default for DeviceService {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeviceService {
+    /// Spawn the service with a CPU PJRT client.
+    pub fn new() -> Self {
+        let (tx, rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name("bf-device".into())
+            .spawn(move || service_loop(rx))
+            .expect("spawn device service");
+        DeviceService { tx, handle: Some(handle) }
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        DeviceHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for DeviceService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ServiceMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn service_loop(rx: Receiver<ServiceMsg>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Drain requests with the construction error.
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ServiceMsg::Load { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("PJRT client failed: {e}")));
+                    }
+                    ServiceMsg::Execute { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("PJRT client failed: {e}")));
+                    }
+                    ServiceMsg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ServiceMsg::Shutdown => break,
+            ServiceMsg::Load { name, hlo_path, reply } => {
+                let result = (|| -> anyhow::Result<()> {
+                    if executables.contains_key(&name) {
+                        return Ok(());
+                    }
+                    let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+                        .map_err(|e| anyhow::anyhow!("parse {hlo_path}: {e}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+                    executables.insert(name, exe);
+                    Ok(())
+                })();
+                let _ = reply.send(result);
+            }
+            ServiceMsg::Execute { name, inputs, reply } => {
+                let result = execute_one(&executables, &name, &inputs);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn execute_one(
+    executables: &HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    inputs: &[InputBuf],
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let exe = executables
+        .get(name)
+        .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not loaded"))?;
+    let literals: Vec<xla::Literal> =
+        inputs.iter().map(|b| b.to_literal()).collect::<anyhow::Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e}"))?;
+    // aot.py lowers with return_tuple=True: unpack the tuple of outputs.
+    let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))?;
+    let mut outs = Vec::with_capacity(parts.len());
+    for p in parts {
+        // Convert any output dtype to f32 on the way out.
+        let p32 = p
+            .convert(xla::PrimitiveType::F32)
+            .map_err(|e| anyhow::anyhow!("convert output of {name}: {e}"))?;
+        outs.push(p32.to_vec::<f32>().map_err(|e| anyhow::anyhow!("read output: {e}"))?);
+    }
+    Ok(outs)
+}

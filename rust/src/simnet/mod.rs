@@ -1,0 +1,262 @@
+//! Virtual network model — the AWS-testbed substitute (paper §VII, Table I).
+//!
+//! The paper's evaluation runs on p3.16xlarge machines: 8 V100s joined by
+//! NVLink inside a machine, 25 Gbps Ethernet between machines. We model a
+//! two-tier network: each *machine* (super node) hosts `ranks_per_machine`
+//! ranks; links are characterized by bandwidth `B` (bytes/s) and latency
+//! `L` (s). Intra-machine links are fast ("NVLink"), inter-machine links
+//! slow ("NIC").
+//!
+//! [`NetworkModel::transfer_time`] prices a point-to-point message; the
+//! collectives in [`crate::collective`] call it per hop so the virtual
+//! clock reproduces the *structural* costs of Table I:
+//!
+//! | primitive            | cost             |
+//! |----------------------|------------------|
+//! | Parameter Server     | `nM/B + nL`      |
+//! | Ring-Allreduce       | `2M/B + 2nL`     |
+//! | BytePS               | `M/B + nL`       |
+//! | partial averaging    | `M/B + L`        |
+//!
+//! The same formulas are also exposed in closed form
+//! ([`analytic`]) so the Table I bench can print model-vs-simulated rows.
+
+/// Link tiers of the two-level hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTier {
+    /// Same machine (NVLink / shared memory).
+    Intra,
+    /// Cross machine (NIC).
+    Inter,
+    /// Loopback (same rank) — free.
+    Loopback,
+}
+
+pub mod schedule;
+
+/// Two-tier bandwidth/latency network model.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Ranks per machine (8 on p3.16xlarge). 1 = every rank its own machine.
+    pub ranks_per_machine: usize,
+    /// Intra-machine bandwidth, bytes/s (NVLink ~ 300 GB/s on V100).
+    pub intra_bw: f64,
+    /// Intra-machine latency, seconds (~3 µs).
+    pub intra_lat: f64,
+    /// Inter-machine bandwidth, bytes/s (25 Gbps ≈ 3.125 GB/s).
+    pub inter_bw: f64,
+    /// Inter-machine latency, seconds (~50 µs TCP without RDMA).
+    pub inter_lat: f64,
+    /// Per-message sender/receiver CPU overhead, intra tier (LogP's `o`).
+    /// Unlike latency, overhead *occupies the port*, so it serializes
+    /// across messages — this is what tensor fusion amortizes.
+    pub intra_overhead: f64,
+    /// Per-message overhead, inter tier (TCP stack, ~20-30 µs w/o RDMA).
+    pub inter_overhead: f64,
+}
+
+impl NetworkModel {
+    /// The paper's GPU testbed: 8 ranks/machine, NVLink intra, 25 Gbps inter.
+    pub fn aws_p3(ranks_per_machine: usize) -> Self {
+        NetworkModel {
+            ranks_per_machine,
+            intra_bw: 300e9,
+            intra_lat: 3e-6,
+            inter_bw: 25e9 / 8.0,
+            inter_lat: 50e-6,
+            intra_overhead: 1e-6,
+            inter_overhead: 20e-6,
+        }
+    }
+
+    /// The paper's CPU testbed (m4.4xlarge, flat 10 Gbps-ish network):
+    /// single tier.
+    pub fn aws_m4() -> Self {
+        NetworkModel {
+            ranks_per_machine: 1,
+            intra_bw: 10e9 / 8.0,
+            intra_lat: 25e-6,
+            inter_bw: 10e9 / 8.0,
+            inter_lat: 25e-6,
+            intra_overhead: 15e-6,
+            inter_overhead: 15e-6,
+        }
+    }
+
+    /// A flat homogeneous network with explicit parameters.
+    pub fn flat(bandwidth: f64, latency: f64) -> Self {
+        NetworkModel {
+            ranks_per_machine: 1,
+            intra_bw: bandwidth,
+            intra_lat: latency,
+            inter_bw: bandwidth,
+            inter_lat: latency,
+            intra_overhead: 0.0,
+            inter_overhead: 0.0,
+        }
+    }
+
+    /// Set both tiers' per-message overhead (builder style).
+    pub fn with_overhead(mut self, overhead: f64) -> Self {
+        self.intra_overhead = overhead;
+        self.inter_overhead = overhead;
+        self
+    }
+
+    /// Machine (super-node) index of a rank.
+    pub fn machine_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_machine.max(1)
+    }
+
+    /// Local rank within its machine.
+    pub fn local_rank(&self, rank: usize) -> usize {
+        rank % self.ranks_per_machine.max(1)
+    }
+
+    /// Which tier the `src -> dst` link belongs to.
+    pub fn tier(&self, src: usize, dst: usize) -> LinkTier {
+        if src == dst {
+            LinkTier::Loopback
+        } else if self.machine_of(src) == self.machine_of(dst) {
+            LinkTier::Intra
+        } else {
+            LinkTier::Inter
+        }
+    }
+
+    /// Bandwidth of the `src -> dst` link, bytes/s.
+    pub fn bandwidth(&self, src: usize, dst: usize) -> f64 {
+        match self.tier(src, dst) {
+            LinkTier::Loopback => f64::INFINITY,
+            LinkTier::Intra => self.intra_bw,
+            LinkTier::Inter => self.inter_bw,
+        }
+    }
+
+    /// Latency of the `src -> dst` link, seconds.
+    pub fn latency(&self, src: usize, dst: usize) -> f64 {
+        match self.tier(src, dst) {
+            LinkTier::Loopback => 0.0,
+            LinkTier::Intra => self.intra_lat,
+            LinkTier::Inter => self.inter_lat,
+        }
+    }
+
+    /// Per-message CPU overhead of the `src -> dst` link (serializes on the
+    /// ports, amortized by tensor fusion).
+    pub fn msg_overhead(&self, src: usize, dst: usize) -> f64 {
+        match self.tier(src, dst) {
+            LinkTier::Loopback => 0.0,
+            LinkTier::Intra => self.intra_overhead,
+            LinkTier::Inter => self.inter_overhead,
+        }
+    }
+
+    /// Serialization (bandwidth-bound) time of `bytes` on the link.
+    pub fn serialization_time(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        let bw = self.bandwidth(src, dst);
+        if bw.is_infinite() {
+            0.0
+        } else {
+            bytes as f64 / bw
+        }
+    }
+
+    /// Port-occupancy time of one message: serialization + overhead.
+    pub fn port_time(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        self.serialization_time(src, dst, bytes) + self.msg_overhead(src, dst)
+    }
+
+    /// Total unloaded transfer time `M/B + L` for one message.
+    pub fn transfer_time(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        self.serialization_time(src, dst, bytes) + self.latency(src, dst)
+    }
+}
+
+/// Closed-form communication costs of Table I (n nodes, message M bytes,
+/// flat network with bandwidth B and latency L).
+pub mod analytic {
+    /// Parameter server: every worker's full message crosses the server's
+    /// NIC: `nM/B + nL`.
+    pub fn parameter_server(n: usize, m: f64, b: f64, l: f64) -> f64 {
+        n as f64 * m / b + n as f64 * l
+    }
+
+    /// Ring-Allreduce: `2M/B + 2nL` (reduce-scatter + allgather, n-1 rounds
+    /// each of M/n bytes).
+    pub fn ring_allreduce(n: usize, m: f64, b: f64, l: f64) -> f64 {
+        2.0 * (n as f64 - 1.0) / n as f64 * m / b + 2.0 * (n as f64 - 1.0) * l
+    }
+
+    /// BytePS: `M/B + nL` using n extra CPU servers.
+    pub fn byteps(n: usize, m: f64, b: f64, l: f64) -> f64 {
+        m / b + n as f64 * l
+    }
+
+    /// Partial averaging on a sparse graph of max degree `deg`:
+    /// `deg * M/B + L` — independent of n. With `deg = 1` (one-peer
+    /// exponential graph) this is the paper's `M/B + L` row.
+    pub fn partial_averaging(deg: usize, m: f64, b: f64, l: f64) -> f64 {
+        deg as f64 * m / b + l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiers_follow_machine_boundaries() {
+        let net = NetworkModel::aws_p3(8);
+        assert_eq!(net.tier(0, 7), LinkTier::Intra);
+        assert_eq!(net.tier(0, 8), LinkTier::Inter);
+        assert_eq!(net.tier(3, 3), LinkTier::Loopback);
+        assert_eq!(net.machine_of(15), 1);
+        assert_eq!(net.local_rank(13), 5);
+    }
+
+    #[test]
+    fn intra_is_faster_than_inter() {
+        let net = NetworkModel::aws_p3(8);
+        let m = 10 << 20;
+        assert!(net.transfer_time(0, 1, m) < net.transfer_time(0, 9, m) / 10.0);
+    }
+
+    #[test]
+    fn flat_network_single_tier() {
+        let net = NetworkModel::flat(1e9, 1e-5);
+        assert_eq!(net.bandwidth(0, 5), 1e9);
+        assert_eq!(net.latency(0, 5), 1e-5);
+        assert_eq!(net.transfer_time(2, 2, 123456), 0.0);
+    }
+
+    #[test]
+    fn table1_ordering_holds_at_scale() {
+        // For large n and sizeable M: PS > ring > byteps > partial.
+        let (m, b, l) = (100e6, 3.125e9, 50e-6);
+        let n = 64;
+        let ps = analytic::parameter_server(n, m, b, l);
+        let ring = analytic::ring_allreduce(n, m, b, l);
+        let byteps = analytic::byteps(n, m, b, l);
+        let partial = analytic::partial_averaging(1, m, b, l);
+        assert!(ps > ring, "ps={ps} ring={ring}");
+        assert!(ring > byteps, "ring={ring} byteps={byteps}");
+        assert!(byteps > partial, "byteps={byteps} partial={partial}");
+    }
+
+    #[test]
+    fn partial_averaging_is_n_independent() {
+        let (m, b, l) = (1e6, 1e9, 1e-5);
+        let c = analytic::partial_averaging(2, m, b, l);
+        // No n anywhere in the formula — the whole point of the paper.
+        assert!((c - (2.0 * m / b + l)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_latency_term_grows_linearly() {
+        let (m, b, l) = (1e6, 1e12, 1e-4); // bandwidth negligible
+        let c8 = analytic::ring_allreduce(8, m, b, l);
+        let c64 = analytic::ring_allreduce(64, m, b, l);
+        assert!(c64 / c8 > 7.0, "latency term should scale ~n: {c64}/{c8}");
+    }
+}

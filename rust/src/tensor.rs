@@ -1,0 +1,207 @@
+//! Minimal dense tensor used on the coordinator hot path.
+//!
+//! Model state and messages are flat `f32` buffers; shapes only matter at
+//! the PJRT boundary, where the [`crate::runtime`] manifest supplies them.
+//! The helpers here are the BLAS-1 style kernels the decentralized
+//! optimizers are written in.
+
+/// Flat f32 tensor with an optional shape annotation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// A tensor of zeros with the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { data: vec![0.0; n], shape: shape.to_vec() }
+    }
+
+    /// Wrap a flat vector as a rank-1 tensor.
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        let n = data.len();
+        Tensor { data, shape: vec![n] }
+    }
+
+    /// Wrap a flat vector with an explicit shape (must match length).
+    pub fn with_shape(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/len mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size in bytes on the wire.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// `y += a * x` (classic axpy). Panics if lengths differ.
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `x *= a` in place.
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Dot product.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `out = sum_k weights[k] * parts[k]` — the partial-averaging combine,
+/// the mathematical core of `neighbor_allreduce` (paper eq. (5)).
+///
+/// This is the native (pure Rust) implementation; the same computation is
+/// also available as an AOT-compiled Pallas kernel through the runtime, and
+/// the two are cross-validated in integration tests.
+pub fn weighted_combine(parts: &[&[f32]], weights: &[f32]) -> Vec<f32> {
+    assert_eq!(parts.len(), weights.len(), "combine arity mismatch");
+    assert!(!parts.is_empty(), "combine of zero parts");
+    let d = parts[0].len();
+    for p in parts {
+        assert_eq!(p.len(), d, "combine length mismatch");
+    }
+    let mut out = vec![0.0f32; d];
+    for (p, &w) in parts.iter().zip(weights) {
+        axpy(w, p, &mut out);
+    }
+    out
+}
+
+/// In-place variant: `acc = w_self * acc + sum_k weights[k] * parts[k]`.
+///
+/// The self-scale is fused into the first accumulation pass so the buffer
+/// is traversed `k` times instead of `k + 1` (hot-path optimization,
+/// EXPERIMENTS.md §Perf).
+pub fn weighted_combine_into(acc: &mut [f32], w_self: f32, parts: &[&[f32]], weights: &[f32]) {
+    assert_eq!(parts.len(), weights.len());
+    match parts.split_first() {
+        None => scale(w_self, acc),
+        Some((first, rest)) => {
+            assert_eq!(first.len(), acc.len(), "combine length mismatch");
+            let w0 = weights[0];
+            for (a, x) in acc.iter_mut().zip(first.iter()) {
+                *a = w_self * *a + w0 * x;
+            }
+            for (p, &w) in rest.iter().zip(&weights[1..]) {
+                axpy(w, p, acc);
+            }
+        }
+    }
+}
+
+/// Allocating variant that avoids the caller's init copy:
+/// `out = w_self * base + sum_k weights[k] * parts[k]`, building `out` in a
+/// single fused pass over `base` and the first part.
+pub fn weighted_combine_from(
+    base: &[f32],
+    w_self: f32,
+    parts: &[&[f32]],
+    weights: &[f32],
+) -> Vec<f32> {
+    assert_eq!(parts.len(), weights.len());
+    match parts.split_first() {
+        None => base.iter().map(|x| w_self * x).collect(),
+        Some((first, rest)) => {
+            assert_eq!(first.len(), base.len(), "combine length mismatch");
+            let w0 = weights[0];
+            let mut out: Vec<f32> =
+                base.iter().zip(first.iter()).map(|(a, x)| w_self * a + w0 * x).collect();
+            for (p, &w) in rest.iter().zip(&weights[1..]) {
+                axpy(w, p, &mut out);
+            }
+            out
+        }
+    }
+}
+
+/// Mean absolute difference between two buffers (test helper).
+pub fn mean_abs_diff(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().zip(y).map(|(a, b)| (*a as f64 - *b as f64).abs()).sum::<f64>() / x.len() as f64
+}
+
+/// Max absolute difference between two buffers (test helper).
+pub fn max_abs_diff(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (*a as f64 - *b as f64).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_has_right_len() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.nbytes(), 96);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/len mismatch")]
+    fn with_shape_validates() {
+        Tensor::with_shape(vec![1.0, 2.0], &[3]);
+    }
+
+    #[test]
+    fn axpy_matches_manual() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn weighted_combine_is_convex_mean() {
+        let a = vec![1.0f32; 8];
+        let b = vec![3.0f32; 8];
+        let out = weighted_combine(&[&a, &b], &[0.5, 0.5]);
+        assert!(out.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn weighted_combine_into_matches_functional() {
+        let mut acc = vec![2.0f32, 4.0];
+        let p1 = vec![1.0f32, 1.0];
+        let p2 = vec![0.0f32, 2.0];
+        weighted_combine_into(&mut acc, 0.5, &[&p1, &p2], &[0.25, 0.25]);
+        // 0.5*[2,4] + 0.25*[1,1] + 0.25*[0,2] = [1.25, 2.75]
+        assert_eq!(acc, vec![1.25, 2.75]);
+    }
+
+    #[test]
+    fn norms_and_dots() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

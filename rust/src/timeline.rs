@@ -1,0 +1,143 @@
+//! Timeline tracing (paper §V-D "timeline function").
+//!
+//! Records `(rank, name, category, wall start/dur, virtual start/end)` for
+//! every traced operation and can serialize to the Chrome trace-event JSON
+//! format (`chrome://tracing`, Perfetto). Used by the ablation benches to
+//! visualize communication/computation overlap.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One traced span.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub rank: usize,
+    pub name: String,
+    pub category: &'static str,
+    /// Wall-clock microseconds since timeline creation.
+    pub wall_start_us: f64,
+    pub wall_dur_us: f64,
+    /// Virtual times (seconds) at span start/end.
+    pub vtime_start: f64,
+    pub vtime_end: f64,
+}
+
+/// Thread-safe event recorder shared by all node threads.
+pub struct Timeline {
+    origin: Instant,
+    events: Mutex<Vec<Event>>,
+    enabled: bool,
+}
+
+impl Timeline {
+    pub fn new(enabled: bool) -> Self {
+        Timeline { origin: Instant::now(), events: Mutex::new(vec![]), enabled }
+    }
+
+    /// Microseconds since the timeline was created.
+    pub fn now_us(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Record a completed span.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        rank: usize,
+        name: &str,
+        category: &'static str,
+        wall_start_us: f64,
+        vtime_start: f64,
+        vtime_end: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let wall_dur_us = self.now_us() - wall_start_us;
+        self.events.lock().unwrap().push(Event {
+            rank,
+            name: name.to_string(),
+            category,
+            wall_start_us,
+            wall_dur_us,
+            vtime_start,
+            vtime_end,
+        });
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of all events.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Serialize to Chrome trace-event JSON ("X" complete events, wall
+    /// clock). `pid` is the rank, so each node gets its own track.
+    pub fn to_chrome_trace(&self) -> String {
+        let events = self.events.lock().unwrap();
+        let mut out = String::from("[\n");
+        for (i, e) in events.iter().enumerate() {
+            let comma = if i + 1 == events.len() { "" } else { "," };
+            out.push_str(&format!(
+                "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"pid\": {}, \"tid\": {}, \"ts\": {:.3}, \"dur\": {:.3}, \"args\": {{\"vtime_start\": {:.9}, \"vtime_end\": {:.9}}}}}{}\n",
+                escape(&e.name), e.category, e.rank, e.rank, e.wall_start_us, e.wall_dur_us,
+                e.vtime_start, e.vtime_end, comma
+            ));
+        }
+        out.push(']');
+        out
+    }
+
+    /// Write the Chrome trace to a file.
+    pub fn dump(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_trace())
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timeline_records_nothing() {
+        let t = Timeline::new(false);
+        t.record(0, "x", "comm", 0.0, 0.0, 1.0);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn records_and_serializes() {
+        let t = Timeline::new(true);
+        let start = t.now_us();
+        t.record(1, "neighbor_allreduce", "comm", start, 0.0, 0.5);
+        t.record(1, "grad \"q\"", "compute", start, 0.5, 0.7);
+        assert_eq!(t.len(), 2);
+        let json = t.to_chrome_trace();
+        assert!(json.contains("neighbor_allreduce"));
+        assert!(json.contains("\\\"q\\\""), "quotes escaped: {json}");
+        assert!(json.starts_with('[') && json.ends_with(']'));
+    }
+
+    #[test]
+    fn events_snapshot_is_ordered() {
+        let t = Timeline::new(true);
+        for i in 0..5 {
+            t.record(0, &format!("e{i}"), "comm", t.now_us(), i as f64, i as f64 + 1.0);
+        }
+        let ev = t.events();
+        assert_eq!(ev.len(), 5);
+        assert_eq!(ev[3].name, "e3");
+    }
+}

@@ -1,0 +1,242 @@
+//! Built-in topologies (paper §II-A, §IV-A and the BlueFog `topology_util`).
+//!
+//! These mirror the constructors BlueFog ships: `RingGraph`, `StarGraph`,
+//! `MeshGrid2DGraph`, `FullyConnectedGraph` and `ExponentialTwoGraph` (the
+//! static exponential graph of [33], which the paper recommends as "both
+//! sparse and well-connected").
+
+use super::graph::Graph;
+
+/// Directed ring: `i -> (i+1) mod n`.
+pub fn ring_directed(n: usize) -> Graph {
+    Graph::from_edges(n, (0..n).map(|i| (i, (i + 1) % n)))
+}
+
+/// Undirected ring: `i <-> (i+1) mod n`.
+pub fn ring(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    if n > 1 {
+        for i in 0..n {
+            g.add_undirected_edge(i, (i + 1) % n);
+        }
+    }
+    g
+}
+
+/// Undirected line: `i <-> i+1`.
+pub fn line(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 0..n.saturating_sub(1) {
+        g.add_undirected_edge(i, i + 1);
+    }
+    g
+}
+
+/// Star with `center = 0`: `0 <-> i` for all i.
+pub fn star(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 1..n {
+        g.add_undirected_edge(0, i);
+    }
+    g
+}
+
+/// Fully-connected (complete) graph.
+pub fn fully_connected(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            g.add_undirected_edge(i, j);
+        }
+    }
+    g
+}
+
+/// 2-D mesh grid, as close to square as possible (BlueFog's
+/// `MeshGrid2DGraph`). Nodes are laid out row-major on an `r x c` grid with
+/// `r*c = n`, and joined to their 4-neighborhood.
+pub fn mesh_grid_2d(n: usize) -> Graph {
+    let (rows, cols) = grid_shape(n);
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        let (r, c) = (i / cols, i % cols);
+        if c + 1 < cols && i + 1 < n {
+            g.add_undirected_edge(i, i + 1);
+        }
+        if r + 1 < rows && i + cols < n {
+            g.add_undirected_edge(i, i + cols);
+        }
+    }
+    g
+}
+
+/// Choose the most-square `rows x cols` factorization with `rows*cols = n`.
+pub fn grid_shape(n: usize) -> (usize, usize) {
+    let mut best = (1, n);
+    let mut r = 1;
+    while r * r <= n {
+        if n % r == 0 {
+            best = (r, n / r);
+        }
+        r += 1;
+    }
+    best
+}
+
+/// Static exponential-2 graph (`ExponentialTwoGraph` in BlueFog; [33]):
+/// node `i` sends to `(i + 2^k) mod n` for `k = 0..ceil(log2 n)`.
+/// Directed, out-degree `ceil(log2 n)`, diameter `O(log n)`.
+pub fn exponential_two(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    if n == 1 {
+        return g;
+    }
+    let mut hop = 1;
+    while hop < n {
+        for i in 0..n {
+            g.add_edge(i, (i + hop) % n);
+        }
+        hop *= 2;
+    }
+    g
+}
+
+/// Topology factory by name (CLI / bench convenience). Returns the graph
+/// and a matching weight matrix: Metropolis–Hastings for undirected graphs,
+/// uniform-pull for the exponential graph (doubly stochastic there).
+pub fn by_name(name: &str, n: usize) -> anyhow::Result<(Graph, super::weights::WeightMatrix)> {
+    use super::weights::WeightMatrix;
+    let (g, w) = match name {
+        "ring" => {
+            let g = ring(n);
+            let w = WeightMatrix::metropolis_hastings(&g);
+            (g, w)
+        }
+        "line" => {
+            let g = line(n);
+            let w = WeightMatrix::metropolis_hastings(&g);
+            (g, w)
+        }
+        "star" => {
+            let g = star(n);
+            let w = WeightMatrix::metropolis_hastings(&g);
+            (g, w)
+        }
+        "mesh" | "grid" => {
+            let g = mesh_grid_2d(n);
+            let w = WeightMatrix::metropolis_hastings(&g);
+            (g, w)
+        }
+        "full" | "fully_connected" => {
+            let g = fully_connected(n);
+            let w = WeightMatrix::metropolis_hastings(&g);
+            (g, w)
+        }
+        "expo2" | "exponential" => {
+            let g = exponential_two(n);
+            let w = WeightMatrix::uniform_pull(&g);
+            (g, w)
+        }
+        other => anyhow::bail!(
+            "unknown topology '{other}' (expected ring, line, star, mesh, full, expo2)"
+        ),
+    };
+    Ok((g, w))
+}
+
+/// The list of hop distances used by [`exponential_two`] for a given `n`:
+/// `1, 2, 4, ..., 2^(ceil(log2 n) - 1)`.
+pub fn expo2_hops(n: usize) -> Vec<usize> {
+    let mut hops = vec![];
+    let mut hop = 1;
+    while hop < n {
+        hops.push(hop);
+        hop *= 2;
+    }
+    hops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_degrees() {
+        let g = ring(8);
+        for i in 0..8 {
+            assert_eq!(g.in_degree(i), 2);
+            assert_eq!(g.out_degree(i), 2);
+        }
+        assert!(g.is_undirected());
+        assert!(g.is_strongly_connected());
+    }
+
+    #[test]
+    fn ring_small_sizes() {
+        assert_eq!(ring(1).edge_count(), 0);
+        let g2 = ring(2);
+        assert_eq!(g2.edge_count(), 2); // 0<->1
+        assert!(g2.is_strongly_connected());
+    }
+
+    #[test]
+    fn star_center_degree() {
+        let g = star(9);
+        assert_eq!(g.in_degree(0), 8);
+        assert_eq!(g.out_degree(0), 8);
+        assert_eq!(g.in_degree(3), 1);
+        assert!(g.is_strongly_connected());
+    }
+
+    #[test]
+    fn full_graph_degree() {
+        let g = fully_connected(5);
+        for i in 0..5 {
+            assert_eq!(g.in_degree(i), 4);
+        }
+        assert_eq!(g.diameter(), Some(1));
+    }
+
+    #[test]
+    fn grid_shape_square() {
+        assert_eq!(grid_shape(16), (4, 4));
+        assert_eq!(grid_shape(12), (3, 4));
+        assert_eq!(grid_shape(7), (1, 7));
+    }
+
+    #[test]
+    fn mesh_connectivity() {
+        let g = mesh_grid_2d(12);
+        assert!(g.is_undirected());
+        assert!(g.is_strongly_connected());
+        // Corner node 0 has neighbors 1 and cols.
+        assert_eq!(g.in_degree(0), 2);
+    }
+
+    #[test]
+    fn expo2_structure() {
+        let g = exponential_two(8);
+        // out-neighbors of 0 are 1, 2, 4.
+        assert_eq!(g.out_neighbors(0), vec![1, 2, 4]);
+        assert_eq!(g.out_degree(5), 3);
+        assert!(g.is_strongly_connected());
+        // log diameter
+        assert!(g.diameter().unwrap() <= 3);
+    }
+
+    #[test]
+    fn expo2_non_power_of_two() {
+        let g = exponential_two(6);
+        assert_eq!(g.out_neighbors(0), vec![1, 2, 4]);
+        assert!(g.is_strongly_connected());
+        assert_eq!(expo2_hops(6), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn line_endpoints() {
+        let g = line(5);
+        assert_eq!(g.in_degree(0), 1);
+        assert_eq!(g.in_degree(2), 2);
+        assert!(g.is_strongly_connected());
+    }
+}

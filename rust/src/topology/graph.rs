@@ -1,0 +1,228 @@
+//! Directed graph representation (paper §II-A).
+//!
+//! An edge `(i, j)` means *node i can send information to node j*; node `j`
+//! therefore has `i` among its in-coming neighbors `N(j)` and node `i` has
+//! `j` among its out-going neighbors `M(i)` — exactly the paper's eq. (6)/(7).
+
+use std::collections::BTreeSet;
+
+/// A directed graph over nodes `0..n`. Self-loops are implicit (every node
+/// always has access to its own value) and are not stored as edges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    n: usize,
+    /// Sorted edge set of `(src, dst)` pairs, `src != dst`.
+    edges: BTreeSet<(usize, usize)>,
+}
+
+impl Graph {
+    /// An edgeless graph over `n` nodes.
+    pub fn empty(n: usize) -> Self {
+        assert!(n > 0, "graph must have at least one node");
+        Graph { n, edges: BTreeSet::new() }
+    }
+
+    /// Build from an explicit edge list of `(src, dst)` pairs.
+    pub fn from_edges(n: usize, edges: impl IntoIterator<Item = (usize, usize)>) -> Self {
+        let mut g = Graph::empty(n);
+        for (s, d) in edges {
+            g.add_edge(s, d);
+        }
+        g
+    }
+
+    /// Number of nodes.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// Number of directed edges (self-loops excluded).
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Add the directed edge `src -> dst`. Self-loops are ignored.
+    pub fn add_edge(&mut self, src: usize, dst: usize) {
+        assert!(src < self.n && dst < self.n, "edge ({src},{dst}) out of range for n={}", self.n);
+        if src != dst {
+            self.edges.insert((src, dst));
+        }
+    }
+
+    /// Add both `a -> b` and `b -> a`.
+    pub fn add_undirected_edge(&mut self, a: usize, b: usize) {
+        self.add_edge(a, b);
+        self.add_edge(b, a);
+    }
+
+    /// True when `src -> dst` is present (or src == dst, the implicit loop).
+    pub fn has_edge(&self, src: usize, dst: usize) -> bool {
+        src == dst || self.edges.contains(&(src, dst))
+    }
+
+    /// In-coming neighbors `N(i) = {j : (j, i) in E}` (paper eq. (6)).
+    pub fn in_neighbors(&self, i: usize) -> Vec<usize> {
+        (0..self.n).filter(|&j| j != i && self.edges.contains(&(j, i))).collect()
+    }
+
+    /// Out-going neighbors `M(i) = {j : (i, j) in E}` (paper eq. (7)).
+    pub fn out_neighbors(&self, i: usize) -> Vec<usize> {
+        self.edges.range((i, 0)..(i, self.n)).map(|&(_, d)| d).collect()
+    }
+
+    /// In-degree (not counting the implicit self-loop).
+    pub fn in_degree(&self, i: usize) -> usize {
+        self.in_neighbors(i).len()
+    }
+
+    /// Out-degree (not counting the implicit self-loop).
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.out_neighbors(i).len()
+    }
+
+    /// Maximum in-degree over all nodes.
+    pub fn max_in_degree(&self) -> usize {
+        (0..self.n).map(|i| self.in_degree(i)).max().unwrap_or(0)
+    }
+
+    /// All edges, sorted.
+    pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.edges.iter().copied()
+    }
+
+    /// True when for every edge `(a, b)` the reverse `(b, a)` also exists.
+    pub fn is_undirected(&self) -> bool {
+        self.edges.iter().all(|&(a, b)| self.edges.contains(&(b, a)))
+    }
+
+    /// True when the graph is strongly connected (every node reaches every
+    /// other). Decentralized algorithms require this for consensus.
+    pub fn is_strongly_connected(&self) -> bool {
+        if self.n == 1 {
+            return true;
+        }
+        let fwd = |i: usize| self.out_neighbors(i);
+        let bwd = |i: usize| self.in_neighbors(i);
+        reaches_all(self.n, 0, fwd) && reaches_all(self.n, 0, bwd)
+    }
+
+    /// The reverse graph (every edge flipped).
+    pub fn reversed(&self) -> Graph {
+        Graph { n: self.n, edges: self.edges.iter().map(|&(a, b)| (b, a)).collect() }
+    }
+
+    /// Graph diameter via BFS from every node (directed shortest paths).
+    /// Returns `None` when not strongly connected.
+    pub fn diameter(&self) -> Option<usize> {
+        let mut diam = 0;
+        for s in 0..self.n {
+            let dist = self.bfs_dist(s);
+            for d in &dist {
+                match d {
+                    Some(x) => diam = diam.max(*x),
+                    None => return None,
+                }
+            }
+        }
+        Some(diam)
+    }
+
+    fn bfs_dist(&self, s: usize) -> Vec<Option<usize>> {
+        let mut dist = vec![None; self.n];
+        dist[s] = Some(0);
+        let mut queue = std::collections::VecDeque::from([s]);
+        while let Some(u) = queue.pop_front() {
+            let du = dist[u].unwrap();
+            for v in self.out_neighbors(u) {
+                if dist[v].is_none() {
+                    dist[v] = Some(du + 1);
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+}
+
+fn reaches_all(n: usize, start: usize, next: impl Fn(usize) -> Vec<usize>) -> bool {
+    let mut seen = vec![false; n];
+    seen[start] = true;
+    let mut stack = vec![start];
+    let mut count = 1;
+    while let Some(u) = stack.pop() {
+        for v in next(u) {
+            if !seen[v] {
+                seen[v] = true;
+                count += 1;
+                stack.push(v);
+            }
+        }
+    }
+    count == n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbors_match_paper_fig2_example() {
+        // Fig. 2: node 5 (index 4) has N(5)={1,2,3,4} incoming, M(5)={1,3}.
+        let mut g = Graph::empty(5);
+        for src in [0, 1, 2, 3] {
+            g.add_edge(src, 4);
+        }
+        g.add_edge(4, 0);
+        g.add_edge(4, 2);
+        assert_eq!(g.in_neighbors(4), vec![0, 1, 2, 3]);
+        assert_eq!(g.out_neighbors(4), vec![0, 2]);
+    }
+
+    #[test]
+    fn self_loops_are_implicit() {
+        let mut g = Graph::empty(3);
+        g.add_edge(1, 1);
+        assert_eq!(g.edge_count(), 0);
+        assert!(g.has_edge(1, 1));
+    }
+
+    #[test]
+    fn undirected_detection() {
+        let mut g = Graph::empty(3);
+        g.add_undirected_edge(0, 1);
+        assert!(g.is_undirected());
+        g.add_edge(1, 2);
+        assert!(!g.is_undirected());
+    }
+
+    #[test]
+    fn strong_connectivity_of_directed_ring() {
+        let n = 6;
+        let g = Graph::from_edges(n, (0..n).map(|i| (i, (i + 1) % n)));
+        assert!(g.is_strongly_connected());
+        assert_eq!(g.diameter(), Some(n - 1));
+    }
+
+    #[test]
+    fn disconnected_graph_detected() {
+        let g = Graph::from_edges(4, [(0, 1), (1, 0)]);
+        assert!(!g.is_strongly_connected());
+        assert_eq!(g.diameter(), None);
+    }
+
+    #[test]
+    fn reversed_flips_edges() {
+        let g = Graph::from_edges(3, [(0, 1), (1, 2)]);
+        let r = g.reversed();
+        assert!(r.has_edge(1, 0));
+        assert!(r.has_edge(2, 1));
+        assert!(!r.has_edge(0, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn edge_bounds_checked() {
+        let mut g = Graph::empty(2);
+        g.add_edge(0, 5);
+    }
+}

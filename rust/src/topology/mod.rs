@@ -1,0 +1,21 @@
+//! Network topologies and weight matrices (paper §II-A, §III).
+//!
+//! - [`graph`] — the directed-graph representation and neighbor queries.
+//! - [`builders`] — the built-in topologies BlueFog ships: ring, line, star,
+//!   fully-connected, 2-D mesh, and the static exponential-2 graph.
+//! - [`dynamic`] — iteration-indexed topology generators: the one-peer
+//!   exponential graph and the inner-outer exponential graph used by the
+//!   dynamic-topology experiments.
+//! - [`weights`] — pull (row-stochastic), push (column-stochastic) and
+//!   standard (doubly-stochastic, Metropolis–Hastings) weight matrices,
+//!   validity checks and the spectral gap.
+
+pub mod builders;
+pub mod dynamic;
+pub mod graph;
+pub mod weights;
+
+pub use builders::*;
+pub use dynamic::{DynamicTopology, InnerOuterExpo, OnePeerExpo};
+pub use graph::Graph;
+pub use weights::WeightMatrix;

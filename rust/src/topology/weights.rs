@@ -1,0 +1,329 @@
+//! Weight matrices over topologies (paper §II-A, eq. (8)).
+//!
+//! `w[i][j]` is the weight node `i` applies to the copy received *from*
+//! node `j`; `w[i][j] != 0` requires the edge `(j, i)` (or `i == j`).
+//!
+//! Three families (paper's taxonomy):
+//! - **pull** (row-stochastic): `W 1 = 1` — used with directed graphs,
+//!   receiver-side scaling;
+//! - **push** (column-stochastic): `1^T W = 1^T` — sender-side scaling,
+//!   enables push-sum over directed graphs;
+//! - **standard** (doubly-stochastic): both — undirected graphs and special
+//!   directed ones such as the exponential graph.
+
+use super::graph::Graph;
+
+/// Dense `n x n` weight matrix, row-major: `w[i*n + j] = w_{ij}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightMatrix {
+    n: usize,
+    w: Vec<f64>,
+}
+
+impl WeightMatrix {
+    /// Zero matrix.
+    pub fn zeros(n: usize) -> Self {
+        WeightMatrix { n, w: vec![0.0; n * n] }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(n: usize, rows: &[f64]) -> Self {
+        assert_eq!(rows.len(), n * n);
+        WeightMatrix { n, w: rows.to_vec() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.w[i * self.n + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.w[i * self.n + j] = v;
+    }
+
+    /// **Pull matrix** (row-stochastic) with uniform averaging weights:
+    /// node `i` weighs itself and each in-neighbor by `1/(deg_in(i)+1)`.
+    pub fn uniform_pull(g: &Graph) -> Self {
+        let n = g.size();
+        let mut m = WeightMatrix::zeros(n);
+        for i in 0..n {
+            let nbrs = g.in_neighbors(i);
+            let w = 1.0 / (nbrs.len() + 1) as f64;
+            m.set(i, i, w);
+            for j in nbrs {
+                m.set(i, j, w);
+            }
+        }
+        m
+    }
+
+    /// **Push matrix** (column-stochastic) with uniform splitting: node `j`
+    /// splits its mass evenly between itself and each out-neighbor, i.e.
+    /// column `j` has `1/(deg_out(j)+1)` at every out-neighbor row and the
+    /// diagonal.
+    pub fn uniform_push(g: &Graph) -> Self {
+        let n = g.size();
+        let mut m = WeightMatrix::zeros(n);
+        for j in 0..n {
+            let nbrs = g.out_neighbors(j);
+            let w = 1.0 / (nbrs.len() + 1) as f64;
+            m.set(j, j, w);
+            for i in nbrs {
+                m.set(i, j, w);
+            }
+        }
+        m
+    }
+
+    /// **Standard matrix** via the Metropolis–Hastings rule on an undirected
+    /// graph: `w_ij = 1 / (1 + max(deg_i, deg_j))` for neighbors, diagonal
+    /// absorbs the remainder. Always doubly-stochastic and symmetric.
+    pub fn metropolis_hastings(g: &Graph) -> Self {
+        assert!(g.is_undirected(), "Metropolis-Hastings requires an undirected graph");
+        let n = g.size();
+        let deg: Vec<usize> = (0..n).map(|i| g.in_degree(i)).collect();
+        let mut m = WeightMatrix::zeros(n);
+        for i in 0..n {
+            let mut row_sum = 0.0;
+            for j in g.in_neighbors(i) {
+                let w = 1.0 / (1 + deg[i].max(deg[j])) as f64;
+                m.set(i, j, w);
+                row_sum += w;
+            }
+            m.set(i, i, 1.0 - row_sum);
+        }
+        m
+    }
+
+    /// Doubly-stochastic weights for the static exponential-2 graph
+    /// ([33]; uniform `1/(p+1)` over the `p = ceil(log2 n)` in-neighbors
+    /// and self). This directed graph is one of the special cases where
+    /// uniform weights are doubly stochastic because in-degree == out-degree
+    /// everywhere.
+    pub fn exponential_two(n: usize) -> Self {
+        let g = super::builders::exponential_two(n);
+        WeightMatrix::uniform_pull(&g)
+    }
+
+    /// Row sums.
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.n).map(|i| (0..self.n).map(|j| self.get(i, j)).sum()).collect()
+    }
+
+    /// Column sums.
+    pub fn col_sums(&self) -> Vec<f64> {
+        (0..self.n).map(|j| (0..self.n).map(|i| self.get(i, j)).sum()).collect()
+    }
+
+    /// `W 1 = 1` up to `tol`.
+    pub fn is_pull(&self, tol: f64) -> bool {
+        self.row_sums().iter().all(|s| (s - 1.0).abs() <= tol)
+    }
+
+    /// `1^T W = 1^T` up to `tol`.
+    pub fn is_push(&self, tol: f64) -> bool {
+        self.col_sums().iter().all(|s| (s - 1.0).abs() <= tol)
+    }
+
+    /// Both row- and column-stochastic.
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        self.is_pull(tol) && self.is_push(tol)
+    }
+
+    /// True when the sparsity pattern respects the graph: `w_ij != 0`
+    /// requires edge `(j, i)` or `i == j` (paper eq. (8)).
+    pub fn respects_graph(&self, g: &Graph) -> bool {
+        if g.size() != self.n {
+            return false;
+        }
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j && self.get(i, j) != 0.0 && !g.has_edge(j, i) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// The graph deduced from the sparsity pattern:
+    /// `E = {(j, i) : w_ij != 0}` (paper §II-A).
+    pub fn induced_graph(&self) -> Graph {
+        let mut g = Graph::empty(self.n);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j && self.get(i, j) != 0.0 {
+                    g.add_edge(j, i);
+                }
+            }
+        }
+        g
+    }
+
+    /// `y = W x` for a per-node scalar state `x`.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        (0..self.n)
+            .map(|i| (0..self.n).map(|j| self.get(i, j) * x[j]).sum())
+            .collect()
+    }
+
+    /// Spectral gap `1 - rho(W - (1/n) 1 1^T)` estimated by power iteration
+    /// on `B = W - (1/n)11^T` (valid for doubly-stochastic `W`). The larger
+    /// the gap, the faster partial averaging mixes; the paper's case for the
+    /// exponential graph is its `O(1 - 1/log n)`-free gap at `O(log n)`
+    /// degree.
+    pub fn spectral_gap(&self) -> f64 {
+        let n = self.n;
+        if n == 1 {
+            return 1.0;
+        }
+        // Power iteration on B^T B to get the largest singular value of B.
+        let bmul = |x: &[f64]| -> Vec<f64> {
+            // y = B x = W x - mean(x) * 1
+            let mean: f64 = x.iter().sum::<f64>() / n as f64;
+            self.apply(x).iter().map(|v| v - mean).collect()
+        };
+        let btmul = |x: &[f64]| -> Vec<f64> {
+            // y = B^T x = W^T x - mean(x) * 1
+            let mean: f64 = x.iter().sum::<f64>() / n as f64;
+            (0..n)
+                .map(|j| (0..n).map(|i| self.get(i, j) * x[i]).sum::<f64>() - mean)
+                .collect()
+        };
+        let mut v: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5).collect();
+        let mut sigma = 0.0;
+        for _ in 0..200 {
+            let bv = bmul(&v);
+            let btbv = btmul(&bv);
+            let norm = btbv.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                return 1.0; // B annihilates everything: perfect mixing
+            }
+            v = btbv.iter().map(|x| x / norm).collect();
+            sigma = norm.sqrt();
+        }
+        (1.0 - sigma).max(0.0)
+    }
+
+    /// Per-node local views used by the dynamic `neighbor_allreduce`
+    /// interface: `(self_weight, src_weights)` for receiver `i` where
+    /// `src_weights` maps in-neighbor rank -> `w_ij`.
+    pub fn pull_view(&self, i: usize) -> (f64, Vec<(usize, f64)>) {
+        let mut srcs = vec![];
+        for j in 0..self.n {
+            if j != i && self.get(i, j) != 0.0 {
+                srcs.push((j, self.get(i, j)));
+            }
+        }
+        (self.get(i, i), srcs)
+    }
+
+    /// `(self_weight, dst_weights)` for sender `j` where `dst_weights` maps
+    /// out-neighbor rank -> `w_ij` (the weight the *receiver* applies, used
+    /// as a sender-side scale in push-style communication).
+    pub fn push_view(&self, j: usize) -> (f64, Vec<(usize, f64)>) {
+        let mut dsts = vec![];
+        for i in 0..self.n {
+            if i != j && self.get(i, j) != 0.0 {
+                dsts.push((i, self.get(i, j)));
+            }
+        }
+        (self.get(j, j), dsts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builders;
+    use super::*;
+
+    const TOL: f64 = 1e-12;
+
+    #[test]
+    fn uniform_pull_is_row_stochastic() {
+        let g = builders::exponential_two(10);
+        let w = WeightMatrix::uniform_pull(&g);
+        assert!(w.is_pull(TOL));
+        assert!(w.respects_graph(&g));
+    }
+
+    #[test]
+    fn uniform_push_is_col_stochastic() {
+        let g = builders::exponential_two(10);
+        let w = WeightMatrix::uniform_push(&g);
+        assert!(w.is_push(TOL));
+        assert!(w.respects_graph(&g));
+    }
+
+    #[test]
+    fn mh_is_doubly_stochastic_on_irregular_graph() {
+        let g = builders::star(7);
+        let w = WeightMatrix::metropolis_hastings(&g);
+        assert!(w.is_doubly_stochastic(TOL));
+        // symmetric
+        for i in 0..7 {
+            for j in 0..7 {
+                assert!((w.get(i, j) - w.get(j, i)).abs() < TOL);
+            }
+        }
+    }
+
+    #[test]
+    fn expo2_uniform_is_doubly_stochastic() {
+        for n in [4, 8, 16, 5, 12] {
+            let w = WeightMatrix::exponential_two(n);
+            assert!(w.is_doubly_stochastic(1e-9), "n={n}");
+        }
+    }
+
+    #[test]
+    fn apply_preserves_mean_for_doubly_stochastic() {
+        let w = WeightMatrix::exponential_two(8);
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let y = w.apply(&x);
+        let mx: f64 = x.iter().sum::<f64>() / 8.0;
+        let my: f64 = y.iter().sum::<f64>() / 8.0;
+        assert!((mx - my).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spectral_gap_orders_topologies() {
+        // Fully-connected mixes in one step; ring mixes slowly.
+        let full = WeightMatrix::metropolis_hastings(&builders::fully_connected(16));
+        let ring = WeightMatrix::metropolis_hastings(&builders::ring(16));
+        let expo = WeightMatrix::exponential_two(16);
+        let (gf, gr, ge) = (full.spectral_gap(), ring.spectral_gap(), expo.spectral_gap());
+        assert!(gf > ge && ge > gr, "full={gf} expo={ge} ring={gr}");
+        assert!(gf > 0.9);
+        assert!(gr < 0.2);
+    }
+
+    #[test]
+    fn induced_graph_roundtrip() {
+        let g = builders::mesh_grid_2d(9);
+        let w = WeightMatrix::metropolis_hastings(&g);
+        assert_eq!(w.induced_graph(), g);
+    }
+
+    #[test]
+    fn views_are_consistent_with_matrix() {
+        let g = builders::exponential_two(8);
+        let w = WeightMatrix::uniform_pull(&g);
+        let (sw, srcs) = w.pull_view(3);
+        assert!((sw + srcs.iter().map(|(_, v)| v).sum::<f64>() - 1.0).abs() < TOL);
+        for (j, v) in srcs {
+            assert_eq!(w.get(3, j), v);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "requires an undirected graph")]
+    fn mh_rejects_directed() {
+        let g = builders::ring_directed(4);
+        WeightMatrix::metropolis_hastings(&g);
+    }
+}

@@ -1,0 +1,9 @@
+//! Training subsystem: corpus synthesis ([`corpus`]) and the decentralized
+//! DNN training driver ([`driver`]) used by the paper's deep-learning
+//! experiments (§VII-B).
+
+pub mod corpus;
+pub mod driver;
+
+pub use corpus::Corpus;
+pub use driver::{eval_node, train_node, train_node_resumable, ParamLayout, StepLog, TrainRun};

@@ -1,0 +1,318 @@
+//! In-process point-to-point transport — the MPI/NCCL substitute.
+//!
+//! Every simulated node owns a [`Mailbox`]; senders deliver [`Message`]s
+//! through per-node MPSC channels. Matching is MPI-style: a receive names a
+//! `(source, tag)` pair and out-of-order arrivals are buffered. All
+//! collectives (global and neighbor) are built strictly on top of this
+//! interface, exactly as BlueFog builds on MPI point-to-point — so swapping
+//! in a real network backend only touches this module.
+//!
+//! Each message also carries a *virtual arrival time* computed by the
+//! [`crate::simnet`] cost model at send time; receivers advance their
+//! virtual clock to `max(own, arrival)`. This yields the discrete-event
+//! timing the benchmarks report without a global event queue.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Message tag: distinguishes concurrent operations between the same pair.
+/// Layout convention: high 32 bits = operation id (name hash + op kind),
+/// low 32 bits = round/iteration within the operation.
+pub type Tag = u64;
+
+/// Build a tag from an op identifier and a round counter.
+pub fn make_tag(op_id: u32, round: u32) -> Tag {
+    ((op_id as u64) << 32) | round as u64
+}
+
+/// FNV-1a hash of an operation name into a 32-bit op id space.
+pub fn op_id(name: &str) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for b in name.as_bytes() {
+        h ^= *b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+/// A point-to-point message. The payload is `Arc`-shared so one tensor can
+/// be sent to several destinations without copying (a hot-path optimization
+/// measured in EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub src: usize,
+    pub tag: Tag,
+    pub payload: Arc<Vec<f32>>,
+    /// Virtual time at which this message arrives at the destination.
+    pub arrival_vtime: f64,
+}
+
+/// Receiving endpoint with MPI-style `(src, tag)` matching.
+pub struct Mailbox {
+    rank: usize,
+    rx: Receiver<Message>,
+    /// Out-of-order arrivals buffered by (src, tag).
+    stash: HashMap<(usize, Tag), Vec<Message>>,
+}
+
+/// Sending side: the cloneable sender handles for every rank.
+#[derive(Clone)]
+pub struct Postman {
+    senders: Vec<Sender<Message>>,
+}
+
+/// Create the transport fabric for `n` nodes: one mailbox per rank plus a
+/// shared postman.
+pub fn fabric(n: usize) -> (Vec<Mailbox>, Postman) {
+    let mut senders = Vec::with_capacity(n);
+    let mut mailboxes = Vec::with_capacity(n);
+    for rank in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        mailboxes.push(Mailbox { rank, rx, stash: HashMap::new() });
+    }
+    (mailboxes, Postman { senders })
+}
+
+impl Postman {
+    /// Number of reachable ranks.
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Deliver a message to `dst`. Panics if `dst` is out of range; returns
+    /// an error if the destination mailbox was dropped (node exited).
+    pub fn send(&self, dst: usize, msg: Message) -> anyhow::Result<()> {
+        self.senders[dst]
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("rank {dst} mailbox closed"))
+    }
+}
+
+impl Mailbox {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Blocking receive of the next message matching `(src, tag)`,
+    /// buffering any non-matching arrivals.
+    pub fn recv_match(&mut self, src: usize, tag: Tag) -> anyhow::Result<Message> {
+        if let Some(q) = self.stash.get_mut(&(src, tag)) {
+            if !q.is_empty() {
+                let m = q.remove(0);
+                if q.is_empty() {
+                    self.stash.remove(&(src, tag));
+                }
+                return Ok(m);
+            }
+        }
+        loop {
+            let m = self
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("rank {} transport closed", self.rank))?;
+            if m.src == src && m.tag == tag {
+                return Ok(m);
+            }
+            self.stash.entry((m.src, m.tag)).or_default().push(m);
+        }
+    }
+
+    /// Blocking receive of the next message with `tag` from *any* source.
+    pub fn recv_any(&mut self, tag: Tag) -> anyhow::Result<Message> {
+        let key = self.stash.keys().find(|&&(_, t)| t == tag).copied();
+        if let Some(key) = key {
+            let q = self.stash.get_mut(&key).unwrap();
+            let m = q.remove(0);
+            if q.is_empty() {
+                self.stash.remove(&key);
+            }
+            return Ok(m);
+        }
+        loop {
+            let m = self
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("rank {} transport closed", self.rank))?;
+            if m.tag == tag {
+                return Ok(m);
+            }
+            self.stash.entry((m.src, m.tag)).or_default().push(m);
+        }
+    }
+
+    /// Number of stashed (unmatched) messages — used by shutdown sanity
+    /// checks and tests.
+    pub fn stashed(&self) -> usize {
+        self.stash.values().map(|v| v.len()).sum()
+    }
+}
+
+/// Per-node virtual clock plus NIC occupancy, shared with the cost model.
+///
+/// `recv_busy_until` is shared (a sender reserves the receiver's ingress
+/// port), matching the half-duplex NIC serialization that makes
+/// many-to-one patterns (parameter server) slow in the paper's Table I.
+#[derive(Clone)]
+pub struct VClock {
+    /// This node's local virtual time (seconds).
+    now: Arc<Mutex<f64>>,
+    /// When this node's egress port frees up.
+    send_busy: Arc<Mutex<f64>>,
+    /// When this node's ingress port frees up (contended by remote senders).
+    recv_busy: Arc<Mutex<f64>>,
+}
+
+impl Default for VClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VClock {
+    pub fn new() -> Self {
+        VClock {
+            now: Arc::new(Mutex::new(0.0)),
+            send_busy: Arc::new(Mutex::new(0.0)),
+            recv_busy: Arc::new(Mutex::new(0.0)),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        *self.now.lock().unwrap()
+    }
+
+    /// Advance local time to at least `t`.
+    pub fn advance_to(&self, t: f64) {
+        let mut now = self.now.lock().unwrap();
+        if t > *now {
+            *now = t;
+        }
+    }
+
+    /// Add compute time `dt` to local time.
+    pub fn elapse(&self, dt: f64) {
+        *self.now.lock().unwrap() += dt;
+    }
+
+    /// Reserve this node's egress port starting no earlier than `start` for
+    /// `duration`; returns the transmission finish time.
+    pub fn reserve_send(&self, start: f64, duration: f64) -> f64 {
+        let mut busy = self.send_busy.lock().unwrap();
+        let begin = start.max(*busy);
+        *busy = begin + duration;
+        *busy
+    }
+
+    /// Reserve the node's ingress port (called by the *sender* on the
+    /// receiver's clock): transmission occupies the receiver NIC too.
+    pub fn reserve_recv(&self, start: f64, duration: f64) -> f64 {
+        let mut busy = self.recv_busy.lock().unwrap();
+        let begin = start.max(*busy);
+        *busy = begin + duration;
+        *busy
+    }
+
+    /// Reset all lanes to zero (between benchmark repetitions).
+    pub fn reset(&self) {
+        *self.now.lock().unwrap() = 0.0;
+        *self.send_busy.lock().unwrap() = 0.0;
+        *self.recv_busy.lock().unwrap() = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let (mut boxes, post) = fabric(2);
+        let tag = make_tag(op_id("x"), 0);
+        post.send(1, Message { src: 0, tag, payload: Arc::new(vec![1.0, 2.0]), arrival_vtime: 0.5 })
+            .unwrap();
+        let m = boxes[1].recv_match(0, tag).unwrap();
+        assert_eq!(*m.payload, vec![1.0, 2.0]);
+        assert_eq!(m.arrival_vtime, 0.5);
+    }
+
+    #[test]
+    fn out_of_order_arrivals_are_stashed() {
+        let (mut boxes, post) = fabric(3);
+        let t_a = make_tag(op_id("a"), 0);
+        let t_b = make_tag(op_id("b"), 0);
+        post.send(2, Message { src: 0, tag: t_a, payload: Arc::new(vec![1.0]), arrival_vtime: 0.0 })
+            .unwrap();
+        post.send(2, Message { src: 1, tag: t_b, payload: Arc::new(vec![2.0]), arrival_vtime: 0.0 })
+            .unwrap();
+        // Ask for (1, b) first even though (0, a) arrived first.
+        let m = boxes[2].recv_match(1, t_b).unwrap();
+        assert_eq!(*m.payload, vec![2.0]);
+        assert_eq!(boxes[2].stashed(), 1);
+        let m = boxes[2].recv_match(0, t_a).unwrap();
+        assert_eq!(*m.payload, vec![1.0]);
+        assert_eq!(boxes[2].stashed(), 0);
+    }
+
+    #[test]
+    fn same_pair_ordering_by_round() {
+        let (mut boxes, post) = fabric(2);
+        let op = op_id("iter");
+        for round in 0..4u32 {
+            post.send(
+                1,
+                Message {
+                    src: 0,
+                    tag: make_tag(op, round),
+                    payload: Arc::new(vec![round as f32]),
+                    arrival_vtime: 0.0,
+                },
+            )
+            .unwrap();
+        }
+        // Receive rounds in reverse order: stash must hold the rest.
+        for round in (0..4u32).rev() {
+            let m = boxes[1].recv_match(0, make_tag(op, round)).unwrap();
+            assert_eq!(*m.payload, vec![round as f32]);
+        }
+    }
+
+    #[test]
+    fn recv_any_matches_any_source() {
+        let (mut boxes, post) = fabric(3);
+        let tag = make_tag(op_id("g"), 1);
+        post.send(0, Message { src: 2, tag, payload: Arc::new(vec![9.0]), arrival_vtime: 0.0 }).unwrap();
+        let m = boxes[0].recv_any(tag).unwrap();
+        assert_eq!(m.src, 2);
+    }
+
+    #[test]
+    fn closed_mailbox_errors() {
+        let (boxes, post) = fabric(2);
+        drop(boxes);
+        let tag = make_tag(0, 0);
+        assert!(post.send(1, Message { src: 0, tag, payload: Arc::new(vec![]), arrival_vtime: 0.0 }).is_err());
+    }
+
+    #[test]
+    fn vclock_ports_serialize() {
+        let c = VClock::new();
+        let f1 = c.reserve_send(0.0, 1.0);
+        let f2 = c.reserve_send(0.0, 1.0);
+        assert_eq!(f1, 1.0);
+        assert_eq!(f2, 2.0, "second transfer waits for the port");
+        c.advance_to(5.0);
+        assert_eq!(c.now(), 5.0);
+        c.elapse(0.5);
+        assert_eq!(c.now(), 5.5);
+        c.reset();
+        assert_eq!(c.now(), 0.0);
+    }
+
+    #[test]
+    fn op_ids_distinct_for_distinct_names() {
+        assert_ne!(op_id("neighbor.allreduce.x"), op_id("neighbor.allreduce.y"));
+        assert_eq!(op_id("same"), op_id("same"));
+    }
+}

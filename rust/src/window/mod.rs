@@ -1,0 +1,297 @@
+//! Asynchronous one-sided window operations (paper §III-C, §IV-C).
+//!
+//! Every node can expose a named *window*: a buffer per in-coming neighbor
+//! plus a registered copy of its local tensor. Remote nodes manipulate the
+//! window without the owner's participation:
+//!
+//! - [`NodeContext::win_put`] overwrites the caller's slot at each
+//!   destination;
+//! - [`NodeContext::win_accumulate`] adds into the slot (and, with a
+//!   `self_weight`, scales the caller's own tensor so total mass is
+//!   conserved — the push-sum requirement);
+//! - [`NodeContext::win_get`] pulls neighbors' registered tensors into the
+//!   caller's own slots;
+//! - [`NodeContext::win_update`] makes remote writes visible and returns the
+//!   weighted average of the local tensor and the slots;
+//! - [`NodeContext::win_update_then_collect`] *sums and resets* the slots —
+//!   the atomic drain that keeps `sum_i (x_i + pending)` invariant, which is
+//!   exactly what unbiased asynchronous push-sum needs (paper Listing 3).
+//!
+//! Each window entry carries one mutex — the "distributed mutex" of paper
+//! §V-D — and per-slot virtual arrival times so the virtual clock reflects
+//! asynchronous message delays.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::context::NodeContext;
+
+/// State of one `(owner, name)` window.
+#[derive(Debug, Default)]
+pub struct WindowState {
+    /// Element count of the windowed tensor.
+    pub len: usize,
+    /// Owner's registered local tensor (refreshed by `win_update*`).
+    pub local: Vec<f32>,
+    /// One buffer per in-coming neighbor rank.
+    pub slots: HashMap<usize, Vec<f32>>,
+    /// Virtual arrival time of the latest write per slot.
+    pub slot_vtime: HashMap<usize, f64>,
+    /// Monotone counter of remote writes (for tests/metrics).
+    pub writes: u64,
+}
+
+/// Global registry of windows, shared by all in-process nodes.
+#[derive(Default)]
+pub struct WindowTable {
+    entries: Mutex<HashMap<(usize, String), Arc<Mutex<WindowState>>>>,
+}
+
+impl WindowTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn create(
+        &self,
+        owner: usize,
+        name: &str,
+        tensor: &[f32],
+        in_neighbors: &[usize],
+        zero_init: bool,
+    ) -> anyhow::Result<()> {
+        let mut entries = self.entries.lock().unwrap();
+        let key = (owner, name.to_string());
+        if entries.contains_key(&key) {
+            anyhow::bail!("window '{name}' already exists at rank {owner}");
+        }
+        let mut slots = HashMap::new();
+        let mut slot_vtime = HashMap::new();
+        for &nb in in_neighbors {
+            let init = if zero_init { vec![0.0; tensor.len()] } else { tensor.to_vec() };
+            slots.insert(nb, init);
+            slot_vtime.insert(nb, 0.0);
+        }
+        entries.insert(
+            key,
+            Arc::new(Mutex::new(WindowState {
+                len: tensor.len(),
+                local: tensor.to_vec(),
+                slots,
+                slot_vtime,
+                writes: 0,
+            })),
+        );
+        Ok(())
+    }
+
+    fn get(&self, owner: usize, name: &str) -> anyhow::Result<Arc<Mutex<WindowState>>> {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(&(owner, name.to_string()))
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("window '{name}' not found at rank {owner}"))
+    }
+
+    fn free(&self, owner: usize, name: &str) -> anyhow::Result<()> {
+        self.entries
+            .lock()
+            .unwrap()
+            .remove(&(owner, name.to_string()))
+            .map(|_| ())
+            .ok_or_else(|| anyhow::anyhow!("window '{name}' not found at rank {owner}"))
+    }
+
+    /// Number of live windows (tests).
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl NodeContext {
+    /// `bf.win_create(tensor, name)` — allocate the window at this rank with
+    /// one slot per in-coming neighbor under the current global topology.
+    ///
+    /// Collective (like `MPI_Win_create`): all ranks must call it, and no
+    /// rank returns before every window exists.
+    pub fn win_create(&mut self, name: &str, tensor: &[f32], zero_init: bool) -> anyhow::Result<()> {
+        let in_nbrs = self.in_neighbor_ranks();
+        self.windows.create(self.rank(), name, tensor, &in_nbrs, zero_init)?;
+        self.barrier()
+    }
+
+    /// `bf.win_free(name)`.
+    pub fn win_free(&self, name: &str) -> anyhow::Result<()> {
+        self.windows.free(self.rank(), name)
+    }
+
+    /// `bf.win_put(tensor, name, dst_weights)` — overwrite this rank's slot
+    /// at each destination with `w * tensor`. Destinations default to the
+    /// out-neighbors with weight 1 when `dst_weights` is empty.
+    pub fn win_put(&self, name: &str, tensor: &[f32], dst_weights: &[(usize, f64)]) -> anyhow::Result<()> {
+        let dsts = self.default_dsts(dst_weights);
+        for (dst, w) in dsts {
+            let arrival = self.one_sided_arrival(dst, tensor.len() * 4);
+            let entry = self.windows.get(dst, name)?;
+            let mut st = entry.lock().unwrap();
+            anyhow::ensure!(st.len == tensor.len(), "win_put size mismatch on '{name}'");
+            anyhow::ensure!(
+                st.slots.contains_key(&self.rank()),
+                "rank {} is not an in-neighbor of rank {dst} for window '{name}' \
+                 (window topology is fixed at creation)",
+                self.rank()
+            );
+            let slot = st.slots.get_mut(&self.rank()).unwrap();
+            for (s, x) in slot.iter_mut().zip(tensor) {
+                *s = (w as f32) * x;
+            }
+            st.slot_vtime.insert(self.rank(), arrival);
+            st.writes += 1;
+        }
+        Ok(())
+    }
+
+    /// `bf.win_accumulate(tensor, name, self_weight, dst_weights)` — add
+    /// `w * tensor` into this rank's slot at each destination and scale the
+    /// caller's tensor by `self_weight` (mass splitting: with a
+    /// column-stochastic weight set, `sum_i x_i + pending` is conserved).
+    pub fn win_accumulate(
+        &self,
+        name: &str,
+        tensor: &mut [f32],
+        self_weight: f64,
+        dst_weights: &[(usize, f64)],
+    ) -> anyhow::Result<()> {
+        for &(dst, w) in dst_weights {
+            let arrival = self.one_sided_arrival(dst, tensor.len() * 4);
+            let entry = self.windows.get(dst, name)?;
+            let mut st = entry.lock().unwrap();
+            anyhow::ensure!(st.len == tensor.len(), "win_accumulate size mismatch on '{name}'");
+            anyhow::ensure!(
+                st.slots.contains_key(&self.rank()),
+                "rank {} is not an in-neighbor of rank {dst} for window '{name}'",
+                self.rank()
+            );
+            let slot = st.slots.get_mut(&self.rank()).unwrap();
+            for (s, x) in slot.iter_mut().zip(tensor.iter()) {
+                *s += (w as f32) * x;
+            }
+            let prev = st.slot_vtime.get(&self.rank()).copied().unwrap_or(0.0);
+            st.slot_vtime.insert(self.rank(), prev.max(arrival));
+            st.writes += 1;
+        }
+        for x in tensor.iter_mut() {
+            *x *= self_weight as f32;
+        }
+        Ok(())
+    }
+
+    /// `bf.win_get(tensor, name, src_weights)` — pull each source's
+    /// *registered* tensor (as of its last `win_update*`) into this rank's
+    /// own window slots, scaled by the source weight.
+    pub fn win_get(&self, name: &str, src_weights: &[(usize, f64)]) -> anyhow::Result<()> {
+        let srcs = self.default_srcs(src_weights);
+        let own = self.windows.get(self.rank(), name)?;
+        for (src, w) in srcs {
+            let remote = self.windows.get(src, name)?;
+            let data: Vec<f32> = {
+                let st = remote.lock().unwrap();
+                st.local.iter().map(|&x| (w as f32) * x).collect()
+            };
+            let arrival = self.one_sided_arrival(src, data.len() * 4);
+            let mut st = own.lock().unwrap();
+            anyhow::ensure!(
+                st.slots.contains_key(&src),
+                "rank {src} is not an in-neighbor of rank {} for window '{name}'",
+                self.rank()
+            );
+            st.slots.insert(src, data);
+            st.slot_vtime.insert(src, arrival);
+            st.writes += 1;
+        }
+        Ok(())
+    }
+
+    /// `bf.win_update(name, self_weight, src_weights)` — synchronize the
+    /// window and return the weighted average of the local tensor and the
+    /// neighbor slots. Also registers `tensor` as the new local value so
+    /// subsequent `win_get`s observe it.
+    pub fn win_update(
+        &self,
+        name: &str,
+        tensor: &[f32],
+        self_weight: f64,
+        src_weights: &[(usize, f64)],
+    ) -> anyhow::Result<Vec<f32>> {
+        let srcs = self.default_srcs(src_weights);
+        let entry = self.windows.get(self.rank(), name)?;
+        let mut st = entry.lock().unwrap();
+        anyhow::ensure!(st.len == tensor.len(), "win_update size mismatch on '{name}'");
+        let mut out: Vec<f32> = tensor.iter().map(|&x| (self_weight as f32) * x).collect();
+        let mut latest = self.vtime();
+        for (src, w) in srcs {
+            if let Some(slot) = st.slots.get(&src) {
+                for (o, s) in out.iter_mut().zip(slot) {
+                    *o += (w as f32) * s;
+                }
+                latest = latest.max(st.slot_vtime.get(&src).copied().unwrap_or(0.0));
+            }
+        }
+        st.local = out.clone();
+        self.clock().advance_to(latest);
+        Ok(out)
+    }
+
+    /// `bf.win_update_then_collect(name)` — atomically add all pending slot
+    /// contents into the local tensor and **reset the slots to zero**. With
+    /// `win_accumulate`, this is the mass-conserving drain of asynchronous
+    /// push-sum. Returns the collected tensor.
+    pub fn win_update_then_collect(&self, name: &str, tensor: &mut [f32]) -> anyhow::Result<()> {
+        let entry = self.windows.get(self.rank(), name)?;
+        let mut st = entry.lock().unwrap();
+        anyhow::ensure!(st.len == tensor.len(), "win_update_then_collect size mismatch on '{name}'");
+        let mut latest = self.vtime();
+        let vtimes: Vec<f64> = st.slot_vtime.values().copied().collect();
+        for t in vtimes {
+            latest = latest.max(t);
+        }
+        for slot in st.slots.values_mut() {
+            for (x, s) in tensor.iter_mut().zip(slot.iter_mut()) {
+                *x += *s;
+                *s = 0.0;
+            }
+        }
+        st.local = tensor.to_vec();
+        self.clock().advance_to(latest);
+        Ok(())
+    }
+
+    /// Virtual arrival time of a one-sided transfer to/from `peer`.
+    fn one_sided_arrival(&self, peer: usize, bytes: usize) -> f64 {
+        let now = self.vtime();
+        let ser = self.net.port_time(self.rank(), peer, bytes);
+        let done = self.clock().reserve_send(now, ser);
+        done + self.net.latency(self.rank(), peer)
+    }
+
+    fn default_dsts(&self, dst_weights: &[(usize, f64)]) -> Vec<(usize, f64)> {
+        if dst_weights.is_empty() {
+            self.out_neighbor_ranks().into_iter().map(|r| (r, 1.0)).collect()
+        } else {
+            dst_weights.to_vec()
+        }
+    }
+
+    fn default_srcs(&self, src_weights: &[(usize, f64)]) -> Vec<(usize, f64)> {
+        if src_weights.is_empty() {
+            self.in_neighbor_ranks().into_iter().map(|r| (r, 1.0)).collect()
+        } else {
+            src_weights.to_vec()
+        }
+    }
+}

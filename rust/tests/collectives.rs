@@ -1,0 +1,351 @@
+//! Integration tests: collective communication correctness over the full
+//! launcher + transport + negotiation stack.
+
+use bluefog::collective::neighbor::NeighborWeights;
+use bluefog::collective::{AllreduceAlgo, ReduceOp};
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::tensor::max_abs_diff;
+use bluefog::topology::dynamic::{DynamicTopology, OnePeerExpo};
+use bluefog::topology::{builders, WeightMatrix};
+
+/// All three allreduce algorithms must produce the exact same average.
+#[test]
+fn allreduce_algorithms_agree() {
+    for algo in [AllreduceAlgo::Ring, AllreduceAlgo::ParameterServer, AllreduceAlgo::BytePs] {
+        let n = 6;
+        let results = run_spmd(SpmdConfig::new(n), move |ctx| {
+            let data: Vec<f32> = (0..40).map(|i| (ctx.rank() * 40 + i) as f32).collect();
+            ctx.allreduce(&data, ReduceOp::Average, algo)
+        })
+        .unwrap();
+        // want[i] = mean_r (r*40 + i)
+        let want: Vec<f32> =
+            (0..40).map(|i| (0..n).map(|r| (r * 40 + i) as f32).sum::<f32>() / n as f32).collect();
+        for (rank, got) in results.iter().enumerate() {
+            assert!(
+                max_abs_diff(got, &want) < 1e-4,
+                "{algo:?} rank {rank}: {got:?} != {want:?}"
+            );
+        }
+    }
+}
+
+/// Sum mode scales by n relative to average mode.
+#[test]
+fn allreduce_sum_vs_average() {
+    let results = run_spmd(SpmdConfig::new(4), |ctx| {
+        let data = vec![ctx.rank() as f32 + 1.0];
+        let sum = ctx.allreduce(&data, ReduceOp::Sum, AllreduceAlgo::Ring)?;
+        let avg = ctx.allreduce(&data, ReduceOp::Average, AllreduceAlgo::Ring)?;
+        Ok((sum[0], avg[0]))
+    })
+    .unwrap();
+    for (s, a) in results {
+        assert!((s - 10.0).abs() < 1e-5);
+        assert!((a - 2.5).abs() < 1e-5);
+    }
+}
+
+/// Static neighbor_allreduce must equal the dense `W x` product.
+#[test]
+fn neighbor_allreduce_matches_weight_matrix() {
+    for topo_name in ["ring", "star", "mesh", "expo2", "full"] {
+        let n = 9;
+        let (graph, weights) = builders::by_name(topo_name, n).unwrap();
+        let w2 = weights.clone();
+        let results = run_spmd(
+            SpmdConfig::new(n).with_topology(graph, weights),
+            |ctx| {
+                let x = vec![(ctx.rank() as f32 + 1.0).powi(2); 3];
+                ctx.neighbor_allreduce(&x)
+            },
+        )
+        .unwrap();
+        let x: Vec<f64> = (0..n).map(|r| ((r as f64) + 1.0).powi(2)).collect();
+        let want = w2.apply(&x);
+        for (rank, got) in results.iter().enumerate() {
+            assert!(
+                (got[0] as f64 - want[rank]).abs() < 1e-4,
+                "{topo_name} rank {rank}: {} != {}",
+                got[0],
+                want[rank]
+            );
+        }
+    }
+}
+
+/// Dynamic neighbor_allreduce over the one-peer graph: each round realizes
+/// the round's doubly-stochastic matrix, so the global mean is invariant.
+#[test]
+fn dynamic_one_peer_preserves_mean() {
+    let n = 8;
+    let results = run_spmd(SpmdConfig::new(n), move |ctx| {
+        let topo = OnePeerExpo::new(ctx.size());
+        let mut x = vec![ctx.rank() as f32 * 10.0];
+        for k in 0..12 {
+            let view = topo.view(k, ctx.rank());
+            let w = NeighborWeights::push_pull(
+                view.self_weight,
+                view.src_weights.clone(),
+                view.dst_weights.iter().map(|&(d, _)| (d, 1.0)).collect(),
+            );
+            x = ctx.neighbor_allreduce_dynamic(&x, &w)?;
+        }
+        Ok(x[0])
+    })
+    .unwrap();
+    let mean: f32 = (0..n).map(|r| r as f32 * 10.0).sum::<f32>() / n as f32;
+    let total: f32 = results.iter().sum();
+    assert!((total / n as f32 - mean).abs() < 1e-3, "mean drifted: {results:?}");
+    // And after period * several rounds, values should be well mixed.
+    for v in &results {
+        assert!((v - mean).abs() < 2.0, "poor mixing: {results:?}");
+    }
+}
+
+/// Pure push-style declaration: receivers resolved by the negotiation
+/// service (footnote-2 configuration 2).
+#[test]
+fn push_style_resolution_roundtrip() {
+    let n = 4;
+    let results = run_spmd(SpmdConfig::new(n), move |ctx| {
+        // Everyone pushes half its value to rank (r+1) % n.
+        let dst = (ctx.rank() + 1) % ctx.size();
+        let w = NeighborWeights::push(0.5, vec![(dst, 0.5)]);
+        let x = vec![(ctx.rank() + 1) as f32 * 4.0];
+        ctx.neighbor_allreduce_dynamic(&x, &w)
+    })
+    .unwrap();
+    // out[i] = 0.5 * x[i] + 0.5 * x[i-1]
+    for (i, got) in results.iter().enumerate() {
+        let prev = (i + n - 1) % n;
+        let want = 0.5 * (i + 1) as f32 * 4.0 + 0.5 * (prev + 1) as f32 * 4.0;
+        assert!((got[0] - want).abs() < 1e-5, "rank {i}: {} != {want}", got[0]);
+    }
+}
+
+/// The paper's hang scenario: rank 0 declares a push that rank 1's
+/// declaration contradicts — must error, not hang.
+#[test]
+fn topology_mismatch_errors_instead_of_hanging() {
+    let result = run_spmd(SpmdConfig::new(2), |ctx| {
+        if ctx.rank() == 0 {
+            // Declares: I push to 1, receive from 1.
+            let w = NeighborWeights::push_pull(0.5, vec![(1, 0.5)], vec![(1, 0.5)]);
+            ctx.neighbor_allreduce_dynamic(&[1.0], &w)
+        } else {
+            // Declares: I receive from nobody (contradiction).
+            let w = NeighborWeights::push_pull(0.5, vec![], vec![(0, 0.5)]);
+            ctx.neighbor_allreduce_dynamic(&[1.0], &w)
+        }
+    });
+    let err = result.expect_err("mismatch must be detected");
+    assert!(format!("{err:#}").contains("topology mismatch"), "{err:#}");
+}
+
+/// Broadcast from every root delivers identical data everywhere.
+#[test]
+fn broadcast_from_all_roots() {
+    for root in 0..5 {
+        let results = run_spmd(SpmdConfig::new(5), move |ctx| {
+            let mut data = if ctx.rank() == root {
+                vec![root as f32, 42.0, -1.0]
+            } else {
+                vec![0.0; 3]
+            };
+            ctx.broadcast(&mut data, root)?;
+            Ok(data)
+        })
+        .unwrap();
+        for got in &results {
+            assert_eq!(got, &vec![root as f32, 42.0, -1.0]);
+        }
+    }
+}
+
+/// neighbor_allgather returns each in-neighbor's tensor unscaled.
+#[test]
+fn neighbor_allgather_collects_neighbors() {
+    let n = 6;
+    let (graph, weights) = builders::by_name("ring", n).unwrap();
+    let g2 = graph.clone();
+    let results = run_spmd(
+        SpmdConfig::new(n).with_topology(graph, weights),
+        |ctx| {
+            let x = vec![ctx.rank() as f32; 2];
+            ctx.neighbor_allgather(&x)
+        },
+    )
+    .unwrap();
+    for (rank, got) in results.iter().enumerate() {
+        let expected = g2.in_neighbors(rank);
+        let got_srcs: Vec<usize> = got.iter().map(|(s, _)| *s).collect();
+        assert_eq!(got_srcs, expected, "rank {rank}");
+        for (src, data) in got {
+            assert_eq!(data, &vec![*src as f32; 2]);
+        }
+    }
+}
+
+/// Hierarchical neighbor allreduce preserves the global mean (each stage is
+/// an average) and brings machines toward consensus.
+#[test]
+fn hierarchical_preserves_mean() {
+    let n = 8; // 2 machines x 4 ranks
+    let results = run_spmd(
+        SpmdConfig::new(n).with_net(bluefog::simnet::NetworkModel::aws_p3(4)),
+        |ctx| {
+            let mut x = vec![ctx.rank() as f32];
+            for _ in 0..6 {
+                x = ctx.hierarchical_neighbor_allreduce(&x)?;
+            }
+            Ok(x[0])
+        },
+    )
+    .unwrap();
+    let mean = 3.5f32;
+    let total: f32 = results.iter().sum();
+    assert!((total / n as f32 - mean).abs() < 1e-4, "mean drifted: {results:?}");
+    for v in &results {
+        assert!((v - mean).abs() < 0.01, "no consensus: {results:?}");
+    }
+    // All ranks within the same machine must agree exactly.
+    assert!((results[0] - results[3]).abs() < 1e-6);
+    assert!((results[4] - results[7]).abs() < 1e-6);
+}
+
+/// Non-blocking path returns the same numbers as the blocking one.
+#[test]
+fn nonblocking_matches_blocking() {
+    let n = 8;
+    let results = run_spmd(SpmdConfig::new(n), |ctx| {
+        let x = vec![ctx.rank() as f32 + 0.25; 16];
+        let blocking = ctx.neighbor_allreduce(&x)?;
+        let handle = ctx.neighbor_allreduce_nonblocking(&x, None)?;
+        let nonblocking = handle.wait(ctx)?;
+        Ok((blocking, nonblocking))
+    })
+    .unwrap();
+    for (b, nb) in results {
+        assert!(max_abs_diff(&b, &nb) < 1e-6, "blocking {b:?} vs nonblocking {nb:?}");
+    }
+}
+
+/// Fused non-blocking requests return per-request results identical to
+/// issuing them unfused.
+#[test]
+fn fusion_is_transparent() {
+    let n = 4;
+    let run = |threshold: usize| {
+        run_spmd(
+            SpmdConfig::new(n).with_fusion_threshold(threshold),
+            |ctx| {
+                let mut handles = vec![];
+                for i in 0..10 {
+                    let x = vec![ctx.rank() as f32 + i as f32; 32];
+                    handles.push(ctx.neighbor_allreduce_nonblocking(&x, None)?);
+                }
+                let mut out = vec![];
+                for h in handles {
+                    out.push(h.wait(ctx)?);
+                }
+                Ok(out)
+            },
+        )
+        .unwrap()
+    };
+    let unfused = run(0);
+    let fused = run(1 << 20);
+    for (rank, (u, f)) in unfused.iter().zip(&fused).enumerate() {
+        for (i, (a, b)) in u.iter().zip(f).enumerate() {
+            assert!(max_abs_diff(a, b) < 1e-6, "rank {rank} tensor {i} differs");
+        }
+    }
+}
+
+/// Regression: repeated nonblocking+wait rounds under a nonzero fusion
+/// threshold (a wait must close the open group so the next round's
+/// requests start a fresh one — previously deadlocked).
+#[test]
+fn nonblocking_rounds_with_fusion_enabled() {
+    let results = run_spmd(
+        SpmdConfig::new(4).with_fusion_threshold(2 << 20),
+        |ctx| {
+            let mut x = vec![ctx.rank() as f32; 8];
+            for _ in 0..20 {
+                let h = ctx.neighbor_allreduce_nonblocking(&x, None)?;
+                x = h.wait(ctx)?;
+            }
+            Ok(x[0])
+        },
+    )
+    .unwrap();
+    let mean = 1.5f32;
+    for v in &results {
+        assert!((v - mean).abs() < 1e-3, "{results:?}");
+    }
+}
+
+/// Barrier: no node proceeds before all arrive (checked via virtual time:
+/// a deliberately slow rank drags everyone's post-barrier clock up).
+#[test]
+fn barrier_synchronizes_virtual_time() {
+    let results = run_spmd(SpmdConfig::new(4), |ctx| {
+        if ctx.rank() == 2 {
+            ctx.simulate_compute(1.0); // slow rank
+        }
+        ctx.barrier()?;
+        Ok(ctx.vtime())
+    })
+    .unwrap();
+    for (rank, t) in results.iter().enumerate() {
+        assert!(*t >= 1.0, "rank {rank} passed the barrier early (vtime {t})");
+    }
+}
+
+/// Mixed workload with interleaved collectives stays consistent.
+#[test]
+fn interleaved_collectives_consistent() {
+    let n = 4;
+    let results = run_spmd(SpmdConfig::new(n), |ctx| {
+        let mut x = vec![ctx.rank() as f32; 4];
+        for _ in 0..3 {
+            x = ctx.neighbor_allreduce(&x)?;
+            x = ctx.allreduce(&x, ReduceOp::Average, AllreduceAlgo::Ring)?;
+            ctx.barrier()?;
+        }
+        Ok(x[0])
+    })
+    .unwrap();
+    let mean = 1.5f32;
+    for v in &results {
+        assert!((v - mean).abs() < 1e-4, "{results:?}");
+    }
+}
+
+/// Weight matrices with negative entries (allowed by the paper's eq. (8))
+/// still combine correctly.
+#[test]
+fn negative_weights_are_supported() {
+    let n = 3;
+    let g = builders::fully_connected(n);
+    // W = 1.5 I - 0.25 (ones) — rows sum to 1, some entries negative.
+    let mut w = WeightMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            w.set(i, j, if i == j { 1.5 } else { -0.25 }); // rows: 1.5 - 2*0.25 = 1
+        }
+    }
+    let w2 = w.clone();
+    assert!(w.is_pull(1e-12));
+    let results = run_spmd(SpmdConfig::new(n).with_topology(g, w), |ctx| {
+        let x = vec![(ctx.rank() as f32 + 1.0) * 2.0];
+        ctx.neighbor_allreduce(&x)
+    })
+    .unwrap();
+    let x: Vec<f64> = (0..n).map(|r| (r as f64 + 1.0) * 2.0).collect();
+    let want = w2.apply(&x);
+    for (rank, got) in results.iter().enumerate() {
+        assert!((got[0] as f64 - want[rank]).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,190 @@
+//! Integration tests: decentralized optimizers converge to the right fixed
+//! points on analytically solvable problems.
+
+use std::sync::Arc;
+
+use bluefog::collective::AllreduceAlgo;
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::optim::{
+    make_optimizer, CommSpec, DecentralizedOptimizer, Dgd, DmSgd, ExactDiffusion,
+    GradientTracking, MomentumKind, ParallelMomentumSgd, PeriodicGlobalAveraging,
+    PushSumGradientTracking, StepOrder,
+};
+use bluefog::topology::builders;
+use bluefog::topology::dynamic::{OnePeerExpo, OnePeerFromGraph};
+
+const N: usize = 8;
+
+/// Quadratic f_i(x) = 0.5 ||x - c_i||^2; optimum = mean(c_i). Runs the
+/// optimizer and returns the worst-node distance to the optimum.
+fn solve(
+    make_opt: impl Fn(usize) -> Box<dyn DecentralizedOptimizer> + Send + Sync + 'static,
+    topo_name: &str,
+    iters: usize,
+) -> f64 {
+    let (graph, weights) = builders::by_name(topo_name, N).unwrap();
+    let results = run_spmd(
+        SpmdConfig::new(N).with_topology(graph, weights),
+        move |ctx| {
+            let d = 4;
+            let c: Vec<f32> = (0..d).map(|j| (ctx.rank() * d + j) as f32).collect();
+            let mut x = vec![0.0f32; d];
+            let mut opt = make_opt(ctx.size());
+            for _ in 0..iters {
+                let grad: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| xi - ci).collect();
+                opt.step(ctx, &mut x, &grad)?;
+            }
+            Ok(x)
+        },
+    )
+    .unwrap();
+    let d = 4;
+    let want: Vec<f64> =
+        (0..d).map(|j| (0..N).map(|r| (r * d + j) as f64).sum::<f64>() / N as f64).collect();
+    results
+        .iter()
+        .map(|x| {
+            x.iter()
+                .zip(&want)
+                .map(|(xi, wi)| (*xi as f64 - wi).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn gradient_tracking_is_exact() {
+    let err = solve(|_| Box::new(GradientTracking::new(0.1, CommSpec::Static)), "ring", 400);
+    assert!(err < 1e-3, "GT should be exact under heterogeneity: {err}");
+}
+
+#[test]
+fn exact_diffusion_is_exact() {
+    let err = solve(|_| Box::new(ExactDiffusion::new(0.1, CommSpec::Static)), "ring", 400);
+    // f32 accumulation leaves a small floor; the point is the absence of
+    // DGD's O(gamma) bias (~1e-1 at this step size).
+    assert!(err < 1e-2, "ED should remove the DGD bias: {err}");
+}
+
+#[test]
+fn dgd_has_bias_that_shrinks_with_stepsize() {
+    let big = solve(|_| Box::new(Dgd::new(0.2, StepOrder::Atc, CommSpec::Static)), "ring", 600);
+    let small = solve(|_| Box::new(Dgd::new(0.02, StepOrder::Atc, CommSpec::Static)), "ring", 4000);
+    assert!(big > 1e-2, "DGD at large step should show its bias: {big}");
+    assert!(small < big * 0.5, "bias must shrink with the step size: {big} -> {small}");
+}
+
+#[test]
+fn corrected_methods_beat_dgd() {
+    let dgd = solve(|_| Box::new(Dgd::new(0.1, StepOrder::Atc, CommSpec::Static)), "ring", 400);
+    let ed = solve(|_| Box::new(ExactDiffusion::new(0.1, CommSpec::Static)), "ring", 400);
+    let gt = solve(|_| Box::new(GradientTracking::new(0.1, CommSpec::Static)), "ring", 400);
+    assert!(ed < dgd && gt < dgd, "ED {ed} / GT {gt} should beat DGD {dgd}");
+}
+
+#[test]
+fn dgd_over_dynamic_topology_converges() {
+    let err = solve(
+        |n| {
+            Box::new(Dgd::new(
+                0.01,
+                StepOrder::Atc,
+                CommSpec::Dynamic(Arc::new(OnePeerExpo::new(n))),
+            ))
+        },
+        "expo2",
+        4000,
+    );
+    // One-peer rounds mix slower than the full graph, so DGD's bias floor
+    // is larger; at gamma = 0.01 it sits well below 1.
+    assert!(err < 0.6, "dynamic one-peer DGD should converge near optimum: {err}");
+}
+
+#[test]
+fn push_sum_gradient_tracking_over_time_varying_digraph() {
+    let err = solve(
+        |n| {
+            let base = builders::mesh_grid_2d(n);
+            Box::new(PushSumGradientTracking::new(0.05, Arc::new(OnePeerFromGraph::new(&base))))
+        },
+        "mesh",
+        800,
+    );
+    assert!(err < 1e-2, "push-sum GT should be exact over dynamic topology: {err}");
+}
+
+#[test]
+fn momentum_variants_converge() {
+    for kind in [MomentumKind::Vanilla, MomentumKind::Synced, MomentumKind::QuasiGlobal] {
+        // Momentum amplifies DGD's bias by ~1/(1-beta); keep the effective
+        // step small for a tight fixed point.
+        let err = solve(
+            move |_| Box::new(DmSgd::new(0.01, 0.5, kind, StepOrder::Atc, CommSpec::Static)),
+            "expo2",
+            2000,
+        );
+        assert!(err < 0.5, "{kind:?} failed to converge: {err}");
+    }
+}
+
+#[test]
+fn periodic_global_averaging_tightens_consensus() {
+    let plain = solve(
+        |_| Box::new(Dgd::new(0.1, StepOrder::Atc, CommSpec::Static)),
+        "ring",
+        300,
+    );
+    let periodic = solve(
+        |_| {
+            Box::new(PeriodicGlobalAveraging::new(
+                Dgd::new(0.1, StepOrder::Atc, CommSpec::Static),
+                10,
+                AllreduceAlgo::Ring,
+            ))
+        },
+        "ring",
+        300,
+    );
+    assert!(
+        periodic < plain,
+        "periodic global averaging should reduce the bias: {plain} -> {periodic}"
+    );
+}
+
+#[test]
+fn parallel_sgd_baseline_is_exact() {
+    let err = solve(|_| Box::new(ParallelMomentumSgd::new(0.1, 0.5, AllreduceAlgo::Ring)), "full", 300);
+    assert!(err < 1e-3, "parallel SGD is centralized and must be exact: {err}");
+}
+
+#[test]
+fn factory_rejects_unknown_and_builds_known() {
+    assert!(make_optimizer("nope", 0.1, 0.9, CommSpec::Static).is_err());
+    for algo in ["atc", "awc", "dmsgd", "dmsgd-vanilla", "qg-dmsgd", "ed", "gt", "psgd"] {
+        let opt = make_optimizer(algo, 0.1, 0.9, CommSpec::Static).unwrap();
+        assert!(!opt.name().is_empty());
+    }
+}
+
+#[test]
+fn awc_and_atc_agree_in_homogeneous_case() {
+    // With identical data everywhere there is no bias: both orders converge
+    // to the same point.
+    let run = |order: StepOrder| {
+        let (graph, weights) = builders::by_name("expo2", N).unwrap();
+        run_spmd(SpmdConfig::new(N).with_topology(graph, weights), move |ctx| {
+            let mut x = vec![10.0f32];
+            let mut opt = Dgd::new(0.1, order, CommSpec::Static);
+            for _ in 0..200 {
+                let grad = vec![x[0] - 3.0];
+                opt.step(ctx, &mut x, &grad)?;
+            }
+            Ok(x[0])
+        })
+        .unwrap()
+    };
+    for v in run(StepOrder::Atc).iter().chain(run(StepOrder::Awc).iter()) {
+        assert!((v - 3.0).abs() < 1e-3, "homogeneous case must be exact: {v}");
+    }
+}

@@ -1,0 +1,281 @@
+//! Property-based tests on coordinator invariants, using the in-repo
+//! mini-framework (`bluefog::proptest` — proptest itself is unavailable
+//! offline; see DESIGN.md).
+
+use bluefog::collective::neighbor::NeighborWeights;
+use bluefog::collective::{AllreduceAlgo, ReduceOp};
+use bluefog::fusion::{fusion_groups, FusionBuffer};
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::prop_assert;
+use bluefog::proptest::{check, Gen};
+use bluefog::simnet::analytic;
+use bluefog::topology::dynamic::{views_consistent, DynamicTopology, OnePeerExpo, OnePeerFromGraph};
+use bluefog::topology::WeightMatrix;
+
+/// For any random doubly-stochastic W on a connected graph, repeated
+/// partial averaging contracts to the global mean and never changes it
+/// (the consensus invariant behind every algorithm in the paper).
+#[test]
+fn prop_consensus_contracts_under_any_doubly_stochastic_matrix() {
+    check("consensus-contraction", 12, |g: &mut Gen| {
+        let n = g.usize_in(2, 9);
+        let graph = g.connected_graph(n, 0.3);
+        let w = WeightMatrix::metropolis_hastings(&graph);
+        prop_assert!(w.is_doubly_stochastic(1e-9), "not doubly stochastic");
+        let init: Vec<f32> = g.vec_f32(n, -10.0, 10.0);
+        let mean: f64 = init.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let init2 = init.clone();
+        let iters = 60;
+        let results = run_spmd(
+            SpmdConfig::new(n).with_topology(graph, w).with_seed(g.usize_in(0, 1 << 30) as u64),
+            move |ctx| {
+                let mut x = vec![init2[ctx.rank()]];
+                for _ in 0..iters {
+                    x = ctx.neighbor_allreduce(&x)?;
+                }
+                Ok(x[0] as f64)
+            },
+        )
+        .map_err(|e| format!("run failed: {e:#}"))?;
+        let post_mean: f64 = results.iter().sum::<f64>() / n as f64;
+        prop_assert!(
+            (post_mean - mean).abs() < 1e-3,
+            "mean not preserved: {mean} -> {post_mean}"
+        );
+        let spread_before: f64 = init
+            .iter()
+            .map(|&x| (x as f64 - mean).abs())
+            .fold(0.0, f64::max);
+        let spread_after: f64 =
+            results.iter().map(|&x| (x - mean).abs()).fold(0.0, f64::max);
+        prop_assert!(
+            spread_after <= spread_before * 0.5 + 1e-6,
+            "no contraction: {spread_before} -> {spread_after}"
+        );
+        Ok(())
+    });
+}
+
+/// Fusion pack/unpack is a lossless round-trip for any tensor collection.
+#[test]
+fn prop_fusion_roundtrip() {
+    check("fusion-roundtrip", 100, |g: &mut Gen| {
+        let count = g.usize_in(1, 12);
+        let tensors: Vec<Vec<f32>> = (0..count)
+            .map(|_| {
+                let len = g.usize_in(0, 50);
+                g.vec_f32(len, -1e6, 1e6)
+            })
+            .collect();
+        let refs: Vec<&[f32]> = tensors.iter().map(|t| t.as_slice()).collect();
+        let buf = FusionBuffer::pack(&refs);
+        let out = buf.unpack(buf.data());
+        prop_assert!(out == tensors, "round-trip mismatch");
+        Ok(())
+    });
+}
+
+/// Fusion groups partition the request sequence in order, never exceeding
+/// the threshold except for single oversized tensors.
+#[test]
+fn prop_fusion_groups_partition() {
+    check("fusion-groups", 200, |g: &mut Gen| {
+        let count = g.usize_in(1, 30);
+        let sizes: Vec<usize> = (0..count).map(|_| g.usize_in(1, 4096)).collect();
+        let threshold = g.usize_in(0, 8192);
+        let groups = fusion_groups(&sizes, threshold);
+        // Coverage without gaps or overlaps.
+        let mut expected_start = 0;
+        for &(lo, hi) in &groups {
+            prop_assert!(lo == expected_start, "gap at {lo}");
+            prop_assert!(hi > lo, "empty group");
+            expected_start = hi;
+            if threshold > 0 && hi - lo > 1 {
+                let total: usize = sizes[lo..hi].iter().sum();
+                prop_assert!(total <= threshold, "group exceeds threshold");
+            }
+        }
+        prop_assert!(expected_start == sizes.len(), "tail not covered");
+        Ok(())
+    });
+}
+
+/// One-peer dynamic views are mutually consistent and mean-preserving at
+/// every iteration, for any n.
+#[test]
+fn prop_one_peer_views_consistent_and_stochastic() {
+    check("one-peer-views", 60, |g: &mut Gen| {
+        let n = g.usize_in(1, 33);
+        let topo = OnePeerExpo::new(n);
+        let k = g.usize_in(0, 3 * topo.period().max(1));
+        let views: Vec<_> = (0..n).map(|r| topo.view(k, r)).collect();
+        prop_assert!(views_consistent(&views), "inconsistent views at iter {k} (n={n})");
+        for v in &views {
+            let total: f64 = v.self_weight + v.src_weights.iter().map(|(_, w)| w).sum::<f64>();
+            prop_assert!((total - 1.0).abs() < 1e-12, "receive weights not stochastic");
+        }
+        Ok(())
+    });
+}
+
+/// Same for the round-robin one-peer schedule derived from any random
+/// connected undirected base graph.
+#[test]
+fn prop_one_peer_from_graph_consistent() {
+    check("one-peer-from-graph", 40, |g: &mut Gen| {
+        let n = g.usize_in(2, 10);
+        let base = g.connected_graph(n, 0.3);
+        let topo = OnePeerFromGraph::new(&base);
+        for k in 0..topo.period() {
+            let views: Vec<_> = (0..n).map(|r| topo.view(k, r)).collect();
+            prop_assert!(views_consistent(&views), "iter {k} inconsistent");
+        }
+        Ok(())
+    });
+}
+
+/// Push-sum over random strongly-connected digraphs with uniform push
+/// weights: mass conservation + unbiased consensus.
+#[test]
+fn prop_push_sum_mass_conservation() {
+    check("push-sum-mass", 8, |g: &mut Gen| {
+        let n = g.usize_in(2, 8);
+        let graph = g.strongly_connected_digraph(n, 0.2);
+        let graph2 = graph.clone();
+        let w = WeightMatrix::uniform_pull(&graph);
+        let init: Vec<f32> = g.vec_f32(n, -5.0, 5.0);
+        let true_mean: f64 = init.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let init2 = init.clone();
+        let results = run_spmd(
+            SpmdConfig::new(n).with_topology(graph, w),
+            move |ctx| {
+                // Synchronous push-sum via dynamic neighbor_allreduce with
+                // column-stochastic sender-side weights on the static graph.
+                let outs = graph2.out_neighbors(ctx.rank());
+                let share = 1.0 / (outs.len() + 1) as f64;
+                let dsts: Vec<(usize, f64)> = outs.iter().map(|&d| (d, share)).collect();
+                let srcs: Vec<(usize, f64)> =
+                    graph2.in_neighbors(ctx.rank()).into_iter().map(|s| (s, 1.0)).collect();
+                let weights = NeighborWeights::push_pull(share, srcs, dsts);
+                let mut xp = vec![init2[ctx.rank()], 1.0];
+                for _ in 0..120 {
+                    xp = ctx.neighbor_allreduce_dynamic(&xp, &weights)?;
+                }
+                Ok((xp[0] as f64, xp[1] as f64))
+            },
+        )
+        .map_err(|e| format!("run failed: {e:#}"))?;
+        let mass: f64 = results.iter().map(|(_, p)| p).sum();
+        prop_assert!((mass - n as f64).abs() < 1e-3, "push-sum weight mass leaked: {mass}");
+        for (rank, (x, p)) in results.iter().enumerate() {
+            prop_assert!(*p > 0.0, "weight collapsed at rank {rank}");
+            let est = x / p;
+            prop_assert!(
+                (est - true_mean).abs() < 1e-2,
+                "biased consensus at rank {rank}: {est} vs {true_mean}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Allreduce average equals the arithmetic mean for any algorithm, any
+/// payload, any node count.
+#[test]
+fn prop_allreduce_is_exact_mean() {
+    check("allreduce-mean", 10, |g: &mut Gen| {
+        let n = g.usize_in(2, 9);
+        let d = g.usize_in(1, 64);
+        let algo = match g.usize_in(0, 3) {
+            0 => AllreduceAlgo::Ring,
+            1 => AllreduceAlgo::ParameterServer,
+            _ => AllreduceAlgo::BytePs,
+        };
+        let data: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(d, -100.0, 100.0)).collect();
+        let data2 = data.clone();
+        let results = run_spmd(SpmdConfig::new(n), move |ctx| {
+            ctx.allreduce(&data2[ctx.rank()], ReduceOp::Average, algo)
+        })
+        .map_err(|e| format!("run failed: {e:#}"))?;
+        for i in 0..d {
+            let want: f64 = data.iter().map(|v| v[i] as f64).sum::<f64>() / n as f64;
+            for got in &results {
+                prop_assert!(
+                    (got[i] as f64 - want).abs() < 1e-3,
+                    "element {i}: {} != {want} ({algo:?}, n={n})",
+                    got[i]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Analytic Table-I formulas: partial averaging is n-free; all costs are
+/// monotone in M; ordering holds whenever n >= 4 and M/B dominates L.
+#[test]
+fn prop_cost_model_structure() {
+    check("cost-model", 200, |g: &mut Gen| {
+        let n = g.usize_in(4, 256);
+        let m = g.f64_in(1e5, 1e9);
+        let b = g.f64_in(1e8, 1e11);
+        let l = g.f64_in(1e-6, 1e-3);
+        prop_assert!(
+            analytic::partial_averaging(1, m, b, l) == analytic::partial_averaging(1, m, b, l),
+            "determinism"
+        );
+        // n-independence of partial averaging is structural (no n arg).
+        let ps = analytic::parameter_server(n, m, b, l);
+        let ring = analytic::ring_allreduce(n, m, b, l);
+        let byteps = analytic::byteps(n, m, b, l);
+        let partial = analytic::partial_averaging(1, m, b, l);
+        // PS > ring only holds when bandwidth dominates; in latency-bound
+        // regimes ring's 2nL rounds make it the worse choice — a real
+        // crossover, not a bug (ring is "bandwidth optimal", Table I note).
+        if m / b > 2.0 * n as f64 * l {
+            prop_assert!(ps > ring, "PS {ps} <= ring {ring} (n={n})");
+        }
+        prop_assert!(byteps < ps, "BytePS {byteps} >= PS {ps}");
+        prop_assert!(partial < byteps, "partial {partial} >= BytePS {byteps}");
+        // Partial averaging always beats every global primitive.
+        prop_assert!(partial < ring && partial < ps, "partial not cheapest");
+        // Monotone in message size.
+        let bigger = analytic::ring_allreduce(n, m * 2.0, b, l);
+        prop_assert!(bigger > ring, "not monotone in M");
+        Ok(())
+    });
+}
+
+/// The virtual clock is monotone through arbitrary collective sequences.
+#[test]
+fn prop_virtual_time_monotone() {
+    check("vtime-monotone", 6, |g: &mut Gen| {
+        let n = g.usize_in(2, 6);
+        let ops: Vec<usize> = (0..g.usize_in(1, 6)).map(|_| g.usize_in(0, 3)).collect();
+        let results = run_spmd(SpmdConfig::new(n), move |ctx| {
+            let mut last = ctx.vtime();
+            let mut monotone = true;
+            for &op in &ops {
+                let x = vec![1.0f32; 32];
+                match op {
+                    0 => {
+                        ctx.neighbor_allreduce(&x)?;
+                    }
+                    1 => {
+                        ctx.allreduce(&x, ReduceOp::Average, AllreduceAlgo::Ring)?;
+                    }
+                    _ => {
+                        ctx.barrier()?;
+                    }
+                }
+                let now = ctx.vtime();
+                monotone &= now >= last;
+                last = now;
+            }
+            Ok(monotone)
+        })
+        .map_err(|e| format!("run failed: {e:#}"))?;
+        prop_assert!(results.iter().all(|&m| m), "virtual clock went backwards");
+        Ok(())
+    });
+}

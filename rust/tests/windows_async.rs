@@ -1,0 +1,154 @@
+//! Integration tests: asynchronous window operations (paper §III-C).
+
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::topology::{builders, WeightMatrix};
+
+fn ring_cfg(n: usize) -> SpmdConfig {
+    let g = builders::ring(n);
+    let w = WeightMatrix::metropolis_hastings(&g);
+    SpmdConfig::new(n).with_topology(g, w)
+}
+
+#[test]
+fn win_put_then_update_averages() {
+    let n = 4;
+    let results = run_spmd(ring_cfg(n), |ctx| {
+        let x = vec![ctx.rank() as f32; 2];
+        ctx.win_create("w", &x, false)?;
+        // Everyone puts its raw tensor to its out-neighbors.
+        ctx.win_put("w", &x, &[])?;
+        ctx.barrier()?;
+        // Uniform average over self + 2 ring in-neighbors.
+        let third = 1.0 / 3.0;
+        let srcs: Vec<(usize, f64)> =
+            ctx.in_neighbor_ranks().into_iter().map(|r| (r, third)).collect();
+        let out = ctx.win_update("w", &x, third, &srcs)?;
+        ctx.barrier()?;
+        ctx.win_free("w")?;
+        Ok(out[0])
+    })
+    .unwrap();
+    for (rank, got) in results.iter().enumerate() {
+        let prev = (rank + n - 1) % n;
+        let next = (rank + 1) % n;
+        let want = (rank + prev + next) as f32 / 3.0;
+        assert!((got - want).abs() < 1e-6, "rank {rank}: {got} != {want}");
+    }
+}
+
+#[test]
+fn win_get_pulls_registered_values() {
+    let n = 4;
+    let results = run_spmd(ring_cfg(n), |ctx| {
+        let x = vec![(ctx.rank() * 100) as f32];
+        ctx.win_create("g", &x, true)?;
+        // Register our value via win_update (no sources yet).
+        ctx.win_update("g", &x, 1.0, &[])?;
+        ctx.barrier()?;
+        // Pull each in-neighbor's registered tensor, then average.
+        let srcs: Vec<(usize, f64)> =
+            ctx.in_neighbor_ranks().into_iter().map(|r| (r, 1.0)).collect();
+        ctx.win_get("g", &srcs)?;
+        // Barrier before the averaging win_update: it re-registers the
+        // *averaged* value as the local tensor, which a late win_get on
+        // another rank would otherwise observe.
+        ctx.barrier()?;
+        let third = 1.0 / 3.0;
+        let srcs_avg: Vec<(usize, f64)> = srcs.iter().map(|&(r, _)| (r, third)).collect();
+        let out = ctx.win_update("g", &x, third, &srcs_avg)?;
+        ctx.barrier()?;
+        ctx.win_free("g")?;
+        Ok(out[0])
+    })
+    .unwrap();
+    for (rank, got) in results.iter().enumerate() {
+        let prev = (rank + n - 1) % n;
+        let next = (rank + 1) % n;
+        let want = ((rank + prev + next) * 100) as f32 / 3.0;
+        assert!((got - want).abs() < 1e-4, "rank {rank}: {got} != {want}");
+    }
+}
+
+#[test]
+fn win_accumulate_conserves_mass() {
+    let n = 6;
+    let results = run_spmd(ring_cfg(n), |ctx| {
+        let mut x = vec![1.0f32];
+        ctx.win_create("m", &x, true)?;
+        let out = ctx.out_neighbor_ranks();
+        let share = 1.0 / (out.len() + 1) as f64;
+        let dsts: Vec<(usize, f64)> = out.iter().map(|&r| (r, share)).collect();
+        for _ in 0..25 {
+            ctx.win_accumulate("m", &mut x, share, &dsts)?;
+            ctx.win_update_then_collect("m", &mut x)?;
+        }
+        ctx.barrier()?;
+        ctx.win_update_then_collect("m", &mut x)?;
+        ctx.win_free("m")?;
+        Ok(x[0] as f64)
+    })
+    .unwrap();
+    let total: f64 = results.iter().sum();
+    assert!((total - n as f64).abs() < 1e-4, "mass leaked: {total} != {n}");
+}
+
+#[test]
+fn win_create_rejects_duplicates_and_free_unknown() {
+    let results = run_spmd(ring_cfg(2), |ctx| {
+        ctx.win_create("dup", &[1.0], false)?;
+        let dup_err = ctx.win_create("dup", &[1.0], false).is_err();
+        // Size mismatch caught:
+        let size_err = ctx.win_update("dup", &[1.0, 2.0], 1.0, &[]).is_err();
+        let missing_err = ctx.win_free("nope").is_err();
+        ctx.barrier()?;
+        ctx.win_free("dup")?;
+        Ok((dup_err, size_err, missing_err))
+    })
+    .unwrap();
+    for (dup, size, missing) in results {
+        assert!(dup && size && missing);
+    }
+}
+
+#[test]
+fn win_put_to_non_neighbor_is_rejected() {
+    // Window topology is fixed at creation: pushing to a rank that is not
+    // an in-neighbor under the window's topology must error.
+    let n = 4;
+    let results = run_spmd(ring_cfg(n), |ctx| {
+        let x = vec![0.0f32];
+        ctx.win_create("t", &x, true)?;
+        // Rank 0's non-neighbor on a 4-ring is rank 2.
+        let res = if ctx.rank() == 0 {
+            ctx.win_put("t", &x, &[(2, 1.0)]).is_err()
+        } else {
+            true
+        };
+        ctx.barrier()?;
+        ctx.win_free("t")?;
+        Ok(res)
+    })
+    .unwrap();
+    assert!(results.iter().all(|&r| r));
+}
+
+#[test]
+fn window_vtime_advances_on_update() {
+    let results = run_spmd(ring_cfg(3), |ctx| {
+        let mut x = vec![1.0f32; 1024];
+        ctx.win_create("vt", &x, true)?;
+        let share = 1.0 / 3.0;
+        let dsts: Vec<(usize, f64)> =
+            ctx.out_neighbor_ranks().into_iter().map(|r| (r, share)).collect();
+        ctx.win_accumulate("vt", &mut x, share, &dsts)?;
+        ctx.barrier()?;
+        let before = ctx.vtime();
+        ctx.win_update_then_collect("vt", &mut x)?;
+        let after = ctx.vtime();
+        ctx.barrier()?;
+        ctx.win_free("vt")?;
+        Ok(after >= before)
+    })
+    .unwrap();
+    assert!(results.iter().all(|&ok| ok));
+}
