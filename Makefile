@@ -1,0 +1,27 @@
+# Convenience targets. Tier-1 verify is `make verify`.
+
+.PHONY: verify build test examples benches artifacts clean
+
+verify: build test
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+examples:
+	cargo build --release --examples
+
+benches:
+	cargo build --benches
+
+# Lower the L2/L1 JAX/Pallas computations to HLO-text artifacts consumed by
+# the Rust PJRT runtime (needs the Python toolchain; artifacts land in
+# ./artifacts with a .stamp sentinel the tests/benches key off).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -20,7 +20,7 @@ use bluefog::runtime::DeviceService;
 use bluefog::simnet::NetworkModel;
 use bluefog::topology::builders;
 use bluefog::topology::dynamic::OnePeerExpo;
-use bluefog::training::{eval_node, train_node, TrainRun};
+use bluefog::training::{eval_node, TrainRun};
 
 const NODES: usize = 8;
 const STEPS: usize = 120;

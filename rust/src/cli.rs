@@ -9,6 +9,7 @@ use std::collections::HashMap;
 /// Parsed arguments.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional (non-flag) arguments in order.
     pub positional: Vec<String>,
     flags: HashMap<String, String>,
 }
@@ -41,18 +42,22 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// True when `--key` was passed (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// String value of `--key` or `default`.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// `usize` value of `--key` or `default`; errors on unparsable input.
     pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -60,6 +65,7 @@ impl Args {
         }
     }
 
+    /// `f64` value of `--key` or `default`; errors on unparsable input.
     pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -67,6 +73,7 @@ impl Args {
         }
     }
 
+    /// Boolean value of `--key` or `default`; accepts true/false/1/0/yes/no.
     pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
         match self.get(key) {
             None => Ok(default),

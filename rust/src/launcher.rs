@@ -44,6 +44,13 @@ pub struct SpmdConfig {
 
 impl SpmdConfig {
     /// A sensible default: flat fast network, expo2 topology, topo check on.
+    ///
+    /// ```
+    /// use bluefog::launcher::{run_spmd, SpmdConfig};
+    /// // Four simulated nodes each report their rank.
+    /// let ranks = run_spmd(SpmdConfig::new(4), |ctx| Ok(ctx.rank())).unwrap();
+    /// assert_eq!(ranks, vec![0, 1, 2, 3]);
+    /// ```
     pub fn new(nodes: usize) -> Self {
         SpmdConfig {
             nodes,

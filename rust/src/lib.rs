@@ -38,6 +38,8 @@
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
 //! reproduced tables and figures.
 
+#![warn(missing_docs)]
+
 pub mod cli;
 pub mod collective;
 pub mod config;

@@ -152,6 +152,7 @@ impl CommThread {
         CommThread { tx, handle: Some(handle) }
     }
 
+    /// A cloneable enqueue handle for this thread's request queue.
     pub fn queue(&self) -> CommQueue {
         CommQueue { tx: self.tx.clone() }
     }

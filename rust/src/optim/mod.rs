@@ -114,13 +114,17 @@ pub enum StepOrder {
 
 /// Decentralized (stochastic) gradient descent — paper eq. (16)/(17).
 pub struct Dgd {
+    /// Step size `γ`.
     pub gamma: f32,
+    /// Communication/adaptation order (ATC vs AWC).
     pub order: StepOrder,
+    /// Communication pattern used by the combine step.
     pub comm: CommSpec,
     iter: usize,
 }
 
 impl Dgd {
+    /// New DGD optimizer with step size `gamma`.
     pub fn new(gamma: f32, order: StepOrder, comm: CommSpec) -> Self {
         Dgd { gamma, order, comm, iter: 0 }
     }
@@ -154,13 +158,16 @@ impl DecentralizedOptimizer for Dgd {
 /// `psi_k = x_k - γ g_k`; `phi_k = psi_k + x_k - psi_{k-1}`;
 /// `x_{k+1} = W phi_k`.
 pub struct ExactDiffusion {
+    /// Step size `γ`.
     pub gamma: f32,
+    /// Communication pattern used by the combine step.
     pub comm: CommSpec,
     prev_psi: Option<Vec<f32>>,
     iter: usize,
 }
 
 impl ExactDiffusion {
+    /// New Exact-Diffusion optimizer with step size `gamma`.
     pub fn new(gamma: f32, comm: CommSpec) -> Self {
         ExactDiffusion { gamma, comm, prev_psi: None, iter: 0 }
     }
@@ -196,7 +203,9 @@ impl DecentralizedOptimizer for ExactDiffusion {
 /// `y_{k+1} = W(y_k + g_{k+1} - g_k)` (y_0 = g_0);
 /// `x_{k+1} = W(x_k - γ y_{k+1})`.
 pub struct GradientTracking {
+    /// Step size `γ`.
     pub gamma: f32,
+    /// Communication pattern used by the combine step.
     pub comm: CommSpec,
     y: Option<Vec<f32>>,
     prev_grad: Option<Vec<f32>>,
@@ -204,6 +213,7 @@ pub struct GradientTracking {
 }
 
 impl GradientTracking {
+    /// New gradient-tracking optimizer with step size `gamma`.
     pub fn new(gamma: f32, comm: CommSpec) -> Self {
         GradientTracking { gamma, comm, y: None, prev_grad: None, iter: 0 }
     }
@@ -246,7 +256,9 @@ impl DecentralizedOptimizer for GradientTracking {
 /// *directed, time-varying* graphs using column-stochastic (push) weights,
 /// with the push-sum weight `v` correcting the bias.
 pub struct PushSumGradientTracking {
+    /// Step size `γ`.
     pub gamma: f32,
+    /// Per-iteration directed topology schedule.
     pub topo: Arc<dyn DynamicTopology>,
     u: Option<Vec<f32>>,
     v: f32,
@@ -256,6 +268,7 @@ pub struct PushSumGradientTracking {
 }
 
 impl PushSumGradientTracking {
+    /// New push-sum gradient-tracking optimizer over `topo`.
     pub fn new(gamma: f32, topo: Arc<dyn DynamicTopology>) -> Self {
         PushSumGradientTracking { gamma, topo, u: None, v: 1.0, y: None, prev_grad: None, iter: 0 }
     }
@@ -332,16 +345,22 @@ pub enum MomentumKind {
 
 /// Decentralized momentum SGD (Table III's algorithm family).
 pub struct DmSgd {
+    /// Step size `γ`.
     pub gamma: f32,
+    /// Momentum coefficient `β`.
     pub beta: f32,
+    /// Which momentum variant to run (Table III rows).
     pub kind: MomentumKind,
+    /// Communication/adaptation order (ATC vs AWC).
     pub order: StepOrder,
+    /// Communication pattern used by the combine step.
     pub comm: CommSpec,
     m: Option<Vec<f32>>,
     iter: usize,
 }
 
 impl DmSgd {
+    /// New decentralized momentum-SGD optimizer.
     pub fn new(gamma: f32, beta: f32, kind: MomentumKind, order: StepOrder, comm: CommSpec) -> Self {
         DmSgd { gamma, beta, kind, order, comm, m: None, iter: 0 }
     }
@@ -409,13 +428,17 @@ impl DecentralizedOptimizer for DmSgd {
 /// Wrapper that periodically replaces partial averaging with a global
 /// allreduce (paper Listing 4: `allreduce if batch_idx % 20 == 0`).
 pub struct PeriodicGlobalAveraging<O: DecentralizedOptimizer> {
+    /// The wrapped decentralized optimizer.
     pub inner: O,
+    /// A global allreduce replaces partial averaging every `period` steps.
     pub period: usize,
+    /// Allreduce algorithm used for the periodic global average.
     pub algo: AllreduceAlgo,
     iter: usize,
 }
 
 impl<O: DecentralizedOptimizer> PeriodicGlobalAveraging<O> {
+    /// Wrap `inner`, averaging globally every `period` steps.
     pub fn new(inner: O, period: usize, algo: AllreduceAlgo) -> Self {
         assert!(period > 0);
         PeriodicGlobalAveraging { inner, period, algo, iter: 0 }
@@ -473,13 +496,17 @@ pub fn make_optimizer(
 /// Parallel SGD with momentum — the centralized baseline of Table III
 /// (global averaging of gradients every step).
 pub struct ParallelMomentumSgd {
+    /// Step size `γ`.
     pub gamma: f32,
+    /// Momentum coefficient `β`.
     pub beta: f32,
+    /// Allreduce algorithm used for the per-step global gradient average.
     pub algo: AllreduceAlgo,
     m: Option<Vec<f32>>,
 }
 
 impl ParallelMomentumSgd {
+    /// New centralized momentum-SGD baseline.
     pub fn new(gamma: f32, beta: f32, algo: AllreduceAlgo) -> Self {
         ParallelMomentumSgd { gamma, beta, algo, m: None }
     }

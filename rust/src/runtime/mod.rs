@@ -25,7 +25,9 @@ pub use manifest::{DType, Manifest, TensorSpec};
 /// A flat input buffer with shape/dtype, marshalled to an `xla::Literal`.
 #[derive(Debug, Clone)]
 pub enum InputBuf {
+    /// `f32` data with its logical dimensions (empty dims = scalar).
     F32(Vec<f32>, Vec<usize>),
+    /// `i32` data with its logical dimensions (empty dims = scalar).
     I32(Vec<i32>, Vec<usize>),
 }
 
@@ -60,6 +62,7 @@ impl InputBuf {
         }
     }
 
+    /// True when the buffer holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

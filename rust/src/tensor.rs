@@ -8,7 +8,9 @@
 /// Flat f32 tensor with an optional shape annotation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Flat row-major element buffer.
     pub data: Vec<f32>,
+    /// Logical shape; product equals `data.len()`.
     pub shape: Vec<usize>,
 }
 

@@ -86,6 +86,14 @@ pub fn grid_shape(n: usize) -> (usize, usize) {
 /// Static exponential-2 graph (`ExponentialTwoGraph` in BlueFog; [33]):
 /// node `i` sends to `(i + 2^k) mod n` for `k = 0..ceil(log2 n)`.
 /// Directed, out-degree `ceil(log2 n)`, diameter `O(log n)`.
+///
+/// ```
+/// use bluefog::topology::builders::exponential_two;
+/// let g = exponential_two(8);
+/// assert_eq!(g.out_neighbors(0), vec![1, 2, 4]); // hops 1, 2, 4
+/// assert!(g.is_strongly_connected());
+/// assert!(g.diameter().unwrap() <= 3); // O(log n) diameter
+/// ```
 pub fn exponential_two(n: usize) -> Graph {
     let mut g = Graph::empty(n);
     if n == 1 {

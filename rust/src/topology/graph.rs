@@ -23,6 +23,15 @@ impl Graph {
     }
 
     /// Build from an explicit edge list of `(src, dst)` pairs.
+    ///
+    /// ```
+    /// use bluefog::topology::Graph;
+    /// // Directed 3-ring: 0 -> 1 -> 2 -> 0.
+    /// let g = Graph::from_edges(3, [(0, 1), (1, 2), (2, 0)]);
+    /// assert_eq!(g.in_neighbors(1), vec![0]);
+    /// assert_eq!(g.out_neighbors(1), vec![2]);
+    /// assert!(g.is_strongly_connected());
+    /// ```
     pub fn from_edges(n: usize, edges: impl IntoIterator<Item = (usize, usize)>) -> Self {
         let mut g = Graph::empty(n);
         for (s, d) in edges {

@@ -32,14 +32,17 @@ impl WeightMatrix {
         WeightMatrix { n, w: rows.to_vec() }
     }
 
+    /// Number of nodes (the matrix is `n x n`).
     pub fn size(&self) -> usize {
         self.n
     }
 
+    /// Entry `w_ij`.
     pub fn get(&self, i: usize, j: usize) -> f64 {
         self.w[i * self.n + j]
     }
 
+    /// Set entry `w_ij`.
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         self.w[i * self.n + j] = v;
     }
@@ -81,6 +84,13 @@ impl WeightMatrix {
     /// **Standard matrix** via the Metropolis–Hastings rule on an undirected
     /// graph: `w_ij = 1 / (1 + max(deg_i, deg_j))` for neighbors, diagonal
     /// absorbs the remainder. Always doubly-stochastic and symmetric.
+    ///
+    /// ```
+    /// use bluefog::topology::{builders, WeightMatrix};
+    /// let w = WeightMatrix::metropolis_hastings(&builders::ring(8));
+    /// assert!(w.is_doubly_stochastic(1e-9));
+    /// assert!(w.respects_graph(&builders::ring(8)));
+    /// ```
     pub fn metropolis_hastings(g: &Graph) -> Self {
         assert!(g.is_undirected(), "Metropolis-Hastings requires an undirected graph");
         let n = g.size();

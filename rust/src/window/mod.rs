@@ -48,6 +48,7 @@ pub struct WindowTable {
 }
 
 impl WindowTable {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -108,6 +109,7 @@ impl WindowTable {
         self.entries.lock().unwrap().len()
     }
 
+    /// True when no windows are registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

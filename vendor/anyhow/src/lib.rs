@@ -1,0 +1,191 @@
+//! Minimal, pure-std reimplementation of the subset of the `anyhow` API this
+//! workspace uses. The real crate is unavailable offline, so this shim
+//! provides the same surface with identical call-site syntax:
+//!
+//! - [`Error`] / [`Result`] — a string-message error with a context chain;
+//! - [`anyhow!`] — build an [`Error`] from a format string (or any
+//!   `Display` value);
+//! - [`bail!`] — early-return `Err(anyhow!(...))`;
+//! - [`ensure!`] — `bail!` unless a condition holds;
+//! - `Error::context` — wrap an error with an outer message (shown by the
+//!   `{:#}` alternate formatting as `outer: inner: ...`);
+//! - a blanket `From<E: std::error::Error>` so `?` converts std errors.
+//!
+//! Like the real `anyhow::Error`, [`Error`] deliberately does **not**
+//! implement `std::error::Error` — that is what makes the blanket `From`
+//! impl coherent.
+
+use std::fmt;
+
+/// `Result` specialized to [`Error`], the usual `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-message error with an optional chain of context messages.
+///
+/// `messages[0]` is the innermost (root) message; later entries are context
+/// layers added by [`Error::context`], outermost last.
+pub struct Error {
+    messages: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { messages: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    ///
+    /// `{}` shows only the outermost message; `{:#}` shows the whole chain
+    /// as `outer: ...: root` (matching anyhow's alternate formatting).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.messages.push(context.to_string());
+        self
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        &self.messages[0]
+    }
+
+    /// Iterate the chain outermost-first (like `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.messages.iter().rev().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first.
+            let mut first = true;
+            for m in self.messages.iter().rev() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            // `{}`: outermost message only.
+            write!(f, "{}", self.messages.last().expect("error has a message"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow's Debug: outermost message, then the cause chain.
+        write!(f, "{}", self.messages.last().expect("error has a message"))?;
+        if self.messages.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in self.messages.iter().rev().skip(1) {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion that makes `?` work on std errors inside functions
+// returning `anyhow::Result`. Coherent only because `Error` itself does not
+// implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve the source chain as context layers (innermost first).
+        let mut messages = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            messages.insert(0, s.to_string());
+            src = s.source();
+        }
+        Error { messages }
+    }
+}
+
+/// Build an [`Error`] from a format string (inline captures supported) or a
+/// single displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return `Err(anyhow!(...))` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e = Error::msg("root").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+
+    #[test]
+    fn macros_roundtrip() {
+        let x = 3;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(format!("{e}"), "value 3 bad");
+        let e = anyhow!("value {} bad", 4);
+        assert_eq!(format!("{e}"), "value 4 bad");
+        assert!(fails(false).is_err());
+        assert_eq!(fails(true).unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert!(parse("nope").is_err());
+        assert_eq!(parse("12").unwrap(), 12);
+    }
+
+    #[test]
+    fn debug_shows_chain() {
+        let e = Error::msg("root").context("mid").context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("top"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["top", "mid", "root"]);
+        assert_eq!(e.root_cause(), "root");
+    }
+}
