@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: verify build test examples benches artifacts clean
+.PHONY: verify build test examples benches bench-hotpath artifacts clean
 
 verify: build test
 
@@ -15,6 +15,12 @@ examples:
 
 benches:
 	cargo build --benches
+
+# A/B the naive vs pooled/blocked communication hot path and write
+# BENCH_hotpath.json (ms/op, effective GB/s, pool hit rate). Set
+# HOTPATH_SMOKE=1 for a seconds-long CI-sized run.
+bench-hotpath:
+	cargo run --release --example perf_probe
 
 # Lower the L2/L1 JAX/Pallas computations to HLO-text artifacts consumed by
 # the Rust PJRT runtime (needs the Python toolchain; artifacts land in

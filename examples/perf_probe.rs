@@ -1,19 +1,164 @@
-// L3 hot-path probe: wall time of large neighbor_allreduce + training step marshalling.
+// Comparative hot-path probe: the naive allocating path (fresh `Vec` per
+// payload/combine, k-pass kernels) vs the pooled/blocked path (rank-local
+// buffer pool + single-pass blocked combine) on identical
+// `neighbor_allreduce` workloads over a fully-connected graph (every rank
+// fans out to n-1 neighbors). Emits machine-readable `BENCH_hotpath.json`
+// with ms/op, effective GB/s and the pool hit rate after warm-up.
+//
+// Run: `make bench-hotpath` (or `cargo run --release --example perf_probe`).
+// Env: HOTPATH_SMOKE=1 shrinks sizes/reps for CI; BENCH_HOTPATH_OUT
+// overrides the output path.
+use std::time::Instant;
+
 use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::pool::{HotPath, PoolStats};
+use bluefog::topology::builders;
+use bluefog::topology::WeightMatrix;
+
+struct ModeRun {
+    ms_per_op: f64,
+    gbps: f64,
+    hits: u64,
+    misses: u64,
+}
+
+impl ModeRun {
+    /// Aggregate hit rate, using the library's own definition.
+    fn hit_rate(&self) -> f64 {
+        PoolStats { hits: self.hits, misses: self.misses, ..Default::default() }.hit_rate()
+    }
+}
+
+fn run_mode(
+    nodes: usize,
+    numel: usize,
+    reps: usize,
+    warmup: usize,
+    hot: HotPath,
+) -> anyhow::Result<ModeRun> {
+    let graph = builders::fully_connected(nodes);
+    let weights = WeightMatrix::uniform_pull(&graph);
+    let neighbors = nodes - 1;
+    let results = run_spmd(
+        SpmdConfig::new(nodes)
+            .with_topology(graph, weights)
+            .with_topo_check(false)
+            .with_hot_path(hot),
+        move |ctx| {
+            let data = vec![1.0f32; numel];
+            for _ in 0..warmup {
+                let out = ctx.neighbor_allreduce(&data)?;
+                ctx.recycle(out);
+            }
+            // Count only steady-state pool behavior, aligned across ranks.
+            ctx.pool().reset_stats();
+            ctx.barrier()?;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let out = ctx.neighbor_allreduce(&data)?;
+                std::hint::black_box(&out);
+                ctx.recycle(out);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let st = ctx.pool().stats();
+            Ok((dt, st.hits, st.misses))
+        },
+    )?;
+    let dt = results.iter().map(|(d, _, _)| *d).fold(0.0f64, f64::max);
+    let hits: u64 = results.iter().map(|(_, h, _)| *h).sum();
+    let misses: u64 = results.iter().map(|(_, _, m)| *m).sum();
+    // Logical traffic: every rank receives `neighbors` tensors per op.
+    let bytes = (reps * nodes * neighbors * numel * 4) as f64;
+    Ok(ModeRun { ms_per_op: dt * 1e3 / reps as f64, gbps: bytes / dt / 1e9, hits, misses })
+}
+
+/// Best wall-clock of `trials` runs (thread-scheduling noise guard).
+fn best_of(
+    trials: usize,
+    mut f: impl FnMut() -> anyhow::Result<ModeRun>,
+) -> anyhow::Result<ModeRun> {
+    let mut best: Option<ModeRun> = None;
+    for _ in 0..trials {
+        let r = f()?;
+        best = Some(match best {
+            Some(b) if b.ms_per_op <= r.ms_per_op => b,
+            _ => r,
+        });
+    }
+    Ok(best.expect("at least one trial"))
+}
+
 fn main() -> anyhow::Result<()> {
-    let n = 8;
-    let numel = 1 << 20; // 4 MB
-    let reps = 30;
-    let t0 = std::time::Instant::now();
-    run_spmd(SpmdConfig::new(n).with_topo_check(false), move |ctx| {
-        let data = vec![1.0f32; numel];
-        for _ in 0..reps {
-            let out = ctx.neighbor_allreduce(&data)?;
-            std::hint::black_box(&out);
-        }
-        Ok(())
-    })?;
-    let dt = t0.elapsed().as_secs_f64();
-    println!("neighbor_allreduce 4MB x{reps} x{n} nodes: total {:.3}s, {:.2} ms/op/node, {:.2} GB/s effective", dt, dt*1e3/reps as f64, (reps*n*3*numel*4) as f64/dt/1e9);
+    let smoke = std::env::var("HOTPATH_SMOKE").is_ok();
+    // 9 fully-connected nodes = the 8-neighbor fan-out case; smoke mode
+    // keeps the same 9-node shape (so the fan-out/reclaim arity matches the
+    // documented workload) but tiny tensors and few reps, finishing in
+    // seconds on CI.
+    let (nodes, warmup, cases): (usize, usize, Vec<(usize, usize)>) = if smoke {
+        (9, 2, vec![(1 << 10, 5), (1 << 12, 5)])
+    } else {
+        (9, 4, vec![(1 << 12, 60), (1 << 16, 40), (1 << 20, 20)])
+    };
+    println!(
+        "hot-path probe: {nodes} nodes fully connected ({} neighbors each), naive vs pooled",
+        nodes - 1
+    );
+    let trials = if smoke { 1 } else { 2 };
+    let mut entries = Vec::new();
+    for &(numel, reps) in &cases {
+        let naive = best_of(trials, || run_mode(nodes, numel, reps, warmup, HotPath::Naive))?;
+        let pooled = best_of(trials, || run_mode(nodes, numel, reps, warmup, HotPath::Pooled))?;
+        // The hit rate is deterministic (unlike wall time), so regressions
+        // fail the probe — and the CI smoke step — loudly.
+        anyhow::ensure!(
+            pooled.hit_rate() > 0.9,
+            "pool hit rate {:.1}% <= 90% after warm-up ({} hits / {} misses, numel {numel})",
+            pooled.hit_rate() * 100.0,
+            pooled.hits,
+            pooled.misses
+        );
+        let speedup = naive.ms_per_op / pooled.ms_per_op;
+        println!(
+            "  {:>8} B/tensor x{reps}: naive {:>8.3} ms/op ({:>6.2} GB/s) | pooled {:>8.3} ms/op \
+             ({:>6.2} GB/s) | speedup {:.2}x | pool hit rate {:.1}%",
+            numel * 4,
+            naive.ms_per_op,
+            naive.gbps,
+            pooled.ms_per_op,
+            pooled.gbps,
+            speedup,
+            pooled.hit_rate() * 100.0
+        );
+        entries.push(format!(
+            concat!(
+                "    {{\"numel\": {}, \"bytes\": {}, \"reps\": {}, ",
+                "\"naive\": {{\"ms_per_op\": {:.6}, \"gbps\": {:.4}}}, ",
+                "\"pooled\": {{\"ms_per_op\": {:.6}, \"gbps\": {:.4}, ",
+                "\"pool_hits\": {}, \"pool_misses\": {}, \"pool_hit_rate\": {:.4}}}, ",
+                "\"speedup\": {:.4}}}"
+            ),
+            numel,
+            numel * 4,
+            reps,
+            naive.ms_per_op,
+            naive.gbps,
+            pooled.ms_per_op,
+            pooled.gbps,
+            pooled.hits,
+            pooled.misses,
+            pooled.hit_rate(),
+            speedup
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"nodes\": {nodes},\n  \"neighbors\": {},\n  \
+         \"smoke\": {smoke},\n  \"cases\": [\n{}\n  ]\n}}\n",
+        nodes - 1,
+        entries.join(",\n")
+    );
+    let out_path =
+        std::env::var("BENCH_HOTPATH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
     Ok(())
 }

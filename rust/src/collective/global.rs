@@ -54,19 +54,24 @@ impl NodeContext {
         while mask < n {
             if vrank & mask != 0 {
                 let parent = ((vrank - mask) + root) % n;
-                *data = (*self.recv_tensor(parent, tag)?).clone();
+                let y = self.recv_tensor(parent, tag)?;
+                let old = std::mem::replace(data, self.take_payload(y));
+                self.recycle(old);
                 break;
             }
             mask <<= 1;
         }
         mask >>= 1;
+        let mut shared: Option<std::sync::Arc<Vec<f32>>> = None;
         while mask > 0 {
             if vrank + mask < n {
                 let child = ((vrank + mask) + root) % n;
-                self.send_tensor(child, tag, data.clone())?;
+                let p = shared.get_or_insert_with(|| self.payload_from(data)).clone();
+                self.send_shared(child, tag, p)?;
             }
             mask >>= 1;
         }
+        self.defer_reclaim(shared);
         Ok(())
     }
 
@@ -109,7 +114,7 @@ impl NodeContext {
                 (lo, hi)
             })
             .collect();
-        let mut buf = data.to_vec();
+        let mut buf = self.vec_from(data);
         let next = (me + 1) % n;
         let prev = (me + n - 1) % n;
         // Reduce-scatter: in round r, send chunk (me - r) and accumulate
@@ -119,12 +124,14 @@ impl NodeContext {
             let recv_c = (me + n - r - 1) % n;
             let (slo, shi) = bounds[send_c];
             let rtag = tag + r as u64;
-            self.send_tensor(next, rtag, buf[slo..shi].to_vec())?;
+            let payload = self.payload_from(&buf[slo..shi]);
+            self.send_shared(next, rtag, payload)?;
             let incoming = self.recv_tensor(prev, rtag)?;
             let (rlo, rhi) = bounds[recv_c];
             for (x, y) in buf[rlo..rhi].iter_mut().zip(incoming.iter()) {
                 *x += y;
             }
+            self.reclaim_payload(incoming);
         }
         // Allgather: circulate the reduced chunks.
         for r in 0..(n - 1) {
@@ -132,10 +139,12 @@ impl NodeContext {
             let recv_c = (me + n - r) % n;
             let (slo, shi) = bounds[send_c];
             let rtag = tag + n as u64 + r as u64;
-            self.send_tensor(next, rtag, buf[slo..shi].to_vec())?;
+            let payload = self.payload_from(&buf[slo..shi]);
+            self.send_shared(next, rtag, payload)?;
             let incoming = self.recv_tensor(prev, rtag)?;
             let (rlo, rhi) = bounds[recv_c];
             buf[rlo..rhi].copy_from_slice(&incoming);
+            self.reclaim_payload(incoming);
         }
         Ok(buf)
     }
@@ -149,20 +158,24 @@ impl NodeContext {
         let tag = self.next_tag("ps_allreduce");
         let rtag = tag + 1;
         if self.rank() == 0 {
-            let mut acc = data.to_vec();
+            let mut acc = self.vec_from(data);
             for src in 1..n {
                 let part = self.recv_tensor(src, tag)?;
                 for (a, p) in acc.iter_mut().zip(part.iter()) {
                     *a += p;
                 }
+                self.reclaim_payload(part);
             }
+            let shared = self.payload_from(&acc);
             for dst in 1..n {
-                self.send_tensor(dst, rtag, acc.clone())?;
+                self.send_shared(dst, rtag, shared.clone())?;
             }
+            self.defer_reclaim(Some(shared));
             Ok(acc)
         } else {
-            self.send_tensor(0, tag, data.to_vec())?;
-            self.recv_tensor(0, rtag).map(|a| (*a).clone())
+            self.send_shared(0, tag, self.payload_from(data))?;
+            let reply = self.recv_tensor(0, rtag)?;
+            Ok(self.take_payload(reply))
         }
     }
 
@@ -184,31 +197,36 @@ impl NodeContext {
         for c in 0..n {
             if c != me {
                 let (lo, hi) = bounds[c];
-                self.send_tensor(c, tag, data[lo..hi].to_vec())?;
+                self.send_shared(c, tag, self.payload_from(&data[lo..hi]))?;
             }
         }
         // Serve own chunk: sum the n-1 incoming contributions.
         let (mlo, mhi) = bounds[me];
-        let mut served = data[mlo..mhi].to_vec();
+        let mut served = self.vec_from(&data[mlo..mhi]);
         for _ in 0..(n - 1) {
             let (_, part) = self.recv_tensor_any(tag)?;
             for (a, p) in served.iter_mut().zip(part.iter()) {
                 *a += p;
             }
+            self.reclaim_payload(part);
         }
         // Pull phase: broadcast the served chunk to everyone else, receive
         // the other chunks.
+        let shared = self.payload_from(&served);
         for c in 0..n {
             if c != me {
-                self.send_tensor(c, rtag, served.clone())?;
+                self.send_shared(c, rtag, shared.clone())?;
             }
         }
-        let mut out = data.to_vec();
+        self.defer_reclaim(Some(shared));
+        let mut out = self.vec_from(data);
         out[mlo..mhi].copy_from_slice(&served);
+        self.recycle(served);
         for _ in 0..(n - 1) {
             let (src, part) = self.recv_tensor_any(rtag)?;
             let (lo, hi) = bounds[src];
             out[lo..hi].copy_from_slice(&part);
+            self.reclaim_payload(part);
         }
         Ok(out)
     }

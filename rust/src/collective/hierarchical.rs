@@ -16,7 +16,6 @@
 
 use crate::context::NodeContext;
 use crate::negotiation::OpKind;
-use crate::tensor::weighted_combine_into;
 use crate::topology::WeightMatrix;
 
 impl NodeContext {
@@ -59,12 +58,14 @@ impl NodeContext {
                 None => WeightMatrix::exponential_two(n_machines),
             }
         };
-        let mut result = local_avg.clone();
+        // `result` takes over the intra-machine average and is combined in
+        // place; the inter-machine payload snapshots it first.
+        let mut result = local_avg;
         if self.local_rank() == 0 && n_machines > 1 {
             let (self_w, srcs) = machine_weights.pull_view(machine);
             let (_, dsts) = machine_weights.push_view(machine);
             let tag = self.next_tag("hier.inter");
-            let shared = std::sync::Arc::new(local_avg.clone());
+            let shared = self.payload_from(&result);
             for &(dst_machine, _) in &dsts {
                 self.send_shared(dst_machine * g, tag, shared.clone())?;
             }
@@ -75,7 +76,12 @@ impl NodeContext {
             }
             let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
             let ws: Vec<f32> = incoming.iter().map(|(w, _)| *w).collect();
-            weighted_combine_into(&mut result, self_w as f32, &parts, &ws);
+            self.combine_into_hotpath(&mut result, self_w as f32, &parts, &ws);
+            drop(parts);
+            for (_, y) in incoming {
+                self.reclaim_payload(y);
+            }
+            self.defer_reclaim(Some(shared));
         }
 
         // Steps 3-4: intra-machine broadcast of the machine-level result.
@@ -107,7 +113,7 @@ impl NodeContext {
         let len = data.len();
         let bounds: Vec<(usize, usize)> =
             (0..k).map(|c| (c * len / k, (c + 1) * len / k)).collect();
-        let mut buf = data.to_vec();
+        let mut buf = self.vec_from(data);
         let next = members[(me_idx + 1) % k];
         let prev = members[(me_idx + k - 1) % k];
         for r in 0..(k - 1) {
@@ -115,22 +121,26 @@ impl NodeContext {
             let recv_c = (me_idx + k - r - 1) % k;
             let (slo, shi) = bounds[send_c];
             let rtag = tag + r as u64;
-            self.send_tensor(next, rtag, buf[slo..shi].to_vec())?;
+            let payload = self.payload_from(&buf[slo..shi]);
+            self.send_shared(next, rtag, payload)?;
             let incoming = self.recv_tensor(prev, rtag)?;
             let (rlo, rhi) = bounds[recv_c];
             for (x, y) in buf[rlo..rhi].iter_mut().zip(incoming.iter()) {
                 *x += y;
             }
+            self.reclaim_payload(incoming);
         }
         for r in 0..(k - 1) {
             let send_c = (me_idx + 1 + k - r) % k;
             let recv_c = (me_idx + k - r) % k;
             let (slo, shi) = bounds[send_c];
             let rtag = tag + k as u64 + r as u64;
-            self.send_tensor(next, rtag, buf[slo..shi].to_vec())?;
+            let payload = self.payload_from(&buf[slo..shi]);
+            self.send_shared(next, rtag, payload)?;
             let incoming = self.recv_tensor(prev, rtag)?;
             let (rlo, rhi) = bounds[recv_c];
             buf[rlo..rhi].copy_from_slice(&incoming);
+            self.reclaim_payload(incoming);
         }
         Ok(buf)
     }
@@ -146,13 +156,17 @@ impl NodeContext {
     ) -> anyhow::Result<()> {
         let tag = self.next_tag(op_name);
         if self.rank() == root {
+            let shared = self.payload_from(data);
             for &m in members {
                 if m != root {
-                    self.send_tensor(m, tag, data.clone())?;
+                    self.send_shared(m, tag, shared.clone())?;
                 }
             }
+            self.defer_reclaim(Some(shared));
         } else {
-            *data = (*self.recv_tensor(root, tag)?).clone();
+            let y = self.recv_tensor(root, tag)?;
+            let old = std::mem::replace(data, self.take_payload(y));
+            self.recycle(old);
         }
         Ok(())
     }

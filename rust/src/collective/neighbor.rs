@@ -16,7 +16,6 @@
 
 use crate::context::NodeContext;
 use crate::negotiation::OpKind;
-use crate::tensor::weighted_combine_from;
 
 /// Arguments of a dynamic `neighbor_allreduce` (BlueFog's optional
 /// `self_weight` / `src_weights` / `dst_weights`).
@@ -150,14 +149,15 @@ impl NodeContext {
         let mut dsts_sorted = dsts.clone();
         dsts_sorted.sort_by_key(|&(d, _)| (d + n - me) % n);
         // Unscaled sends share one Arc'd buffer across all destinations
-        // (zero-copy fan-out; EXPERIMENTS.md §Perf).
-        let shared = std::sync::Arc::new(data.to_vec());
+        // (zero-copy fan-out); the buffer itself comes from the rank-local
+        // pool in pooled mode (EXPERIMENTS.md §Perf).
+        let mut shared: Option<std::sync::Arc<Vec<f32>>> = None;
         for &(dst, s) in &dsts_sorted {
             if scale_on_send && s != 1.0 {
-                let payload: Vec<f32> = data.iter().map(|&x| (s as f32) * x).collect();
-                self.send_tensor(dst, tag, payload)?;
+                self.send_shared(dst, tag, self.scaled_payload(data, s as f32))?;
             } else {
-                self.send_shared(dst, tag, shared.clone())?;
+                let p = shared.get_or_insert_with(|| self.payload_from(data)).clone();
+                self.send_shared(dst, tag, p)?;
             }
         }
         // Combine: out = self_weight * x + sum_j r_ij * y_ij.
@@ -174,7 +174,12 @@ impl NodeContext {
         }
         let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
         let ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
-        let out = weighted_combine_from(data, self_weight as f32, &parts, &ws);
+        let out = self.combine_hotpath(data, self_weight as f32, &parts, &ws);
+        drop(parts);
+        for (_, y) in incoming {
+            self.reclaim_payload(y);
+        }
+        self.defer_reclaim(shared);
         self.timeline.record(me, "neighbor_allreduce", "comm", wall, v0, self.vtime());
         Ok(out)
     }
@@ -199,15 +204,16 @@ impl NodeContext {
             Some(srcs.clone()),
         )?;
         let tag = self.next_tag("neighbor_allgather");
-        let shared = std::sync::Arc::new(data.to_vec());
+        let shared = self.payload_from(data);
         for &dst in &dsts {
             self.send_shared(dst, tag, shared.clone())?;
         }
         let mut out = Vec::with_capacity(srcs.len());
         for &src in &srcs {
             let y = self.recv_tensor(src, tag)?;
-            out.push((src, (*y).clone()));
+            out.push((src, self.take_payload(y)));
         }
+        self.defer_reclaim(Some(shared));
         Ok(out)
     }
 }

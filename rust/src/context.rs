@@ -12,9 +12,11 @@ use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
 use crate::negotiation::NegotiationClient;
+use crate::pool::{BufferPool, HotPath};
 use crate::rng::Rng;
 use crate::runtime::DeviceHandle;
 use crate::simnet::NetworkModel;
+use crate::tensor::{weighted_combine_blocked_into, weighted_combine_into};
 use crate::timeline::Timeline;
 use crate::topology::{Graph, WeightMatrix};
 use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, Tag, VClock};
@@ -68,6 +70,15 @@ pub struct NodeContext {
     pub(crate) fusion_acc_bytes: std::sync::Arc<std::sync::atomic::AtomicUsize>,
     /// Per-node deterministic RNG.
     pub rng: Rng,
+    /// Rank-local buffer pool backing the zero-allocation hot path.
+    pub(crate) pool: BufferPool,
+    /// Fan-out payloads awaiting their receivers' drops; swept on the next
+    /// collective so each sender deterministically recovers its own shared
+    /// buffer (see [`NodeContext::defer_reclaim`]).
+    pub(crate) deferred_reclaim: Vec<std::sync::Arc<Vec<f32>>>,
+    /// Which communication hot path to use (pooled/blocked vs naive) — the
+    /// A/B switch for `examples/perf_probe.rs`.
+    pub hot_path: HotPath,
 }
 
 impl NodeContext {
@@ -105,6 +116,9 @@ impl NodeContext {
             fusion_group: std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0)),
             fusion_acc_bytes: std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0)),
             rng: Rng::new(seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            pool: BufferPool::new(),
+            deferred_reclaim: Vec::new(),
+            hot_path: HotPath::default(),
         }
     }
 
@@ -211,6 +225,146 @@ impl NodeContext {
         let tag = make_tag(id, round.wrapping_mul(4096));
         *round = round.wrapping_add(1);
         tag
+    }
+
+    /// This rank's buffer pool (checkout scratch, recycle finished buffers,
+    /// read hit/miss statistics).
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
+    }
+
+    /// Return a finished tensor's storage to the pool so the next collective
+    /// round reuses it instead of allocating (no-op drop under
+    /// [`HotPath::Naive`]). Optimizers call this on each round's replaced
+    /// parameter buffer.
+    pub fn recycle(&self, v: Vec<f32>) {
+        if self.hot_path == HotPath::Pooled {
+            self.pool.recycle_vec(v);
+        }
+    }
+
+    /// Build an outgoing payload holding a copy of `src` (mode-gated, see
+    /// [`BufferPool::payload_from`]).
+    pub(crate) fn payload_from(&self, src: &[f32]) -> std::sync::Arc<Vec<f32>> {
+        self.pool.payload_from(self.hot_path, src)
+    }
+
+    /// Build an outgoing payload holding `s * src` in one fused pass.
+    pub(crate) fn scaled_payload(&self, src: &[f32], s: f32) -> std::sync::Arc<Vec<f32>> {
+        self.pool.scaled_payload(self.hot_path, src, s)
+    }
+
+    /// Hand a finished receive payload's storage back to the pool (the last
+    /// `Arc` clone wins; earlier droppers are a no-op).
+    pub(crate) fn reclaim_payload(&self, payload: std::sync::Arc<Vec<f32>>) {
+        self.pool.reclaim_if(self.hot_path, payload);
+    }
+
+    /// Park a fan-out payload for reclaim once its receivers drop their
+    /// clones, then sweep earlier parked payloads into the pool.
+    ///
+    /// A one-to-many send is `Arc`-shared, so at the end of the round the
+    /// sender usually cannot `try_unwrap` it yet (some receiver may still
+    /// be combining). But a receiver cannot *start* the next round against
+    /// this sender without having combined — and dropped — this round's
+    /// payload, so by the time the sender's next collective sweeps the
+    /// list, every parked payload from the previous round is unique again
+    /// and returns to the sender's own pool. This keeps checkout/return
+    /// balanced per rank (deterministic > 90% hit rate after warm-up)
+    /// instead of letting whichever receiver drops last collect everyone's
+    /// buffers.
+    pub(crate) fn defer_reclaim(&mut self, payload: Option<std::sync::Arc<Vec<f32>>>) {
+        if self.hot_path != HotPath::Pooled {
+            return;
+        }
+        if let Some(p) = payload {
+            self.deferred_reclaim.push(p);
+        }
+        // In-place sweep (no allocation): recycle entries whose receivers
+        // have all dropped, keep the rest for the next round's sweep.
+        let mut i = 0;
+        while i < self.deferred_reclaim.len() {
+            if std::sync::Arc::get_mut(&mut self.deferred_reclaim[i]).is_some() {
+                let arc = self.deferred_reclaim.swap_remove(i);
+                if let Ok(v) = std::sync::Arc::try_unwrap(arc) {
+                    self.pool.recycle_vec(v);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        // Safety valve: never let the parked list grow past a handful (it
+        // is ~1 entry in steady state; dropping just frees the buffer).
+        if self.deferred_reclaim.len() > 32 {
+            self.deferred_reclaim.drain(..self.deferred_reclaim.len() - 32);
+        }
+    }
+
+    /// Take ownership of a receive payload without copying when this is the
+    /// last `Arc` clone; otherwise copy it out through the pool (shared
+    /// fan-out replies always hit this branch because the sender parks a
+    /// clone for deferred reclaim).
+    pub(crate) fn take_payload(&self, payload: std::sync::Arc<Vec<f32>>) -> Vec<f32> {
+        match std::sync::Arc::try_unwrap(payload) {
+            Ok(v) => v,
+            Err(arc) => self.vec_from(&arc),
+        }
+    }
+
+    /// Scratch buffer holding a copy of `src` for optimizer half-steps:
+    /// pooled checkout guard under [`HotPath::Pooled`], detached plain
+    /// allocation under [`HotPath::Naive`] (so the naive side of an A/B run
+    /// stays allocation-per-use even inside optimizers).
+    pub fn scratch_copy(&self, src: &[f32]) -> crate::pool::PoolBuf {
+        match self.hot_path {
+            HotPath::Naive => crate::pool::PoolBuf::detached(src.to_vec()),
+            HotPath::Pooled => self.pool.checkout_copy(src),
+        }
+    }
+
+    /// The receive-combine kernel of the hot path (shared policy in
+    /// [`BufferPool::combine_from`]).
+    pub(crate) fn combine_hotpath(
+        &self,
+        base: &[f32],
+        w_self: f32,
+        parts: &[&[f32]],
+        ws: &[f32],
+    ) -> Vec<f32> {
+        self.pool.combine_from(self.hot_path, base, w_self, parts, ws)
+    }
+
+    /// In-place variant: `acc = w_self * acc + sum_k ws[k] * parts[k]`,
+    /// blocked under [`HotPath::Pooled`].
+    pub(crate) fn combine_into_hotpath(
+        &self,
+        acc: &mut [f32],
+        w_self: f32,
+        parts: &[&[f32]],
+        ws: &[f32],
+    ) {
+        match self.hot_path {
+            HotPath::Naive => weighted_combine_into(acc, w_self, parts, ws),
+            HotPath::Pooled => weighted_combine_blocked_into(acc, w_self, parts, ws),
+        }
+    }
+
+    /// An owned copy of `src` drawn from the pool in pooled mode (the
+    /// buffer is expected back via [`NodeContext::recycle`] or a pooled
+    /// send).
+    pub(crate) fn vec_from(&self, src: &[f32]) -> Vec<f32> {
+        match self.hot_path {
+            HotPath::Naive => src.to_vec(),
+            HotPath::Pooled => self.pool.checkout_copy(src).into_vec(),
+        }
+    }
+
+    /// An owned `s * src` built in one pass, pooled in pooled mode.
+    pub(crate) fn scaled_vec(&self, src: &[f32], s: f32) -> Vec<f32> {
+        match self.hot_path {
+            HotPath::Naive => src.iter().map(|&x| s * x).collect(),
+            HotPath::Pooled => self.pool.checkout_scaled(src, s).into_vec(),
+        }
     }
 
     /// Send an owned payload (convenience wrapper over [`Self::send_shared`]).

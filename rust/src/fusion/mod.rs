@@ -33,14 +33,28 @@ impl FusionBuffer {
 
     /// Pack a list of tensors; the i-th slot corresponds to the i-th input.
     pub fn pack(tensors: &[&[f32]]) -> Self {
+        Self::pack_into_vec(tensors, Vec::new())
+    }
+
+    /// Like [`FusionBuffer::pack`], but reusing `storage` as the backing
+    /// buffer (cleared first) so a communication thread can recycle one
+    /// allocation across fusion rounds. Recover it with
+    /// [`FusionBuffer::into_data`].
+    pub fn pack_into_vec(tensors: &[&[f32]], mut storage: Vec<f32>) -> Self {
         let total: usize = tensors.iter().map(|t| t.len()).sum();
-        let mut data = Vec::with_capacity(total);
+        storage.clear();
+        storage.reserve(total);
         let mut slots = Vec::with_capacity(tensors.len());
         for t in tensors {
-            slots.push(FusedSlot { offset: data.len(), len: t.len() });
-            data.extend_from_slice(t);
+            slots.push(FusedSlot { offset: storage.len(), len: t.len() });
+            storage.extend_from_slice(t);
         }
-        FusionBuffer { data, slots }
+        FusionBuffer { data: storage, slots }
+    }
+
+    /// Consume the buffer, returning the backing allocation for reuse.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
     }
 
     /// Append one more tensor, returning its slot index.
@@ -71,7 +85,7 @@ impl FusionBuffer {
 
     /// Total bytes of the fused payload.
     pub fn nbytes(&self) -> usize {
-        self.data.len() * 4
+        self.data.len() * std::mem::size_of::<f32>()
     }
 
     /// Split a *result* buffer (same layout) back into per-tensor vectors.
@@ -83,9 +97,43 @@ impl FusionBuffer {
             .collect()
     }
 
+    /// Scatter-free unpack: write each slot of `result` straight into the
+    /// corresponding caller-owned output vector (cleared first), instead of
+    /// allocating one fresh `Vec` per slot like [`FusionBuffer::unpack`].
+    /// The communication thread reuses each request's own input buffer as
+    /// its reply, so a fused round allocates nothing.
+    pub fn unpack_into(&self, result: &[f32], outs: &mut [Vec<f32>]) {
+        assert_eq!(result.len(), self.data.len(), "fused result length mismatch");
+        assert_eq!(outs.len(), self.slots.len(), "fused output arity mismatch");
+        for (i, out) in outs.iter_mut().enumerate() {
+            self.unpack_slot_into(result, i, out);
+        }
+    }
+
+    /// Scatter slot `i` of `result` into `out` (cleared first).
+    pub fn unpack_slot_into(&self, result: &[f32], i: usize, out: &mut Vec<f32>) {
+        let s = &self.slots[i];
+        assert!(
+            s.offset + s.len <= result.len(),
+            "fused slot {i} out of bounds: offset {} + len {} > result len {}",
+            s.offset,
+            s.len,
+            result.len()
+        );
+        out.clear();
+        out.extend_from_slice(&result[s.offset..s.offset + s.len]);
+    }
+
     /// View of slot `i` inside a result buffer.
     pub fn slot<'a>(&self, result: &'a [f32], i: usize) -> &'a [f32] {
         let s = &self.slots[i];
+        assert!(
+            s.offset + s.len <= result.len(),
+            "fused slot {i} out of bounds: offset {} + len {} > result len {}",
+            s.offset,
+            s.len,
+            result.len()
+        );
         &result[s.offset..s.offset + s.len]
     }
 }
@@ -161,6 +209,44 @@ mod tests {
     fn unpack_validates_length() {
         let buf = FusionBuffer::pack(&[&[1.0f32, 2.0][..]]);
         buf.unpack(&[1.0]);
+    }
+
+    #[test]
+    fn unpack_into_matches_unpack_and_reuses_buffers() {
+        let a = vec![1.0f32, 2.0];
+        let b: Vec<f32> = vec![];
+        let c = vec![3.0f32, 4.0, 5.0];
+        let buf = FusionBuffer::pack(&[&a, &b, &c]);
+        let halved: Vec<f32> = buf.data().iter().map(|x| x * 0.5).collect();
+        let want = buf.unpack(&halved);
+        // Pre-sized outputs with stale contents get overwritten in place.
+        let mut outs = vec![vec![9.0f32; 7], vec![9.0], vec![]];
+        let caps: Vec<usize> = outs.iter().map(|o| o.capacity()).collect();
+        buf.unpack_into(&halved, &mut outs);
+        assert_eq!(outs, want);
+        assert!(outs[0].capacity() >= caps[0], "slot 0 should reuse its allocation");
+    }
+
+    #[test]
+    fn pack_into_vec_reuses_storage_roundtrip() {
+        let storage = Vec::with_capacity(64);
+        let buf = FusionBuffer::pack_into_vec(&[&[1.0f32, 2.0][..], &[3.0f32][..]], storage);
+        assert_eq!(buf.data(), &[1.0, 2.0, 3.0]);
+        let recovered = buf.into_data();
+        assert!(recovered.capacity() >= 64, "backing allocation not recovered");
+    }
+
+    #[test]
+    fn nbytes_uses_f32_width() {
+        let buf = FusionBuffer::pack(&[&[1.0f32, 2.0, 3.0][..]]);
+        assert_eq!(buf.nbytes(), 3 * std::mem::size_of::<f32>());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slot_view_checks_bounds() {
+        let buf = FusionBuffer::pack(&[&[1.0f32, 2.0][..]]);
+        buf.slot(&[1.0], 0);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use std::sync::{Arc, RwLock};
 use crate::context::{NodeContext, TopologyState};
 use crate::negotiation::NegotiationService;
 use crate::nonblocking::CommThread;
+use crate::pool::HotPath;
 use crate::runtime::DeviceHandle;
 use crate::simnet::NetworkModel;
 use crate::timeline::Timeline;
@@ -40,6 +41,8 @@ pub struct SpmdConfig {
     pub fusion_threshold: usize,
     /// Run the negotiation-service topology check before collectives.
     pub enable_topo_check: bool,
+    /// Communication hot-path implementation (pooled/blocked vs naive).
+    pub hot_path: HotPath,
 }
 
 impl SpmdConfig {
@@ -62,6 +65,7 @@ impl SpmdConfig {
             comm_threads: true,
             fusion_threshold: 2 << 20,
             enable_topo_check: true,
+            hot_path: HotPath::default(),
         }
     }
 
@@ -97,6 +101,12 @@ impl SpmdConfig {
 
     pub fn with_fusion_threshold(mut self, bytes: usize) -> Self {
         self.fusion_threshold = bytes;
+        self
+    }
+
+    /// Select the communication hot-path implementation (default: pooled).
+    pub fn with_hot_path(mut self, hot_path: HotPath) -> Self {
+        self.hot_path = hot_path;
         self
     }
 }
@@ -138,6 +148,7 @@ where
                 clocks.clone(),
                 net.clone(),
                 cfg.fusion_threshold,
+                cfg.hot_path,
             );
             comm_queues.push(Some(t.queue()));
             comm_threads.push(t);
@@ -168,6 +179,7 @@ where
         );
         ctx.enable_topo_check = cfg.enable_topo_check;
         ctx.fusion_threshold = cfg.fusion_threshold;
+        ctx.hot_path = cfg.hot_path;
         ctx.comm = comm_queue;
         let handle = std::thread::Builder::new()
             .name(format!("bf-node-{rank}"))

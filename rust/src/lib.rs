@@ -23,6 +23,8 @@
 //! - [`negotiation`] — the rank-0 negotiation service: readiness, operation
 //!   matching and dynamic-topology validity checks.
 //! - [`fusion`] — tensor-fusion buffers batching small messages.
+//! - [`pool`] — rank-local tensor buffer pool feeding the zero-allocation
+//!   communication hot path (pooled payloads, reclaimed receives).
 //! - [`nonblocking`] — non-blocking communication handles backed by a
 //!   dedicated per-node communication thread (compute/comm overlap).
 //! - [`optim`] — decentralized optimizers: DGD, Exact-Diffusion,
@@ -50,6 +52,7 @@ pub mod metrics;
 pub mod negotiation;
 pub mod nonblocking;
 pub mod optim;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;

@@ -32,8 +32,8 @@ use std::thread::JoinHandle;
 
 use crate::context::NodeContext;
 use crate::fusion::FusionBuffer;
+use crate::pool::{BufferPool, HotPath};
 use crate::simnet::NetworkModel;
-use crate::tensor::weighted_combine_from;
 use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, VClock};
 
 /// A non-blocking operation's completion token.
@@ -135,6 +135,7 @@ pub struct CommThread {
 impl CommThread {
     /// Spawn the communication thread for `rank`, owning the node's second
     /// transport endpoint.
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         rank: usize,
         size: usize,
@@ -143,11 +144,12 @@ impl CommThread {
         clocks: Arc<Vec<VClock>>,
         net: Arc<NetworkModel>,
         _fusion_threshold: usize,
+        hot_path: HotPath,
     ) -> Self {
         let (tx, rx) = channel();
         let handle = std::thread::Builder::new()
             .name(format!("bf-comm-{rank}"))
-            .spawn(move || comm_loop(rank, size, mailbox, postman, clocks, net, rx))
+            .spawn(move || comm_loop(rank, size, mailbox, postman, clocks, net, rx, hot_path))
             .expect("spawn comm thread");
         CommThread { tx, handle: Some(handle) }
     }
@@ -174,6 +176,7 @@ struct PendingGroup {
     items: Vec<(Vec<f32>, f64, Sender<CommResult>)>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn comm_loop(
     rank: usize,
     size: usize,
@@ -182,24 +185,39 @@ fn comm_loop(
     clocks: Arc<Vec<VClock>>,
     net: Arc<NetworkModel>,
     rx: Receiver<CommRequest>,
+    hot_path: HotPath,
 ) {
     let mut rounds: HashMap<u32, u32> = HashMap::new();
     // Groups are issued in nondecreasing order; at most one is open.
     let mut pending: Option<PendingGroup> = None;
     let mut flushed_below: u64 = 0; // groups < this are already done
+    // This thread's buffer pool plus a dedicated fusion-pack allocation,
+    // both reused across rounds (zero-allocation steady state).
+    let pool = BufferPool::new();
+    let mut fusion_storage: Vec<f32> = Vec::new();
 
     let mut transmit = |pg: PendingGroup,
                         mailbox: &mut Mailbox,
-                        rounds: &mut HashMap<u32, u32>| {
+                        rounds: &mut HashMap<u32, u32>,
+                        storage: &mut Vec<f32>| {
         let tensors: Vec<&[f32]> = pg.items.iter().map(|(d, _, _)| d.as_slice()).collect();
-        let buf = FusionBuffer::pack(&tensors);
+        let buf = FusionBuffer::pack_into_vec(&tensors, std::mem::take(storage));
+        drop(tensors);
         let start_vtime =
             pg.items.iter().map(|(_, t, _)| *t).fold(f64::NEG_INFINITY, f64::max);
-        let mut ep = Endpoint::new(rank, size, mailbox, &postman, &clocks, &net, start_vtime);
+        let mut ep =
+            Endpoint::new(rank, size, mailbox, &postman, &clocks, &net, &pool, hot_path, start_vtime);
         let out = ep.neighbor_exchange(buf.data(), &pg.plan, next_tag(rounds, "nb.neighbor"));
-        let parts = buf.unpack(&out);
-        for ((_, _, reply), part) in pg.items.iter().zip(parts) {
-            let _ = reply.send(CommResult { data: part, done_vtime: ep.completion });
+        let done_vtime = ep.completion;
+        // Scatter-free unpack: each request's own input buffer is
+        // overwritten in place and becomes its reply — no per-slot `Vec`.
+        for (i, (mut data, _, reply)) in pg.items.into_iter().enumerate() {
+            buf.unpack_slot_into(&out, i, &mut data);
+            let _ = reply.send(CommResult { data, done_vtime });
+        }
+        *storage = buf.into_data();
+        if hot_path == HotPath::Pooled {
+            pool.recycle_vec(out);
         }
     };
 
@@ -207,7 +225,7 @@ fn comm_loop(
         match req {
             CommRequest::Shutdown => {
                 if let Some(pg) = pending.take() {
-                    transmit(pg, &mut mailbox, &mut rounds);
+                    transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage);
                 }
                 break;
             }
@@ -216,7 +234,7 @@ fn comm_loop(
                     if let Some(pg) = pending.take() {
                         if pg.group <= g {
                             flushed_below = pg.group + 1;
-                            transmit(pg, &mut mailbox, &mut rounds);
+                            transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage);
                         } else {
                             pending = Some(pg);
                         }
@@ -227,12 +245,22 @@ fn comm_loop(
                 // Ring ops are never fused; close any open group first.
                 if let Some(pg) = pending.take() {
                     flushed_below = pg.group + 1;
-                    transmit(pg, &mut mailbox, &mut rounds);
+                    transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage);
                 }
                 flushed_below = flushed_below.max(group + 1);
-                let mut ep =
-                    Endpoint::new(rank, size, &mut mailbox, &postman, &clocks, &net, enqueue_vtime);
-                let mut out = ep.ring_allreduce(&data, next_tag(&mut rounds, "nb.ring"));
+                let mut ep = Endpoint::new(
+                    rank,
+                    size,
+                    &mut mailbox,
+                    &postman,
+                    &clocks,
+                    &net,
+                    &pool,
+                    hot_path,
+                    enqueue_vtime,
+                );
+                // The request's own buffer is reduced in place — no copy.
+                let mut out = ep.ring_allreduce(data, next_tag(&mut rounds, "nb.ring"));
                 let inv = 1.0 / size as f32;
                 for x in out.iter_mut() {
                     *x *= inv;
@@ -244,7 +272,7 @@ fn comm_loop(
                 if let Some(pg) = pending.take() {
                     if pg.group < group || pg.plan != plan {
                         flushed_below = pg.group + 1;
-                        transmit(pg, &mut mailbox, &mut rounds);
+                        transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage);
                         pending = None;
                     } else {
                         pending = Some(pg);
@@ -283,6 +311,10 @@ struct Endpoint<'a> {
     postman: &'a Postman,
     clocks: &'a Arc<Vec<VClock>>,
     net: &'a Arc<NetworkModel>,
+    /// The communication thread's buffer pool (payloads + combine scratch).
+    pool: &'a BufferPool,
+    /// Pooled/blocked vs naive implementation switch.
+    hot_path: HotPath,
     /// Virtual time the operation became eligible to run.
     base_vtime: f64,
     /// Running completion time (max over receives).
@@ -290,6 +322,7 @@ struct Endpoint<'a> {
 }
 
 impl<'a> Endpoint<'a> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         rank: usize,
         size: usize,
@@ -297,9 +330,38 @@ impl<'a> Endpoint<'a> {
         postman: &'a Postman,
         clocks: &'a Arc<Vec<VClock>>,
         net: &'a Arc<NetworkModel>,
+        pool: &'a BufferPool,
+        hot_path: HotPath,
         base_vtime: f64,
     ) -> Self {
-        Endpoint { rank, size, mailbox, postman, clocks, net, base_vtime, completion: base_vtime }
+        Endpoint {
+            rank,
+            size,
+            mailbox,
+            postman,
+            clocks,
+            net,
+            pool,
+            hot_path,
+            base_vtime,
+            completion: base_vtime,
+        }
+    }
+
+    /// Pooled (or naive) copy of `src` as an `Arc` payload (mode-gated,
+    /// shared policy in [`BufferPool::payload_from`]).
+    fn payload_from(&self, src: &[f32]) -> Arc<Vec<f32>> {
+        self.pool.payload_from(self.hot_path, src)
+    }
+
+    /// Pooled (or naive) `s * src` payload in one fused pass.
+    fn scaled_payload(&self, src: &[f32], s: f32) -> Arc<Vec<f32>> {
+        self.pool.scaled_payload(self.hot_path, src, s)
+    }
+
+    /// Hand a finished receive payload back to the pool.
+    fn reclaim(&self, payload: Arc<Vec<f32>>) {
+        self.pool.reclaim_if(self.hot_path, payload);
     }
 
     fn send(&mut self, dst: usize, tag: u64, payload: Arc<Vec<f32>>) {
@@ -327,15 +389,17 @@ impl<'a> Endpoint<'a> {
         let me = self.rank;
         let mut dsts = plan.dsts.clone();
         dsts.sort_by_key(|&(d, _)| (d + n - me) % n);
-        let shared = Arc::new(data.to_vec());
+        let mut shared: Option<Arc<Vec<f32>>> = None;
         for &(dst, s) in &dsts {
             if s != 1.0 {
-                let payload: Vec<f32> = data.iter().map(|&x| (s as f32) * x).collect();
-                self.send(dst, tag, Arc::new(payload));
+                let payload = self.scaled_payload(data, s as f32);
+                self.send(dst, tag, payload);
             } else {
-                self.send(dst, tag, shared.clone());
+                let p = shared.get_or_insert_with(|| self.payload_from(data)).clone();
+                self.send(dst, tag, p);
             }
         }
+        drop(shared);
         let mut incoming: Vec<(f32, Arc<Vec<f32>>)> = Vec::with_capacity(plan.srcs.len());
         for &(src, r) in &plan.srcs {
             let y = self.recv(src, tag);
@@ -343,45 +407,50 @@ impl<'a> Endpoint<'a> {
         }
         let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
         let ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
-        weighted_combine_from(data, plan.self_weight as f32, &parts, &ws)
+        let out =
+            self.pool.combine_from(self.hot_path, data, plan.self_weight as f32, &parts, &ws);
+        drop(parts);
+        for (_, y) in incoming {
+            self.reclaim(y);
+        }
+        out
     }
 
-    /// Chunked ring allreduce (sum) over all ranks.
-    fn ring_allreduce(&mut self, data: &[f32], tag: u64) -> Vec<f32> {
+    /// Chunked ring allreduce (sum) over all ranks, reducing `buf` in place.
+    fn ring_allreduce(&mut self, mut buf: Vec<f32>, tag: u64) -> Vec<f32> {
         let n = self.size;
         let me = self.rank;
         if n == 1 {
-            return data.to_vec();
+            return buf;
         }
-        let len = data.len();
+        let len = buf.len();
         let bounds: Vec<(usize, usize)> =
             (0..n).map(|c| (c * len / n, (c + 1) * len / n)).collect();
-        let mut buf = data.to_vec();
         let next = (me + 1) % n;
         let prev = (me + n - 1) % n;
         for r in 0..(n - 1) {
             let send_c = (me + n - r) % n;
             let recv_c = (me + n - r - 1) % n;
             let (slo, shi) = bounds[send_c];
-            self.send(next, tag + r as u64, Arc::new(buf[slo..shi].to_vec()));
+            let payload = self.payload_from(&buf[slo..shi]);
+            self.send(next, tag + r as u64, payload);
             let incoming = self.recv(prev, tag + r as u64);
             let (rlo, rhi) = bounds[recv_c];
             for (x, y) in buf[rlo..rhi].iter_mut().zip(incoming.iter()) {
                 *x += y;
             }
+            self.reclaim(incoming);
         }
         for r in 0..(n - 1) {
             let send_c = (me + 1 + n - r) % n;
             let recv_c = (me + n - r) % n;
             let (slo, shi) = bounds[send_c];
-            self.send(
-                next,
-                tag + n as u64 + r as u64,
-                Arc::new(buf[slo..shi].to_vec()),
-            );
+            let payload = self.payload_from(&buf[slo..shi]);
+            self.send(next, tag + n as u64 + r as u64, payload);
             let incoming = self.recv(prev, tag + n as u64 + r as u64);
             let (rlo, rhi) = bounds[recv_c];
             buf[rlo..rhi].copy_from_slice(&incoming);
+            self.reclaim(incoming);
         }
         buf
     }
@@ -438,9 +507,10 @@ impl NodeContext {
         let (tx, rx) = channel();
         let q = self.comm_queue()?;
         let flush_tx = q.tx.clone();
+        let data = self.vec_from(data);
         q.tx.send(CommRequest::NeighborAllreduce {
             group,
-            data: data.to_vec(),
+            data,
             plan,
             enqueue_vtime: self.vtime(),
             reply: tx,
@@ -465,9 +535,10 @@ impl NodeContext {
         let (tx, rx) = channel();
         let q = self.comm_queue()?;
         let flush_tx = q.tx.clone();
+        let data = self.vec_from(data);
         q.tx.send(CommRequest::RingAllreduceAvg {
             group,
-            data: data.to_vec(),
+            data,
             enqueue_vtime: self.vtime(),
             reply: tx,
         })

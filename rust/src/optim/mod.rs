@@ -134,13 +134,16 @@ impl DecentralizedOptimizer for Dgd {
     fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
         match self.order {
             StepOrder::Atc => {
-                let mut half = x.clone();
+                // Pooled scratch for the half-step; the replaced parameter
+                // buffer goes back to the pool for the next round.
+                let mut half = ctx.scratch_copy(x);
                 axpy(-self.gamma, grad, &mut half);
-                *x = self.comm.combine(ctx, self.iter, &half)?;
+                let combined = self.comm.combine(ctx, self.iter, &half)?;
+                ctx.recycle(std::mem::replace(x, combined));
             }
             StepOrder::Awc => {
                 let combined = self.comm.combine(ctx, self.iter, x)?;
-                *x = combined;
+                ctx.recycle(std::mem::replace(x, combined));
                 axpy(-self.gamma, grad, x);
             }
         }
@@ -175,19 +178,24 @@ impl ExactDiffusion {
 
 impl DecentralizedOptimizer for ExactDiffusion {
     fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
-        let mut psi = x.clone();
+        let mut psi = ctx.vec_from(x);
         axpy(-self.gamma, grad, &mut psi);
-        let phi: Vec<f32> = match &self.prev_psi {
-            None => psi.clone(),
-            Some(prev) => psi
-                .iter()
-                .zip(x.iter())
-                .zip(prev.iter())
-                .map(|((p, xi), pp)| p + xi - pp)
-                .collect(),
-        };
-        *x = self.comm.combine(ctx, self.iter, &phi)?;
-        self.prev_psi = Some(psi);
+        let mut phi = ctx.scratch_copy(&psi);
+        match &self.prev_psi {
+            None => {}
+            Some(prev) => {
+                for ((f, (p, xi)), pp) in
+                    phi.iter_mut().zip(psi.iter().zip(x.iter())).zip(prev.iter())
+                {
+                    *f = p + xi - pp;
+                }
+            }
+        }
+        let combined = self.comm.combine(ctx, self.iter, &phi)?;
+        ctx.recycle(std::mem::replace(x, combined));
+        if let Some(old) = self.prev_psi.replace(psi) {
+            ctx.recycle(old);
+        }
         self.iter += 1;
         Ok(())
     }
@@ -230,19 +238,25 @@ impl DecentralizedOptimizer for GradientTracking {
         let y = match (&mut self.y, &self.prev_grad) {
             (None, _) => grad.to_vec(),
             (Some(y), Some(pg)) => {
-                let mut q = y.clone();
-                for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg) {
+                let mut q = ctx.scratch_copy(y);
+                for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
                     *qi += g - p;
                 }
                 self.comm.combine(ctx, self.iter, &q)?
             }
             (Some(_), None) => unreachable!("prev_grad set with y"),
         };
-        let mut half = x.clone();
+        let mut half = ctx.scratch_copy(x);
         axpy(-self.gamma, &y, &mut half);
-        *x = self.comm.combine(ctx, self.iter, &half)?;
-        self.y = Some(y);
-        self.prev_grad = Some(grad.to_vec());
+        let combined = self.comm.combine(ctx, self.iter, &half)?;
+        ctx.recycle(std::mem::replace(x, combined));
+        if let Some(old) = self.y.replace(y) {
+            ctx.recycle(old);
+        }
+        let grad_copy = ctx.vec_from(grad);
+        if let Some(old) = self.prev_grad.replace(grad_copy) {
+            ctx.recycle(old);
+        }
         self.iter += 1;
         Ok(())
     }
@@ -300,23 +314,32 @@ impl DecentralizedOptimizer for PushSumGradientTracking {
             self.y = Some(grad.to_vec());
             self.prev_grad = Some(grad.to_vec());
         } else {
-            // y_{k+1} = W^k (y_k + g_{k+1} - g_k)
-            let mut q = self.y.clone().unwrap();
+            // y_{k+1} = W^k (y_k + g_{k+1} - g_k); built in pooled scratch
+            // so `self.y` stays intact if the combine errors.
+            let mut q = ctx.scratch_copy(self.y.as_ref().unwrap());
             let pg = self.prev_grad.as_ref().unwrap();
-            for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg) {
+            for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
                 *qi += g - p;
             }
-            self.y = Some(self.push_combine(ctx, self.iter, &q)?);
-            self.prev_grad = Some(grad.to_vec());
+            let new_y = self.push_combine(ctx, self.iter, &q)?;
+            if let Some(old) = self.y.replace(new_y) {
+                ctx.recycle(old);
+            }
+            let grad_copy = ctx.vec_from(grad);
+            if let Some(old) = self.prev_grad.replace(grad_copy) {
+                ctx.recycle(old);
+            }
         }
         // u_{k+1} = W^k (u_k - γ y_k)
-        let mut w = self.u.clone().unwrap();
+        let mut w = ctx.scratch_copy(self.u.as_ref().unwrap());
         axpy(-self.gamma, self.y.as_ref().unwrap(), &mut w);
         let u_new = self.push_combine(ctx, self.iter, &w)?;
         // v_{k+1} = W^k v_k  (scalar push-sum weight)
         let v_new = self.push_combine(ctx, self.iter, &[self.v])?[0];
         // x_{k+1} = u_{k+1} / v_{k+1}
-        self.u = Some(u_new);
+        if let Some(old) = self.u.replace(u_new) {
+            ctx.recycle(old);
+        }
         self.v = v_new;
         let u = self.u.as_ref().unwrap();
         x.clear();
@@ -374,41 +397,49 @@ impl DecentralizedOptimizer for DmSgd {
         }
         match self.kind {
             MomentumKind::Vanilla | MomentumKind::Synced => {
-                let m = self.m.as_mut().unwrap();
-                for (mi, g) in m.iter_mut().zip(grad) {
-                    *mi = self.beta * *mi + g;
+                {
+                    let m = self.m.as_mut().unwrap();
+                    for (mi, g) in m.iter_mut().zip(grad) {
+                        *mi = self.beta * *mi + g;
+                    }
                 }
-                let m_snapshot = m.clone();
                 match self.order {
                     StepOrder::Atc => {
-                        let mut half = x.clone();
-                        axpy(-self.gamma, &m_snapshot, &mut half);
-                        *x = self.comm.combine(ctx, self.iter, &half)?;
+                        let mut half = ctx.scratch_copy(x);
+                        axpy(-self.gamma, self.m.as_ref().unwrap(), &mut half);
+                        let combined = self.comm.combine(ctx, self.iter, &half)?;
+                        ctx.recycle(std::mem::replace(x, combined));
                     }
                     StepOrder::Awc => {
-                        *x = self.comm.combine(ctx, self.iter, x)?;
-                        axpy(-self.gamma, &m_snapshot, x);
+                        let combined = self.comm.combine(ctx, self.iter, x)?;
+                        ctx.recycle(std::mem::replace(x, combined));
+                        axpy(-self.gamma, self.m.as_ref().unwrap(), x);
                     }
                 }
                 if self.kind == MomentumKind::Synced {
-                    let synced = self.comm.combine(ctx, self.iter, &m_snapshot)?;
-                    *self.m.as_mut().unwrap() = synced;
+                    let synced = self.comm.combine(ctx, self.iter, self.m.as_ref().unwrap())?;
+                    if let Some(old) = self.m.replace(synced) {
+                        ctx.recycle(old);
+                    }
                 }
             }
             MomentumKind::QuasiGlobal => {
                 // [67]: d_k = g_k + beta * m_k ; x half-step, combine, then
                 // m_{k+1} = beta * m_k + (1 - beta) * (x_k - x_{k+1}) / gamma.
-                let x_prev = x.clone();
-                let m = self.m.as_ref().unwrap().clone();
-                let mut half = x.clone();
-                for ((h, g), mi) in half.iter_mut().zip(grad).zip(&m) {
-                    *h -= self.gamma * (g + self.beta * mi);
+                let mut half = ctx.scratch_copy(x);
+                {
+                    let m = self.m.as_ref().unwrap();
+                    for ((h, g), mi) in half.iter_mut().zip(grad).zip(m.iter()) {
+                        *h -= self.gamma * (g + self.beta * mi);
+                    }
                 }
-                *x = self.comm.combine(ctx, self.iter, &half)?;
+                let combined = self.comm.combine(ctx, self.iter, &half)?;
+                let x_prev = std::mem::replace(x, combined);
                 let m = self.m.as_mut().unwrap();
                 for ((mi, xp), xn) in m.iter_mut().zip(&x_prev).zip(x.iter()) {
                     *mi = self.beta * *mi + (1.0 - self.beta) * (xp - xn) / self.gamma;
                 }
+                ctx.recycle(x_prev);
             }
         }
         self.iter += 1;
@@ -519,8 +550,8 @@ impl DecentralizedOptimizer for ParallelMomentumSgd {
         for (mi, g) in m.iter_mut().zip(&g_avg) {
             *mi = self.beta * *mi + g;
         }
-        let m_snapshot = m.clone();
-        axpy(-self.gamma, &m_snapshot, x);
+        axpy(-self.gamma, &m[..], x);
+        ctx.recycle(g_avg);
         Ok(())
     }
 

@@ -1,0 +1,451 @@
+//! Rank-local tensor buffer pool — the zero-allocation hot path.
+//!
+//! Every collective round used to allocate fresh `Vec<f32>`s: one per
+//! outgoing payload, one per combine output, one per fusion pack. Under
+//! D-PSGD-style iteration-heavy training that is thousands of large
+//! allocations per second per rank, all of identical sizes — exactly the
+//! pattern a free-list removes (paper §VI's zero-copy theme; DIGEST-style
+//! buffer reuse across rounds).
+//!
+//! [`BufferPool`] is a cheap-clone handle over a size-bucketed free-list:
+//!
+//! - **Checkout** ([`BufferPool::checkout`], [`BufferPool::checkout_copy`],
+//!   [`BufferPool::checkout_scaled`]) pops a buffer whose capacity covers
+//!   the request (buckets are powers of two) or allocates on miss; hits and
+//!   misses are counted so benchmarks can report the hit rate.
+//! - The returned [`PoolBuf`] guard derefs to `[f32]` and **returns its
+//!   buffer to the pool on drop**; [`PoolBuf::into_vec`] /
+//!   [`PoolBuf::into_arc`] detach the storage for APIs that take ownership
+//!   (detached buffers come back via [`BufferPool::recycle_vec`] or
+//!   [`BufferPool::reclaim`]).
+//! - **Reclaim** ([`BufferPool::reclaim`]) recovers the storage of a
+//!   received [`crate::transport::Message`] payload once the last `Arc`
+//!   clone drops — the receive side of a fan-out send feeds the pool, so
+//!   symmetric traffic keeps every rank's free-list warm.
+//!
+//! The pool is rank-local (each [`crate::context::NodeContext`] and each
+//! communication thread owns one); buffers migrate between ranks through
+//! reclaim, which is fine — a free-list only needs *some* buffer of the
+//! right size, not the same one. [`HotPath`] selects between this pooled
+//! path and the original allocating path so `examples/perf_probe.rs` can
+//! A/B them on identical workloads (`BENCH_hotpath.json`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Smallest bucket (elements): buffers below this are not worth pooling.
+const MIN_BUCKET: usize = 64;
+
+/// Free-list depth per bucket; excess recycles are dropped to bound memory.
+const MAX_PER_BUCKET: usize = 16;
+
+/// Which implementation the communication hot path uses.
+///
+/// `Naive` allocates a fresh `Vec` for every payload and combine output and
+/// uses the original k-pass kernels; `Pooled` draws payloads and scratch
+/// from the rank-local [`BufferPool`] and combines with the single-pass
+/// blocked kernels. Semantics are identical (property-tested); only
+/// allocation and traversal order differ. Mode-independent structural
+/// improvements (in-place fused replies, in-place ring reduction, move-
+/// instead-of-clone receives) apply in both modes, so `Naive` isolates the
+/// pool/kernel effect rather than reproducing the seed revision bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HotPath {
+    /// Fresh allocation per buffer, k-pass combine kernels.
+    Naive,
+    /// Reuse pooled buffers and blocked combine kernels.
+    #[default]
+    Pooled,
+}
+
+/// Counters describing pool behavior since the last reset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Checkouts served from the free-list.
+    pub hits: u64,
+    /// Checkouts that had to allocate.
+    pub misses: u64,
+    /// Buffers returned to the free-list.
+    pub recycled: u64,
+    /// Buffers dropped instead of shelved (bucket full or too small).
+    pub dropped: u64,
+    /// Buffers currently shelved across all buckets.
+    pub shelved: usize,
+}
+
+impl PoolStats {
+    /// Fraction of checkouts served from the free-list (1.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct PoolInner {
+    /// Free buffers keyed by power-of-two bucket (buffer capacity >= key).
+    shelves: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Cheap-clone handle to a rank-local free-list of `f32` buffers.
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<PoolInner>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BufferPool").field("stats", &self.stats()).finish()
+    }
+}
+
+/// Bucket a checkout of `len` elements lands in.
+fn bucket_for(len: usize) -> usize {
+    len.next_power_of_two().max(MIN_BUCKET)
+}
+
+/// Bucket a returning buffer of capacity `cap` is shelved under: the
+/// largest power of two `<= cap`, so any checkout from that bucket is
+/// guaranteed `capacity >= bucket >= requested len`.
+fn shelf_for(cap: usize) -> Option<usize> {
+    if cap < MIN_BUCKET {
+        None
+    } else {
+        Some(1usize << (usize::BITS - 1 - cap.leading_zeros()))
+    }
+}
+
+impl BufferPool {
+    /// An empty pool.
+    pub fn new() -> Self {
+        BufferPool {
+            inner: Arc::new(PoolInner {
+                shelves: Mutex::new(HashMap::new()),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Pop a cleared buffer with capacity >= `len`, or allocate one.
+    fn checkout_raw(&self, len: usize) -> Vec<f32> {
+        let bucket = bucket_for(len);
+        let popped = self.inner.shelves.lock().unwrap().get_mut(&bucket).and_then(Vec::pop);
+        match popped {
+            Some(mut v) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v
+            }
+            None => {
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(bucket)
+            }
+        }
+    }
+
+    /// Check out a zero-filled buffer of `len` elements.
+    pub fn checkout(&self, len: usize) -> PoolBuf {
+        let mut data = self.checkout_raw(len);
+        data.resize(len, 0.0);
+        PoolBuf { data, pool: Some(self.clone()) }
+    }
+
+    /// Check out a buffer initialized to a copy of `src` (single pass, no
+    /// zero-fill).
+    pub fn checkout_copy(&self, src: &[f32]) -> PoolBuf {
+        let mut data = self.checkout_raw(src.len());
+        data.extend_from_slice(src);
+        PoolBuf { data, pool: Some(self.clone()) }
+    }
+
+    /// Check out a buffer initialized to `s * src` (single fused pass).
+    pub fn checkout_scaled(&self, src: &[f32], s: f32) -> PoolBuf {
+        let mut data = self.checkout_raw(src.len());
+        data.extend(src.iter().map(|&x| s * x));
+        PoolBuf { data, pool: Some(self.clone()) }
+    }
+
+    /// Return a detached buffer to the free-list (contents are discarded on
+    /// the next checkout). Buffers that are too small or land in a full
+    /// bucket are dropped.
+    pub fn recycle_vec(&self, v: Vec<f32>) {
+        let Some(bucket) = shelf_for(v.capacity()) else {
+            if v.capacity() > 0 {
+                self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            return;
+        };
+        let mut shelves = self.inner.shelves.lock().unwrap();
+        let shelf = shelves.entry(bucket).or_default();
+        if shelf.len() < MAX_PER_BUCKET {
+            shelf.push(v);
+            self.inner.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Recover a message payload's storage if this is the last `Arc` clone
+    /// (the common case once every receiver of a fan-out has combined it).
+    pub fn reclaim(&self, payload: Arc<Vec<f32>>) {
+        if let Ok(v) = Arc::try_unwrap(payload) {
+            self.recycle_vec(v);
+        }
+    }
+
+    // Mode-gated variants shared by the blocking (`NodeContext`) and
+    // non-blocking (comm thread `Endpoint`) transports, so the
+    // pooled-vs-naive allocation policy is written exactly once.
+
+    /// An outgoing payload holding a copy of `src`: pooled checkout under
+    /// [`HotPath::Pooled`], fresh allocation under [`HotPath::Naive`].
+    pub fn payload_from(&self, mode: HotPath, src: &[f32]) -> Arc<Vec<f32>> {
+        match mode {
+            HotPath::Naive => Arc::new(src.to_vec()),
+            HotPath::Pooled => self.checkout_copy(src).into_arc(),
+        }
+    }
+
+    /// An outgoing payload holding `s * src`, built in one fused pass.
+    pub fn scaled_payload(&self, mode: HotPath, src: &[f32], s: f32) -> Arc<Vec<f32>> {
+        match mode {
+            HotPath::Naive => Arc::new(src.iter().map(|&x| s * x).collect()),
+            HotPath::Pooled => self.checkout_scaled(src, s).into_arc(),
+        }
+    }
+
+    /// [`BufferPool::reclaim`] under [`HotPath::Pooled`], plain drop under
+    /// [`HotPath::Naive`].
+    pub fn reclaim_if(&self, mode: HotPath, payload: Arc<Vec<f32>>) {
+        if mode == HotPath::Pooled {
+            self.reclaim(payload);
+        }
+    }
+
+    /// The receive-combine kernel of the hot path:
+    /// `out = w_self * base + sum_k ws[k] * parts[k]`. Pooled mode combines
+    /// into a pooled buffer with the single-pass blocked kernel; naive mode
+    /// is the original `weighted_combine_from`.
+    pub fn combine_from(
+        &self,
+        mode: HotPath,
+        base: &[f32],
+        w_self: f32,
+        parts: &[&[f32]],
+        ws: &[f32],
+    ) -> Vec<f32> {
+        match mode {
+            HotPath::Naive => crate::tensor::weighted_combine_from(base, w_self, parts, ws),
+            HotPath::Pooled => {
+                let mut out = self.checkout_copy(base);
+                crate::tensor::weighted_combine_blocked_into(&mut out, w_self, parts, ws);
+                out.into_vec()
+            }
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            recycled: self.inner.recycled.load(Ordering::Relaxed),
+            dropped: self.inner.dropped.load(Ordering::Relaxed),
+            shelved: self.inner.shelves.lock().unwrap().values().map(Vec::len).sum(),
+        }
+    }
+
+    /// Zero the counters (buffers stay shelved) — called between benchmark
+    /// warm-up and measurement.
+    pub fn reset_stats(&self) {
+        self.inner.hits.store(0, Ordering::Relaxed);
+        self.inner.misses.store(0, Ordering::Relaxed);
+        self.inner.recycled.store(0, Ordering::Relaxed);
+        self.inner.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Checkout guard: a `Vec<f32>` that returns to its [`BufferPool`] on drop.
+///
+/// Derefs to `[f32]` so it slots into the BLAS-1 kernels directly; use
+/// [`PoolBuf::into_vec`] / [`PoolBuf::into_arc`] to detach the storage for
+/// APIs that take ownership.
+pub struct PoolBuf {
+    data: Vec<f32>,
+    /// `None` for detached guards (naive-mode scratch): dropped, not pooled.
+    pool: Option<BufferPool>,
+}
+
+impl PoolBuf {
+    /// Wrap a plain allocation in the guard interface without attaching it
+    /// to any pool — the naive-mode counterpart of a checkout, so A/B
+    /// callers share one code path while `HotPath::Naive` stays truly
+    /// allocation-per-use.
+    pub fn detached(data: Vec<f32>) -> Self {
+        PoolBuf { data, pool: None }
+    }
+
+    /// Detach the buffer from the pool (it will not be recycled on drop;
+    /// hand it back later via [`BufferPool::recycle_vec`]).
+    pub fn into_vec(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.data)
+    }
+
+    /// Detach into an `Arc` payload for [`crate::transport::Message`];
+    /// receivers hand the storage back via [`BufferPool::reclaim`].
+    pub fn into_arc(self) -> Arc<Vec<f32>> {
+        Arc::new(self.into_vec())
+    }
+}
+
+impl std::ops::Deref for PoolBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl std::fmt::Debug for PoolBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolBuf").field("len", &self.data.len()).finish()
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = &self.pool {
+            if self.data.capacity() > 0 {
+                pool.recycle_vec(std::mem::take(&mut self.data));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_recycle_roundtrip_reuses_storage() {
+        let pool = BufferPool::new();
+        let v = pool.checkout_copy(&[1.0, 2.0, 3.0]);
+        assert_eq!(&*v, &[1.0, 2.0, 3.0]);
+        let cap = v.data.capacity();
+        drop(v); // recycles
+        let w = pool.checkout(3);
+        assert_eq!(&*w, &[0.0; 3]);
+        assert_eq!(w.data.capacity(), cap, "storage not reused");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn checkout_scaled_is_single_pass_copy() {
+        let pool = BufferPool::new();
+        let v = pool.checkout_scaled(&[1.0, -2.0, 4.0], 0.5);
+        assert_eq!(&*v, &[0.5, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn into_vec_detaches_and_recycle_vec_returns() {
+        let pool = BufferPool::new();
+        let v = pool.checkout(128).into_vec();
+        assert_eq!(pool.stats().shelved, 0, "detached buffer must not auto-recycle");
+        pool.recycle_vec(v);
+        assert_eq!(pool.stats().shelved, 1);
+        assert_eq!(pool.stats().recycled, 1);
+        let w = pool.checkout(100); // 100 <= 128 bucket
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(w.len(), 100);
+    }
+
+    #[test]
+    fn reclaim_recovers_only_unique_arcs() {
+        let pool = BufferPool::new();
+        let a = pool.checkout_copy(&[7.0; 200]).into_arc();
+        let b = a.clone();
+        pool.reclaim(a); // refcount 2: dropped, not recycled
+        assert_eq!(pool.stats().shelved, 0);
+        pool.reclaim(b); // last clone: recovered
+        assert_eq!(pool.stats().shelved, 1);
+        assert_eq!(pool.checkout(200).len(), 200);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn detached_guard_drops_without_pooling() {
+        let pool = BufferPool::new();
+        let buf = PoolBuf::detached(vec![1.0; 128]);
+        assert_eq!(&*buf, &[1.0; 128][..]);
+        drop(buf);
+        assert_eq!(pool.stats().shelved, 0, "detached guards must not feed any pool");
+        assert_eq!(pool.stats().recycled, 0);
+    }
+
+    #[test]
+    fn tiny_buffers_are_not_pooled() {
+        let pool = BufferPool::new();
+        pool.recycle_vec(vec![1.0; 4]);
+        assert_eq!(pool.stats().shelved, 0);
+    }
+
+    #[test]
+    fn bucket_depth_is_bounded() {
+        let pool = BufferPool::new();
+        for _ in 0..(MAX_PER_BUCKET + 5) {
+            pool.recycle_vec(vec![0.0; MIN_BUCKET]);
+        }
+        let s = pool.stats();
+        assert_eq!(s.shelved, MAX_PER_BUCKET);
+        assert_eq!(s.dropped, 5);
+    }
+
+    #[test]
+    fn capacity_always_covers_request_across_buckets() {
+        let pool = BufferPool::new();
+        // A buffer with non-power-of-two capacity shelves under its floor
+        // bucket, so a checkout from that bucket still fits.
+        let mut v = Vec::with_capacity(100); // shelf 64
+        v.resize(100, 1.0);
+        pool.recycle_vec(v);
+        let w = pool.checkout(60); // bucket 64 -> hit
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(&*w, &vec![0.0; 60][..]);
+    }
+
+    #[test]
+    fn reset_stats_keeps_shelves() {
+        let pool = BufferPool::new();
+        drop(pool.checkout(256));
+        pool.reset_stats();
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.recycled), (0, 0, 0));
+        assert_eq!(s.shelved, 1);
+        drop(pool.checkout(256));
+        assert_eq!(pool.stats().hits, 1);
+    }
+}

@@ -142,6 +142,75 @@ pub fn weighted_combine_from(
     }
 }
 
+/// Block size (elements) of the blocked combine kernels: 16 KB of `f32`,
+/// small enough that the output block stays L1-resident while all `k`
+/// neighbor parts stream through it.
+pub const COMBINE_BLOCK: usize = 4096;
+
+/// Blocked variant of [`weighted_combine`]: identical result, but the
+/// output is traversed one cache-sized block at a time with **all** `k`
+/// parts accumulated per block, instead of `k` full-buffer `axpy` sweeps
+/// that evict the output between passes (hot-path optimization,
+/// EXPERIMENTS.md §Perf "Buffer pool & blocked combine").
+pub fn weighted_combine_blocked(parts: &[&[f32]], weights: &[f32]) -> Vec<f32> {
+    assert_eq!(parts.len(), weights.len(), "combine arity mismatch");
+    assert!(!parts.is_empty(), "combine of zero parts");
+    let d = parts[0].len();
+    for p in parts {
+        assert_eq!(p.len(), d, "combine length mismatch");
+    }
+    let mut out = vec![0.0f32; d];
+    let (first, rest) = parts.split_first().unwrap();
+    let w0 = weights[0];
+    let mut lo = 0;
+    while lo < d {
+        let hi = (lo + COMBINE_BLOCK).min(d);
+        for (o, x) in out[lo..hi].iter_mut().zip(&first[lo..hi]) {
+            *o = w0 * x;
+        }
+        for (p, &w) in rest.iter().zip(&weights[1..]) {
+            axpy(w, &p[lo..hi], &mut out[lo..hi]);
+        }
+        lo = hi;
+    }
+    out
+}
+
+/// Blocked variant of [`weighted_combine_into`]:
+/// `acc = w_self * acc + sum_k weights[k] * parts[k]`, with the self-scale
+/// fused into the first accumulation and each cache-sized block of `acc`
+/// fully combined before moving on (single traversal of the output per
+/// block for all `k` parts).
+pub fn weighted_combine_blocked_into(
+    acc: &mut [f32],
+    w_self: f32,
+    parts: &[&[f32]],
+    weights: &[f32],
+) {
+    assert_eq!(parts.len(), weights.len(), "combine arity mismatch");
+    let Some((first, rest)) = parts.split_first() else {
+        scale(w_self, acc);
+        return;
+    };
+    assert_eq!(first.len(), acc.len(), "combine length mismatch");
+    for p in rest {
+        assert_eq!(p.len(), acc.len(), "combine length mismatch");
+    }
+    let d = acc.len();
+    let w0 = weights[0];
+    let mut lo = 0;
+    while lo < d {
+        let hi = (lo + COMBINE_BLOCK).min(d);
+        for (a, x) in acc[lo..hi].iter_mut().zip(&first[lo..hi]) {
+            *a = w_self * *a + w0 * x;
+        }
+        for (p, &w) in rest.iter().zip(&weights[1..]) {
+            axpy(w, &p[lo..hi], &mut acc[lo..hi]);
+        }
+        lo = hi;
+    }
+}
+
 /// Mean absolute difference between two buffers (test helper).
 pub fn mean_abs_diff(x: &[f32], y: &[f32]) -> f64 {
     assert_eq!(x.len(), y.len());
@@ -199,6 +268,39 @@ mod tests {
         weighted_combine_into(&mut acc, 0.5, &[&p1, &p2], &[0.25, 0.25]);
         // 0.5*[2,4] + 0.25*[1,1] + 0.25*[0,2] = [1.25, 2.75]
         assert_eq!(acc, vec![1.25, 2.75]);
+    }
+
+    #[test]
+    fn blocked_combine_matches_naive_across_block_boundary() {
+        // d > COMBINE_BLOCK so the block loop takes more than one trip.
+        let d = COMBINE_BLOCK + 37;
+        let parts: Vec<Vec<f32>> =
+            (0..3).map(|k| (0..d).map(|i| ((i * 7 + k * 13) % 29) as f32 - 14.0).collect()).collect();
+        let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+        let ws = [0.2f32, 0.5, 0.3];
+        let naive = weighted_combine(&refs, &ws);
+        let blocked = weighted_combine_blocked(&refs, &ws);
+        assert_eq!(naive, blocked, "blocked kernel diverged");
+    }
+
+    #[test]
+    fn blocked_combine_into_matches_into() {
+        let d = 2 * COMBINE_BLOCK + 5;
+        let base: Vec<f32> = (0..d).map(|i| (i % 17) as f32).collect();
+        let p1: Vec<f32> = (0..d).map(|i| ((i + 3) % 11) as f32).collect();
+        let p2: Vec<f32> = (0..d).map(|i| ((i * 5) % 13) as f32 - 6.0).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        weighted_combine_into(&mut a, 0.4, &[&p1, &p2], &[0.3, 0.3]);
+        weighted_combine_blocked_into(&mut b, 0.4, &[&p1, &p2], &[0.3, 0.3]);
+        assert!(max_abs_diff(&a, &b) < 1e-5, "blocked into diverged");
+    }
+
+    #[test]
+    fn blocked_combine_into_empty_parts_scales() {
+        let mut a = vec![2.0f32, -4.0];
+        weighted_combine_blocked_into(&mut a, 0.5, &[], &[]);
+        assert_eq!(a, vec![1.0, -2.0]);
     }
 
     #[test]

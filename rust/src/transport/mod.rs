@@ -12,7 +12,7 @@
 //! virtual clock to `max(own, arrival)`. This yields the discrete-event
 //! timing the benchmarks report without a global event queue.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
@@ -52,8 +52,10 @@ pub struct Message {
 pub struct Mailbox {
     rank: usize,
     rx: Receiver<Message>,
-    /// Out-of-order arrivals buffered by (src, tag).
-    stash: HashMap<(usize, Tag), Vec<Message>>,
+    /// Out-of-order arrivals buffered by (src, tag). Deques so a matched
+    /// receive pops the oldest arrival in O(1) — `recv_match`/`recv_any`
+    /// hit this on every out-of-order round.
+    stash: HashMap<(usize, Tag), VecDeque<Message>>,
 }
 
 /// Sending side: the cloneable sender handles for every rank.
@@ -99,8 +101,7 @@ impl Mailbox {
     /// buffering any non-matching arrivals.
     pub fn recv_match(&mut self, src: usize, tag: Tag) -> anyhow::Result<Message> {
         if let Some(q) = self.stash.get_mut(&(src, tag)) {
-            if !q.is_empty() {
-                let m = q.remove(0);
+            if let Some(m) = q.pop_front() {
                 if q.is_empty() {
                     self.stash.remove(&(src, tag));
                 }
@@ -115,7 +116,7 @@ impl Mailbox {
             if m.src == src && m.tag == tag {
                 return Ok(m);
             }
-            self.stash.entry((m.src, m.tag)).or_default().push(m);
+            self.stash.entry((m.src, m.tag)).or_default().push_back(m);
         }
     }
 
@@ -124,7 +125,7 @@ impl Mailbox {
         let key = self.stash.keys().find(|&&(_, t)| t == tag).copied();
         if let Some(key) = key {
             let q = self.stash.get_mut(&key).unwrap();
-            let m = q.remove(0);
+            let m = q.pop_front().expect("stash entries are non-empty");
             if q.is_empty() {
                 self.stash.remove(&key);
             }
@@ -138,7 +139,7 @@ impl Mailbox {
             if m.tag == tag {
                 return Ok(m);
             }
-            self.stash.entry((m.src, m.tag)).or_default().push(m);
+            self.stash.entry((m.src, m.tag)).or_default().push_back(m);
         }
     }
 

@@ -203,7 +203,7 @@ impl NodeContext {
             let remote = self.windows.get(src, name)?;
             let data: Vec<f32> = {
                 let st = remote.lock().unwrap();
-                st.local.iter().map(|&x| (w as f32) * x).collect()
+                self.scaled_vec(&st.local, w as f32)
             };
             let arrival = self.one_sided_arrival(src, data.len() * 4);
             let mut st = own.lock().unwrap();
@@ -212,7 +212,10 @@ impl NodeContext {
                 "rank {src} is not an in-neighbor of rank {} for window '{name}'",
                 self.rank()
             );
-            st.slots.insert(src, data);
+            // The displaced slot buffer feeds the pool for the next pull.
+            if let Some(old) = st.slots.insert(src, data) {
+                self.recycle(old);
+            }
             st.slot_vtime.insert(src, arrival);
             st.writes += 1;
         }
@@ -234,7 +237,7 @@ impl NodeContext {
         let entry = self.windows.get(self.rank(), name)?;
         let mut st = entry.lock().unwrap();
         anyhow::ensure!(st.len == tensor.len(), "win_update size mismatch on '{name}'");
-        let mut out: Vec<f32> = tensor.iter().map(|&x| (self_weight as f32) * x).collect();
+        let mut out = self.scaled_vec(tensor, self_weight as f32);
         let mut latest = self.vtime();
         for (src, w) in srcs {
             if let Some(slot) = st.slots.get(&src) {
@@ -244,7 +247,8 @@ impl NodeContext {
                 latest = latest.max(st.slot_vtime.get(&src).copied().unwrap_or(0.0));
             }
         }
-        st.local = out.clone();
+        let old = std::mem::replace(&mut st.local, self.vec_from(&out));
+        self.recycle(old);
         self.clock().advance_to(latest);
         Ok(out)
     }
@@ -268,7 +272,8 @@ impl NodeContext {
                 *s = 0.0;
             }
         }
-        st.local = tensor.to_vec();
+        let old = std::mem::replace(&mut st.local, self.vec_from(tensor));
+        self.recycle(old);
         self.clock().advance_to(latest);
         Ok(())
     }

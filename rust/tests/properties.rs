@@ -6,9 +6,14 @@ use bluefog::collective::neighbor::NeighborWeights;
 use bluefog::collective::{AllreduceAlgo, ReduceOp};
 use bluefog::fusion::{fusion_groups, FusionBuffer};
 use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::pool::BufferPool;
 use bluefog::prop_assert;
 use bluefog::proptest::{check, Gen};
 use bluefog::simnet::analytic;
+use bluefog::tensor::{
+    max_abs_diff, weighted_combine, weighted_combine_blocked, weighted_combine_blocked_into,
+    weighted_combine_into, COMBINE_BLOCK,
+};
 use bluefog::topology::dynamic::{views_consistent, DynamicTopology, OnePeerExpo, OnePeerFromGraph};
 use bluefog::topology::WeightMatrix;
 
@@ -71,6 +76,102 @@ fn prop_fusion_roundtrip() {
         let buf = FusionBuffer::pack(&refs);
         let out = buf.unpack(buf.data());
         prop_assert!(out == tensors, "round-trip mismatch");
+        Ok(())
+    });
+}
+
+/// The single-pass blocked combine kernels agree with the naive k-pass
+/// kernels to 1e-5 for any arity k, any dimension d (straddling the block
+/// boundary), any weights — pooling/blocking must be numerically
+/// transparent.
+#[test]
+fn prop_blocked_combine_matches_naive() {
+    check("blocked-combine", 60, |g: &mut Gen| {
+        let k = g.usize_in(1, 9);
+        let d = g.usize_in(1, 2 * COMBINE_BLOCK + 7);
+        let parts: Vec<Vec<f32>> = (0..k).map(|_| g.vec_f32(d, -100.0, 100.0)).collect();
+        let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+        let ws: Vec<f32> = (0..k).map(|_| g.f64_in(-1.0, 1.0) as f32).collect();
+        let naive = weighted_combine(&refs, &ws);
+        let blocked = weighted_combine_blocked(&refs, &ws);
+        prop_assert!(
+            max_abs_diff(&naive, &blocked) < 1e-5,
+            "blocked combine diverged (k={k}, d={d})"
+        );
+        let base = g.vec_f32(d, -100.0, 100.0);
+        let w_self = g.f64_in(-1.0, 1.0) as f32;
+        let mut a = base.clone();
+        let mut b = base;
+        weighted_combine_into(&mut a, w_self, &refs, &ws);
+        weighted_combine_blocked_into(&mut b, w_self, &refs, &ws);
+        prop_assert!(
+            max_abs_diff(&a, &b) < 1e-5,
+            "blocked combine_into diverged (k={k}, d={d})"
+        );
+        Ok(())
+    });
+}
+
+/// Pool checkout/recycle round-trips preserve contents: whatever initial
+/// state a checked-out buffer carries, `checkout_copy`/`checkout_scaled`/
+/// `checkout` always return exactly the requested values.
+#[test]
+fn prop_pool_roundtrip_preserves_contents() {
+    check("pool-roundtrip", 80, |g: &mut Gen| {
+        let pool = BufferPool::new();
+        for _ in 0..g.usize_in(1, 6) {
+            let len = g.usize_in(0, 600);
+            match g.usize_in(0, 3) {
+                0 => {
+                    let src = g.vec_f32(len, -1e5, 1e5);
+                    let buf = pool.checkout_copy(&src);
+                    prop_assert!(&*buf == src.as_slice(), "copy corrupted (len={len})");
+                    // Detach and hand back explicitly, like optimizers do.
+                    pool.recycle_vec(buf.into_vec());
+                }
+                1 => {
+                    let src = g.vec_f32(len, -1e5, 1e5);
+                    let s = g.f64_in(-2.0, 2.0) as f32;
+                    let buf = pool.checkout_scaled(&src, s);
+                    let want: Vec<f32> = src.iter().map(|&x| s * x).collect();
+                    prop_assert!(&*buf == want.as_slice(), "scale corrupted (len={len})");
+                    // Implicit recycle on drop.
+                }
+                _ => {
+                    let buf = pool.checkout(len);
+                    prop_assert!(buf.iter().all(|&x| x == 0.0), "stale data (len={len})");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Scatter-free `unpack_into` produces exactly what allocating `unpack`
+/// does, for any slot layout and any pre-existing output contents.
+#[test]
+fn prop_unpack_into_matches_unpack() {
+    check("unpack-into", 80, |g: &mut Gen| {
+        let count = g.usize_in(1, 10);
+        let tensors: Vec<Vec<f32>> = (0..count)
+            .map(|_| {
+                let len = g.usize_in(0, 40);
+                g.vec_f32(len, -1e6, 1e6)
+            })
+            .collect();
+        let refs: Vec<&[f32]> = tensors.iter().map(|t| t.as_slice()).collect();
+        let buf = FusionBuffer::pack(&refs);
+        let result: Vec<f32> = buf.data().iter().map(|x| x * 1.5 - 2.0).collect();
+        let want = buf.unpack(&result);
+        // Outputs start with arbitrary stale contents of arbitrary lengths.
+        let mut outs: Vec<Vec<f32>> = (0..count)
+            .map(|_| {
+                let stale_len = g.usize_in(0, 50);
+                g.vec_f32(stale_len, -9.0, 9.0)
+            })
+            .collect();
+        buf.unpack_into(&result, &mut outs);
+        prop_assert!(outs == want, "unpack_into mismatch");
         Ok(())
     });
 }
