@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: verify build test examples benches bench-hotpath artifacts clean
+.PHONY: verify build test examples benches bench-hotpath bench-compress artifacts clean
 
 verify: build test
 
@@ -22,10 +22,22 @@ benches:
 bench-hotpath:
 	cargo run --release --example perf_probe
 
-# Lower the L2/L1 JAX/Pallas computations to HLO-text artifacts consumed by
-# the Rust PJRT runtime (needs the Python toolchain; artifacts land in
-# ./artifacts with a .stamp sentinel the tests/benches key off).
+# Compare dense vs compressed neighbor averaging (topk/randk/q8/lowrank with
+# error feedback) on the linear-regression workload and write
+# BENCH_compress.json (bytes on wire, ms/iter, end-loss delta). Set
+# COMPRESS_SMOKE=1 for a CI-sized run.
+bench-compress:
+	cargo run --release --example compress_probe
+
+# Sweep every BENCH_*.json the probes have produced into ./artifacts — a
+# glob, so new probes are picked up without editing this target — then
+# lower the L2/L1 JAX/Pallas computations to HLO-text artifacts consumed by
+# the Rust PJRT runtime (needs the Python toolchain; lands a .stamp
+# sentinel the tests/benches key off). The sweep runs first so bench JSON
+# is still collected on machines without Python/JAX.
 artifacts:
+	@mkdir -p artifacts
+	@for f in BENCH_*.json; do [ -e "$$f" ] && cp -f "$$f" artifacts/ || true; done
 	cd python && python -m compile.aot --out-dir ../artifacts
 
 clean:

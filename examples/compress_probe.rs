@@ -1,0 +1,232 @@
+// Compression probe: runs the decentralized linear-regression workload
+// (paper §IV-A) under each compression scheme and compares it against the
+// dense baseline on three axes — bytes on the wire (measured at the
+// transport, not estimated), wall-clock ms per iteration, and end loss.
+// Emits machine-readable `BENCH_compress.json` and enforces the PR's
+// acceptance gates:
+//
+//   * TopK(k = d/16) puts >= 4x fewer bytes on the wire than dense, and
+//   * its end loss lands within 5% of the dense baseline.
+//
+// Run: `make bench-compress` (or `cargo run --release --example
+// compress_probe`). Env: COMPRESS_SMOKE=1 shrinks the problem for CI;
+// BENCH_COMPRESS_OUT overrides the output path.
+use std::time::Instant;
+
+use bluefog::collective::{AllreduceAlgo, ReduceOp};
+use bluefog::compress::CompressionSpec;
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::optim::{CommSpec, DecentralizedOptimizer, Dgd, StepOrder};
+use bluefog::rng::Rng;
+
+const N: usize = 8; // nodes
+
+struct Problem {
+    d: usize,     // features
+    rows: usize,  // rows per node
+    iters: usize,
+    gamma: f32,
+}
+
+/// Per-node data A_i [rows, d], b_i [rows]; b = A x* + noise. The noise
+/// keeps the global optimum's loss bounded away from zero so relative
+/// end-loss comparisons are well-conditioned.
+fn make_data(rank: usize, p: &Problem) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0xc0fe + rank as u64);
+    let mut x_star_rng = Rng::new(0x57a7);
+    let x_star: Vec<f32> = x_star_rng.normal_vec(p.d);
+    let a: Vec<f32> = rng.normal_vec(p.rows * p.d);
+    let mut b = vec![0.0f32; p.rows];
+    for r in 0..p.rows {
+        let mut dot = 0.0f32;
+        for (ac, xc) in a[r * p.d..(r + 1) * p.d].iter().zip(&x_star) {
+            dot += ac * xc;
+        }
+        b[r] = dot + rng.normal() as f32;
+    }
+    (a, b)
+}
+
+struct RunResult {
+    label: String,
+    ms_per_iter: f64,
+    wire_bytes: u64,
+    end_loss: f64,
+}
+
+/// One full training run under `spec`; returns the measured wire bytes of
+/// the training loop only (warm-up and the final loss allreduce excluded)
+/// and the global loss at the averaged iterate.
+fn run_spec(p: &Problem, spec: CompressionSpec, label: String) -> anyhow::Result<RunResult> {
+    let iters = p.iters;
+    let (d, rows, gamma) = (p.d, p.rows, p.gamma);
+    let results = run_spmd(
+        SpmdConfig::new(N).with_topo_check(false).with_compression(spec),
+        move |ctx| {
+            let pr = Problem { d, rows, iters, gamma };
+            let (a, b) = make_data(ctx.rank(), &pr);
+            let mut x = vec![0.0f32; d];
+            let mut opt = Dgd::new(gamma, StepOrder::Atc, CommSpec::Static);
+            let mut grad = vec![0.0f32; d];
+            let mut resid = vec![0.0f32; rows];
+            // Align ranks, then count only the training loop's traffic.
+            ctx.barrier()?;
+            ctx.reset_bytes_sent();
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                // grad = A^T (A x - b) / rows
+                for (r, res) in resid.iter_mut().enumerate() {
+                    let mut dot = 0.0f32;
+                    for (ac, xc) in a[r * d..(r + 1) * d].iter().zip(&x) {
+                        dot += ac * xc;
+                    }
+                    *res = dot - b[r];
+                }
+                for g in grad.iter_mut() {
+                    *g = 0.0;
+                }
+                for (r, res) in resid.iter().enumerate() {
+                    let scale = res / rows as f32;
+                    for (g, ac) in grad.iter_mut().zip(&a[r * d..(r + 1) * d]) {
+                        *g += scale * ac;
+                    }
+                }
+                opt.step(ctx, &mut x, &grad)?;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let bytes = ctx.bytes_sent();
+            // End loss at the network-average iterate: (1/2nR) sum ||A x - b||^2,
+            // via an (uncompressed, uncounted) global average of x and of the
+            // per-node partial losses.
+            let x_bar = ctx.allreduce(&x, ReduceOp::Average, AllreduceAlgo::Ring)?;
+            let mut local = 0.0f64;
+            for r in 0..rows {
+                let mut dot = 0.0f32;
+                for (ac, xc) in a[r * d..(r + 1) * d].iter().zip(&x_bar) {
+                    dot += ac * xc;
+                }
+                local += ((dot - b[r]) as f64).powi(2);
+            }
+            local /= 2.0 * rows as f64;
+            let loss = ctx.allreduce(&[local as f32], ReduceOp::Average, AllreduceAlgo::Ring)?;
+            Ok((dt, bytes, loss[0] as f64))
+        },
+    )?;
+    let dt = results.iter().map(|(t, _, _)| *t).fold(0.0f64, f64::max);
+    let wire_bytes: u64 = results.iter().map(|(_, by, _)| *by).sum();
+    let end_loss = results[0].2;
+    Ok(RunResult {
+        label,
+        ms_per_iter: dt * 1e3 / p.iters as f64,
+        wire_bytes,
+        end_loss,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("COMPRESS_SMOKE").is_ok();
+    // rows = d/2 per node keeps the aggregate problem 4x overdetermined
+    // (strongly convex, lambda_min ~ 0.25), so 600 iterations at gamma
+    // well inside the local stability bound land both the dense and the
+    // compressed runs on their common noise floor — the regime where the
+    // 5% end-loss gate is meaningful rather than a race.
+    let p = if smoke {
+        Problem { d: 256, rows: 128, iters: 300, gamma: 0.08 }
+    } else {
+        Problem { d: 1024, rows: 512, iters: 600, gamma: 0.08 }
+    };
+    let k16 = p.d / 16;
+    println!(
+        "compress probe: {N} nodes (expo2), linear regression d={} rows/node={} iters={}",
+        p.d, p.rows, p.iters
+    );
+
+    let dense = run_spec(&p, CompressionSpec::none(), "dense".into())?;
+    println!(
+        "  {:>16}: {:>7.3} ms/iter | {:>12} B on wire | end loss {:.6}",
+        dense.label, dense.ms_per_iter, dense.wire_bytes, dense.end_loss
+    );
+
+    let specs = vec![
+        CompressionSpec::top_k(k16),
+        CompressionSpec::random_k(p.d / 8),
+        CompressionSpec::quantize_u8(256),
+        CompressionSpec::low_rank(2),
+        CompressionSpec::top_k(k16).without_error_feedback(),
+    ];
+    let mut cases = Vec::new();
+    for spec in specs {
+        let r = run_spec(&p, spec, spec.label())?;
+        let reduction = dense.wire_bytes as f64 / r.wire_bytes as f64;
+        let loss_delta_rel = (r.end_loss - dense.end_loss).abs() / dense.end_loss;
+        println!(
+            "  {:>16}: {:>7.3} ms/iter | {:>12} B on wire ({reduction:>5.2}x less) | \
+             end loss {:.6} (delta {:+.2}%)",
+            r.label,
+            r.ms_per_iter,
+            r.wire_bytes,
+            r.end_loss,
+            100.0 * (r.end_loss - dense.end_loss) / dense.end_loss
+        );
+        cases.push((r, reduction, loss_delta_rel));
+    }
+
+    // Acceptance gates (ISSUE 3): TopK(k = d/16) with EF is case 0.
+    let (topk, topk_reduction, topk_delta) = {
+        let (r, red, delta) = &cases[0];
+        (r, *red, *delta)
+    };
+    anyhow::ensure!(
+        topk_reduction >= 4.0,
+        "TopK(k=d/16) wire reduction {topk_reduction:.2}x below the 4x gate \
+         ({} vs dense {} bytes)",
+        topk.wire_bytes,
+        dense.wire_bytes
+    );
+    anyhow::ensure!(
+        topk_delta <= 0.05,
+        "TopK(k=d/16) end loss {:.6} drifted {:.2}% from dense {:.6} (gate: 5%)",
+        topk.end_loss,
+        100.0 * topk_delta,
+        dense.end_loss
+    );
+
+    let case_json: Vec<String> = cases
+        .iter()
+        .map(|(r, reduction, delta)| {
+            format!(
+                concat!(
+                    "    {{\"label\": \"{}\", \"ms_per_iter\": {:.6}, \"wire_bytes\": {}, ",
+                    "\"wire_reduction\": {:.4}, \"end_loss\": {:.8}, ",
+                    "\"loss_delta_rel\": {:.6}}}"
+                ),
+                r.label, r.ms_per_iter, r.wire_bytes, reduction, r.end_loss, delta
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n  \"bench\": \"compress\",\n  \"nodes\": {},\n  \"d\": {},\n",
+            "  \"rows_per_node\": {},\n  \"iters\": {},\n  \"gamma\": {},\n",
+            "  \"smoke\": {},\n",
+            "  \"baseline\": {{\"label\": \"dense\", \"ms_per_iter\": {:.6}, ",
+            "\"wire_bytes\": {}, \"end_loss\": {:.8}}},\n",
+            "  \"cases\": [\n{}\n  ]\n}}\n"
+        ),
+        N,
+        p.d,
+        p.rows,
+        p.iters,
+        p.gamma,
+        smoke,
+        dense.ms_per_iter,
+        dense.wire_bytes,
+        dense.end_loss,
+        case_json.join(",\n")
+    );
+    let out_path =
+        std::env::var("BENCH_COMPRESS_OUT").unwrap_or_else(|_| "BENCH_compress.json".into());
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    Ok(())
+}

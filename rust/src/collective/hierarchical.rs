@@ -14,7 +14,7 @@
 //! Note (paper): this is **not** functionally equivalent to the flat
 //! operation — the neighborhood is defined at machine level.
 
-use crate::context::NodeContext;
+use crate::context::{ef_key, NodeContext, EF_HIER};
 use crate::negotiation::OpKind;
 use crate::topology::WeightMatrix;
 
@@ -27,6 +27,16 @@ impl NodeContext {
     /// (matching the paper's Fig. 12 note that 4/8-GPU points reuse the
     /// flat result).
     pub fn hierarchical_neighbor_allreduce(&mut self, data: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.hierarchical_neighbor_allreduce_stream(data, 0)
+    }
+
+    /// Hierarchical variant on an explicit error-feedback stream id (see
+    /// [`crate::optim::CommSpec::combine_stream`]).
+    pub(crate) fn hierarchical_neighbor_allreduce_stream(
+        &mut self,
+        data: &[f32],
+        stream: u32,
+    ) -> anyhow::Result<Vec<f32>> {
         let wall = self.timeline.now_us();
         let v0 = self.vtime();
         let g = self.local_size();
@@ -65,23 +75,74 @@ impl NodeContext {
             let (self_w, srcs) = machine_weights.pull_view(machine);
             let (_, dsts) = machine_weights.push_view(machine);
             let tag = self.next_tag("hier.inter");
-            let shared = self.payload_from(&result);
-            for &(dst_machine, _) in &dsts {
-                self.send_shared(dst_machine * g, tag, shared.clone())?;
+            // The inter-machine leg rides the slow NIC tier — exactly where
+            // a configured compression spec pays; the NVLink-tier phases
+            // (intra allreduce, broadcast) stay dense.
+            if self.comp.enabled() {
+                let d = result.len();
+                let send_key = ef_key(EF_HIER, stream, 0, d);
+                let mut wire = self.codec_scratch(self.comp.encoded_cap(d));
+                self.comp.encode(send_key, &result, &mut wire);
+                let shared = std::sync::Arc::new(wire);
+                for &(dst_machine, _) in &dsts {
+                    self.send_shared(dst_machine * g, tag, shared.clone())?;
+                }
+                let mut incoming: Vec<(f32, Vec<f32>)> = Vec::with_capacity(srcs.len());
+                for &(src_machine, w) in &srcs {
+                    let y = self.recv_tensor(src_machine * g, tag)?;
+                    let mut dec = self.codec_scratch(d);
+                    self.comp.decode(ef_key(EF_HIER, stream, src_machine, d), &y, &mut dec)?;
+                    self.reclaim_payload(y);
+                    anyhow::ensure!(
+                        dec.len() == d,
+                        "hierarchical: machine {src_machine} sent a {}-element stream, \
+                         expected {d}",
+                        dec.len()
+                    );
+                    incoming.push((w as f32, dec));
+                }
+                let mut parts: Vec<&[f32]> =
+                    incoming.iter().map(|(_, y)| y.as_slice()).collect();
+                let mut ws: Vec<f32> = incoming.iter().map(|(w, _)| *w).collect();
+                // Same relaxed mean-conserving combine as the flat static
+                // form: the machine topology is fixed, so the fan-out
+                // stream is shared and x̂_self is available.
+                match self.comp.estimate(send_key) {
+                    Some(est) if self.comp.spec().error_feedback => {
+                        let gamma = self.comp.spec().gossip_gamma;
+                        for w in ws.iter_mut() {
+                            *w *= gamma;
+                        }
+                        parts.push(est);
+                        ws.push(-gamma * (1.0 - self_w as f32));
+                        self.combine_into_hotpath(&mut result, 1.0, &parts, &ws);
+                    }
+                    _ => self.combine_into_hotpath(&mut result, self_w as f32, &parts, &ws),
+                }
+                drop(parts);
+                for (_, y) in incoming {
+                    self.recycle(y);
+                }
+                self.defer_reclaim(Some(shared));
+            } else {
+                let shared = self.payload_from(&result);
+                for &(dst_machine, _) in &dsts {
+                    self.send_shared(dst_machine * g, tag, shared.clone())?;
+                }
+                let mut incoming = Vec::with_capacity(srcs.len());
+                for &(src_machine, w) in &srcs {
+                    let y = self.recv_tensor(src_machine * g, tag)?;
+                    incoming.push((w as f32, y));
+                }
+                let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
+                let ws: Vec<f32> = incoming.iter().map(|(w, _)| *w).collect();
+                self.combine_into_hotpath(&mut result, self_w as f32, &parts, &ws);
+                drop(parts);
+                for (_, y) in incoming {
+                    self.reclaim_payload(y);
+                }
+                self.defer_reclaim(Some(shared));
             }
-            let mut incoming = Vec::with_capacity(srcs.len());
-            for &(src_machine, w) in &srcs {
-                let y = self.recv_tensor(src_machine * g, tag)?;
-                incoming.push((w as f32, y));
-            }
-            let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
-            let ws: Vec<f32> = incoming.iter().map(|(w, _)| *w).collect();
-            self.combine_into_hotpath(&mut result, self_w as f32, &parts, &ws);
-            drop(parts);
-            for (_, y) in incoming {
-                self.reclaim_payload(y);
-            }
-            self.defer_reclaim(Some(shared));
         }
 
         // Steps 3-4: intra-machine broadcast of the machine-level result.

@@ -16,7 +16,9 @@ pub mod neighbor;
 /// How `allreduce` averages are computed by the global primitives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReduceOp {
+    /// Elementwise sum across ranks.
     Sum,
+    /// Elementwise mean across ranks.
     Average,
 }
 
@@ -35,8 +37,11 @@ pub enum AllreduceAlgo {
 /// Communication style selector mirrored from the BlueFog optimizer API.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CommunicationType {
+    /// Global averaging every step.
     Allreduce,
+    /// Partial (neighborhood) averaging.
     NeighborAllreduce,
+    /// Two-tier machine-level partial averaging.
     HierarchicalNeighborAllreduce,
     /// No communication this step (local SGD step).
     Empty,

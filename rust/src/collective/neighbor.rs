@@ -13,14 +13,21 @@
 //! one side is omitted, the negotiation service resolves the matching ranks
 //! (it "synchronizes the ranks of sending and receiving among the entire
 //! network").
+//!
+//! When a [`crate::compress::CompressionSpec`] is configured
+//! ([`crate::launcher::SpmdConfig::with_compression`]), both forms encode
+//! every outgoing payload and decode every incoming one, with per-stream
+//! error feedback on the send side; `neighbor_allgather` intentionally
+//! stays dense (it gathers *exact* neighbor tensors, not averages).
 
-use crate::context::NodeContext;
+use crate::context::{ef_key, NodeContext, EF_PEER, EF_SHARED};
 use crate::negotiation::OpKind;
 
 /// Arguments of a dynamic `neighbor_allreduce` (BlueFog's optional
 /// `self_weight` / `src_weights` / `dst_weights`).
 #[derive(Debug, Clone, Default)]
 pub struct NeighborWeights {
+    /// Weight this rank keeps on its own tensor (`w_ii`).
     pub self_weight: f64,
     /// `(src_rank, r_ij)` receive-side scales; `None` = not declared.
     pub src_weights: Option<Vec<(usize, f64)>>,
@@ -67,6 +74,18 @@ impl NodeContext {
     /// paper eq. (5): combine with this rank's row of the global weight
     /// matrix.
     pub fn neighbor_allreduce(&mut self, data: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.neighbor_allreduce_stream(data, 0)
+    }
+
+    /// Static partial averaging on an explicit error-feedback stream id
+    /// (optimizers that interleave several same-length combines per
+    /// iteration pass distinct streams so compression estimates do not
+    /// cross; see [`crate::optim::CommSpec::combine_stream`]).
+    pub(crate) fn neighbor_allreduce_stream(
+        &mut self,
+        data: &[f32],
+        stream: u32,
+    ) -> anyhow::Result<Vec<f32>> {
         let (self_w, srcs, dsts) = {
             let topo = self.load_topology();
             let (self_w, srcs) = topo.weights.pull_view(self.rank());
@@ -80,6 +99,7 @@ impl NodeContext {
             Some(srcs),
             Some(dsts),
             /*scale_on_send=*/ false,
+            stream,
         )
     }
 
@@ -91,12 +111,23 @@ impl NodeContext {
         data: &[f32],
         weights: &NeighborWeights,
     ) -> anyhow::Result<Vec<f32>> {
+        self.neighbor_allreduce_dynamic_stream(data, weights, 0)
+    }
+
+    /// Dynamic partial averaging on an explicit error-feedback stream id.
+    pub(crate) fn neighbor_allreduce_dynamic_stream(
+        &mut self,
+        data: &[f32],
+        weights: &NeighborWeights,
+        stream: u32,
+    ) -> anyhow::Result<Vec<f32>> {
         self.neighbor_allreduce_impl(
             data,
             weights.self_weight,
             weights.src_weights.clone(),
             weights.dst_weights.clone(),
             /*scale_on_send=*/ true,
+            stream,
         )
     }
 
@@ -104,6 +135,7 @@ impl NodeContext {
     /// (receiver applies `w_ij`; senders send raw) from the dynamic form
     /// (senders apply `s_ij` from `dst_weights`, receivers apply `r_ij`
     /// from `src_weights`, missing side defaults to scale 1).
+    #[allow(clippy::too_many_arguments)]
     fn neighbor_allreduce_impl(
         &mut self,
         data: &[f32],
@@ -111,6 +143,7 @@ impl NodeContext {
         src_weights: Option<Vec<(usize, f64)>>,
         dst_weights: Option<Vec<(usize, f64)>>,
         scale_on_send: bool,
+        stream: u32,
     ) -> anyhow::Result<Vec<f32>> {
         let wall = self.timeline.now_us();
         let v0 = self.vtime();
@@ -148,39 +181,150 @@ impl NodeContext {
         let me = self.rank();
         let mut dsts_sorted = dsts.clone();
         dsts_sorted.sort_by_key(|&(d, _)| (d + n - me) % n);
-        // Unscaled sends share one Arc'd buffer across all destinations
-        // (zero-copy fan-out); the buffer itself comes from the rank-local
-        // pool in pooled mode (EXPERIMENTS.md §Perf).
+        let out = if self.comp.enabled() {
+            self.compressed_exchange(
+                data,
+                self_weight,
+                &srcs,
+                &dsts_sorted,
+                scale_on_send,
+                stream,
+                tag,
+            )?
+        } else {
+            // Dense path (CompressionSpec::None) — byte-identical to PR 2.
+            // Unscaled sends share one Arc'd buffer across all destinations
+            // (zero-copy fan-out); the buffer itself comes from the
+            // rank-local pool in pooled mode (EXPERIMENTS.md §Perf).
+            let mut shared: Option<std::sync::Arc<Vec<f32>>> = None;
+            for &(dst, s) in &dsts_sorted {
+                if scale_on_send && s != 1.0 {
+                    self.send_shared(dst, tag, self.scaled_payload(data, s as f32))?;
+                } else {
+                    let p = shared.get_or_insert_with(|| self.payload_from(data)).clone();
+                    self.send_shared(dst, tag, p)?;
+                }
+            }
+            // Combine: out = self_weight * x + sum_j r_ij * y_ij.
+            let mut incoming: Vec<(f32, std::sync::Arc<Vec<f32>>)> =
+                Vec::with_capacity(srcs.len());
+            for &(src, r) in &srcs {
+                let y = self.recv_tensor(src, tag)?;
+                anyhow::ensure!(
+                    y.len() == data.len(),
+                    "neighbor_allreduce: rank {src} sent {} elements, expected {}",
+                    y.len(),
+                    data.len()
+                );
+                incoming.push((r as f32, y));
+            }
+            let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
+            let ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
+            let out = self.combine_hotpath(data, self_weight as f32, &parts, &ws);
+            drop(parts);
+            for (_, y) in incoming {
+                self.reclaim_payload(y);
+            }
+            self.defer_reclaim(shared);
+            out
+        };
+        self.timeline.record(me, "neighbor_allreduce", "comm", wall, v0, self.vtime());
+        Ok(out)
+    }
+
+    /// Compressed partial-averaging exchange ([`crate::compress`]).
+    ///
+    /// Static form (`scale_on_send == false`): the destination set is the
+    /// static out-neighborhood — stable round over round — so the node
+    /// encodes **one shared difference stream** for the whole fan-out, and
+    /// the combine applies the mean-conserving self-correction
+    /// `x + Σ_j r_j x̂_j − (1 − w_self) x̂_self` (exact network-mean
+    /// invariance under doubly-stochastic weights, estimate lag
+    /// notwithstanding).
+    ///
+    /// Dynamic form (`scale_on_send == true`): destination sets and scales
+    /// may change every round, so every destination gets its own stream
+    /// (receivers would otherwise miss messages of a shared stream and
+    /// desynchronize their estimates) and the plain weighted combine is
+    /// used — approximate, with the tracking error bounded by the
+    /// difference codec.
+    #[allow(clippy::too_many_arguments)]
+    fn compressed_exchange(
+        &mut self,
+        data: &[f32],
+        self_weight: f64,
+        srcs: &[(usize, f64)],
+        dsts_sorted: &[(usize, f64)],
+        scale_on_send: bool,
+        stream: u32,
+        tag: crate::transport::Tag,
+    ) -> anyhow::Result<Vec<f32>> {
+        let d = data.len();
+        let cap = self.comp.encoded_cap(d);
+        let shared_key = ef_key(EF_SHARED, stream, 0, d);
         let mut shared: Option<std::sync::Arc<Vec<f32>>> = None;
-        for &(dst, s) in &dsts_sorted {
-            if scale_on_send && s != 1.0 {
-                self.send_shared(dst, tag, self.scaled_payload(data, s as f32))?;
+        for &(dst, s) in dsts_sorted {
+            if scale_on_send {
+                let mut wire = self.codec_scratch(cap);
+                if s != 1.0 {
+                    let scaled = self.scaled_vec(data, s as f32);
+                    self.comp.encode(ef_key(EF_PEER, stream, dst, d), &scaled, &mut wire);
+                    self.recycle(scaled);
+                } else {
+                    // CommSpec::Dynamic realizes pull-style views with unit
+                    // send scales — skip the O(d) staging copy.
+                    self.comp.encode(ef_key(EF_PEER, stream, dst, d), data, &mut wire);
+                }
+                self.send_tensor(dst, tag, wire)?;
             } else {
-                let p = shared.get_or_insert_with(|| self.payload_from(data)).clone();
+                let p = match &shared {
+                    Some(p) => p.clone(),
+                    None => {
+                        let mut wire = self.codec_scratch(cap);
+                        self.comp.encode(shared_key, data, &mut wire);
+                        let p = std::sync::Arc::new(wire);
+                        shared = Some(p.clone());
+                        p
+                    }
+                };
                 self.send_shared(dst, tag, p)?;
             }
         }
-        // Combine: out = self_weight * x + sum_j r_ij * y_ij.
-        let mut incoming: Vec<(f32, std::sync::Arc<Vec<f32>>)> = Vec::with_capacity(srcs.len());
-        for &(src, r) in &srcs {
+        let mut incoming: Vec<(f32, Vec<f32>)> = Vec::with_capacity(srcs.len());
+        for &(src, r) in srcs {
             let y = self.recv_tensor(src, tag)?;
+            let mut dec = self.codec_scratch(d);
+            self.comp.decode(ef_key(EF_PEER, stream, src, d), &y, &mut dec)?;
+            self.reclaim_payload(y);
             anyhow::ensure!(
-                y.len() == data.len(),
-                "neighbor_allreduce: rank {src} sent {} elements, expected {}",
-                y.len(),
-                data.len()
+                dec.len() == d,
+                "neighbor_allreduce: rank {src} sent a {}-element stream, expected {d}",
+                dec.len()
             );
-            incoming.push((r as f32, y));
+            incoming.push((r as f32, dec));
         }
-        let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
-        let ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
-        let out = self.combine_hotpath(data, self_weight as f32, &parts, &ws);
+        let mut parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
+        let mut ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
+        let correct = !scale_on_send && shared.is_some() && self.comp.spec().error_feedback;
+        let out = match self.comp.estimate(shared_key) {
+            Some(est) if correct => {
+                // CHOCO-style relaxed, mean-conserving combine:
+                // x + γ(Σ_j r_j x̂_j − (1 − w_self) x̂_self).
+                let gamma = self.comp.spec().gossip_gamma;
+                for w in ws.iter_mut() {
+                    *w *= gamma;
+                }
+                parts.push(est);
+                ws.push(-gamma * (1.0 - self_weight as f32));
+                self.combine_hotpath(data, 1.0, &parts, &ws)
+            }
+            _ => self.combine_hotpath(data, self_weight as f32, &parts, &ws),
+        };
         drop(parts);
         for (_, y) in incoming {
-            self.reclaim_payload(y);
+            self.recycle(y);
         }
         self.defer_reclaim(shared);
-        self.timeline.record(me, "neighbor_allreduce", "comm", wall, v0, self.vtime());
         Ok(out)
     }
 

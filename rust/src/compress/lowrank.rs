@@ -1,0 +1,222 @@
+//! PowerGossip-style low-rank compression.
+//!
+//! The flat tensor is viewed as an implicitly zero-padded `n × m` matrix
+//! (`n = ⌈√d⌉`, `m = ⌈d / n⌉`) and approximated by a rank-`r` factor pair
+//! from **one power iteration** (Vogels et al., 2020): `P = M Q₀` with a
+//! random Gaussian start `Q₀`, `P` orthonormalized by modified
+//! Gram–Schmidt, then `Q = Mᵀ P`, and the reconstruction is `P Qᵀ`. One
+//! iteration is cheap (O(d·r)) and, combined with error feedback carrying
+//! the approximation error forward, converges like the exact projection in
+//! gossip averaging.
+//!
+//! Wire layout ([`super::TAG_LOWRANK`]):
+//!
+//! ```text
+//! [TAG_LOWRANK, d, r, n, m, P (n·r row-major), Q (m·r row-major)]
+//! ```
+
+use super::{bits, encode_dense, word, Compressor, TAG_LOWRANK};
+use crate::rng::Rng;
+
+/// Words for a rank-`r` stream over an `n × m` view.
+fn lowrank_words(r: usize, n: usize, m: usize) -> usize {
+    5 + r * (n + m)
+}
+
+/// Near-square view of a `d`-element tensor: `(rows, cols)`.
+fn view_shape(d: usize) -> (usize, usize) {
+    let n = (d as f64).sqrt().ceil() as usize;
+    let m = d.div_ceil(n.max(1)).max(1);
+    (n.max(1), m)
+}
+
+/// Row `i` of the implicitly padded matrix view (may be shorter than `m`
+/// for the last row; fully out-of-range rows are empty).
+fn row(data: &[f32], i: usize, m: usize) -> &[f32] {
+    let lo = (i * m).min(data.len());
+    let hi = ((i + 1) * m).min(data.len());
+    &data[lo..hi]
+}
+
+/// Decode a [`TAG_LOWRANK`] stream: `out = P Qᵀ` truncated to `d`.
+pub(super) fn decode(wire: &[f32], d: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+    anyhow::ensure!(wire.len() >= 5, "low-rank stream shorter than its header");
+    let r = bits(wire[2]) as usize;
+    let n = bits(wire[3]) as usize;
+    let m = bits(wire[4]) as usize;
+    anyhow::ensure!(n > 0 && m > 0 && n * m >= d, "low-rank view {n}x{m} cannot cover {d}");
+    anyhow::ensure!(
+        wire.len() == lowrank_words(r, n, m),
+        "low-rank stream has {} words, expected {} for r = {r}, view {n}x{m}",
+        wire.len(),
+        lowrank_words(r, n, m)
+    );
+    let p = &wire[5..5 + n * r];
+    let q = &wire[5 + n * r..];
+    out.reserve(d);
+    for i in 0..n {
+        let pi = &p[i * r..(i + 1) * r];
+        for j in 0..m {
+            if i * m + j >= d {
+                return Ok(());
+            }
+            let qj = &q[j * r..(j + 1) * r];
+            let mut acc = 0.0f32;
+            for t in 0..r {
+                acc += pi[t] * qj[t];
+            }
+            out.push(acc);
+        }
+    }
+    Ok(())
+}
+
+/// Rank-`r` power-iteration compressor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LowRank {
+    /// Target rank of the factor pair (clamped to `min(n, m)` of the view).
+    pub rank: usize,
+}
+
+impl Compressor for LowRank {
+    fn name(&self) -> &'static str {
+        "lowrank"
+    }
+
+    fn encoded_cap(&self, d: usize) -> usize {
+        let (n, m) = view_shape(d);
+        lowrank_words(self.rank.max(1).min(n.min(m)), n, m)
+    }
+
+    fn encode(&self, data: &[f32], rng: &mut Rng, out: &mut Vec<f32>) {
+        let d = data.len();
+        let (n, m) = view_shape(d);
+        let r = self.rank.max(1).min(n.min(m));
+        if d == 0 || lowrank_words(r, n, m) >= d + 2 {
+            return encode_dense(data, out);
+        }
+        // Q0: random m x r start (Gaussian so no column is degenerate).
+        let q0: Vec<f32> = rng.normal_vec(m * r);
+        // P = M Q0 (n x r), rows of M streamed once.
+        let mut p = vec![0.0f32; n * r];
+        for i in 0..n {
+            let mi = row(data, i, m);
+            let pi = &mut p[i * r..(i + 1) * r];
+            for (j, &x) in mi.iter().enumerate() {
+                let qj = &q0[j * r..(j + 1) * r];
+                for t in 0..r {
+                    pi[t] += x * qj[t];
+                }
+            }
+        }
+        // Orthonormalize the columns of P (modified Gram–Schmidt). A
+        // degenerate column (e.g. zero input) is zeroed, contributing
+        // nothing to the reconstruction.
+        for c in 0..r {
+            for prev in 0..c {
+                let mut dot = 0.0f64;
+                for i in 0..n {
+                    dot += p[i * r + c] as f64 * p[i * r + prev] as f64;
+                }
+                for i in 0..n {
+                    p[i * r + c] -= (dot as f32) * p[i * r + prev];
+                }
+            }
+            let norm: f64 =
+                (0..n).map(|i| p[i * r + c] as f64 * p[i * r + c] as f64).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                let inv = (1.0 / norm) as f32;
+                for i in 0..n {
+                    p[i * r + c] *= inv;
+                }
+            } else {
+                for i in 0..n {
+                    p[i * r + c] = 0.0;
+                }
+            }
+        }
+        // Q = M^T P (m x r), rows of M streamed once.
+        let mut q = vec![0.0f32; m * r];
+        for i in 0..n {
+            let mi = row(data, i, m);
+            let pi = &p[i * r..(i + 1) * r];
+            for (j, &x) in mi.iter().enumerate() {
+                let qj = &mut q[j * r..(j + 1) * r];
+                for t in 0..r {
+                    qj[t] += x * pi[t];
+                }
+            }
+        }
+        out.push(word(TAG_LOWRANK));
+        out.push(word(d as u32));
+        out.push(word(r as u32));
+        out.push(word(n as u32));
+        out.push(word(m as u32));
+        out.extend_from_slice(&p);
+        out.extend_from_slice(&q);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode_into;
+    use super::*;
+    use crate::tensor::max_abs_diff;
+
+    fn roundtrip(rank: usize, data: &[f32]) -> (Vec<f32>, usize) {
+        let comp = LowRank { rank };
+        let mut rng = Rng::new(99);
+        let mut wire = Vec::new();
+        comp.encode(data, &mut rng, &mut wire);
+        let mut out = Vec::new();
+        decode_into(&wire, &mut out).unwrap();
+        (out, wire.len())
+    }
+
+    #[test]
+    fn exact_on_rank_one_structure() {
+        // data laid out as an outer product u v^T over the 16x16 view:
+        // a single power iteration recovers a rank-1 matrix exactly.
+        let n = 16;
+        let u: Vec<f32> = (0..n).map(|i| 0.5 + (i as f32) * 0.1).collect();
+        let v: Vec<f32> = (0..n).map(|j| 1.0 - (j as f32) * 0.05).collect();
+        let data: Vec<f32> =
+            (0..n * n).map(|idx| u[idx / n] * v[idx % n]).collect();
+        let (out, words) = roundtrip(1, &data);
+        assert_eq!(out.len(), data.len());
+        assert!(words < data.len() / 4, "rank-1 stream should be small");
+        assert!(
+            max_abs_diff(&data, &out) < 1e-3,
+            "rank-1 input not recovered: err {}",
+            max_abs_diff(&data, &out)
+        );
+    }
+
+    #[test]
+    fn zero_input_reconstructs_zero() {
+        let data = vec![0.0f32; 300];
+        let (out, _) = roundtrip(2, &data);
+        assert_eq!(out, data, "degenerate (zero) input must decode to zero");
+    }
+
+    #[test]
+    fn reconstruction_never_exceeds_input_energy_much() {
+        // P orthonormal and Q = M^T P make P Q^T a projection of M: its
+        // Frobenius norm cannot exceed ||M||_F (up to f32 slack).
+        let data: Vec<f32> = (0..500).map(|i| ((i * 37) % 113) as f32 * 0.1 - 5.0).collect();
+        let (out, _) = roundtrip(3, &data);
+        let e_in: f64 = data.iter().map(|x| (*x as f64).powi(2)).sum();
+        let e_out: f64 = out.iter().map(|x| (*x as f64).powi(2)).sum();
+        assert!(e_out <= e_in * 1.001, "projection energy grew: {e_out} > {e_in}");
+    }
+
+    #[test]
+    fn ragged_lengths_roundtrip_with_padding() {
+        for d in [5usize, 37, 101, 1023] {
+            let data: Vec<f32> = (0..d).map(|i| (i as f32).cos()).collect();
+            let (out, _) = roundtrip(2, &data);
+            assert_eq!(out.len(), d, "padded view must truncate back to d = {d}");
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,602 @@
+//! Communication compression (PowerGossip / DIGEST direction).
+//!
+//! BlueFog's throughput edge over Ring-Allreduce comes from cutting per-step
+//! communication cost; compression is the next lever on the same axis. This
+//! module provides a pluggable [`Compressor`] layer for the *neighbor
+//! averaging* path (the paper's partial averaging, eq. (5)), with
+//! **error feedback** so lossy compression stays convergent (Vogels et al.,
+//! PowerGossip 2020; Stich et al., sparsified SGD with memory):
+//!
+//! - [`TopK`] — keep the `k` largest-magnitude coordinates;
+//! - [`RandomK`] — keep `k` uniformly random coordinates (seeded via
+//!   [`crate::rng::Rng`], indices ride in the wire so peers need no shared
+//!   seed);
+//! - [`QuantizeU8`] — 8-bit linear quantization with per-block min/max;
+//! - [`LowRank`] — PowerGossip-style rank-`r` approximation via one power
+//!   iteration on the tensor reshaped to a near-square matrix.
+//!
+//! ## Wire format
+//!
+//! The transport moves `Vec<f32>` payloads, so every encoded stream is a
+//! self-describing `f32` sequence: word 0 is the scheme tag and word 1 the
+//! original element count, both stored bit-exactly via `f32::from_bits`
+//! (never arithmetic on them), followed by scheme-specific words. Every
+//! encoder falls back to [`TAG_DENSE`] (tag + length + raw values) whenever
+//! its encoding would not actually shrink the message — so tiny tensors
+//! (e.g. the scalar push-sum weight) pass through essentially unharmed and
+//! [`decode_into`] never needs the sender's [`CompressionSpec`].
+//!
+//! ## Error feedback by difference tracking
+//!
+//! A lossy compressor applied to *raw iterates* makes gossip oscillate: a
+//! top-k message is zero on most coordinates most rounds, so receivers see
+//! spiky tensors and partial averaging never settles. The convergent
+//! construction (CHOCO-Gossip; PowerGossip uses the same skeleton) is
+//! **difference transmission**: for each stream the sender keeps the
+//! estimate `x̂` its receivers hold, transmits `wire = C(x − x̂)`, and both
+//! sides advance `x̂ ← x̂ + decode(wire)`. The untransmitted remainder
+//! `x − x̂` *is* the error-feedback residual — it is carried into the next
+//! round's difference automatically, shrinks geometrically once the
+//! iterates settle, and drives the cumulative decoded stream to `x` on a
+//! fixed input. [`EfState`] owns both sides' estimates, keyed per *stream*:
+//! `(direction, logical stream id, peer, tensor length)` — scaled
+//! per-neighbor sends track per-neighbor estimates, an unscaled fan-out
+//! tracks one shared estimate, and the stream id separates interleaved
+//! same-length collectives (e.g. gradient tracking's `x` and `y`
+//! exchanges). The collective layer additionally applies a self-correction
+//! term (`x + Σ_j w_ij x̂_j − (1 − w_ii) x̂_self`) so that under
+//! doubly-stochastic weights the *network mean is conserved exactly* even
+//! while the estimates lag.
+//!
+//! [`CompressionState`] bundles a built compressor with its [`EfState`]
+//! and RNG; one lives on [`crate::context::NodeContext`] for blocking
+//! collectives and one on each communication thread for non-blocking fused
+//! packs, so the two endpoints of a node never share streams. Wire and
+//! decode scratch come from the PR 2 buffer pool at the call sites;
+//! `EfState` reuses its internal staging buffers across rounds.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::rng::Rng;
+
+mod lowrank;
+mod quant;
+mod topk;
+
+pub use lowrank::LowRank;
+pub use quant::QuantizeU8;
+pub use topk::{RandomK, TopK};
+
+/// Wire tag: dense passthrough (`[tag, d, x_0..x_{d-1}]`).
+pub const TAG_DENSE: u32 = 0;
+/// Wire tag: sparse index/value stream (TopK / RandomK).
+pub const TAG_SPARSE: u32 = 1;
+/// Wire tag: per-block min/max u8 quantization.
+pub const TAG_QUANT: u32 = 2;
+/// Wire tag: low-rank factor pair.
+pub const TAG_LOWRANK: u32 = 3;
+
+/// Store a `u32` bit-exactly inside an `f32` wire word.
+#[inline]
+pub(crate) fn word(u: u32) -> f32 {
+    f32::from_bits(u)
+}
+
+/// Recover a `u32` stored with [`word`].
+#[inline]
+pub(crate) fn bits(x: f32) -> u32 {
+    x.to_bits()
+}
+
+/// Append a dense passthrough encoding of `data` to `out`.
+pub(crate) fn encode_dense(data: &[f32], out: &mut Vec<f32>) {
+    out.push(word(TAG_DENSE));
+    out.push(word(data.len() as u32));
+    out.extend_from_slice(data);
+}
+
+/// A communication compressor: encodes a flat tensor into the
+/// self-describing wire format documented at module level.
+///
+/// Implementations are stateless parameter bundles (safe to share across
+/// threads behind an `Arc`); all mutable state — error-feedback residuals,
+/// RNG — lives in [`CompressionState`] so one compressor can serve many
+/// streams.
+pub trait Compressor: Send + Sync {
+    /// Short scheme name for logs and bench JSON.
+    fn name(&self) -> &'static str;
+
+    /// Upper bound on the encoded word count for a `d`-element input
+    /// (scratch-sizing hint; the dense fallback caps it at `d + 2`).
+    fn encoded_cap(&self, d: usize) -> usize;
+
+    /// Append the encoded stream for `data` to `out` (the caller clears).
+    /// Must fall back to [`encode_dense`] whenever the scheme would not
+    /// shrink the message, so decoding never loses information on tensors
+    /// too small to compress.
+    fn encode(&self, data: &[f32], rng: &mut Rng, out: &mut Vec<f32>);
+}
+
+/// Decode any wire stream produced by a [`Compressor`] into `out`
+/// (cleared and resized to the original element count).
+///
+/// Zero-filled coordinates of sparse schemes are materialized, so the
+/// result always has exactly the original length.
+pub fn decode_into(wire: &[f32], out: &mut Vec<f32>) -> anyhow::Result<()> {
+    anyhow::ensure!(wire.len() >= 2, "compressed stream shorter than its header");
+    let tag = bits(wire[0]);
+    let d = bits(wire[1]) as usize;
+    out.clear();
+    match tag {
+        TAG_DENSE => {
+            anyhow::ensure!(
+                wire.len() == 2 + d,
+                "dense stream length {} != header {}",
+                wire.len() - 2,
+                d
+            );
+            out.extend_from_slice(&wire[2..]);
+        }
+        TAG_SPARSE => topk::decode(wire, d, out)?,
+        TAG_QUANT => quant::decode(wire, d, out)?,
+        TAG_LOWRANK => lowrank::decode(wire, d, out)?,
+        t => anyhow::bail!("unknown compression tag {t}"),
+    }
+    Ok(())
+}
+
+/// Original element count of an encoded stream (header word 1).
+pub fn decoded_len(wire: &[f32]) -> Option<usize> {
+    if wire.len() < 2 {
+        None
+    } else {
+        Some(bits(wire[1]) as usize)
+    }
+}
+
+/// Which compression scheme the communication stack applies to neighbor
+/// averaging (see [`CompressionSpec`] for the error-feedback knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CompressionMethod {
+    /// No compression — the PR 2 dense hot path, bit-for-bit.
+    #[default]
+    None,
+    /// Keep the `k` largest-magnitude coordinates.
+    TopK {
+        /// Coordinates kept per message (clamped to the tensor length).
+        k: usize,
+    },
+    /// Keep `k` uniformly random coordinates (fresh draw per message).
+    RandomK {
+        /// Coordinates kept per message (clamped to the tensor length).
+        k: usize,
+    },
+    /// 8-bit linear quantization with per-block min/max.
+    QuantizeU8 {
+        /// Elements per quantization block (min 4).
+        block: usize,
+    },
+    /// PowerGossip-style rank-`r` factorization via one power iteration.
+    LowRank {
+        /// Target rank of the factor pair.
+        rank: usize,
+    },
+}
+
+/// Default consensus step size of the corrected compressed combine
+/// (CHOCO's `γ`): numerically validated stable for top-k down to `k = d/16`
+/// on the exponential-2 topologies; `γ = 1` provably diverges there.
+pub const DEFAULT_GOSSIP_GAMMA: f32 = 0.2;
+
+/// Compression configuration threaded from [`crate::launcher::SpmdConfig`]
+/// through [`crate::context::NodeContext`] into the collective stack.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CompressionSpec {
+    /// Scheme applied to neighbor-averaging payloads.
+    pub method: CompressionMethod,
+    /// Track per-stream difference estimates (error feedback); required
+    /// for convergent averaging under every lossy method — without it the
+    /// raw-iterate compression is a biased ablation mode.
+    pub error_feedback: bool,
+    /// Consensus step size `γ` of the corrected combine
+    /// `x + γ(Σ_j w_ij x̂_j − (1 − w_ii) x̂_self)`: the static compressed
+    /// exchange mixes with the lazy matrix `I + γ(W − I)` (same fixed
+    /// points and mean conservation as `W`, slower mixing), because `γ = 1`
+    /// destabilizes aggressive sparsifiers — the tracked estimates lag the
+    /// iterates and the lag feeds back. Ignored when `error_feedback` is
+    /// off or the spec is `None`.
+    pub gossip_gamma: f32,
+}
+
+impl CompressionSpec {
+    /// No compression (the default; identical to the PR 2 path).
+    pub fn none() -> Self {
+        CompressionSpec::default()
+    }
+
+    fn with_method(method: CompressionMethod) -> Self {
+        CompressionSpec { method, error_feedback: true, gossip_gamma: DEFAULT_GOSSIP_GAMMA }
+    }
+
+    /// Top-`k` sparsification with error feedback.
+    pub fn top_k(k: usize) -> Self {
+        Self::with_method(CompressionMethod::TopK { k })
+    }
+
+    /// Random-`k` sparsification with error feedback.
+    pub fn random_k(k: usize) -> Self {
+        Self::with_method(CompressionMethod::RandomK { k })
+    }
+
+    /// Per-block u8 quantization with error feedback.
+    pub fn quantize_u8(block: usize) -> Self {
+        Self::with_method(CompressionMethod::QuantizeU8 { block })
+    }
+
+    /// Rank-`r` low-rank compression with error feedback.
+    pub fn low_rank(rank: usize) -> Self {
+        Self::with_method(CompressionMethod::LowRank { rank })
+    }
+
+    /// Disable error feedback (ablation runs).
+    pub fn without_error_feedback(mut self) -> Self {
+        self.error_feedback = false;
+        self
+    }
+
+    /// Override the consensus step size (see
+    /// [`CompressionSpec::gossip_gamma`]; near-lossless codecs tolerate
+    /// larger values, up to 1.0).
+    pub fn with_gossip_gamma(mut self, gamma: f32) -> Self {
+        assert!(gamma > 0.0 && gamma <= 1.0, "gossip gamma must be in (0, 1]");
+        self.gossip_gamma = gamma;
+        self
+    }
+
+    /// True when no compression is configured.
+    pub fn is_none(&self) -> bool {
+        self.method == CompressionMethod::None
+    }
+
+    /// Instantiate the configured [`Compressor`] (None when disabled).
+    pub fn build(&self) -> Option<Arc<dyn Compressor>> {
+        match self.method {
+            CompressionMethod::None => None,
+            CompressionMethod::TopK { k } => Some(Arc::new(TopK { k })),
+            CompressionMethod::RandomK { k } => Some(Arc::new(RandomK { k })),
+            CompressionMethod::QuantizeU8 { block } => Some(Arc::new(QuantizeU8 { block })),
+            CompressionMethod::LowRank { rank } => Some(Arc::new(LowRank { rank })),
+        }
+    }
+
+    /// Human-readable label for logs and bench JSON.
+    pub fn label(&self) -> String {
+        let base = match self.method {
+            CompressionMethod::None => return "dense".into(),
+            CompressionMethod::TopK { k } => format!("topk(k={k}"),
+            CompressionMethod::RandomK { k } => format!("randk(k={k}"),
+            CompressionMethod::QuantizeU8 { block } => format!("q8(block={block}"),
+            CompressionMethod::LowRank { rank } => format!("lowrank(r={rank}"),
+        };
+        if self.error_feedback {
+            format!("{base},ef)")
+        } else {
+            format!("{base})")
+        }
+    }
+}
+
+/// Per-stream transmitted-estimate state (the error-feedback memory) plus
+/// reusable staging buffers.
+///
+/// A *stream* is one ordered sequence of compressed messages between a
+/// sender and its receiver(s); both ends key it identically (see
+/// [`crate::context::ef_key`]) and advance their copy of the estimate with
+/// every message, so the send-side `x̂` always equals what receivers hold.
+#[derive(Default)]
+pub struct EfState {
+    /// Send side: per-stream estimate of what this node's receivers hold.
+    send_est: HashMap<u64, Vec<f32>>,
+    /// Receive side: per-stream reconstruction of the sender's tensor.
+    recv_est: HashMap<u64, Vec<f32>>,
+    /// Staging buffer for the difference `x − x̂` (reused across rounds).
+    staged: Vec<f32>,
+    /// Self-decode buffer for the estimate update (reused across rounds).
+    decoded: Vec<f32>,
+}
+
+impl EfState {
+    /// Empty state (no streams yet).
+    pub fn new() -> Self {
+        EfState::default()
+    }
+
+    /// Number of send-side streams currently tracked.
+    pub fn send_streams(&self) -> usize {
+        self.send_est.len()
+    }
+
+    /// Number of receive-side streams currently tracked.
+    pub fn recv_streams(&self) -> usize {
+        self.recv_est.len()
+    }
+
+    /// The residual of send stream `key` against `data`: `‖data − x̂‖₂`.
+    /// This is the quantity error feedback drives to zero on a fixed input
+    /// (and keeps bounded on a moving one). Missing stream ⇒ `‖data‖₂`.
+    pub fn residual_norm_for(&self, key: u64, data: &[f32]) -> f64 {
+        match self.send_est.get(&key) {
+            Some(est) if est.len() == data.len() => data
+                .iter()
+                .zip(est)
+                .map(|(x, e)| (*x as f64 - *e as f64).powi(2))
+                .sum::<f64>()
+                .sqrt(),
+            _ => data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt(),
+        }
+    }
+
+    /// Drop all stream state (e.g. after a discontinuous topology change,
+    /// which breaks the send/receive stream pairing).
+    pub fn clear(&mut self) {
+        self.send_est.clear();
+        self.recv_est.clear();
+    }
+}
+
+/// All mutable compression state of one communication endpoint: the built
+/// compressor, its [`EfState`] stream estimates and the RNG feeding
+/// [`RandomK`] index draws and [`LowRank`] power-iteration starts.
+///
+/// Owned by [`crate::context::NodeContext`] (blocking collectives) and by
+/// each communication thread (non-blocking fused packs), so the two
+/// endpoints of a node never share streams.
+pub struct CompressionState {
+    spec: CompressionSpec,
+    comp: Option<Arc<dyn Compressor>>,
+    ef: EfState,
+    rng: Rng,
+}
+
+impl CompressionState {
+    /// Build the state for `spec`; `seed` decorrelates this endpoint's RNG.
+    pub fn new(spec: CompressionSpec, seed: u64) -> Self {
+        CompressionState { spec, comp: spec.build(), ef: EfState::new(), rng: Rng::new(seed) }
+    }
+
+    /// The configured spec.
+    pub fn spec(&self) -> CompressionSpec {
+        self.spec
+    }
+
+    /// True when a compressor is active (spec method != `None`).
+    pub fn enabled(&self) -> bool {
+        self.comp.is_some()
+    }
+
+    /// The error-feedback state (telemetry / tests).
+    pub fn ef(&self) -> &EfState {
+        &self.ef
+    }
+
+    /// Scratch-sizing hint for a `d`-element encode.
+    pub fn encoded_cap(&self, d: usize) -> usize {
+        match &self.comp {
+            Some(c) => c.encoded_cap(d).min(d + 2),
+            None => d,
+        }
+    }
+
+    /// Encode `data` for send stream `key` into `out` (cleared first).
+    ///
+    /// With error feedback the *difference* against the stream's tracked
+    /// estimate is compressed and the estimate advanced by the decoded
+    /// message (so it stays equal to the receivers' copy); the residual
+    /// `data − x̂` is implicitly carried into the next round. A length
+    /// change resets the stream. Without error feedback the raw tensor is
+    /// compressed statelessly (a biased ablation mode). Panics if
+    /// compression is disabled — callers gate on
+    /// [`CompressionState::enabled`] so the dense path stays bit-identical.
+    pub fn encode(&mut self, key: u64, data: &[f32], out: &mut Vec<f32>) {
+        let comp = self.comp.as_ref().expect("encode called with compression disabled");
+        out.clear();
+        if !self.spec.error_feedback {
+            comp.encode(data, &mut self.rng, out);
+            return;
+        }
+        let est = self.ef.send_est.entry(key).or_default();
+        if est.len() != data.len() {
+            est.clear();
+            est.resize(data.len(), 0.0);
+        }
+        self.ef.staged.clear();
+        self.ef.staged.extend(data.iter().zip(est.iter()).map(|(x, e)| x - e));
+        comp.encode(&self.ef.staged, &mut self.rng, out);
+        decode_into(out, &mut self.ef.decoded)
+            .expect("self-decode of a freshly encoded stream cannot fail");
+        debug_assert_eq!(self.ef.decoded.len(), data.len());
+        for (e, y) in est.iter_mut().zip(self.ef.decoded.iter()) {
+            *e += y;
+        }
+    }
+
+    /// Decode a received wire stream for receive stream `key` into `out`:
+    /// with error feedback, advances this side's estimate by the decoded
+    /// difference and returns the estimate (the reconstructed tensor);
+    /// without, decodes the raw message.
+    pub fn decode(&mut self, key: u64, wire: &[f32], out: &mut Vec<f32>) -> anyhow::Result<()> {
+        if !self.spec.error_feedback {
+            return decode_into(wire, out);
+        }
+        decode_into(wire, &mut self.ef.decoded)?;
+        let d = self.ef.decoded.len();
+        let est = self.ef.recv_est.entry(key).or_default();
+        if est.len() != d {
+            est.clear();
+            est.resize(d, 0.0);
+        }
+        for (e, y) in est.iter_mut().zip(self.ef.decoded.iter()) {
+            *e += y;
+        }
+        out.clear();
+        out.extend_from_slice(est);
+        Ok(())
+    }
+
+    /// The send-side estimate of stream `key` (what this stream's
+    /// receivers currently hold) — the collective layer's self-correction
+    /// term reads it right after the corresponding [`Self::encode`].
+    pub fn estimate(&self, key: u64) -> Option<&[f32]> {
+        self.ef.send_est.get(&key).map(|v| v.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::max_abs_diff;
+
+    fn roundtrip(comp: &dyn Compressor, data: &[f32]) -> Vec<f32> {
+        let mut rng = Rng::new(42);
+        let mut wire = Vec::new();
+        comp.encode(data, &mut rng, &mut wire);
+        let mut out = Vec::new();
+        decode_into(&wire, &mut out).unwrap();
+        assert_eq!(decoded_len(&wire), Some(data.len()));
+        out
+    }
+
+    #[test]
+    fn dense_fallback_is_lossless_on_tiny_tensors() {
+        for comp in [
+            &TopK { k: 4 } as &dyn Compressor,
+            &RandomK { k: 4 },
+            &QuantizeU8 { block: 64 },
+            &LowRank { rank: 2 },
+        ] {
+            let data = [1.5f32, -2.0, 0.25];
+            let out = roundtrip(comp, &data);
+            assert_eq!(out, data.to_vec(), "{} broke the scalar passthrough", comp.name());
+        }
+    }
+
+    #[test]
+    fn empty_tensor_roundtrips() {
+        let out = roundtrip(&TopK { k: 3 }, &[]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn topk_full_k_is_bitwise_lossless() {
+        let data: Vec<f32> = (0..257).map(|i| ((i * 37) % 101) as f32 - 50.5).collect();
+        let out = roundtrip(&TopK { k: data.len() }, &data);
+        assert_eq!(out, data, "k = d must reproduce the input bit-for-bit");
+    }
+
+    #[test]
+    fn spec_build_and_label() {
+        assert!(CompressionSpec::none().build().is_none());
+        assert!(CompressionSpec::top_k(8).build().is_some());
+        assert_eq!(CompressionSpec::none().label(), "dense");
+        assert_eq!(CompressionSpec::top_k(8).label(), "topk(k=8,ef)");
+        assert_eq!(
+            CompressionSpec::low_rank(2).without_error_feedback().label(),
+            "lowrank(r=2)"
+        );
+    }
+
+    #[test]
+    fn ef_difference_tracking_converges_on_fixed_vector() {
+        // TopK(k=1) on a fixed 8-vector: every message transmits the top
+        // coordinate of the remaining difference exactly, so after d
+        // messages the estimate equals the vector and the residual is 0.
+        let v = [4.0f32, 3.0, 2.0, 1.0, 0.5, 0.25, 0.1, 0.05];
+        // d + 2 = 10 > 3 + 2 = 5 sparse words, so k=1 stays sparse.
+        let mut send = CompressionState::new(CompressionSpec::top_k(1), 7);
+        let mut recv = CompressionState::new(CompressionSpec::top_k(1), 8);
+        let mut wire = Vec::new();
+        let mut out = Vec::new();
+        for round in 1..=v.len() {
+            send.encode(1, &v, &mut wire);
+            recv.decode(1, &wire, &mut out).unwrap();
+            let resid = send.ef().residual_norm_for(1, &v);
+            if round == v.len() {
+                assert_eq!(resid, 0.0, "residual must reach exactly 0 after d messages");
+                assert_eq!(out, v.to_vec(), "receiver estimate must equal the vector");
+            }
+        }
+        assert_eq!(send.ef().send_streams(), 1);
+        assert_eq!(recv.ef().recv_streams(), 1);
+    }
+
+    #[test]
+    fn ef_receiver_estimate_always_matches_sender_estimate() {
+        // The invariant the whole scheme rests on: after every message the
+        // receiver's reconstruction equals the sender's tracked estimate —
+        // even when the input changes every round.
+        let mut send = CompressionState::new(CompressionSpec::quantize_u8(16), 21);
+        let mut recv = CompressionState::new(CompressionSpec::quantize_u8(16), 22);
+        let mut rng = Rng::new(5);
+        let mut wire = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            let data = rng.normal_vec(160);
+            send.encode(3, &data, &mut wire);
+            recv.decode(3, &wire, &mut out).unwrap();
+            assert_eq!(
+                send.estimate(3).unwrap(),
+                &out[..],
+                "send/receive estimates diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn ef_streams_are_independent_and_reset_on_len_change() {
+        let mut st = CompressionState::new(CompressionSpec::top_k(1), 11);
+        let mut wire = Vec::new();
+        st.encode(1, &[1.0; 64], &mut wire);
+        st.encode(2, &[8.0; 16], &mut wire);
+        assert_eq!(st.ef().send_streams(), 2);
+        assert!(st.estimate(1).unwrap().len() == 64);
+        // Length change on stream 1 resets only that stream's estimate.
+        st.encode(1, &[0.0; 8], &mut wire);
+        assert_eq!(st.ef().send_streams(), 2);
+        assert_eq!(st.estimate(1).unwrap().len(), 8);
+        assert_eq!(st.estimate(2).unwrap().len(), 16);
+    }
+
+    #[test]
+    fn without_ef_keeps_no_state() {
+        let mut st =
+            CompressionState::new(CompressionSpec::top_k(1).without_error_feedback(), 13);
+        let mut wire = Vec::new();
+        let mut out = Vec::new();
+        st.encode(1, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &mut wire);
+        st.decode(1, &wire, &mut out).unwrap();
+        assert_eq!(st.ef().send_streams(), 0);
+        assert_eq!(st.ef().recv_streams(), 0);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_streams() {
+        let mut out = Vec::new();
+        assert!(decode_into(&[], &mut out).is_err());
+        assert!(decode_into(&[word(99), word(4)], &mut out).is_err());
+        // Dense header promising more words than present.
+        assert!(decode_into(&[word(TAG_DENSE), word(10), 1.0], &mut out).is_err());
+    }
+
+    #[test]
+    fn quantize_roundtrip_not_worse_than_block_step() {
+        let data: Vec<f32> = (0..1000).map(|i| ((i * 13) % 997) as f32 / 100.0 - 4.0).collect();
+        let out = roundtrip(&QuantizeU8 { block: 128 }, &data);
+        // Per-block error bound: half a quantization step, i.e.
+        // (max - min) / 255 / 2; assert the loose full-step bound.
+        let step = (data.iter().cloned().fold(f32::MIN, f32::max)
+            - data.iter().cloned().fold(f32::MAX, f32::min)) as f64
+            / 255.0;
+        assert!(max_abs_diff(&data, &out) <= step, "quantization error above one step");
+    }
+}

@@ -1,0 +1,181 @@
+//! 8-bit linear quantization with per-block min/max.
+//!
+//! Wire layout ([`super::TAG_QUANT`]):
+//!
+//! ```text
+//! [TAG_QUANT, d, block,
+//!  min_0, max_0, codes_0...,      // block 0: ceil(len_0 / 4) packed words
+//!  min_1, max_1, codes_1..., ...]
+//! ```
+//!
+//! Each block of `block` elements (the last may be short) stores its f32
+//! min/max untouched plus one u8 code per element, four codes packed per
+//! wire word ([`super::word`], little-endian within the word). Asymptotic
+//! ratio just under 4× (codes) minus the per-block min/max overhead; the
+//! reconstruction error is at most half a step, `(max − min) / 510`, per
+//! coordinate.
+
+use super::{bits, encode_dense, word, Compressor, TAG_QUANT};
+use crate::rng::Rng;
+
+/// Words used by one block of `len` elements: min + max + packed codes.
+fn block_words(len: usize) -> usize {
+    2 + len.div_ceil(4)
+}
+
+/// Total words for a `d`-element tensor at block size `b`.
+fn quant_words(d: usize, b: usize) -> usize {
+    let full = d / b;
+    let tail = d % b;
+    3 + full * block_words(b) + if tail > 0 { block_words(tail) } else { 0 }
+}
+
+/// Decode a [`TAG_QUANT`] stream.
+pub(super) fn decode(wire: &[f32], d: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+    anyhow::ensure!(wire.len() >= 3, "quant stream shorter than its header");
+    let b = bits(wire[2]) as usize;
+    anyhow::ensure!(b >= 4, "quant block size {b} below minimum 4");
+    anyhow::ensure!(
+        wire.len() == quant_words(d, b),
+        "quant stream has {} words, expected {} for d = {d}, block = {b}",
+        wire.len(),
+        quant_words(d, b)
+    );
+    out.reserve(d);
+    let mut w = 3;
+    let mut lo = 0;
+    while lo < d {
+        let len = b.min(d - lo);
+        let min = wire[w];
+        let max = wire[w + 1];
+        let scale = (max - min) / 255.0;
+        w += 2;
+        for j in 0..len {
+            let packed = bits(wire[w + j / 4]);
+            let q = (packed >> (8 * (j % 4))) & 0xff;
+            out.push(min + q as f32 * scale);
+        }
+        w += len.div_ceil(4);
+        lo += len;
+    }
+    Ok(())
+}
+
+/// Per-block min/max 8-bit linear quantizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantizeU8 {
+    /// Elements per quantization block (clamped up to 4).
+    pub block: usize,
+}
+
+impl Compressor for QuantizeU8 {
+    fn name(&self) -> &'static str {
+        "q8"
+    }
+
+    fn encoded_cap(&self, d: usize) -> usize {
+        quant_words(d, self.block.max(4))
+    }
+
+    fn encode(&self, data: &[f32], _rng: &mut Rng, out: &mut Vec<f32>) {
+        let d = data.len();
+        let b = self.block.max(4);
+        if d == 0 || quant_words(d, b) >= d + 2 {
+            return encode_dense(data, out);
+        }
+        out.push(word(TAG_QUANT));
+        out.push(word(d as u32));
+        out.push(word(b as u32));
+        let mut lo = 0;
+        while lo < d {
+            let chunk = &data[lo..(lo + b).min(d)];
+            let min = chunk.iter().cloned().fold(f32::MAX, f32::min);
+            let max = chunk.iter().cloned().fold(f32::MIN, f32::max);
+            out.push(min);
+            out.push(max);
+            let inv_step = if max > min { 255.0 / (max - min) } else { 0.0 };
+            let mut packed: u32 = 0;
+            for (j, &x) in chunk.iter().enumerate() {
+                let q = (((x - min) * inv_step).round() as u32).min(255);
+                packed |= q << (8 * (j % 4));
+                if j % 4 == 3 {
+                    out.push(word(packed));
+                    packed = 0;
+                }
+            }
+            if chunk.len() % 4 != 0 {
+                out.push(word(packed));
+            }
+            lo += chunk.len();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode_into;
+    use super::*;
+    use crate::tensor::max_abs_diff;
+
+    fn roundtrip(block: usize, data: &[f32]) -> (Vec<f32>, usize) {
+        let comp = QuantizeU8 { block };
+        let mut rng = Rng::new(5);
+        let mut wire = Vec::new();
+        comp.encode(data, &mut rng, &mut wire);
+        let mut out = Vec::new();
+        decode_into(&wire, &mut out).unwrap();
+        (out, wire.len())
+    }
+
+    #[test]
+    fn error_bounded_by_half_step_per_block() {
+        let data: Vec<f32> = (0..513).map(|i| ((i * 71) % 257) as f32 * 0.031 - 4.0).collect();
+        let (out, words) = roundtrip(64, &data);
+        assert_eq!(out.len(), data.len());
+        assert_eq!(words, quant_words(513, 64));
+        // Global bound: half a step of the widest block plus f32 slack.
+        let lo = data.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = data.iter().cloned().fold(f32::MIN, f32::max);
+        let half_step = ((hi - lo) as f64) / 510.0;
+        assert!(
+            max_abs_diff(&data, &out) <= half_step * 1.01 + 1e-7,
+            "err {} above half-step bound {half_step}",
+            max_abs_diff(&data, &out)
+        );
+    }
+
+    #[test]
+    fn constant_block_is_exact() {
+        let data = vec![3.25f32; 100];
+        let (out, _) = roundtrip(16, &data);
+        assert_eq!(out, data, "max == min blocks must decode exactly");
+    }
+
+    #[test]
+    fn block_extremes_are_near_exact() {
+        // min maps to code 0 (bitwise exact); max maps to code 255, exact
+        // up to one rounding of the reconstructed step product.
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let (out, _) = roundtrip(64, &data);
+        assert_eq!(out[0], 0.0);
+        assert!((out[63] - 63.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn wire_is_about_four_times_smaller() {
+        let d = 4096;
+        let data: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+        let (_, words) = roundtrip(256, &data);
+        assert!(
+            (words as f64) < d as f64 / 3.5,
+            "quant stream {words} words not ~4x below {d}"
+        );
+    }
+
+    #[test]
+    fn tiny_input_falls_back_to_dense() {
+        let (out, words) = roundtrip(256, &[1.0, 2.0]);
+        assert_eq!(out, vec![1.0, 2.0]);
+        assert_eq!(words, 4);
+    }
+}

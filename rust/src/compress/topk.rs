@@ -1,0 +1,217 @@
+//! Sparse codecs: top-`k` and random-`k` coordinate selection.
+//!
+//! Shared wire layout ([`super::TAG_SPARSE`]):
+//!
+//! ```text
+//! [TAG_SPARSE, d, k, idx_0..idx_{k-1}, val_0..val_{k-1}]
+//! ```
+//!
+//! Indices are `u32`s stored bit-exactly ([`super::word`]) in ascending
+//! order, so a `k = d` stream reproduces its input bit-for-bit and the
+//! decode loop is a forward scatter. Neither codec rescales the kept values
+//! (no `d/k` unbiasing factor): the error-feedback residual carries the
+//! dropped mass instead, which is the variant PowerGossip-style analyses
+//! assume and the one that keeps `k = d` lossless.
+
+use super::{bits, encode_dense, word, Compressor, TAG_SPARSE};
+use crate::rng::Rng;
+
+/// Words needed for a sparse stream with `k` kept coordinates.
+fn sparse_words(k: usize) -> usize {
+    3 + 2 * k
+}
+
+/// Append the shared sparse wire layout for the chosen `idx` (ascending).
+fn encode_sparse(data: &[f32], idx: &[usize], out: &mut Vec<f32>) {
+    out.push(word(TAG_SPARSE));
+    out.push(word(data.len() as u32));
+    out.push(word(idx.len() as u32));
+    for &i in idx {
+        out.push(word(i as u32));
+    }
+    for &i in idx {
+        out.push(data[i]);
+    }
+}
+
+/// Decode a [`TAG_SPARSE`] stream (zero-filling dropped coordinates).
+pub(super) fn decode(wire: &[f32], d: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+    anyhow::ensure!(wire.len() >= 3, "sparse stream shorter than its header");
+    let k = bits(wire[2]) as usize;
+    anyhow::ensure!(
+        wire.len() == sparse_words(k),
+        "sparse stream has {} words, expected {} for k = {k}",
+        wire.len(),
+        sparse_words(k)
+    );
+    anyhow::ensure!(k <= d, "sparse stream keeps {k} of {d} coordinates");
+    out.resize(d, 0.0);
+    for x in out.iter_mut() {
+        *x = 0.0;
+    }
+    for j in 0..k {
+        let i = bits(wire[3 + j]) as usize;
+        anyhow::ensure!(i < d, "sparse index {i} out of bounds for length {d}");
+        out[i] = wire[3 + k + j];
+    }
+    Ok(())
+}
+
+/// Keep the `k` largest-magnitude coordinates (deterministic given the
+/// input; ties broken toward lower indices via the selection order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopK {
+    /// Coordinates kept per message (clamped to the tensor length).
+    pub k: usize,
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn encoded_cap(&self, d: usize) -> usize {
+        sparse_words(self.k.min(d))
+    }
+
+    fn encode(&self, data: &[f32], _rng: &mut Rng, out: &mut Vec<f32>) {
+        let d = data.len();
+        let k = self.k.min(d);
+        if d == 0 || sparse_words(k) >= d + 2 {
+            return encode_dense(data, out);
+        }
+        let mut idx: Vec<usize> = (0..d).collect();
+        if k > 0 {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                data[b].abs().total_cmp(&data[a].abs())
+            });
+        }
+        idx.truncate(k);
+        idx.sort_unstable();
+        encode_sparse(data, &idx, out);
+    }
+}
+
+/// Keep `k` uniformly random coordinates, freshly drawn per message from
+/// the encoding endpoint's [`Rng`]. The chosen indices travel in the wire,
+/// so sender and receiver need no coordinated seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RandomK {
+    /// Coordinates kept per message (clamped to the tensor length).
+    pub k: usize,
+}
+
+impl Compressor for RandomK {
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+
+    fn encoded_cap(&self, d: usize) -> usize {
+        sparse_words(self.k.min(d))
+    }
+
+    fn encode(&self, data: &[f32], rng: &mut Rng, out: &mut Vec<f32>) {
+        let d = data.len();
+        let k = self.k.min(d);
+        if d == 0 || sparse_words(k) >= d + 2 {
+            return encode_dense(data, out);
+        }
+        // Partial Fisher–Yates: the first k slots become a uniform sample
+        // of distinct indices.
+        let mut idx: Vec<usize> = (0..d).collect();
+        for i in 0..k {
+            let j = rng.usize_in(i, d);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx.sort_unstable();
+        encode_sparse(data, &idx, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{decode_into, Compressor};
+    use super::*;
+
+    fn roundtrip(comp: &dyn Compressor, data: &[f32]) -> (Vec<f32>, usize) {
+        let mut rng = Rng::new(1234);
+        let mut wire = Vec::new();
+        comp.encode(data, &mut rng, &mut wire);
+        let mut out = Vec::new();
+        decode_into(&wire, &mut out).unwrap();
+        (out, wire.len())
+    }
+
+    #[test]
+    fn topk_keeps_the_largest_and_zeroes_the_rest() {
+        let data = [0.1f32, -5.0, 0.2, 3.0, -0.3, 0.0, 4.0, -0.05];
+        let (out, words) = roundtrip(&TopK { k: 3 }, &data);
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 4.0, 0.0]);
+        assert_eq!(words, 3 + 2 * 3);
+    }
+
+    #[test]
+    fn topk_error_equals_dropped_mass() {
+        // ||x - C(x)||^2 is exactly the energy of the dropped coordinates,
+        // and top-k drops the smallest — so the error is bounded by any
+        // other (d - k)-subset's energy, in particular (d-k)/d * ||x||^2.
+        let data: Vec<f32> = (0..64).map(|i| ((i * 29) % 64) as f32 - 31.5).collect();
+        let (out, _) = roundtrip(&TopK { k: 16 }, &data);
+        let err: f64 = data.iter().zip(&out).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let energy: f64 = data.iter().map(|x| (*x as f64).powi(2)).sum();
+        assert!(err <= energy * (64.0 - 16.0) / 64.0 + 1e-9, "err {err} vs energy {energy}");
+        // Every kept coordinate dominates every dropped one in magnitude.
+        let kept_min = data
+            .iter()
+            .zip(&out)
+            .filter(|(_, y)| **y != 0.0)
+            .map(|(x, _)| x.abs())
+            .fold(f32::MAX, f32::min);
+        let dropped_max = data
+            .iter()
+            .zip(&out)
+            .filter(|(x, y)| **y == 0.0 && **x != 0.0)
+            .map(|(x, _)| x.abs())
+            .fold(0.0f32, f32::max);
+        assert!(kept_min >= dropped_max);
+    }
+
+    #[test]
+    fn randk_keeps_exactly_k_true_values() {
+        let data: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let (out, words) = roundtrip(&RandomK { k: 10 }, &data);
+        assert_eq!(words, 3 + 2 * 10);
+        let kept: Vec<usize> = out
+            .iter()
+            .enumerate()
+            .filter(|(_, y)| **y != 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(kept.len(), 10, "exactly k coordinates survive");
+        for &i in &kept {
+            assert_eq!(out[i], data[i], "kept values are exact");
+        }
+    }
+
+    #[test]
+    fn randk_draws_differ_across_messages() {
+        let data = vec![1.0f32; 256];
+        let comp = RandomK { k: 8 };
+        let mut rng = Rng::new(77);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        comp.encode(&data, &mut rng, &mut a);
+        comp.encode(&data, &mut rng, &mut b);
+        assert_ne!(a[3..11], b[3..11], "index draws should differ across messages");
+    }
+
+    #[test]
+    fn small_tensors_fall_back_to_dense() {
+        // d = 8, k = 4: sparse needs 11 words, dense 10 — dense wins.
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let (out, words) = roundtrip(&TopK { k: 4 }, &data);
+        assert_eq!(out, data.to_vec());
+        assert_eq!(words, 2 + 8);
+    }
+}

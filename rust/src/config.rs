@@ -13,16 +13,24 @@
 /// A transformer-LM configuration matching `python/compile/model.py`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelPreset {
+    /// Preset name (`nano`, `tiny`, `small`).
     pub name: &'static str,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Model (embedding) dimension.
     pub d_model: usize,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Per-node batch size.
     pub batch: usize,
 }
 
 impl ModelPreset {
+    /// Look up a preset by its `name` field.
     pub fn by_name(name: &str) -> Option<ModelPreset> {
         PRESETS.iter().find(|p| p.name == name).cloned()
     }
@@ -65,6 +73,7 @@ pub const PRESETS: &[ModelPreset] = &[
 /// Cost-model description of a benchmark DNN (paper §VII-B).
 #[derive(Debug, Clone)]
 pub struct WorkloadModel {
+    /// Benchmark DNN name (paper Fig. 12 / Table II rows).
     pub name: &'static str,
     /// Total parameters.
     pub params: usize,
@@ -118,6 +127,7 @@ impl WorkloadModel {
         }
     }
 
+    /// The paper's three benchmark workloads.
     pub fn all() -> Vec<WorkloadModel> {
         vec![Self::resnet50(), Self::vgg16(), Self::bert_large()]
     }

@@ -9,8 +9,10 @@
 //! modules.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::compress::{CompressionSpec, CompressionState};
 use crate::negotiation::NegotiationClient;
 use crate::pool::{BufferPool, HotPath};
 use crate::rng::Rng;
@@ -25,14 +27,18 @@ use crate::window::WindowTable;
 /// Shared topology state, set by `set_topology` / `set_machine_topology`.
 #[derive(Debug, Clone)]
 pub struct TopologyState {
+    /// The global communication graph.
     pub graph: Graph,
+    /// Combine weights respecting `graph`.
     pub weights: WeightMatrix,
     /// Machine-level (super-node) topology for hierarchical ops.
     pub machine_graph: Option<Graph>,
+    /// Machine-level combine weights.
     pub machine_weights: Option<WeightMatrix>,
 }
 
 impl TopologyState {
+    /// Validate and bundle a graph with its weight matrix.
     pub fn new(graph: Graph, weights: WeightMatrix) -> Self {
         assert!(weights.respects_graph(&graph), "weight matrix does not respect topology");
         TopologyState { graph, weights, machine_graph: None, machine_weights: None }
@@ -47,9 +53,11 @@ pub struct NodeContext {
     pub(crate) postman: Postman,
     /// Virtual clocks of *all* ranks (senders reserve receiver ports).
     pub(crate) clocks: Arc<Vec<VClock>>,
+    /// The virtual network cost model.
     pub net: Arc<NetworkModel>,
     pub(crate) topology: Arc<RwLock<TopologyState>>,
     pub(crate) negotiation: NegotiationClient,
+    /// Shared timeline recorder (spans are dropped when disabled).
     pub timeline: Arc<Timeline>,
     pub(crate) windows: Arc<WindowTable>,
     /// Per-op-name round counters for tag generation.
@@ -79,6 +87,32 @@ pub struct NodeContext {
     /// Which communication hot path to use (pooled/blocked vs naive) — the
     /// A/B switch for `examples/perf_probe.rs`.
     pub hot_path: HotPath,
+    /// Compression state of the blocking collective path: built compressor,
+    /// per-stream error-feedback residuals, index RNG. The communication
+    /// thread owns its own (see [`crate::nonblocking`]).
+    pub(crate) comp: CompressionState,
+    /// Payload bytes this rank put on the wire (shared with its
+    /// communication thread so fused sends are counted too).
+    pub(crate) tx_bytes: Arc<AtomicU64>,
+}
+
+/// Error-feedback stream-key namespace: unscaled fan-out (one encoded
+/// message shared by every destination ⇒ one tracked estimate, peer = 0).
+pub(crate) const EF_SHARED: u64 = 1 << 62;
+/// Stream-key namespace: inter-machine leg of hierarchical ops.
+pub(crate) const EF_HIER: u64 = 1 << 61;
+/// Stream-key namespace: per-peer streams (peer = destination on the send
+/// side, source on the receive side; the two sides live in separate maps).
+pub(crate) const EF_PEER: u64 = 0;
+
+/// Build an error-feedback stream key (see [`crate::compress::EfState`]):
+/// `namespace | logical stream id | peer rank | tensor length`. The stream
+/// id separates interleaved same-length collectives issued by one program
+/// (e.g. gradient tracking's `x` and `y` exchanges) and is threaded down
+/// from [`crate::optim::CommSpec::combine_stream`].
+pub(crate) fn ef_key(namespace: u64, stream: u32, peer: usize, len: usize) -> u64 {
+    debug_assert!(peer < (1 << 20), "peer rank overflows the ef_key layout");
+    namespace | ((stream as u64 & 0xFF) << 52) | ((peer as u64) << 32) | (len as u64 & 0xFFFF_FFFF)
 }
 
 impl NodeContext {
@@ -96,6 +130,8 @@ impl NodeContext {
         windows: Arc<WindowTable>,
         device: Option<DeviceHandle>,
         seed: u64,
+        compression: CompressionSpec,
+        tx_bytes: Arc<AtomicU64>,
     ) -> Self {
         NodeContext {
             rank,
@@ -119,6 +155,11 @@ impl NodeContext {
             pool: BufferPool::new(),
             deferred_reclaim: Vec::new(),
             hot_path: HotPath::default(),
+            comp: CompressionState::new(
+                compression,
+                seed ^ 0xc0de ^ (rank as u64).wrapping_mul(0xD1B54A32D192ED03),
+            ),
+            tx_bytes,
         }
     }
 
@@ -231,6 +272,34 @@ impl NodeContext {
     /// read hit/miss statistics).
     pub fn pool(&self) -> &BufferPool {
         &self.pool
+    }
+
+    /// The communication-compression spec this node runs with (set via
+    /// [`crate::launcher::SpmdConfig::with_compression`]).
+    pub fn compression(&self) -> CompressionSpec {
+        self.comp.spec()
+    }
+
+    /// Payload bytes this rank has put on the wire so far (blocking
+    /// collectives, window ops and its communication thread combined) —
+    /// the bytes-on-wire measurement behind `BENCH_compress.json`.
+    pub fn bytes_sent(&self) -> u64 {
+        self.tx_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Zero the wire-byte counter (between benchmark warm-up and
+    /// measurement).
+    pub fn reset_bytes_sent(&self) {
+        self.tx_bytes.store(0, Ordering::Relaxed);
+    }
+
+    /// Encode/decode scratch with capacity for `cap` elements: pooled under
+    /// [`HotPath::Pooled`], a fresh allocation under [`HotPath::Naive`].
+    pub(crate) fn codec_scratch(&self, cap: usize) -> Vec<f32> {
+        match self.hot_path {
+            HotPath::Naive => Vec::with_capacity(cap),
+            HotPath::Pooled => self.pool.checkout_empty(cap).into_vec(),
+        }
     }
 
     /// Return a finished tensor's storage to the pool so the next collective
@@ -383,6 +452,7 @@ impl NodeContext {
         payload: std::sync::Arc<Vec<f32>>,
     ) -> anyhow::Result<()> {
         let bytes = payload.len() * 4;
+        self.tx_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         let now = self.clock().now();
         let ser = self.net.port_time(self.rank, dst, bytes);
         let send_done = self.clock().reserve_send(now, ser);

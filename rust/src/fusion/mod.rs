@@ -11,11 +11,19 @@
 //! communication thread ([`crate::nonblocking`]) applies the policy, fusing
 //! queued requests with identical communication structure up to the
 //! threshold.
+//!
+//! Fusion composes with communication compression ([`crate::compress`]) in
+//! a fixed order: pack first, then encode the *fused* buffer as one wire
+//! stream (so a fusion group pays one compression header, and top-k
+//! selection sees the whole group's coordinates); symmetrically, receives
+//! are decoded back to the dense fused layout before slots are scattered.
 
 /// Layout record of one fused tensor.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FusedSlot {
+    /// Element offset of this tensor inside the fused buffer.
     pub offset: usize,
+    /// Element count of this tensor.
     pub len: usize,
 }
 
@@ -27,6 +35,7 @@ pub struct FusionBuffer {
 }
 
 impl FusionBuffer {
+    /// An empty buffer to [`FusionBuffer::push`] tensors into.
     pub fn new() -> Self {
         Self::default()
     }
@@ -79,6 +88,7 @@ impl FusionBuffer {
         self.data.len()
     }
 
+    /// True when no elements are packed.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

@@ -6,8 +6,10 @@
 //! virtual clocks, the negotiation service, the window table, per-node
 //! communication threads and (optionally) the PJRT device service.
 
+use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, RwLock};
 
+use crate::compress::CompressionSpec;
 use crate::context::{NodeContext, TopologyState};
 use crate::negotiation::NegotiationService;
 use crate::nonblocking::CommThread;
@@ -43,6 +45,9 @@ pub struct SpmdConfig {
     pub enable_topo_check: bool,
     /// Communication hot-path implementation (pooled/blocked vs naive).
     pub hot_path: HotPath,
+    /// Communication compression applied to neighbor-averaging payloads
+    /// (blocking and fused non-blocking), default none.
+    pub compression: CompressionSpec,
 }
 
 impl SpmdConfig {
@@ -66,39 +71,47 @@ impl SpmdConfig {
             fusion_threshold: 2 << 20,
             enable_topo_check: true,
             hot_path: HotPath::default(),
+            compression: CompressionSpec::default(),
         }
     }
 
+    /// Replace the network cost model.
     pub fn with_net(mut self, net: NetworkModel) -> Self {
         self.net = net;
         self
     }
 
+    /// Set the initial global topology and weights.
     pub fn with_topology(mut self, graph: Graph, weights: WeightMatrix) -> Self {
         self.topology = Some((graph, weights));
         self
     }
 
+    /// Set the base seed for per-node RNGs.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Attach a PJRT device service for AOT-artifact execution.
     pub fn with_device(mut self, device: DeviceHandle) -> Self {
         self.device = Some(device);
         self
     }
 
+    /// Attach a timeline recorder to collect traces.
     pub fn with_timeline(mut self, timeline: Arc<Timeline>) -> Self {
         self.timeline = Some(timeline);
         self
     }
 
+    /// Toggle the negotiation-service topology check.
     pub fn with_topo_check(mut self, enabled: bool) -> Self {
         self.enable_topo_check = enabled;
         self
     }
 
+    /// Set the tensor-fusion threshold in bytes (0 disables fusion).
     pub fn with_fusion_threshold(mut self, bytes: usize) -> Self {
         self.fusion_threshold = bytes;
         self
@@ -107,6 +120,13 @@ impl SpmdConfig {
     /// Select the communication hot-path implementation (default: pooled).
     pub fn with_hot_path(mut self, hot_path: HotPath) -> Self {
         self.hot_path = hot_path;
+        self
+    }
+
+    /// Apply communication compression to neighbor-averaging payloads
+    /// (default: [`CompressionSpec::none`], the exact dense path).
+    pub fn with_compression(mut self, compression: CompressionSpec) -> Self {
+        self.compression = compression;
         self
     }
 }
@@ -135,6 +155,10 @@ where
     });
     let topology = Arc::new(RwLock::new(TopologyState::new(graph, weights)));
 
+    // Per-rank wire-byte counters, shared between a node's blocking context
+    // and its communication thread.
+    let tx_bytes: Vec<Arc<AtomicU64>> = (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect();
+
     // Communication threads own the second endpoint fabric.
     let mut comm_threads = vec![];
     let mut comm_queues = vec![];
@@ -149,6 +173,9 @@ where
                 net.clone(),
                 cfg.fusion_threshold,
                 cfg.hot_path,
+                cfg.compression,
+                cfg.seed,
+                tx_bytes[rank].clone(),
             );
             comm_queues.push(Some(t.queue()));
             comm_threads.push(t);
@@ -176,6 +203,8 @@ where
             windows.clone(),
             cfg.device.clone(),
             cfg.seed,
+            cfg.compression,
+            tx_bytes[rank].clone(),
         );
         ctx.enable_topo_check = cfg.enable_topo_check;
         ctx.fusion_threshold = cfg.fusion_threshold;

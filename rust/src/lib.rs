@@ -23,6 +23,9 @@
 //! - [`negotiation`] — the rank-0 negotiation service: readiness, operation
 //!   matching and dynamic-topology validity checks.
 //! - [`fusion`] — tensor-fusion buffers batching small messages.
+//! - [`compress`] — communication compression (top-k / random-k / u8
+//!   quantization / PowerGossip-style low-rank) with per-stream error
+//!   feedback, applied to the neighbor-averaging payloads.
 //! - [`pool`] — rank-local tensor buffer pool feeding the zero-allocation
 //!   communication hot path (pooled payloads, reclaimed receives).
 //! - [`nonblocking`] — non-blocking communication handles backed by a
@@ -44,6 +47,7 @@
 
 pub mod cli;
 pub mod collective;
+pub mod compress;
 pub mod config;
 pub mod context;
 pub mod fusion;

@@ -8,12 +8,19 @@
 /// Summary statistics over a sample of measurements.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Stats {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (Bessel-corrected).
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
     /// Half-width of the 90% confidence interval of the mean
     /// (normal approximation, z = 1.645).

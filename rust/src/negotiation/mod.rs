@@ -31,12 +31,19 @@ use crate::simnet::NetworkModel;
 /// Operation kinds the service can match.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpKind {
+    /// Global allreduce.
     Allreduce,
+    /// Partial (neighborhood) averaging.
     NeighborAllreduce,
+    /// Two-tier machine-level partial averaging.
     HierarchicalNeighborAllreduce,
+    /// Neighborhood gather of raw tensors.
     NeighborAllgather,
+    /// One-to-all broadcast.
     Broadcast,
+    /// Synchronization barrier.
     Barrier,
+    /// One-sided window operation.
     WinOp,
 }
 
@@ -61,9 +68,11 @@ impl OpKind {
 /// binding declaration that must be globally consistent.
 #[derive(Debug, Clone)]
 pub struct OpRequest {
+    /// Announcing rank.
     pub rank: usize,
     /// Operation name (unique per call site + round).
     pub name: String,
+    /// Which collective is pending.
     pub kind: OpKind,
     /// Elements in the tensor (0 for barrier).
     pub numel: usize,
@@ -130,6 +139,7 @@ impl NegotiationService {
         NegotiationService { tx, handle: Some(handle) }
     }
 
+    /// A cloneable client handle for node threads.
     pub fn client(&self) -> NegotiationClient {
         NegotiationClient { tx: self.tx.clone() }
     }

@@ -26,11 +26,13 @@
 //!   one of its handles (which enqueues a flush marker).
 
 use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::context::NodeContext;
+use crate::compress::{CompressionSpec, CompressionState};
+use crate::context::{ef_key, NodeContext, EF_PEER, EF_SHARED};
 use crate::fusion::FusionBuffer;
 use crate::pool::{BufferPool, HotPath};
 use crate::simnet::NetworkModel;
@@ -99,6 +101,10 @@ pub(crate) struct ExchangePlan {
     pub srcs: Vec<(usize, f64)>,
     /// `(dst, s_ij)` send scales.
     pub dsts: Vec<(usize, f64)>,
+    /// Derived from the static topology (destination set stable round over
+    /// round) — allows the compressed path to share one difference stream
+    /// across the fan-out and apply the mean-conserving self-correction.
+    pub static_plan: bool,
 }
 
 pub(crate) enum CommRequest {
@@ -145,11 +151,28 @@ impl CommThread {
         net: Arc<NetworkModel>,
         _fusion_threshold: usize,
         hot_path: HotPath,
+        compression: CompressionSpec,
+        seed: u64,
+        tx_bytes: Arc<AtomicU64>,
     ) -> Self {
         let (tx, rx) = channel();
         let handle = std::thread::Builder::new()
             .name(format!("bf-comm-{rank}"))
-            .spawn(move || comm_loop(rank, size, mailbox, postman, clocks, net, rx, hot_path))
+            .spawn(move || {
+                comm_loop(
+                    rank,
+                    size,
+                    mailbox,
+                    postman,
+                    clocks,
+                    net,
+                    rx,
+                    hot_path,
+                    compression,
+                    seed,
+                    tx_bytes,
+                )
+            })
             .expect("spawn comm thread");
         CommThread { tx, handle: Some(handle) }
     }
@@ -186,6 +209,9 @@ fn comm_loop(
     net: Arc<NetworkModel>,
     rx: Receiver<CommRequest>,
     hot_path: HotPath,
+    compression: CompressionSpec,
+    seed: u64,
+    tx_bytes: Arc<AtomicU64>,
 ) {
     let mut rounds: HashMap<u32, u32> = HashMap::new();
     // Groups are issued in nondecreasing order; at most one is open.
@@ -195,19 +221,38 @@ fn comm_loop(
     // both reused across rounds (zero-allocation steady state).
     let pool = BufferPool::new();
     let mut fusion_storage: Vec<f32> = Vec::new();
+    // This thread's compression endpoint: fused packs are encoded *after*
+    // packing (one wire stream per destination) and decoded before
+    // unpacking, with residuals independent of the blocking path's.
+    let mut comp = CompressionState::new(
+        compression,
+        seed ^ 0x5eed ^ (rank as u64).wrapping_mul(0xA24BAED4963EE407),
+    );
 
     let mut transmit = |pg: PendingGroup,
                         mailbox: &mut Mailbox,
                         rounds: &mut HashMap<u32, u32>,
-                        storage: &mut Vec<f32>| {
+                        storage: &mut Vec<f32>,
+                        comp: &mut CompressionState| {
         let tensors: Vec<&[f32]> = pg.items.iter().map(|(d, _, _)| d.as_slice()).collect();
         let buf = FusionBuffer::pack_into_vec(&tensors, std::mem::take(storage));
         drop(tensors);
         let start_vtime =
             pg.items.iter().map(|(_, t, _)| *t).fold(f64::NEG_INFINITY, f64::max);
-        let mut ep =
-            Endpoint::new(rank, size, mailbox, &postman, &clocks, &net, &pool, hot_path, start_vtime);
-        let out = ep.neighbor_exchange(buf.data(), &pg.plan, next_tag(rounds, "nb.neighbor"));
+        let mut ep = Endpoint::new(
+            rank,
+            size,
+            mailbox,
+            &postman,
+            &clocks,
+            &net,
+            &pool,
+            hot_path,
+            start_vtime,
+            &tx_bytes,
+        );
+        let out =
+            ep.neighbor_exchange(buf.data(), &pg.plan, next_tag(rounds, "nb.neighbor"), comp);
         let done_vtime = ep.completion;
         // Scatter-free unpack: each request's own input buffer is
         // overwritten in place and becomes its reply — no per-slot `Vec`.
@@ -225,7 +270,7 @@ fn comm_loop(
         match req {
             CommRequest::Shutdown => {
                 if let Some(pg) = pending.take() {
-                    transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage);
+                    transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage, &mut comp);
                 }
                 break;
             }
@@ -234,7 +279,7 @@ fn comm_loop(
                     if let Some(pg) = pending.take() {
                         if pg.group <= g {
                             flushed_below = pg.group + 1;
-                            transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage);
+                            transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage, &mut comp);
                         } else {
                             pending = Some(pg);
                         }
@@ -245,7 +290,7 @@ fn comm_loop(
                 // Ring ops are never fused; close any open group first.
                 if let Some(pg) = pending.take() {
                     flushed_below = pg.group + 1;
-                    transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage);
+                    transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage, &mut comp);
                 }
                 flushed_below = flushed_below.max(group + 1);
                 let mut ep = Endpoint::new(
@@ -258,6 +303,7 @@ fn comm_loop(
                     &pool,
                     hot_path,
                     enqueue_vtime,
+                    &tx_bytes,
                 );
                 // The request's own buffer is reduced in place — no copy.
                 let mut out = ep.ring_allreduce(data, next_tag(&mut rounds, "nb.ring"));
@@ -272,7 +318,7 @@ fn comm_loop(
                 if let Some(pg) = pending.take() {
                     if pg.group < group || pg.plan != plan {
                         flushed_below = pg.group + 1;
-                        transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage);
+                        transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage, &mut comp);
                         pending = None;
                     } else {
                         pending = Some(pg);
@@ -319,6 +365,8 @@ struct Endpoint<'a> {
     base_vtime: f64,
     /// Running completion time (max over receives).
     completion: f64,
+    /// The node's wire-byte counter (shared with the blocking context).
+    tx_bytes: &'a AtomicU64,
 }
 
 impl<'a> Endpoint<'a> {
@@ -333,6 +381,7 @@ impl<'a> Endpoint<'a> {
         pool: &'a BufferPool,
         hot_path: HotPath,
         base_vtime: f64,
+        tx_bytes: &'a AtomicU64,
     ) -> Self {
         Endpoint {
             rank,
@@ -345,6 +394,7 @@ impl<'a> Endpoint<'a> {
             hot_path,
             base_vtime,
             completion: base_vtime,
+            tx_bytes,
         }
     }
 
@@ -364,8 +414,19 @@ impl<'a> Endpoint<'a> {
         self.pool.reclaim_if(self.hot_path, payload);
     }
 
+    /// Encode/decode scratch: pooled under [`HotPath::Pooled`], fresh
+    /// allocation under [`HotPath::Naive`] (keeps the A/B honest even when
+    /// compression is on).
+    fn codec_scratch(&self, cap: usize) -> Vec<f32> {
+        match self.hot_path {
+            HotPath::Naive => Vec::with_capacity(cap),
+            HotPath::Pooled => self.pool.checkout_empty(cap).into_vec(),
+        }
+    }
+
     fn send(&mut self, dst: usize, tag: u64, payload: Arc<Vec<f32>>) {
         let bytes = payload.len() * 4;
+        self.tx_bytes.fetch_add(bytes as u64, std::sync::atomic::Ordering::Relaxed);
         let ser = self.net.port_time(self.rank, dst, bytes);
         let send_done = self.clocks[self.rank].reserve_send(self.base_vtime, ser);
         let recv_done = self.clocks[dst].reserve_recv(send_done - ser, ser);
@@ -383,12 +444,24 @@ impl<'a> Endpoint<'a> {
     }
 
     /// Partial-averaging exchange with explicit plan (srcs/dsts resolved by
-    /// the caller).
-    fn neighbor_exchange(&mut self, data: &[f32], plan: &ExchangePlan, tag: u64) -> Vec<f32> {
+    /// the caller). With compression enabled, the (possibly fused) payload
+    /// is encoded once per distinct wire stream — after packing, so one
+    /// stream covers the whole fusion group — and every receive is decoded
+    /// into pooled scratch before the combine.
+    fn neighbor_exchange(
+        &mut self,
+        data: &[f32],
+        plan: &ExchangePlan,
+        tag: u64,
+        comp: &mut CompressionState,
+    ) -> Vec<f32> {
         let n = self.size;
         let me = self.rank;
         let mut dsts = plan.dsts.clone();
         dsts.sort_by_key(|&(d, _)| (d + n - me) % n);
+        if comp.enabled() {
+            return self.compressed_exchange(data, plan, &dsts, tag, comp);
+        }
         let mut shared: Option<Arc<Vec<f32>>> = None;
         for &(dst, s) in &dsts {
             if s != 1.0 {
@@ -412,6 +485,90 @@ impl<'a> Endpoint<'a> {
         drop(parts);
         for (_, y) in incoming {
             self.reclaim(y);
+        }
+        out
+    }
+
+    /// Compressed variant of [`Endpoint::neighbor_exchange`]; mirrors the
+    /// blocking path's policy: static plans share one difference stream
+    /// across the fan-out and apply the mean-conserving self-correction,
+    /// explicit-weight plans (whose destination sets may vary) keep one
+    /// stream per destination and combine plainly. Fused packs ride a
+    /// single stream id (0): the pack layout is part of the stream.
+    fn compressed_exchange(
+        &mut self,
+        data: &[f32],
+        plan: &ExchangePlan,
+        dsts_sorted: &[(usize, f64)],
+        tag: u64,
+        comp: &mut CompressionState,
+    ) -> Vec<f32> {
+        let d = data.len();
+        let cap = comp.encoded_cap(d);
+        let shared_key = ef_key(EF_SHARED, 0, 0, d);
+        let mut shared: Option<Arc<Vec<f32>>> = None;
+        for &(dst, s) in dsts_sorted {
+            if !plan.static_plan {
+                let mut wire = self.codec_scratch(cap);
+                if s != 1.0 {
+                    let mut scaled = self.codec_scratch(d);
+                    scaled.extend(data.iter().map(|&x| s as f32 * x));
+                    comp.encode(ef_key(EF_PEER, 0, dst, d), &scaled, &mut wire);
+                    if self.hot_path == HotPath::Pooled {
+                        self.pool.recycle_vec(scaled);
+                    }
+                } else {
+                    comp.encode(ef_key(EF_PEER, 0, dst, d), data, &mut wire);
+                }
+                self.send(dst, tag, Arc::new(wire));
+            } else {
+                let p = match &shared {
+                    Some(p) => p.clone(),
+                    None => {
+                        let mut wire = self.codec_scratch(cap);
+                        comp.encode(shared_key, data, &mut wire);
+                        let p = Arc::new(wire);
+                        shared = Some(p.clone());
+                        p
+                    }
+                };
+                self.send(dst, tag, p);
+            }
+        }
+        drop(shared);
+        let had_shared = plan.static_plan && !dsts_sorted.is_empty();
+        let mut incoming: Vec<(f32, Vec<f32>)> = Vec::with_capacity(plan.srcs.len());
+        for &(src, r) in &plan.srcs {
+            let y = self.recv(src, tag);
+            let mut dec = self.codec_scratch(d);
+            comp.decode(ef_key(EF_PEER, 0, src, d), &y, &mut dec)
+                .expect("malformed compressed stream from peer");
+            assert_eq!(dec.len(), d, "compressed stream length mismatch from rank {src}");
+            self.reclaim(y);
+            incoming.push((r as f32, dec));
+        }
+        let mut parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
+        let mut ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
+        let correct = had_shared && comp.spec().error_feedback;
+        let out = match comp.estimate(shared_key) {
+            Some(est) if correct => {
+                // CHOCO-style relaxed, mean-conserving combine (see the
+                // blocking twin in collective::neighbor).
+                let gamma = comp.spec().gossip_gamma;
+                for w in ws.iter_mut() {
+                    *w *= gamma;
+                }
+                parts.push(est);
+                ws.push(-gamma * (1.0 - plan.self_weight as f32));
+                self.pool.combine_from(self.hot_path, data, 1.0, &parts, &ws)
+            }
+            _ => self.pool.combine_from(self.hot_path, data, plan.self_weight as f32, &parts, &ws),
+        };
+        drop(parts);
+        for (_, y) in incoming {
+            if self.hot_path == HotPath::Pooled {
+                self.pool.recycle_vec(y);
+            }
         }
         out
     }
@@ -493,14 +650,14 @@ impl NodeContext {
                 let dsts = w.dst_weights.clone().ok_or_else(|| {
                     anyhow::anyhow!("non-blocking dynamic neighbor_allreduce requires dst_weights")
                 })?;
-                ExchangePlan { self_weight: w.self_weight, srcs, dsts }
+                ExchangePlan { self_weight: w.self_weight, srcs, dsts, static_plan: false }
             }
             None => {
                 let topo = self.load_topology();
                 let (self_weight, srcs) = topo.weights.pull_view(self.rank());
                 let dsts: Vec<(usize, f64)> =
                     topo.graph.out_neighbors(self.rank()).into_iter().map(|r| (r, 1.0)).collect();
-                ExchangePlan { self_weight, srcs, dsts }
+                ExchangePlan { self_weight, srcs, dsts, static_plan: true }
             }
         };
         let group = self.assign_fusion_group(data.len() * 4);

@@ -7,6 +7,16 @@
 //! `Distributed*Optimizer` wrappers, where the communication type and
 //! topology weights are swappable per step (paper Listing 4).
 //!
+//! **Communication compression** is orthogonal to the optimizer: a
+//! [`crate::compress::CompressionSpec`] set on
+//! [`crate::launcher::SpmdConfig`] rides the [`crate::context::NodeContext`]
+//! into every neighbor combine a [`CommSpec`] issues, so each optimizer
+//! below runs compressed with zero API change at its call site (the
+//! error-feedback residuals that keep this convergent live per stream in
+//! the context, not in the optimizer). Global averaging
+//! ([`CommSpec::Global`]) stays dense — it is the exact baseline the
+//! compression probes compare against.
+//!
 //! Implemented algorithms:
 //! - [`Dgd`] — decentralized (stochastic) gradient descent, ATC and AWC
 //!   orders (paper eq. (22)/(23));
@@ -52,8 +62,25 @@ impl CommSpec {
         iter: usize,
         data: &[f32],
     ) -> anyhow::Result<Vec<f32>> {
+        self.combine_stream(ctx, iter, data, 0)
+    }
+
+    /// [`CommSpec::combine`] on an explicit compression stream id.
+    ///
+    /// Optimizers that issue *several* same-length combines per iteration
+    /// (gradient tracking's `x` and `y`, DmSGD's synced momentum) pass
+    /// distinct ids so the difference-tracking estimates of
+    /// [`crate::compress`] never cross between logical tensors; with
+    /// compression disabled the id is inert.
+    pub fn combine_stream(
+        &self,
+        ctx: &mut NodeContext,
+        iter: usize,
+        data: &[f32],
+        stream: u32,
+    ) -> anyhow::Result<Vec<f32>> {
         match self {
-            CommSpec::Static => ctx.neighbor_allreduce(data),
+            CommSpec::Static => ctx.neighbor_allreduce_stream(data, stream),
             CommSpec::Dynamic(topo) => {
                 let view = topo.view(iter, ctx.rank());
                 // Pull-style realization of the view: receivers scale.
@@ -62,11 +89,13 @@ impl CommSpec {
                     view.src_weights.clone(),
                     view.dst_weights.iter().map(|&(d, _)| (d, 1.0)).collect(),
                 );
-                ctx.neighbor_allreduce_dynamic(data, &w)
+                ctx.neighbor_allreduce_dynamic_stream(data, &w, stream)
             }
-            CommSpec::Hierarchical => ctx.hierarchical_neighbor_allreduce(data),
+            CommSpec::Hierarchical => ctx.hierarchical_neighbor_allreduce_stream(data, stream),
             CommSpec::Global(algo) => ctx.allreduce(data, ReduceOp::Average, *algo),
-            CommSpec::None => Ok(data.to_vec()),
+            // Pooled copy: the caller treats the result as a fresh tensor
+            // and recycles it like any combine output.
+            CommSpec::None => Ok(ctx.vec_from(data)),
         }
     }
 
@@ -242,7 +271,9 @@ impl DecentralizedOptimizer for GradientTracking {
                 for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
                     *qi += g - p;
                 }
-                self.comm.combine(ctx, self.iter, &q)?
+                // Stream 1: the tracker exchange must not share compression
+                // state with the same-length parameter exchange below.
+                self.comm.combine_stream(ctx, self.iter, &q, 1)?
             }
             (Some(_), None) => unreachable!("prev_grad set with y"),
         };
@@ -293,6 +324,7 @@ impl PushSumGradientTracking {
         ctx: &mut NodeContext,
         iter: usize,
         data: &[f32],
+        stream: u32,
     ) -> anyhow::Result<Vec<f32>> {
         let view = self.topo.view(iter, ctx.rank());
         // Column-stochastic: self keeps self_weight, sends s_ij to dsts;
@@ -302,7 +334,7 @@ impl PushSumGradientTracking {
             view.src_weights.iter().map(|&(s, _)| (s, 1.0)).collect(),
             view.dst_weights.clone(),
         );
-        ctx.neighbor_allreduce_dynamic(data, &w)
+        ctx.neighbor_allreduce_dynamic_stream(data, &w, stream)
     }
 }
 
@@ -321,7 +353,7 @@ impl DecentralizedOptimizer for PushSumGradientTracking {
             for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
                 *qi += g - p;
             }
-            let new_y = self.push_combine(ctx, self.iter, &q)?;
+            let new_y = self.push_combine(ctx, self.iter, &q, 1)?;
             if let Some(old) = self.y.replace(new_y) {
                 ctx.recycle(old);
             }
@@ -333,9 +365,9 @@ impl DecentralizedOptimizer for PushSumGradientTracking {
         // u_{k+1} = W^k (u_k - γ y_k)
         let mut w = ctx.scratch_copy(self.u.as_ref().unwrap());
         axpy(-self.gamma, self.y.as_ref().unwrap(), &mut w);
-        let u_new = self.push_combine(ctx, self.iter, &w)?;
+        let u_new = self.push_combine(ctx, self.iter, &w, 0)?;
         // v_{k+1} = W^k v_k  (scalar push-sum weight)
-        let v_new = self.push_combine(ctx, self.iter, &[self.v])?[0];
+        let v_new = self.push_combine(ctx, self.iter, &[self.v], 2)?[0];
         // x_{k+1} = u_{k+1} / v_{k+1}
         if let Some(old) = self.u.replace(u_new) {
             ctx.recycle(old);
@@ -417,7 +449,10 @@ impl DecentralizedOptimizer for DmSgd {
                     }
                 }
                 if self.kind == MomentumKind::Synced {
-                    let synced = self.comm.combine(ctx, self.iter, self.m.as_ref().unwrap())?;
+                    // Stream 1: keep the momentum exchange's compression
+                    // state apart from the parameter exchange's.
+                    let synced =
+                        self.comm.combine_stream(ctx, self.iter, self.m.as_ref().unwrap(), 1)?;
                     if let Some(old) = self.m.replace(synced) {
                         ctx.recycle(old);
                     }

@@ -182,6 +182,13 @@ impl BufferPool {
         PoolBuf { data, pool: Some(self.clone()) }
     }
 
+    /// Check out an *empty* buffer with capacity covering `cap` elements —
+    /// encode/decode scratch for the compression layer, which `extend`s the
+    /// buffer itself ([`crate::compress`]).
+    pub fn checkout_empty(&self, cap: usize) -> PoolBuf {
+        PoolBuf { data: self.checkout_raw(cap), pool: Some(self.clone()) }
+    }
+
     /// Return a detached buffer to the free-list (contents are discarded on
     /// the next checkout). Buffers that are too small or land in a full
     /// bucket are dropped.
@@ -404,6 +411,16 @@ mod tests {
         drop(buf);
         assert_eq!(pool.stats().shelved, 0, "detached guards must not feed any pool");
         assert_eq!(pool.stats().recycled, 0);
+    }
+
+    #[test]
+    fn checkout_empty_reuses_capacity_without_fill() {
+        let pool = BufferPool::new();
+        drop(pool.checkout(200)); // shelve a 256-capacity buffer
+        let w = pool.checkout_empty(180);
+        assert_eq!(w.len(), 0, "codec scratch starts empty");
+        assert!(w.data.capacity() >= 180);
+        assert_eq!(pool.stats().hits, 1, "empty checkout must hit the shelf");
     }
 
     #[test]

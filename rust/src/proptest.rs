@@ -13,26 +13,32 @@ use crate::topology::{builders, Graph, WeightMatrix};
 
 /// Value generator handed to properties.
 pub struct Gen {
+    /// The underlying seeded generator (exposed for custom strategies).
     pub rng: Rng,
 }
 
 impl Gen {
+    /// Generator for one property case, derived from the runner's seed.
     pub fn new(seed: u64) -> Self {
         Gen { rng: Rng::new(seed) }
     }
 
+    /// Uniform integer in `[lo, hi)`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         self.rng.usize_in(lo, hi)
     }
 
+    /// Uniform float in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.f64_in(lo, hi)
     }
 
+    /// Vector of `len` uniform samples in `[lo, hi)`.
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
         self.rng.uniform_vec(len, lo, hi)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.chance(0.5)
     }

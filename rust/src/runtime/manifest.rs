@@ -18,7 +18,9 @@ use std::collections::HashMap;
 /// Element types crossing the boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -35,12 +37,16 @@ impl DType {
 /// One input or output tensor.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Tensor name in the artifact manifest.
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Shape (row-major).
     pub dims: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.dims.iter().product()
     }
@@ -49,8 +55,11 @@ impl TensorSpec {
 /// Parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, in result order.
     pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata key/value pairs.
     pub meta: HashMap<String, String>,
 }
 

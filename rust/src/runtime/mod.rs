@@ -123,6 +123,7 @@ impl DeviceService {
         DeviceService { tx, handle: Some(handle) }
     }
 
+    /// A cloneable client handle for node threads.
     pub fn handle(&self) -> DeviceHandle {
         DeviceHandle { tx: self.tx.clone() }
     }

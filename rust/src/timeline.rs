@@ -11,14 +11,19 @@ use std::time::Instant;
 /// One traced span.
 #[derive(Debug, Clone)]
 pub struct Event {
+    /// Rank that recorded the span.
     pub rank: usize,
+    /// Operation name (e.g. `neighbor_allreduce`).
     pub name: String,
+    /// Trace category (`comm`, `compute`, ...).
     pub category: &'static str,
     /// Wall-clock microseconds since timeline creation.
     pub wall_start_us: f64,
+    /// Wall-clock duration in microseconds.
     pub wall_dur_us: f64,
     /// Virtual times (seconds) at span start/end.
     pub vtime_start: f64,
+    /// Virtual time (seconds) at span end.
     pub vtime_end: f64,
 }
 
@@ -30,6 +35,7 @@ pub struct Timeline {
 }
 
 impl Timeline {
+    /// New recorder; a disabled one drops every span at zero cost.
     pub fn new(enabled: bool) -> Self {
         Timeline { origin: Instant::now(), events: Mutex::new(vec![]), enabled }
     }
@@ -70,6 +76,7 @@ impl Timeline {
         self.events.lock().unwrap().len()
     }
 
+    /// True when no events were recorded.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -51,6 +51,7 @@ pub struct OnePeerExpo {
 }
 
 impl OnePeerExpo {
+    /// One-peer exponential schedule over `n` nodes.
     pub fn new(n: usize) -> Self {
         OnePeerExpo { n, hops: if n > 1 { expo2_hops(n) } else { vec![] } }
     }

@@ -96,14 +96,17 @@ impl Corpus {
         Corpus { tokens: out.into_iter().map(encode_byte).collect() }
     }
 
+    /// Token count.
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
 
+    /// True when the corpus holds no tokens.
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
     }
 
+    /// The encoded token stream.
     pub fn tokens(&self) -> &[i32] {
         &self.tokens
     }

@@ -45,6 +45,7 @@ impl ParamLayout {
         self.total
     }
 
+    /// Per-parameter tensor specs, in layout order.
     pub fn specs(&self) -> &[TensorSpec] {
         &self.specs
     }
@@ -110,7 +111,9 @@ impl ParamLayout {
 /// One logged step.
 #[derive(Debug, Clone)]
 pub struct StepLog {
+    /// Step index.
     pub step: usize,
+    /// Training loss at this step.
     pub loss: f32,
     /// Virtual time (seconds) at the end of the step.
     pub vtime: f64,
@@ -121,7 +124,9 @@ pub struct StepLog {
 /// Training-run configuration.
 #[derive(Clone)]
 pub struct TrainRun {
+    /// Model configuration to train.
     pub preset: ModelPreset,
+    /// Number of optimizer steps.
     pub steps: usize,
     /// Log every `log_every` steps.
     pub log_every: usize,
@@ -142,6 +147,7 @@ pub struct TrainRun {
 }
 
 impl TrainRun {
+    /// A run with the defaults used across the paper's experiments.
     pub fn new(preset: ModelPreset, steps: usize) -> Self {
         TrainRun {
             preset,

@@ -41,8 +41,11 @@ pub fn op_id(name: &str) -> u32 {
 /// measured in EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone)]
 pub struct Message {
+    /// Sending rank.
     pub src: usize,
+    /// Operation/round tag the receiver matches on.
     pub tag: Tag,
+    /// Tensor payload (shared across multi-destination sends).
     pub payload: Arc<Vec<f32>>,
     /// Virtual time at which this message arrives at the destination.
     pub arrival_vtime: f64,
@@ -93,6 +96,7 @@ impl Postman {
 }
 
 impl Mailbox {
+    /// The rank this mailbox belongs to.
     pub fn rank(&self) -> usize {
         self.rank
     }
@@ -172,6 +176,7 @@ impl Default for VClock {
 }
 
 impl VClock {
+    /// A clock at virtual time zero with idle ports.
     pub fn new() -> Self {
         VClock {
             now: Arc::new(Mutex::new(0.0)),
@@ -180,6 +185,7 @@ impl VClock {
         }
     }
 
+    /// Current local virtual time in seconds.
     pub fn now(&self) -> f64 {
         *self.now.lock().unwrap()
     }
