@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: verify build test examples benches bench-hotpath bench-compress artifacts clean
+.PHONY: verify build test examples benches bench-hotpath bench-compress bench-async artifacts clean
 
 verify: build test
 
@@ -28,6 +28,14 @@ bench-hotpath:
 # COMPRESS_SMOKE=1 for a CI-sized run.
 bench-compress:
 	cargo run --release --example compress_probe
+
+# Sync DSGD vs async push-sum SGD (one-sided windows, causal drains) under
+# uniform compute and under a 4x single-rank straggler; writes
+# BENCH_async.json (virtual time to target loss, final-loss delta, max
+# staleness) and gates the >=1.5x straggler speedup. Set ASYNC_SMOKE=1 for
+# a CI-sized run.
+bench-async:
+	cargo run --release --example async_probe
 
 # Sweep every BENCH_*.json the probes have produced into ./artifacts — a
 # glob, so new probes are picked up without editing this target — then

@@ -1,0 +1,371 @@
+// Async training probe: lights up the asynchronous decentralized regime
+// end-to-end (paper §IV-C) and quantifies when it beats the synchronous
+// one. Two compute profiles on the decentralized linear-regression
+// workload:
+//
+//   * uniform   — every rank at nominal speed (sanity: async must match
+//                 sync's final loss, since there is nothing to hide);
+//   * straggler — one rank 4x slower. Synchronous DSGD is paced by the
+//                 straggler (its lateness propagates through every
+//                 neighbor exchange); asynchronous push-sum SGD lets the
+//                 fast ranks keep stepping, draining the straggler's mass
+//                 whenever it (virtually) arrives.
+//
+// Measured in *virtual time* on the simulated network/compute model:
+// time until every rank's de-biased iterate reaches the target loss. The
+// sync loop runs a fixed iteration count (collectives must stay matched
+// across ranks); the async loop runs on a virtual-time budget so all
+// ranks leave the regime near the same virtual instant — with a fixed
+// per-rank step count the fast ranks would finish early and the straggler
+// would split its push-sum mass into windows nobody drains until its
+// weight underflows. Emits machine-readable `BENCH_async.json` and
+// enforces the PR's acceptance gates:
+//
+//   * under the 4x straggler, async reaches the target in <= 1/1.5 of the
+//     sync virtual time (speedup >= 1.5x; numerically validated margin
+//     ~2.2-2.8x), and
+//   * with no straggler, the async and sync final losses agree within 5%
+//     (validated margin ~0.4%).
+//
+// Run: `make bench-async` (or `cargo run --release --example
+// async_probe`). Env: ASYNC_SMOKE=1 shrinks the problem for CI;
+// BENCH_ASYNC_OUT overrides the output path.
+
+use bluefog::collective::{AllreduceAlgo, ReduceOp};
+use bluefog::launcher::{run_spmd, AsyncSpec, SpmdConfig};
+use bluefog::optim::{
+    AsyncDecentralizedOptimizer, AsyncPushSumSgd, CommSpec, DecentralizedOptimizer, Dgd, StepOrder,
+};
+use bluefog::rng::Rng;
+use bluefog::simnet::hetero::ComputeHeterogeneity;
+
+const N: usize = 8; // nodes (expo2 topology, the launcher default)
+
+#[derive(Clone, Copy)]
+struct Problem {
+    d: usize,         // features
+    rows: usize,      // rows per node
+    sync_iters: usize, // fixed sync iteration count (collectives stay matched)
+    t_end: f64,       // async virtual-time budget, seconds
+    gamma: f32,       // step size
+    base_step: f64,   // nominal per-step compute seconds (virtual)
+}
+
+/// Per-node data `A_i [rows, d]`, `b_i [rows]`; `b = A x* + 0.1 noise`.
+/// The mild noise keeps local optima close (small DGD bias floor) while
+/// bounding the global optimum's loss away from zero.
+fn make_data(rank: usize, p: &Problem) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0xa51c + rank as u64);
+    let mut x_star_rng = Rng::new(0x57a8);
+    let x_star: Vec<f32> = x_star_rng.normal_vec(p.d);
+    let a: Vec<f32> = rng.normal_vec(p.rows * p.d);
+    let mut b = vec![0.0f32; p.rows];
+    for r in 0..p.rows {
+        let mut dot = 0.0f32;
+        for (ac, xc) in a[r * p.d..(r + 1) * p.d].iter().zip(&x_star) {
+            dot += ac * xc;
+        }
+        b[r] = dot + 0.1 * rng.normal() as f32;
+    }
+    (a, b)
+}
+
+/// All nodes' datasets — deterministic, so every rank (and main) can
+/// rebuild the *global* objective locally and evaluate any iterate on it.
+fn global_data(p: &Problem) -> Vec<(Vec<f32>, Vec<f32>)> {
+    (0..N).map(|r| make_data(r, p)).collect()
+}
+
+/// Global loss `(1/2 N rows) Σ_i ||A_i x − b_i||²` of an iterate.
+fn global_loss(data: &[(Vec<f32>, Vec<f32>)], p: &Problem, x: &[f32]) -> f64 {
+    let mut sum = 0.0f64;
+    for (a, b) in data {
+        for r in 0..p.rows {
+            let mut dot = 0.0f32;
+            for (ac, xc) in a[r * p.d..(r + 1) * p.d].iter().zip(x) {
+                dot += ac * xc;
+            }
+            sum += ((dot - b[r]) as f64).powi(2);
+        }
+    }
+    sum / (2.0 * (N * p.rows) as f64)
+}
+
+/// The global least-squares solution via the normal equations (Gaussian
+/// elimination with partial pivoting) — anchors the target loss.
+fn exact_solution(data: &[(Vec<f32>, Vec<f32>)], p: &Problem) -> Vec<f32> {
+    let d = p.d;
+    let mut aug = vec![0.0f64; d * (d + 1)];
+    for (a, b) in data {
+        for r in 0..p.rows {
+            let row = &a[r * d..(r + 1) * d];
+            for i in 0..d {
+                let ari = row[i] as f64;
+                aug[i * (d + 1) + d] += ari * b[r] as f64;
+                for j in 0..d {
+                    aug[i * (d + 1) + j] += ari * row[j] as f64;
+                }
+            }
+        }
+    }
+    for col in 0..d {
+        let piv = (col..d)
+            .max_by(|&x, &y| {
+                aug[x * (d + 1) + col].abs().partial_cmp(&aug[y * (d + 1) + col].abs()).unwrap()
+            })
+            .unwrap();
+        if piv != col {
+            for j in 0..=d {
+                aug.swap(col * (d + 1) + j, piv * (d + 1) + j);
+            }
+        }
+        let pv = aug[col * (d + 1) + col];
+        for row in 0..d {
+            if row != col {
+                let f = aug[row * (d + 1) + col] / pv;
+                for j in col..=d {
+                    aug[row * (d + 1) + j] -= f * aug[col * (d + 1) + j];
+                }
+            }
+        }
+    }
+    (0..d).map(|i| (aug[i * (d + 1) + d] / aug[i * (d + 1) + i]) as f32).collect()
+}
+
+/// Full-batch local gradient `A^T (A x − b) / rows` into `grad`.
+fn local_grad(a: &[f32], b: &[f32], x: &[f32], p: &Problem, grad: &mut [f32]) {
+    let d = p.d;
+    for g in grad.iter_mut() {
+        *g = 0.0;
+    }
+    for (r, br) in b.iter().enumerate() {
+        let row = &a[r * d..(r + 1) * d];
+        let mut dot = 0.0f32;
+        for (ac, xc) in row.iter().zip(x) {
+            dot += ac * xc;
+        }
+        let scale = (dot - br) / p.rows as f32;
+        for (g, ac) in grad.iter_mut().zip(row) {
+            *g += scale * ac;
+        }
+    }
+}
+
+struct Outcome {
+    /// Virtual time at which *every* rank's iterate first reached target.
+    ttt: f64,
+    /// Global loss at the rank-averaged final iterate.
+    final_loss: f64,
+    /// Largest window staleness any rank observed (async only).
+    max_staleness: f64,
+}
+
+fn collect_outcome(
+    results: Vec<(Option<f64>, f64, f64)>,
+    label: &str,
+) -> anyhow::Result<(f64, f64)> {
+    let mut ttt = 0.0f64;
+    for (rank, &(hit, end_vtime, _)) in results.iter().enumerate() {
+        let t = hit.ok_or_else(|| {
+            anyhow::anyhow!(
+                "{label}: rank {rank} never reached the target loss within its budget \
+                 (ran to vtime {end_vtime:.3}s)"
+            )
+        })?;
+        ttt = ttt.max(t);
+    }
+    Ok((ttt, results[0].2))
+}
+
+/// Synchronous DSGD (ATC over the static expo2 topology) under the given
+/// compute profile. Compute is charged per step through the heterogeneity
+/// model; the neighbor allreduce itself propagates straggler lateness.
+fn run_sync(p: &Problem, hetero: ComputeHeterogeneity, target: f64) -> anyhow::Result<Outcome> {
+    let prob = *p;
+    let cfg = SpmdConfig::new(N).with_topo_check(false).with_async(AsyncSpec::new(hetero));
+    let results = run_spmd(cfg, move |ctx| {
+        let p = prob;
+        let data = global_data(&p);
+        let (a, b) = data[ctx.rank()].clone();
+        let mut x = vec![0.0f32; p.d];
+        let mut grad = vec![0.0f32; p.d];
+        let mut opt = Dgd::new(p.gamma, StepOrder::Atc, CommSpec::Static);
+        let mut hit: Option<f64> = None;
+        for _ in 0..p.sync_iters {
+            ctx.simulate_compute_hetero(p.base_step);
+            local_grad(&a, &b, &x, &p, &mut grad);
+            opt.step(ctx, &mut x, &grad)?;
+            if hit.is_none() && global_loss(&data, &p, &x) <= target {
+                hit = Some(ctx.vtime());
+            }
+        }
+        let end_vtime = ctx.vtime();
+        let x_bar = ctx.allreduce(&x, ReduceOp::Average, AllreduceAlgo::Ring)?;
+        Ok((hit, end_vtime, global_loss(&data, &p, &x_bar)))
+    })?;
+    let (ttt, final_loss) = collect_outcome(results, "sync")?;
+    Ok(Outcome { ttt, final_loss, max_staleness: 0.0 })
+}
+
+/// Asynchronous push-sum SGD under the given compute profile: one-sided
+/// window ops, causal drains in receive-then-adapt order, no barriers; the
+/// bounded-staleness horizon stands in for real wall time and the loop
+/// runs on a virtual-time budget so all ranks leave the regime together.
+fn run_async(p: &Problem, hetero: ComputeHeterogeneity, target: f64) -> anyhow::Result<Outcome> {
+    let prob = *p;
+    let horizon = 4.0 * p.base_step * hetero.max_factor();
+    let spec = AsyncSpec::new(hetero).with_horizon(horizon);
+    let cfg = SpmdConfig::new(N).with_topo_check(false).with_async(spec);
+    let results = run_spmd(cfg, move |ctx| {
+        let p = prob;
+        let data = global_data(&p);
+        let (a, b) = data[ctx.rank()].clone();
+        let mut x = vec![0.0f32; p.d];
+        let mut grad = vec![0.0f32; p.d];
+        let mut opt = AsyncPushSumSgd::new(p.gamma, "async_probe");
+        let mut hit: Option<f64> = None;
+        let mut max_staleness = 0.0f64;
+        // Safety cap well above t_end / base_step so a runaway loop ends.
+        let step_cap = (4.0 * p.t_end / p.base_step) as usize;
+        for _ in 0..step_cap {
+            if ctx.vtime() >= p.t_end {
+                break;
+            }
+            ctx.async_throttle();
+            ctx.simulate_compute_hetero(p.base_step);
+            // Receive-then-adapt: fold in arrived mass, then evaluate the
+            // gradient on the refreshed iterate.
+            opt.refresh(ctx, &mut x)?;
+            local_grad(&a, &b, &x, &p, &mut grad);
+            opt.step(ctx, &mut x, &grad)?;
+            max_staleness = max_staleness.max(opt.staleness());
+            if hit.is_none() && global_loss(&data, &p, &x) <= target {
+                hit = Some(ctx.vtime());
+            }
+        }
+        let end_vtime = ctx.vtime();
+        opt.finalize(ctx, &mut x)?;
+        let x_bar = ctx.allreduce(&x, ReduceOp::Average, AllreduceAlgo::Ring)?;
+        Ok((hit, end_vtime, global_loss(&data, &p, &x_bar), max_staleness))
+    })?;
+    let max_staleness = results.iter().map(|r| r.3).fold(0.0f64, f64::max);
+    let flat: Vec<(Option<f64>, f64, f64)> =
+        results.into_iter().map(|(h, v, l, _)| (h, v, l)).collect();
+    let (ttt, final_loss) = collect_outcome(flat, "async")?;
+    Ok(Outcome { ttt, final_loss, max_staleness })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("ASYNC_SMOKE").is_ok();
+    let p = if smoke {
+        Problem { d: 32, rows: 48, sync_iters: 90, t_end: 0.35, gamma: 0.25, base_step: 1e-3 }
+    } else {
+        Problem { d: 64, rows: 96, sync_iters: 110, t_end: 0.45, gamma: 0.2, base_step: 1e-3 }
+    };
+    let data = global_data(&p);
+    let x_opt = exact_solution(&data, &p);
+    let opt_loss = global_loss(&data, &p, &x_opt);
+    let target = 2.0 * opt_loss;
+    println!(
+        "async probe: {N} nodes (expo2), linear regression d={} rows/node={} \
+         | optimal loss {opt_loss:.6}, target {target:.6}",
+        p.d, p.rows
+    );
+
+    // ---- profile 1: uniform compute (no straggler) ------------------------
+    let uniform = ComputeHeterogeneity::uniform(N).with_jitter(0.05);
+    let sync_u = run_sync(&p, uniform.clone(), target)?;
+    let async_u = run_async(&p, uniform, target)?;
+    let loss_delta_rel = (async_u.final_loss - sync_u.final_loss).abs() / sync_u.final_loss;
+    println!(
+        "  uniform  | sync  DSGD    : ttt {:>8.4}s | final loss {:.6}",
+        sync_u.ttt, sync_u.final_loss
+    );
+    println!(
+        "  uniform  | async push-sum: ttt {:>8.4}s | final loss {:.6} (delta {:+.2}%) | \
+         max staleness {:.2} ms",
+        async_u.ttt,
+        async_u.final_loss,
+        100.0 * (async_u.final_loss - sync_u.final_loss) / sync_u.final_loss,
+        1e3 * async_u.max_staleness
+    );
+
+    // ---- profile 2: one 4x straggler --------------------------------------
+    let strag = ComputeHeterogeneity::straggler(N, 0, 4.0).with_jitter(0.05);
+    let sync_s = run_sync(&p, strag.clone(), target)?;
+    let async_s = run_async(&p, strag, target)?;
+    let speedup = sync_s.ttt / async_s.ttt;
+    println!(
+        "  straggler| sync  DSGD    : ttt {:>8.4}s | final loss {:.6}",
+        sync_s.ttt, sync_s.final_loss
+    );
+    println!(
+        "  straggler| async push-sum: ttt {:>8.4}s | final loss {:.6} | speedup {speedup:.2}x | \
+         max staleness {:.2} ms",
+        async_s.ttt,
+        async_s.final_loss,
+        1e3 * async_s.max_staleness
+    );
+
+    // ---- acceptance gates (ISSUE 5) ---------------------------------------
+    anyhow::ensure!(
+        speedup >= 1.5,
+        "async push-sum speedup {speedup:.2}x under the 4x straggler is below the 1.5x gate \
+         (sync {:.4}s vs async {:.4}s to target)",
+        sync_s.ttt,
+        async_s.ttt
+    );
+    anyhow::ensure!(
+        loss_delta_rel <= 0.05,
+        "async final loss {:.6} drifted {:.2}% from sync {:.6} with no straggler (gate: 5%)",
+        async_u.final_loss,
+        100.0 * loss_delta_rel,
+        sync_u.final_loss
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n  \"bench\": \"async\",\n  \"nodes\": {},\n  \"d\": {},\n",
+            "  \"rows_per_node\": {},\n  \"sync_iters\": {},\n  \"t_end_s\": {},\n",
+            "  \"gamma\": {},\n  \"base_step_s\": {},\n  \"smoke\": {},\n",
+            "  \"optimal_loss\": {:.8},\n  \"target_loss\": {:.8},\n",
+            "  \"uniform\": {{\n",
+            "    \"sync\":  {{\"ttt_s\": {:.6}, \"final_loss\": {:.8}}},\n",
+            "    \"async\": {{\"ttt_s\": {:.6}, \"final_loss\": {:.8}, ",
+            "\"max_staleness_s\": {:.6}}},\n",
+            "    \"final_loss_delta_rel\": {:.6}\n  }},\n",
+            "  \"straggler_4x\": {{\n",
+            "    \"sync\":  {{\"ttt_s\": {:.6}, \"final_loss\": {:.8}}},\n",
+            "    \"async\": {{\"ttt_s\": {:.6}, \"final_loss\": {:.8}, ",
+            "\"max_staleness_s\": {:.6}}},\n",
+            "    \"speedup\": {:.4}\n  }}\n}}\n"
+        ),
+        N,
+        p.d,
+        p.rows,
+        p.sync_iters,
+        p.t_end,
+        p.gamma,
+        p.base_step,
+        smoke,
+        opt_loss,
+        target,
+        sync_u.ttt,
+        sync_u.final_loss,
+        async_u.ttt,
+        async_u.final_loss,
+        async_u.max_staleness,
+        loss_delta_rel,
+        sync_s.ttt,
+        sync_s.final_loss,
+        async_s.ttt,
+        async_s.final_loss,
+        async_s.max_staleness,
+        speedup
+    );
+    let out_path = std::env::var("BENCH_ASYNC_OUT").unwrap_or_else(|_| "BENCH_async.json".into());
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    println!("async_probe OK");
+    Ok(())
+}

@@ -9,7 +9,7 @@
 //! modules.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::compress::{CompressionSpec, CompressionState};
@@ -94,6 +94,12 @@ pub struct NodeContext {
     /// Payload bytes this rank put on the wire (shared with its
     /// communication thread so fused sends are counted too).
     pub(crate) tx_bytes: Arc<AtomicU64>,
+    /// Asynchronous-regime configuration (compute heterogeneity + bounded
+    /// staleness horizon), set via [`crate::launcher::SpmdConfig::with_async`].
+    pub(crate) async_spec: Option<Arc<crate::launcher::AsyncSpec>>,
+    /// Per-rank "left the async loop" flags, shared by all ranks: the
+    /// throttle ignores done ranks (their clocks stall forever).
+    pub(crate) async_done: Arc<Vec<AtomicBool>>,
 }
 
 /// Error-feedback stream-key namespace: unscaled fan-out (one encoded
@@ -132,6 +138,8 @@ impl NodeContext {
         seed: u64,
         compression: CompressionSpec,
         tx_bytes: Arc<AtomicU64>,
+        async_spec: Option<Arc<crate::launcher::AsyncSpec>>,
+        async_done: Arc<Vec<AtomicBool>>,
     ) -> Self {
         NodeContext {
             rank,
@@ -160,6 +168,8 @@ impl NodeContext {
                 seed ^ 0xc0de ^ (rank as u64).wrapping_mul(0xD1B54A32D192ED03),
             ),
             tx_bytes,
+            async_spec,
+            async_done,
         }
     }
 
@@ -242,6 +252,80 @@ impl NodeContext {
     /// Account `dt` seconds of local computation on the virtual clock.
     pub fn simulate_compute(&self, dt: f64) {
         self.clock().elapse(dt);
+    }
+
+    /// Account one step of `base` seconds of nominal compute, scaled by
+    /// this rank's heterogeneity factor and seeded jitter when an
+    /// [`crate::launcher::AsyncSpec`] is configured (identical to
+    /// [`NodeContext::simulate_compute`] otherwise). Returns the charged
+    /// virtual seconds — this is how stragglers exist in virtual time.
+    pub fn simulate_compute_hetero(&mut self, base: f64) -> f64 {
+        let dt = match self.async_spec.clone() {
+            None => base,
+            Some(spec) => spec.hetero.sample(self.rank, base, &mut self.rng),
+        };
+        self.clock().elapse(dt);
+        dt
+    }
+
+    /// Bounded-staleness throttle for asynchronous loops: block (yielding
+    /// the OS thread) while this rank's virtual clock runs more than the
+    /// configured horizon ahead of the slowest still-active rank. No-op
+    /// without an [`crate::launcher::AsyncSpec`] or with an infinite
+    /// horizon. This emulates real wall time, where a fast worker cannot
+    /// execute unboundedly many iterations while a straggler performs one —
+    /// the assumption behind every bounded-delay convergence result (and
+    /// behind push-sum's weight staying bounded away from zero).
+    pub fn async_throttle(&self) {
+        let Some(spec) = &self.async_spec else { return };
+        if !spec.horizon.is_finite() {
+            return;
+        }
+        loop {
+            if self.vtime() <= self.min_active_vtime() + spec.horizon {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(20));
+        }
+    }
+
+    /// Mark this rank as finished with its asynchronous loop so peers'
+    /// throttles stop waiting on a clock that will never advance again.
+    /// Called by the async driver/optimizer teardown; idempotent. The
+    /// launcher also sets the flag when a node thread exits for any reason
+    /// (including an error), so a failing rank cannot strand its peers in
+    /// the throttle.
+    pub fn mark_async_done(&self) {
+        self.async_done[self.rank].store(true, Ordering::Release);
+    }
+
+    /// Re-arm this rank's asynchronous-regime membership (clears its done
+    /// flag). The async optimizers call this at window creation, so a
+    /// *second* async phase within one `run_spmd` program is throttled
+    /// like the first instead of silently running unbounded.
+    pub fn mark_async_active(&self) {
+        self.async_done[self.rank].store(false, Ordering::Release);
+    }
+
+    /// How far this rank's clock runs ahead of the slowest still-active
+    /// rank (0 when it *is* the slowest) — the per-rank staleness proxy the
+    /// async driver logs.
+    pub fn async_lag(&self) -> f64 {
+        (self.vtime() - self.min_active_vtime()).max(0.0)
+    }
+
+    /// Smallest virtual clock among ranks that have not marked themselves
+    /// done (always includes this rank's own clock, so the result is never
+    /// ahead of the caller).
+    fn min_active_vtime(&self) -> f64 {
+        let mut min = self.vtime();
+        for (r, clock) in self.clocks.iter().enumerate() {
+            if r != self.rank && self.async_done[r].load(Ordering::Acquire) {
+                continue;
+            }
+            min = min.min(clock.now());
+        }
+        min
     }
 
     /// Per-kind negotiation sequence number. Unlike the tag counters (which

@@ -6,7 +6,7 @@
 //! virtual clocks, the negotiation service, the window table, per-node
 //! communication threads and (optionally) the PJRT device service.
 
-use std::sync::atomic::AtomicU64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::compress::CompressionSpec;
@@ -15,11 +15,53 @@ use crate::negotiation::NegotiationService;
 use crate::nonblocking::CommThread;
 use crate::pool::HotPath;
 use crate::runtime::DeviceHandle;
+use crate::simnet::hetero::ComputeHeterogeneity;
 use crate::simnet::NetworkModel;
 use crate::timeline::Timeline;
 use crate::topology::{builders, Graph, WeightMatrix};
 use crate::transport::{fabric, VClock};
 use crate::window::WindowTable;
+
+/// Configuration of the asynchronous execution regime (paper §IV-C).
+///
+/// Two knobs, both inert unless a driver opts in:
+///
+/// - **Compute heterogeneity** — per-rank slowdown factors plus seeded
+///   jitter ([`ComputeHeterogeneity`]), applied wherever per-step compute is
+///   charged through
+///   [`crate::context::NodeContext::simulate_compute_hetero`]. This makes
+///   stragglers exist in virtual time for synchronous *and* asynchronous
+///   runs, so the two regimes are comparable.
+/// - **Staleness horizon** — the bounded-asynchrony window (virtual
+///   seconds) enforced by
+///   [`crate::context::NodeContext::async_throttle`]: a rank whose virtual
+///   clock runs more than `horizon` ahead of the slowest still-active rank
+///   yields until the laggard catches up. This is the simulator's stand-in
+///   for real wall time, where a fast worker physically cannot execute
+///   unbounded iterations while a peer performs one; every known
+///   convergence result for asynchronous decentralized SGD assumes such a
+///   bound. `f64::INFINITY` (the default) disables the throttle.
+#[derive(Clone)]
+pub struct AsyncSpec {
+    /// Per-rank compute slowdown factors + jitter.
+    pub hetero: ComputeHeterogeneity,
+    /// Bounded-staleness window in virtual seconds (∞ = unthrottled).
+    pub horizon: f64,
+}
+
+impl AsyncSpec {
+    /// A spec with the given heterogeneity and no staleness throttle.
+    pub fn new(hetero: ComputeHeterogeneity) -> Self {
+        AsyncSpec { hetero, horizon: f64::INFINITY }
+    }
+
+    /// Set the bounded-staleness horizon (builder style). A good default is
+    /// a few straggler step times: `k * base_step * hetero.max_factor()`.
+    pub fn with_horizon(mut self, horizon: f64) -> Self {
+        self.horizon = horizon;
+        self
+    }
+}
 
 /// Configuration of an SPMD run.
 #[derive(Clone)]
@@ -48,6 +90,10 @@ pub struct SpmdConfig {
     /// Communication compression applied to neighbor-averaging payloads
     /// (blocking and fused non-blocking), default none.
     pub compression: CompressionSpec,
+    /// Asynchronous-regime configuration: per-rank compute heterogeneity
+    /// and the bounded-staleness throttle. `None` (default) leaves every
+    /// rank at nominal speed and every async helper a no-op.
+    pub async_spec: Option<AsyncSpec>,
 }
 
 impl SpmdConfig {
@@ -72,6 +118,7 @@ impl SpmdConfig {
             enable_topo_check: true,
             hot_path: HotPath::default(),
             compression: CompressionSpec::default(),
+            async_spec: None,
         }
     }
 
@@ -129,6 +176,13 @@ impl SpmdConfig {
         self.compression = compression;
         self
     }
+
+    /// Enable the asynchronous execution regime: per-rank compute
+    /// heterogeneity plus (optionally) a bounded-staleness throttle.
+    pub fn with_async(mut self, spec: AsyncSpec) -> Self {
+        self.async_spec = Some(spec);
+        self
+    }
 }
 
 /// Run `f` as a single program on `cfg.nodes` simulated nodes and return
@@ -158,6 +212,13 @@ where
     // Per-rank wire-byte counters, shared between a node's blocking context
     // and its communication thread.
     let tx_bytes: Vec<Arc<AtomicU64>> = (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect();
+
+    // Asynchronous-regime state: the shared spec plus one "done" flag per
+    // rank so the bounded-staleness throttle stops waiting on ranks that
+    // have left their training loop (their clocks stall forever).
+    let async_spec = cfg.async_spec.clone().map(Arc::new);
+    let async_done: Arc<Vec<AtomicBool>> =
+        Arc::new((0..n).map(|_| AtomicBool::new(false)).collect());
 
     // Communication threads own the second endpoint fabric.
     let mut comm_threads = vec![];
@@ -205,15 +266,31 @@ where
             cfg.seed,
             cfg.compression,
             tx_bytes[rank].clone(),
+            async_spec.clone(),
+            async_done.clone(),
         );
         ctx.enable_topo_check = cfg.enable_topo_check;
         ctx.fusion_threshold = cfg.fusion_threshold;
         ctx.hot_path = cfg.hot_path;
         ctx.comm = comm_queue;
+        let done_on_exit = async_done.clone();
         let handle = std::thread::Builder::new()
             .name(format!("bf-node-{rank}"))
             .stack_size(8 << 20)
-            .spawn(move || f(&mut ctx))
+            .spawn(move || {
+                // Any exit — success, error, or panic — marks this rank
+                // async-done, so peers spinning in `async_throttle` on its
+                // stalled clock wake up and the run can surface the error
+                // instead of hanging.
+                struct DoneOnExit(Arc<Vec<AtomicBool>>, usize);
+                impl Drop for DoneOnExit {
+                    fn drop(&mut self) {
+                        self.0[self.1].store(true, Ordering::Release);
+                    }
+                }
+                let _guard = DoneOnExit(done_on_exit, rank);
+                f(&mut ctx)
+            })
             .expect("spawn node thread");
         handles.push(handle);
     }

@@ -1,0 +1,343 @@
+//! Asynchronous decentralized optimizers (paper §IV-C, Listing 3; Lian et
+//! al. 2017; Assran et al. 2019).
+//!
+//! These optimizers communicate exclusively through one-sided window
+//! operations ([`crate::window`]) — no barriers, no matched send/recv — so
+//! each rank steps at its own virtual-time rate and a straggler slows
+//! nobody but itself:
+//!
+//! - [`AsyncPushSumSgd`] carries the extended vector `[u; v]` (parameter
+//!   *mass* plus the push-sum scalar) and splits it column-stochastically
+//!   over the out-neighbors with `win_accumulate`, draining arrived mass
+//!   with the causal `win_update_then_collect_causal`. The iterate exposed
+//!   to the caller is the de-biased `x = u / v`: because the weights
+//!   conserve mass exactly (`Σ_i (u_i + pending)` is invariant), the
+//!   network average of `x` is unbiased no matter how asymmetric the
+//!   communication pattern gets — the property naive asynchronous gossip
+//!   loses.
+//! - [`AsyncGossipSgd`] is AD-PSGD-flavored pairwise gossip: a convex
+//!   *causal* `win_update` average of the local tensor with the (possibly
+//!   stale) neighbor slots — puts still virtually in flight keep their
+//!   weight on the local tensor — one local SGD step, then a `win_put` of
+//!   the parameters to a uniformly random out-neighbor. Cheaper per step
+//!   and convex-hull contractive, but only approximately mean-preserving.
+//!
+//! The per-iteration contract is **receive-then-adapt** (paper Listing 3's
+//! order), split across two calls so the gradient is evaluated on the
+//! freshest available information: [`AsyncDecentralizedOptimizer::refresh`]
+//! folds arrived neighbor mass into the iterate *before* the caller
+//! computes its gradient, and [`AsyncDecentralizedOptimizer::step`]
+//! applies the gradient and sends. Draining after the gradient instead
+//! (adapt-then-receive) makes every gradient one compute-window staler —
+//! numerically that costs ~1.5x more iterations to a target loss on the
+//! linear-regression probe, eating most of the asynchrony win.
+//!
+//! Both optimizers are meant to run under a bounded-staleness regime
+//! ([`crate::launcher::AsyncSpec`] horizon +
+//! [`crate::context::NodeContext::async_throttle`]) and a **virtual-time
+//! budget** (loop `while ctx.vtime() < t_end`, not a fixed step count):
+//! with a fixed per-rank step count the fast ranks finish early and a
+//! straggler keeps splitting its mass into windows nobody drains, driving
+//! its push-sum weight to floating-point zero — the same unbounded-
+//! asynchrony failure mode `examples/async_push_sum.rs` documents.
+
+use crate::context::NodeContext;
+
+/// The asynchronous optimization contract: refresh (receive) → caller
+/// computes the gradient → step (adapt + send), plus an explicit teardown.
+/// Unlike [`crate::optim::DecentralizedOptimizer`], implementations own a
+/// window and therefore a teardown protocol: `finalize` marks the rank
+/// done (so peers' throttles stop waiting on it), synchronizes, performs
+/// the final blocking drain that collects all still-pending mass, and
+/// frees the window.
+pub trait AsyncDecentralizedOptimizer: Send {
+    /// Fold whatever neighbor information has (virtually) arrived into the
+    /// iterate, in place. Call once per iteration, after charging the
+    /// step's compute time and *before* computing the gradient. Lazily
+    /// performs the collective window creation on the first call — the
+    /// regime's only startup synchronization.
+    fn refresh(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>) -> anyhow::Result<()>;
+
+    /// Apply one gradient to the (refreshed) iterate and send this rank's
+    /// share to its neighbors. Never blocks on a peer.
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32])
+        -> anyhow::Result<()>;
+
+    /// Leave the asynchronous regime: mark done, barrier, drain pending
+    /// mass into `x`, free the window. Collective — every rank must call it
+    /// exactly once after its last `step`.
+    fn finalize(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>) -> anyhow::Result<()>;
+
+    /// Display name.
+    fn name(&self) -> String;
+
+    /// Window staleness observed at the most recent `refresh` (virtual
+    /// seconds between now and the oldest last-write among the slots).
+    fn staleness(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Asynchronous push-sum SGD: mass-conserving one-sided gossip with the
+/// push-sum scalar correcting the bias (paper §IV-C / Listing 3, with an
+/// SGD term — stochastic gradient push).
+///
+/// Per iteration, with `d = dim(x)`, out-degree `m` and
+/// `share = 1/(m+1)`:
+///
+/// 1. `refresh`: `win_update_then_collect_causal` folds arrived mass into
+///    `[u; v]` and exposes `x = u / v`;
+/// 2. the caller computes `g(x)` at the refreshed iterate;
+/// 3. `step`: `u ← u − γ · v · g` (the gradient scales by `v` so `x`
+///    moves by exactly `−γ g`), then `win_accumulate([u; v], share, dsts)`
+///    keeps `share` and pushes `share` to each out-neighbor
+///    (column-stochastic, so mass is conserved; the split leaves `u/v`
+///    unchanged).
+pub struct AsyncPushSumSgd {
+    /// Step size `γ`.
+    pub gamma: f32,
+    window: String,
+    u: Vec<f32>,
+    v: f32,
+    /// Persistent `[u; v]` scratch — the per-step wire image, reused so the
+    /// regime's hot loop allocates nothing (the repo's pooled hot-path
+    /// discipline).
+    ext: Vec<f32>,
+    /// Column-stochastic destination weights, cached at window creation
+    /// (the window topology is fixed then anyway).
+    dsts: Vec<(usize, f64)>,
+    share: f64,
+    created: bool,
+    last_staleness: f64,
+    /// Completed gradient steps (diagnostics).
+    pub steps: u64,
+}
+
+impl AsyncPushSumSgd {
+    /// New asynchronous push-sum SGD communicating through the window
+    /// `window` (every rank must use the same name).
+    pub fn new(gamma: f32, window: &str) -> Self {
+        AsyncPushSumSgd {
+            gamma,
+            window: window.to_string(),
+            u: Vec::new(),
+            v: 1.0,
+            ext: Vec::new(),
+            dsts: Vec::new(),
+            share: 1.0,
+            created: false,
+            last_staleness: 0.0,
+            steps: 0,
+        }
+    }
+
+    /// Current push-sum weight `v` (tests assert `Σ_i v_i = n` at rest).
+    pub fn push_weight(&self) -> f32 {
+        self.v
+    }
+
+    fn fill_ext(&mut self) {
+        self.ext.clear();
+        self.ext.extend_from_slice(&self.u);
+        self.ext.push(self.v);
+    }
+
+    fn take_ext(&mut self, d: usize) {
+        self.u.copy_from_slice(&self.ext[..d]);
+        self.v = self.ext[d];
+    }
+
+    fn debias_into(&self, x: &mut [f32]) {
+        for (xi, ui) in x.iter_mut().zip(&self.u) {
+            *xi = ui / self.v;
+        }
+    }
+}
+
+impl AsyncDecentralizedOptimizer for AsyncPushSumSgd {
+    fn refresh(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>) -> anyhow::Result<()> {
+        let d = x.len();
+        if !self.created {
+            // First call: seed the mass from the caller's iterate and cache
+            // the column-stochastic split (the window topology is fixed at
+            // creation). The win_create barrier is the regime's only
+            // startup synchronization (all ranks are still at iteration 0).
+            self.u = x.clone();
+            self.v = 1.0;
+            let out = ctx.out_neighbor_ranks();
+            self.share = 1.0 / (out.len() + 1) as f64;
+            self.dsts = out.iter().map(|&r| (r, self.share)).collect();
+            self.fill_ext();
+            // Re-arm the regime membership: a second async phase in the
+            // same program must be throttled like the first.
+            ctx.mark_async_active();
+            ctx.win_create(&self.window, &self.ext, /*zero_init=*/ true)?;
+            self.created = true;
+        }
+        anyhow::ensure!(self.u.len() == d, "parameter size changed mid-run");
+        self.last_staleness = ctx.win_staleness(&self.window)?;
+        self.fill_ext();
+        ctx.win_update_then_collect_causal(&self.window, &mut self.ext)?;
+        self.take_ext(d);
+        anyhow::ensure!(
+            self.v > 1e-12,
+            "push-sum weight collapsed at step {} (unbounded asynchrony? configure an \
+             AsyncSpec horizon and loop on a virtual-time budget)",
+            self.steps
+        );
+        self.debias_into(x);
+        Ok(())
+    }
+
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let d = x.len();
+        anyhow::ensure!(grad.len() == d, "gradient/parameter size mismatch");
+        anyhow::ensure!(self.created && self.u.len() == d, "step before refresh");
+
+        for (ui, g) in self.u.iter_mut().zip(grad) {
+            *ui -= self.gamma * self.v * g;
+        }
+
+        self.fill_ext();
+        ctx.win_accumulate(&self.window, &mut self.ext, self.share, &self.dsts)?;
+        self.take_ext(d);
+        // The split scales u and v alike, so u/v only moved by -γ g.
+        self.debias_into(x);
+        self.steps += 1;
+        Ok(())
+    }
+
+    fn finalize(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>) -> anyhow::Result<()> {
+        if !self.created {
+            return Ok(());
+        }
+        ctx.mark_async_done();
+        // After the barrier no rank issues further accumulates, so the
+        // blocking drain below observes every write ever made.
+        ctx.barrier()?;
+        let d = x.len();
+        self.fill_ext();
+        ctx.win_update_then_collect(&self.window, &mut self.ext)?;
+        self.take_ext(d);
+        anyhow::ensure!(self.v > 1e-12, "push-sum weight collapsed during teardown");
+        self.debias_into(x);
+        ctx.win_free(&self.window)?;
+        self.created = false;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        "AsyncPushSumSGD(window)".into()
+    }
+
+    fn staleness(&self) -> f64 {
+        self.last_staleness
+    }
+}
+
+/// AD-PSGD-style asynchronous gossip SGD: `refresh` is a convex *causal*
+/// `win_update` average of the local tensor with the (stale) neighbor
+/// slots (in-flight puts keep their weight on the local tensor); `step`
+/// is a local SGD step followed by a `win_put` of the parameters to one
+/// uniformly random out-neighbor. Every combine is a convex combination,
+/// so iterates stay inside the convex hull of the initial points plus the
+/// gradient displacements; unlike push-sum the network mean is only
+/// approximately preserved, which is the standard AD-PSGD trade-off
+/// (cheaper steps, small asymptotic bias).
+pub struct AsyncGossipSgd {
+    /// Step size `γ`.
+    pub gamma: f32,
+    window: String,
+    /// Out-neighbor ranks, cached at window creation (the topology is
+    /// fixed then) so the hot loop allocates nothing.
+    outs: Vec<usize>,
+    /// Uniform source weights over in-neighbors, cached likewise.
+    srcs: Vec<(usize, f64)>,
+    self_w: f64,
+    created: bool,
+    last_staleness: f64,
+    /// Completed gradient steps (diagnostics).
+    pub steps: u64,
+}
+
+impl AsyncGossipSgd {
+    /// New asynchronous pairwise-gossip SGD on the window `window`.
+    pub fn new(gamma: f32, window: &str) -> Self {
+        AsyncGossipSgd {
+            gamma,
+            window: window.to_string(),
+            outs: Vec::new(),
+            srcs: Vec::new(),
+            self_w: 1.0,
+            created: false,
+            last_staleness: 0.0,
+            steps: 0,
+        }
+    }
+}
+
+impl AsyncDecentralizedOptimizer for AsyncGossipSgd {
+    fn refresh(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>) -> anyhow::Result<()> {
+        if !self.created {
+            // zero_init = false: slots start at the owner's initial tensor,
+            // so the very first averages are exact under a common init.
+            // Neighbor lists and weights are cached here — the window
+            // topology is fixed at creation. Re-arm the regime membership
+            // so a second async phase is throttled like the first.
+            ctx.mark_async_active();
+            ctx.win_create(&self.window, x, /*zero_init=*/ false)?;
+            self.outs = ctx.out_neighbor_ranks();
+            let ins = ctx.in_neighbor_ranks();
+            self.self_w = 1.0 / (ins.len() + 1) as f64;
+            self.srcs = ins.iter().map(|&r| (r, self.self_w)).collect();
+            self.created = true;
+        }
+        self.last_staleness = ctx.win_staleness(&self.window)?;
+        // Causal variant: a slot whose latest put is still virtually in
+        // flight keeps its weight on the local tensor (the combination
+        // stays convex) and never drags this rank's clock forward.
+        let averaged = ctx.win_update_causal(&self.window, x, self.self_w, &self.srcs)?;
+        ctx.recycle(std::mem::replace(x, averaged));
+        Ok(())
+    }
+
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(grad.len() == x.len(), "gradient/parameter size mismatch");
+        anyhow::ensure!(self.created, "step before refresh");
+
+        for (xi, g) in x.iter_mut().zip(grad) {
+            *xi -= self.gamma * g;
+        }
+
+        if !self.outs.is_empty() {
+            let peer = self.outs[ctx.rng.usize_below(self.outs.len())];
+            ctx.win_put(&self.window, x, &[(peer, 1.0)])?;
+        }
+        self.steps += 1;
+        Ok(())
+    }
+
+    fn finalize(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>) -> anyhow::Result<()> {
+        if !self.created {
+            return Ok(());
+        }
+        ctx.mark_async_done();
+        ctx.barrier()?;
+        // One last synchronized (blocking) average so stragglers fold in
+        // their peers' final parameters before the window disappears.
+        let averaged = ctx.win_update(&self.window, x, self.self_w, &self.srcs)?;
+        ctx.recycle(std::mem::replace(x, averaged));
+        ctx.barrier()?;
+        ctx.win_free(&self.window)?;
+        self.created = false;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        "AsyncGossipSGD(window)".into()
+    }
+
+    fn staleness(&self) -> f64 {
+        self.last_staleness
+    }
+}

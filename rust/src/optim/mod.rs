@@ -30,6 +30,16 @@
 //!   (QG-DmSGD, [67]);
 //! - [`PeriodicGlobalAveraging`] — wrapper that swaps partial averaging for
 //!   a global allreduce every `period` steps (paper Listing 4 / [4]).
+//!
+//! The *asynchronous* family — [`AsyncPushSumSgd`] and [`AsyncGossipSgd`],
+//! which communicate through one-sided window operations instead of
+//! matched collectives — lives in [`asynchronous`] behind its own
+//! [`AsyncDecentralizedOptimizer`] trait (the step/teardown contract
+//! differs: async optimizers own a window and a drain protocol).
+
+pub mod asynchronous;
+
+pub use asynchronous::{AsyncDecentralizedOptimizer, AsyncGossipSgd, AsyncPushSumSgd};
 
 use std::sync::Arc;
 

@@ -1,0 +1,130 @@
+//! Per-rank compute heterogeneity — stragglers in virtual time.
+//!
+//! The paper's throughput model (and the synchronous training driver built
+//! on it) assumes every rank computes a step in the same time. Real
+//! clusters do not: multi-tenant interference, thermal throttling and
+//! hardware generations make some ranks persistently slower, and every
+//! rank jitters around its own mean. Synchronous decentralized methods pay
+//! the slowest rank's price each iteration; asynchronous methods (paper
+//! §IV-C; Lian et al. 2017) are exactly the regime where that stops being
+//! true — which is unreachable in a simulator that models all ranks as
+//! equally fast.
+//!
+//! [`ComputeHeterogeneity`] closes that gap: a deterministic per-rank
+//! *slowdown factor* (1.0 = nominal speed, 4.0 = a 4x straggler) plus a
+//! seeded multiplicative jitter drawn from the node's own
+//! [`crate::rng::Rng`], so runs stay reproducible from a single seed. It is
+//! threaded through [`crate::launcher::SpmdConfig`]'s `AsyncSpec` into
+//! [`crate::context::NodeContext::simulate_compute_hetero`] and from there
+//! into the training drivers, so stragglers exist in virtual time for both
+//! the synchronous baseline and the asynchronous loop.
+
+use crate::rng::Rng;
+
+/// Deterministic per-rank compute slowdown factors plus seeded jitter.
+#[derive(Debug, Clone)]
+pub struct ComputeHeterogeneity {
+    /// Per-rank slowdown factor (>= 0; 1.0 = nominal). Ranks beyond the
+    /// vector's length run at factor 1.0.
+    pub slowdowns: Vec<f64>,
+    /// Relative jitter amplitude in `[0, 1)`: each sampled step time is
+    /// multiplied by `1 + jitter * u` with `u` uniform in `[-1, 1)`.
+    pub jitter: f64,
+}
+
+impl ComputeHeterogeneity {
+    /// All `n` ranks at nominal speed (the homogeneous baseline).
+    pub fn uniform(n: usize) -> Self {
+        ComputeHeterogeneity { slowdowns: vec![1.0; n], jitter: 0.0 }
+    }
+
+    /// `n` ranks at nominal speed except `rank`, which is `factor` times
+    /// slower — the single-straggler scenario of the async probes.
+    pub fn straggler(n: usize, rank: usize, factor: f64) -> Self {
+        assert!(rank < n, "straggler rank {rank} out of range for {n} ranks");
+        assert!(factor > 0.0, "slowdown factor must be positive");
+        let mut slowdowns = vec![1.0; n];
+        slowdowns[rank] = factor;
+        ComputeHeterogeneity { slowdowns, jitter: 0.0 }
+    }
+
+    /// Explicit per-rank factors (e.g. a hardware-generation gradient).
+    pub fn from_slowdowns(slowdowns: Vec<f64>) -> Self {
+        assert!(slowdowns.iter().all(|&f| f > 0.0), "slowdown factors must be positive");
+        ComputeHeterogeneity { slowdowns, jitter: 0.0 }
+    }
+
+    /// Add relative jitter (builder style). Clamped to `[0, 0.99]` so a
+    /// sampled step time can never be negative.
+    pub fn with_jitter(mut self, jitter: f64) -> Self {
+        self.jitter = jitter.clamp(0.0, 0.99);
+        self
+    }
+
+    /// Deterministic slowdown factor of `rank` (1.0 beyond the table).
+    pub fn factor(&self, rank: usize) -> f64 {
+        self.slowdowns.get(rank).copied().unwrap_or(1.0)
+    }
+
+    /// Largest slowdown factor — handy for sizing staleness horizons.
+    pub fn max_factor(&self) -> f64 {
+        self.slowdowns.iter().copied().fold(1.0, f64::max)
+    }
+
+    /// Sample one step's compute time for `rank` given the nominal `base`
+    /// seconds: `base * factor(rank) * (1 + jitter * u)`, `u ∈ [-1, 1)`
+    /// drawn from `rng` (the caller's per-node deterministic stream).
+    pub fn sample(&self, rank: usize, base: f64, rng: &mut Rng) -> f64 {
+        let f = self.factor(rank);
+        if self.jitter <= 0.0 {
+            return base * f;
+        }
+        let u = 2.0 * rng.f64() - 1.0;
+        base * f * (1.0 + self.jitter * u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_slows_only_one_rank() {
+        let h = ComputeHeterogeneity::straggler(8, 3, 4.0);
+        for r in 0..8 {
+            let want = if r == 3 { 4.0 } else { 1.0 };
+            assert_eq!(h.factor(r), want, "rank {r}");
+        }
+        assert_eq!(h.max_factor(), 4.0);
+        assert_eq!(h.factor(100), 1.0, "out-of-table ranks run nominal");
+    }
+
+    #[test]
+    fn sample_without_jitter_is_exact() {
+        let h = ComputeHeterogeneity::straggler(4, 0, 2.5);
+        let mut rng = Rng::new(1);
+        assert_eq!(h.sample(0, 0.01, &mut rng), 0.025);
+        assert_eq!(h.sample(1, 0.01, &mut rng), 0.01);
+    }
+
+    #[test]
+    fn jitter_stays_within_bounds_and_is_deterministic() {
+        let h = ComputeHeterogeneity::uniform(4).with_jitter(0.2);
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..1000 {
+            let dt = h.sample(2, 1.0, &mut a);
+            assert!((0.8..1.2).contains(&dt), "jittered sample out of band: {dt}");
+            assert_eq!(dt, h.sample(2, 1.0, &mut b), "same seed must give same samples");
+        }
+    }
+
+    #[test]
+    fn jitter_is_clamped() {
+        let h = ComputeHeterogeneity::uniform(2).with_jitter(5.0);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            assert!(h.sample(0, 1.0, &mut rng) > 0.0);
+        }
+    }
+}

@@ -32,6 +32,7 @@ pub enum LinkTier {
     Loopback,
 }
 
+pub mod hetero;
 pub mod schedule;
 
 /// Two-tier bandwidth/latency network model.

@@ -12,7 +12,7 @@
 
 use crate::config::ModelPreset;
 use crate::context::NodeContext;
-use crate::optim::DecentralizedOptimizer;
+use crate::optim::{AsyncDecentralizedOptimizer, DecentralizedOptimizer};
 use crate::rng::Rng;
 use crate::runtime::{DeviceHandle, InputBuf, Manifest, TensorSpec};
 use crate::training::corpus::Corpus;
@@ -182,7 +182,11 @@ impl TrainRun {
         format!("{}/{}.hlo.txt", self.artifacts_dir, self.artifact())
     }
 
-    /// Per-step compute time under the virtual device model.
+    /// Per-step compute time under the virtual device model — the
+    /// *nominal* (rank-independent) figure. Per-rank heterogeneity (an
+    /// [`crate::launcher::AsyncSpec`] straggler profile) is applied where
+    /// the drivers charge this through
+    /// [`NodeContext::simulate_compute_hetero`].
     pub fn step_compute_time(&self) -> f64 {
         self.preset.flops_per_step() / (self.device_flops * self.efficiency)
     }
@@ -241,7 +245,10 @@ pub fn train_node_resumable(
         let wall_exec = ctx.timeline.now_us();
         let v_before = ctx.vtime();
         let outputs = device.execute(&run.artifact(), inputs)?;
-        ctx.simulate_compute(step_compute);
+        // Heterogeneity-aware charge: under an AsyncSpec the synchronous
+        // loop feels stragglers too, so sync-vs-async comparisons share one
+        // virtual hardware model.
+        ctx.simulate_compute_hetero(step_compute);
         ctx.timeline.record(ctx.rank(), "train_step", "compute", wall_exec, v_before, ctx.vtime());
         let loss = outputs[0][0];
         let grads = layout.flatten_grads(&outputs[1..])?;
@@ -255,6 +262,135 @@ pub fn train_node_resumable(
             });
         }
     }
+    Ok((logs, params))
+}
+
+/// One logged asynchronous step. Extends [`StepLog`] with the two
+/// staleness signals of the async regime: how old the window mass a rank
+/// consumed was, and how far its clock ran ahead of the slowest active
+/// peer.
+#[derive(Debug, Clone)]
+pub struct AsyncStepLog {
+    /// Local step index (ranks advance at different rates — there is no
+    /// global step counter in the asynchronous regime).
+    pub step: usize,
+    /// Training loss at this step.
+    pub loss: f32,
+    /// Virtual time (seconds) at the end of the step.
+    pub vtime: f64,
+    /// Wall-clock seconds since training started.
+    pub wall: f64,
+    /// Window staleness observed by the optimizer this step (virtual
+    /// seconds between now and the oldest pending neighbor write).
+    pub staleness: f64,
+    /// This rank's virtual-clock lead over the slowest active rank.
+    pub clock_lag: f64,
+}
+
+/// Asynchronous decentralized training loop (paper §IV-C): like
+/// [`train_node`], but each rank steps at its own virtual-time rate with
+/// **no barriers** — per-step compute is charged through
+/// [`NodeContext::simulate_compute_hetero`] (so configured stragglers are
+/// slow in virtual time), the bounded-staleness throttle keeps virtual
+/// clocks within the configured horizon, and all communication happens
+/// inside the [`AsyncDecentralizedOptimizer`]'s one-sided window ops with
+/// the receive-then-adapt order: `refresh` folds arrived neighbor mass in
+/// *before* the gradient executes, so no gradient is computed on
+/// needlessly stale parameters (communication overlaps the compute window
+/// it was charged against, AWC-style). The optimizer's collective
+/// `finalize` (mark-done → barrier → blocking drain → free) is the loop's
+/// only synchronization and runs after the last step. Per-step staleness
+/// is logged alongside the loss.
+///
+/// `run.steps` is an upper bound; the loop additionally stops once
+/// `vtime_budget` virtual seconds have elapsed *since the loop was
+/// entered* (pass `f64::INFINITY` for pure step-count control; the budget
+/// is relative, so clocks advanced by earlier phases don't shrink it and
+/// the decision at iteration 0 is identical on every rank — all ranks
+/// reach the optimizer's collective window creation together). Prefer the
+/// budget in heterogeneous runs: with a fixed per-rank step count the
+/// fast ranks finish early and a straggler keeps splitting mass into
+/// windows nobody drains, collapsing its push-sum weight.
+pub fn train_node_async(
+    ctx: &mut NodeContext,
+    run: &TrainRun,
+    opt: &mut dyn AsyncDecentralizedOptimizer,
+    vtime_budget: f64,
+) -> anyhow::Result<(Vec<AsyncStepLog>, Vec<f32>)> {
+    let device: DeviceHandle = ctx
+        .device
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("training requires a device service"))?;
+    let manifest = Manifest::load(&run.manifest_path())?;
+    let layout = ParamLayout::from_manifest(&manifest);
+    device.load(&run.artifact(), &run.hlo_path())?;
+
+    let corpus = Corpus::synthetic(run.data_seed, run.shard_tokens * ctx.size());
+    let shard = corpus.shard(ctx.rank(), ctx.size());
+    let mut data_rng = ctx.rng.fork(0xa57a);
+
+    fn log_entry(
+        ctx: &NodeContext,
+        opt: &dyn AsyncDecentralizedOptimizer,
+        t0: &std::time::Instant,
+        step: usize,
+        loss: f32,
+    ) -> AsyncStepLog {
+        AsyncStepLog {
+            step,
+            loss,
+            vtime: ctx.vtime(),
+            wall: t0.elapsed().as_secs_f64(),
+            staleness: opt.staleness(),
+            clock_lag: ctx.async_lag(),
+        }
+    }
+
+    let mut params = layout.init(run.init_seed);
+    let (b, t) = (run.preset.batch, run.preset.seq);
+    let step_compute = run.step_compute_time();
+    let t0 = std::time::Instant::now();
+    let v_entry = ctx.vtime();
+    let mut logs = Vec::new();
+    let mut last_logged: Option<usize> = None;
+    let mut last_step: Option<(usize, f32)> = None;
+
+    for step in 0..run.steps {
+        if ctx.vtime() - v_entry >= vtime_budget {
+            break;
+        }
+        // Bounded staleness: wait (in real time) until the slowest active
+        // rank's virtual clock is within the horizon.
+        ctx.async_throttle();
+        let wall_exec = ctx.timeline.now_us();
+        let v_before = ctx.vtime();
+        ctx.simulate_compute_hetero(step_compute);
+        // Receive-then-adapt: fold in mass that arrived during the compute
+        // window just charged, then evaluate the gradient on it.
+        opt.refresh(ctx, &mut params)?;
+        let (tokens, targets) = shard.sample_batch(&mut data_rng, b, t);
+        let mut inputs = layout.to_inputs(&params);
+        inputs.push(InputBuf::I32(tokens, vec![b, t]));
+        inputs.push(InputBuf::I32(targets, vec![b, t]));
+        let outputs = device.execute(&run.artifact(), inputs)?;
+        ctx.timeline.record(ctx.rank(), "train_step", "compute", wall_exec, v_before, ctx.vtime());
+        let loss = outputs[0][0];
+        let grads = layout.flatten_grads(&outputs[1..])?;
+        opt.step(ctx, &mut params, &grads)?;
+        last_step = Some((step, loss));
+        if step % run.log_every == 0 || step + 1 == run.steps {
+            logs.push(log_entry(ctx, &*opt, &t0, step, loss));
+            last_logged = Some(step);
+        }
+    }
+    // The vtime budget can end the loop between log points; always log the
+    // final executed step so `logs.last()` reflects where the rank stopped.
+    if let Some((step, loss)) = last_step {
+        if last_logged != Some(step) {
+            logs.push(log_entry(ctx, &*opt, &t0, step, loss));
+        }
+    }
+    opt.finalize(ctx, &mut params)?;
     Ok((logs, params))
 }
 

@@ -6,4 +6,7 @@ pub mod corpus;
 pub mod driver;
 
 pub use corpus::Corpus;
-pub use driver::{eval_node, train_node, train_node_resumable, ParamLayout, StepLog, TrainRun};
+pub use driver::{
+    eval_node, train_node, train_node_async, train_node_resumable, AsyncStepLog, ParamLayout,
+    StepLog, TrainRun,
+};

@@ -15,7 +15,11 @@
 //!   weighted average of the local tensor and the slots;
 //! - [`NodeContext::win_update_then_collect`] *sums and resets* the slots —
 //!   the atomic drain that keeps `sum_i (x_i + pending)` invariant, which is
-//!   exactly what unbiased asynchronous push-sum needs (paper Listing 3).
+//!   exactly what unbiased asynchronous push-sum needs (paper Listing 3);
+//! - [`NodeContext::win_update_then_collect_causal`] drains only writes
+//!   whose virtual arrival has passed, leaving future writes pending — the
+//!   drain the asynchronous optimizers use so a fast rank is never dragged
+//!   onto a straggler's timeline.
 //!
 //! Each window entry carries one mutex — the "distributed mutex" of paper
 //! §V-D — and per-slot virtual arrival times so the virtual clock reflects
@@ -120,11 +124,16 @@ impl NodeContext {
     /// one slot per in-coming neighbor under the current global topology.
     ///
     /// Collective (like `MPI_Win_create`): all ranks must call it, and no
-    /// rank returns before every window exists.
+    /// rank returns before every window exists. The barrier is reached on
+    /// both the success and the error path — a rank whose local create
+    /// fails (e.g. duplicate name) must still participate, otherwise its
+    /// peers deadlock waiting for it; the local error is propagated after
+    /// the ranks have synchronized.
     pub fn win_create(&mut self, name: &str, tensor: &[f32], zero_init: bool) -> anyhow::Result<()> {
         let in_nbrs = self.in_neighbor_ranks();
-        self.windows.create(self.rank(), name, tensor, &in_nbrs, zero_init)?;
-        self.barrier()
+        let created = self.windows.create(self.rank(), name, tensor, &in_nbrs, zero_init);
+        let synced = self.barrier();
+        created.and(synced)
     }
 
     /// `bf.win_free(name)`.
@@ -162,6 +171,14 @@ impl NodeContext {
     /// `w * tensor` into this rank's slot at each destination and scale the
     /// caller's tensor by `self_weight` (mass splitting: with a
     /// column-stochastic weight set, `sum_i x_i + pending` is conserved).
+    /// Destinations default to the out-neighbors with weight 1 when
+    /// `dst_weights` is empty, the same fallback as `win_put`/`win_get` —
+    /// the caller's tensor is scaled by `self_weight` either way, so
+    /// silently sending to nobody would destroy mass. Note the weight-1
+    /// default is the `win_put` convention (each destination receives the
+    /// full tensor), *not* a column-stochastic split: mass-conserving
+    /// algorithms must pass explicit weights with
+    /// `self_weight + Σ column = 1`, as the async push-sum optimizer does.
     pub fn win_accumulate(
         &self,
         name: &str,
@@ -169,7 +186,8 @@ impl NodeContext {
         self_weight: f64,
         dst_weights: &[(usize, f64)],
     ) -> anyhow::Result<()> {
-        for &(dst, w) in dst_weights {
+        let dsts = self.default_dsts(dst_weights);
+        for &(dst, w) in &dsts {
             let arrival = self.one_sided_arrival(dst, tensor.len() * 4);
             let entry = self.windows.get(dst, name)?;
             let mut st = entry.lock().unwrap();
@@ -225,7 +243,10 @@ impl NodeContext {
     /// `bf.win_update(name, self_weight, src_weights)` — synchronize the
     /// window and return the weighted average of the local tensor and the
     /// neighbor slots. Also registers `tensor` as the new local value so
-    /// subsequent `win_get`s observe it.
+    /// subsequent `win_get`s observe it. Blocking flavor: every listed
+    /// slot participates, including writes whose virtual arrival is still
+    /// in this rank's future, and the clock advances to the latest such
+    /// arrival (the rank "waits" for them).
     pub fn win_update(
         &self,
         name: &str,
@@ -233,18 +254,74 @@ impl NodeContext {
         self_weight: f64,
         src_weights: &[(usize, f64)],
     ) -> anyhow::Result<Vec<f32>> {
+        self.combine_window(name, tensor, self_weight, src_weights, false)
+    }
+
+    /// Causal variant of [`NodeContext::win_update`]: average only with the
+    /// slots whose latest write has virtually *arrived* (arrival vtime ≤
+    /// this rank's current vtime). A listed source whose write is still in
+    /// flight keeps its weight on the local tensor instead, so the
+    /// combination stays convex whenever the caller's weights sum to one,
+    /// and the caller's clock is never advanced — the `win_update` the
+    /// asynchronous gossip optimizer uses so a straggler is never dragged
+    /// onto a fast peer's timeline (or vice versa). Errors on a listed
+    /// source with no slot, like `win_update`.
+    pub fn win_update_causal(
+        &self,
+        name: &str,
+        tensor: &[f32],
+        self_weight: f64,
+        src_weights: &[(usize, f64)],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.combine_window(name, tensor, self_weight, src_weights, true)
+    }
+
+    /// Shared combine kernel behind [`NodeContext::win_update`] and
+    /// [`NodeContext::win_update_causal`]: weighted average of the local
+    /// tensor and the listed slots, registered as the window's new local
+    /// value. `causal` reassigns the weight of any slot whose latest write
+    /// has not virtually arrived onto the local tensor (keeping the
+    /// combination convex) — in that mode `latest ≤ now`, so the final
+    /// clock advance is a no-op.
+    fn combine_window(
+        &self,
+        name: &str,
+        tensor: &[f32],
+        self_weight: f64,
+        src_weights: &[(usize, f64)],
+        causal: bool,
+    ) -> anyhow::Result<Vec<f32>> {
         let srcs = self.default_srcs(src_weights);
         let entry = self.windows.get(self.rank(), name)?;
         let mut st = entry.lock().unwrap();
         anyhow::ensure!(st.len == tensor.len(), "win_update size mismatch on '{name}'");
-        let mut out = self.scaled_vec(tensor, self_weight as f32);
-        let mut latest = self.vtime();
+        let now = self.vtime();
+        let mut self_w = self_weight;
+        let mut latest = now;
+        let mut included: Vec<(usize, f64)> = Vec::with_capacity(srcs.len());
         for (src, w) in srcs {
-            if let Some(slot) = st.slots.get(&src) {
-                for (o, s) in out.iter_mut().zip(slot) {
-                    *o += (w as f32) * s;
-                }
-                latest = latest.max(st.slot_vtime.get(&src).copied().unwrap_or(0.0));
+            // A listed source without a slot must be an error, not a silent
+            // skip: dropping its weight would bias the average low (the
+            // same contract win_put/win_get enforce).
+            anyhow::ensure!(
+                st.slots.contains_key(&src),
+                "rank {src} is not an in-neighbor of rank {} for window '{name}' \
+                 (window topology is fixed at creation)",
+                self.rank()
+            );
+            let arrival = st.slot_vtime.get(&src).copied().unwrap_or(0.0);
+            if causal && arrival > now {
+                self_w += w;
+            } else {
+                included.push((src, w));
+                latest = latest.max(arrival);
+            }
+        }
+        let mut out = self.scaled_vec(tensor, self_w as f32);
+        for (src, w) in included {
+            let slot = st.slots.get(&src).unwrap();
+            for (o, s) in out.iter_mut().zip(slot) {
+                *o += (w as f32) * s;
             }
         }
         let old = std::mem::replace(&mut st.local, self.vec_from(&out));
@@ -257,25 +334,101 @@ impl NodeContext {
     /// contents into the local tensor and **reset the slots to zero**. With
     /// `win_accumulate`, this is the mass-conserving drain of asynchronous
     /// push-sum. Returns the collected tensor.
+    ///
+    /// This variant is a *blocking* drain: it collects every slot, including
+    /// writes whose virtual arrival lies in this rank's future, and advances
+    /// the local clock to the latest arrival (the rank "waits" for them).
+    /// Asynchronous optimizers should prefer
+    /// [`NodeContext::win_update_then_collect_causal`], which never pulls
+    /// the caller's clock forward.
     pub fn win_update_then_collect(&self, name: &str, tensor: &mut [f32]) -> anyhow::Result<()> {
+        self.drain_window(name, tensor, false).map(|_| ())
+    }
+
+    /// Causal variant of [`NodeContext::win_update_then_collect`]: collect
+    /// only the slots whose latest write has virtually *arrived* (arrival
+    /// vtime ≤ this rank's current vtime) and leave the rest pending —
+    /// exactly what a real one-sided window would expose at this instant.
+    /// The caller's clock is never advanced past `now`, so a fast rank is
+    /// not dragged to a straggler's timeline by merely draining its window.
+    /// Returns the number of slots whose content was *deferred* because its
+    /// latest write is still in flight (useful as a staleness signal).
+    pub fn win_update_then_collect_causal(
+        &self,
+        name: &str,
+        tensor: &mut [f32],
+    ) -> anyhow::Result<usize> {
+        self.drain_window(name, tensor, true)
+    }
+
+    /// Shared drain kernel: collect slots into `tensor`, zero them, register
+    /// the result as the new local value. `causal` gates collection on the
+    /// slot's virtual arrival time; a slot whose latest write is in the
+    /// future is skipped whole (per-source writes arrive in causal order, so
+    /// an arrived latest write implies every merged write has arrived).
+    fn drain_window(&self, name: &str, tensor: &mut [f32], causal: bool) -> anyhow::Result<usize> {
         let entry = self.windows.get(self.rank(), name)?;
-        let mut st = entry.lock().unwrap();
+        let mut guard = entry.lock().unwrap();
+        let st = &mut *guard;
         anyhow::ensure!(st.len == tensor.len(), "win_update_then_collect size mismatch on '{name}'");
-        let mut latest = self.vtime();
-        let vtimes: Vec<f64> = st.slot_vtime.values().copied().collect();
-        for t in vtimes {
-            latest = latest.max(t);
-        }
-        for slot in st.slots.values_mut() {
+        let now = self.vtime();
+        let mut latest = now;
+        let mut deferred = 0usize;
+        for (src, slot) in st.slots.iter_mut() {
+            let arrival = st.slot_vtime.get(src).copied().unwrap_or(0.0);
+            if causal && arrival > now {
+                deferred += 1;
+                continue;
+            }
             for (x, s) in tensor.iter_mut().zip(slot.iter_mut()) {
                 *x += *s;
                 *s = 0.0;
             }
+            // A collected slot is no longer pending: drop its arrival time
+            // so win_staleness only reports mass still awaiting a drain.
+            st.slot_vtime.remove(src);
+            latest = latest.max(arrival);
         }
         let old = std::mem::replace(&mut st.local, self.vec_from(tensor));
         self.recycle(old);
         self.clock().advance_to(latest);
-        Ok(())
+        Ok(deferred)
+    }
+
+    /// Elementwise sum of this rank's pending (written but not yet
+    /// collected) slot contents — the "in flight" term of the push-sum
+    /// conservation invariant `Σ_i (x_i + pending_i)`. Read-only; used by
+    /// the mass-conservation property tests and staleness diagnostics.
+    pub fn win_pending(&self, name: &str) -> anyhow::Result<Vec<f32>> {
+        let entry = self.windows.get(self.rank(), name)?;
+        let st = entry.lock().unwrap();
+        let mut sum = vec![0.0f32; st.len];
+        for slot in st.slots.values() {
+            for (acc, s) in sum.iter_mut().zip(slot) {
+                *acc += *s;
+            }
+        }
+        Ok(sum)
+    }
+
+    /// Staleness of this rank's window: current vtime minus the *oldest*
+    /// last-write arrival among slots that have ever been written. Returns
+    /// 0 when no slot has been written yet or every write is newer than
+    /// `now` (writes still in flight are not stale, merely pending).
+    pub fn win_staleness(&self, name: &str) -> anyhow::Result<f64> {
+        let entry = self.windows.get(self.rank(), name)?;
+        let st = entry.lock().unwrap();
+        let oldest = st
+            .slot_vtime
+            .values()
+            .copied()
+            .filter(|&t| t > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        if oldest.is_finite() {
+            Ok((self.vtime() - oldest).max(0.0))
+        } else {
+            Ok(0.0)
+        }
     }
 
     /// Virtual arrival time of a one-sided transfer to/from `peer`.

@@ -1,6 +1,14 @@
-//! Integration tests: asynchronous window operations (paper §III-C).
+//! Integration tests: asynchronous window operations (paper §III-C) and
+//! the asynchronous optimizers/regime built on them (§IV-C).
 
-use bluefog::launcher::{run_spmd, SpmdConfig};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use bluefog::collective::{AllreduceAlgo, ReduceOp};
+use bluefog::launcher::{run_spmd, AsyncSpec, SpmdConfig};
+use bluefog::optim::{AsyncDecentralizedOptimizer, AsyncGossipSgd, AsyncPushSumSgd};
+use bluefog::simnet::hetero::ComputeHeterogeneity;
+use bluefog::simnet::NetworkModel;
 use bluefog::topology::{builders, WeightMatrix};
 
 fn ring_cfg(n: usize) -> SpmdConfig {
@@ -130,6 +138,277 @@ fn win_put_to_non_neighbor_is_rejected() {
     })
     .unwrap();
     assert!(results.iter().all(|&r| r));
+}
+
+// ---------------------------------------------------------------------------
+// Regression tests for the three window-op mass/liveness bugs (ISSUE 5).
+// ---------------------------------------------------------------------------
+
+/// Bug 1: `win_accumulate` with an empty `dst_weights` used to send to
+/// nobody while still scaling the caller's tensor — silent mass loss. It
+/// must default to the out-neighbors with weight 1, like `win_put`.
+#[test]
+fn win_accumulate_empty_dsts_defaults_to_out_neighbors() {
+    let n = 4;
+    let results = run_spmd(ring_cfg(n), |ctx| {
+        let mut x = vec![1.0f32; 2];
+        ctx.win_create("defdst", &x, true)?;
+        ctx.barrier()?;
+        ctx.win_accumulate("defdst", &mut x, 0.5, &[])?;
+        ctx.barrier()?;
+        let pending = ctx.win_pending("defdst")?;
+        ctx.barrier()?;
+        ctx.win_free("defdst")?;
+        Ok((x, pending))
+    })
+    .unwrap();
+    for (rank, (x, pending)) in results.iter().enumerate() {
+        // Caller's tensor scaled by self_weight as before...
+        assert_eq!(x[..], [0.5f32; 2], "rank {rank}: self scaling changed");
+        // ...but the mass now actually went somewhere: both ring
+        // in-neighbors pushed 1.0 * [1, 1] into our slots.
+        assert_eq!(pending[..], [2.0f32; 2], "rank {rank}: default dsts did not receive");
+    }
+}
+
+/// Bug 2: a rank whose `win_create` fails locally (duplicate name) used to
+/// return before the barrier, deadlocking every peer. The barrier must be
+/// reached on the error path too, and the error still propagate.
+#[test]
+fn win_create_error_reaches_barrier_and_propagates() {
+    let results = run_spmd(ring_cfg(3), |ctx| {
+        ctx.win_create("dupwin", &[1.0], false)?;
+        // Rank 0 re-creates the same window (local error); its peers create
+        // a fresh one. Every rank calls win_create exactly twice, so the
+        // barriers pair up — before the fix this test hung forever.
+        let dup_err = if ctx.rank() == 0 {
+            ctx.win_create("dupwin", &[1.0], false).is_err()
+        } else {
+            ctx.win_create("other", &[1.0], false)?;
+            true
+        };
+        ctx.barrier()?;
+        ctx.win_free("dupwin")?;
+        if ctx.rank() != 0 {
+            ctx.win_free("other")?;
+        }
+        Ok(dup_err)
+    })
+    .unwrap();
+    assert!(results.iter().all(|&e| e), "duplicate create must error after the barrier");
+}
+
+/// Bug 3: `win_update` used to silently skip a listed source with no slot,
+/// biasing the weighted average low. It must error like `win_put`/`win_get`.
+#[test]
+fn win_update_missing_source_errors() {
+    let n = 4;
+    let results = run_spmd(ring_cfg(n), |ctx| {
+        let x = vec![1.0f32];
+        ctx.win_create("missrc", &x, true)?;
+        // On a 4-ring, rank+2 is never an in-neighbor.
+        let stranger = (ctx.rank() + 2) % 4;
+        let err = ctx.win_update("missrc", &x, 0.5, &[(stranger, 0.5)]).is_err();
+        ctx.barrier()?;
+        ctx.win_free("missrc")?;
+        Ok(err)
+    })
+    .unwrap();
+    assert!(results.iter().all(|&e| e), "missing-slot source must be an error, not a skip");
+}
+
+/// Property: `Σ_i (x_i + pending_i)` is invariant under arbitrary seeded
+/// interleavings of column-stochastic `win_accumulate` and both drain
+/// flavors — the push-sum requirement the three bugfixes protect.
+#[test]
+fn window_mass_conservation_property() {
+    let n = 6;
+    let d = 3;
+    let rounds = 12;
+    let results = run_spmd(ring_cfg(n), move |ctx| {
+        let mut x = vec![(ctx.rank() + 1) as f32; d];
+        ctx.win_create("mass", &x, true)?;
+        ctx.barrier()?;
+        let mut worst = 0.0f64;
+        for _ in 0..rounds {
+            // Random column-stochastic split over a random out-subset.
+            let chosen: Vec<usize> =
+                ctx.out_neighbor_ranks().into_iter().filter(|_| ctx.rng.chance(0.7)).collect();
+            if !chosen.is_empty() {
+                let share = 1.0 / (chosen.len() + 1) as f64;
+                let dsts: Vec<(usize, f64)> = chosen.iter().map(|&r| (r, share)).collect();
+                ctx.win_accumulate("mass", &mut x, share, &dsts)?;
+            }
+            // Random drain flavor (or none at all this round).
+            if ctx.rng.chance(0.5) {
+                ctx.win_update_then_collect("mass", &mut x)?;
+            } else if ctx.rng.chance(0.5) {
+                ctx.win_update_then_collect_causal("mass", &mut x)?;
+            }
+            ctx.barrier()?;
+            let pending = ctx.win_pending("mass")?;
+            let held: Vec<f32> = x.iter().zip(&pending).map(|(a, b)| a + b).collect();
+            let total = ctx.allreduce(&held, ReduceOp::Sum, AllreduceAlgo::Ring)?;
+            let want = (n * (n + 1) / 2) as f64; // Σ (rank+1)
+            for t in &total {
+                worst = worst.max((*t as f64 - want).abs());
+            }
+        }
+        ctx.win_update_then_collect("mass", &mut x)?;
+        ctx.barrier()?;
+        ctx.win_free("mass")?;
+        Ok(worst)
+    })
+    .unwrap();
+    let worst = results.iter().cloned().fold(0.0f64, f64::max);
+    assert!(worst < 2e-3, "window mass leaked: worst per-element drift {worst}");
+}
+
+/// The causal drain leaves writes whose virtual arrival is in the future
+/// pending (and does not drag the receiver's clock forward); once the
+/// receiver's own clock passes the arrival, the mass is collected.
+#[test]
+fn causal_drain_defers_future_writes() {
+    let flag = Arc::new(AtomicUsize::new(0));
+    let g = builders::ring(3);
+    let w = WeightMatrix::metropolis_hastings(&g);
+    let cfg = SpmdConfig::new(3)
+        .with_topology(g, w)
+        .with_net(NetworkModel::flat(1e9, 0.0));
+    let results = run_spmd(cfg, move |ctx| {
+        let mut x = vec![(ctx.rank() + 1) as f32; 2];
+        ctx.win_create("causal", &x, true)?;
+        let mut ok = true;
+        match ctx.rank() {
+            1 => {
+                // Write from 5 virtual seconds in the receiver's future.
+                ctx.simulate_compute(5.0);
+                ctx.win_accumulate("causal", &mut x, 0.5, &[(0, 0.5)])?;
+                flag.store(1, Ordering::Release);
+            }
+            0 => {
+                while flag.load(Ordering::Acquire) == 0 {
+                    std::thread::yield_now();
+                }
+                let pending = ctx.win_pending("causal")?;
+                ok &= pending == [1.0f32; 2]; // 0.5 * [2, 2]
+                let deferred = ctx.win_update_then_collect_causal("causal", &mut x)?;
+                ok &= deferred == 1;
+                ok &= x == [1.0f32; 2]; // untouched: the write hasn't "arrived"
+                ok &= ctx.vtime() < 5.0; // clock not dragged to the future
+                // Causal win_update: rank 1's in-flight weight falls back
+                // on the local tensor; rank 2's (drained, zero) slot is
+                // included. 0.75 * [1,1] + 0.25 * [0,0] = [0.75, 0.75].
+                let avg = ctx.win_update_causal("causal", &x, 0.5, &[(1, 0.25), (2, 0.25)])?;
+                ok &= avg == [0.75f32; 2];
+                ok &= ctx.vtime() < 5.0; // still not dragged
+                ctx.simulate_compute(10.0);
+                let deferred = ctx.win_update_then_collect_causal("causal", &mut x)?;
+                ok &= deferred == 0;
+                ok &= x == [2.0f32; 2]; // collected after arrival
+                // Drained slots shed their arrival stamps: nothing pending
+                // means nothing stale.
+                ok &= ctx.win_staleness("causal")? == 0.0;
+            }
+            _ => {}
+        }
+        ctx.barrier()?;
+        ctx.win_free("causal")?;
+        Ok(ok)
+    })
+    .unwrap();
+    assert!(results.iter().all(|&ok| ok));
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous optimizers end-to-end (window → optimizer → regime).
+// ---------------------------------------------------------------------------
+
+/// Async push-sum SGD with zero gradients is asynchronous average
+/// consensus: mass conservation + the push-sum correction must take every
+/// rank to the initial mean despite a 4x straggler and causal drains. The
+/// loop runs on a virtual-time budget (not a step count) so all ranks
+/// leave the regime near the same virtual instant — with a fixed step
+/// count the fast ranks finish early and the straggler splits its mass
+/// into windows nobody drains until its push-sum weight underflows.
+#[test]
+fn async_push_sum_sgd_consensus_with_straggler() {
+    let n = 6;
+    let d = 3;
+    let base = 1e-3;
+    let t_end = 0.15; // fast ranks ~150 steps, straggler ~38
+    let hetero = ComputeHeterogeneity::straggler(n, 0, 4.0).with_jitter(0.1);
+    let cfg = SpmdConfig::new(n)
+        .with_topo_check(false)
+        .with_async(AsyncSpec::new(hetero).with_horizon(16.0 * base));
+    let results = run_spmd(cfg, move |ctx| {
+        let mut x = vec![ctx.rank() as f32; d];
+        let zeros = vec![0.0f32; d];
+        let mut opt = AsyncPushSumSgd::new(0.0, "cons");
+        for _ in 0..10_000 {
+            if ctx.vtime() >= t_end {
+                break;
+            }
+            ctx.async_throttle();
+            ctx.simulate_compute_hetero(base);
+            opt.refresh(ctx, &mut x)?;
+            opt.step(ctx, &mut x, &zeros)?;
+        }
+        opt.finalize(ctx, &mut x)?;
+        Ok((x, opt.push_weight()))
+    })
+    .unwrap();
+    let mean = (0..6).sum::<usize>() as f32 / 6.0;
+    // Mass conservation across the network: Σ v_i = n exactly (up to fp).
+    let v_total: f64 = results.iter().map(|(_, v)| *v as f64).sum();
+    assert!((v_total - 6.0).abs() < 1e-3, "push-sum weight mass leaked: {v_total}");
+    for (rank, (x, _)) in results.iter().enumerate() {
+        for v in x {
+            assert!(
+                (v - mean).abs() < 5e-3,
+                "rank {rank} did not reach consensus: {v} vs {mean}"
+            );
+        }
+    }
+}
+
+/// AD-PSGD-style gossip: every combine is convex, so iterates stay in the
+/// initial convex hull and the spread contracts despite stale slots.
+#[test]
+fn async_gossip_sgd_contracts_into_hull() {
+    let n = 6;
+    let steps = 200;
+    let base = 1e-3;
+    let g = builders::ring(n);
+    let w = WeightMatrix::metropolis_hastings(&g);
+    let cfg = SpmdConfig::new(n)
+        .with_topology(g, w)
+        .with_topo_check(false)
+        .with_async(AsyncSpec::new(ComputeHeterogeneity::uniform(n).with_jitter(0.2))
+            .with_horizon(8.0 * base));
+    let results = run_spmd(cfg, move |ctx| {
+        let mut x = vec![ctx.rank() as f32; 2];
+        let zeros = vec![0.0f32; 2];
+        let mut opt = AsyncGossipSgd::new(0.0, "gossip");
+        for _ in 0..steps {
+            ctx.async_throttle();
+            ctx.simulate_compute_hetero(base);
+            opt.refresh(ctx, &mut x)?;
+            opt.step(ctx, &mut x, &zeros)?;
+        }
+        opt.finalize(ctx, &mut x)?;
+        Ok(x)
+    })
+    .unwrap();
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for x in &results {
+        for &v in x {
+            assert!((-1e-4f32..=5.0001f32).contains(&v), "left the convex hull: {v}");
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    assert!(hi - lo < 1.0, "gossip failed to contract: spread {} (initial 5)", hi - lo);
 }
 
 #[test]
