@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: verify build test examples benches bench-hotpath bench-compress bench-async artifacts clean
+.PHONY: verify build test examples benches bench-hotpath bench-compress bench-async bench-scale artifacts clean
 
 verify: build test
 
@@ -36,6 +36,14 @@ bench-compress:
 # a CI-sized run.
 bench-async:
 	cargo run --release --example async_probe
+
+# Event-loop scale sweep: neighbor-allreduce consensus at 64 / 1k / 10k
+# ranks on exponential-2 under ExecMode::EventLoop; writes BENCH_scale.json
+# (spectral gap, per-iteration contraction, peak RSS per rank, virtual and
+# wall time) and gates contraction <= 1 - 0.1*gap plus the 64 KiB/rank
+# memory bound. Set SCALE_SMOKE=1 to drop the 10k row for CI.
+bench-scale:
+	cargo run --release --example scale_probe
 
 # Sweep every BENCH_*.json the probes have produced into ./artifacts — a
 # glob, so new probes are picked up without editing this target — then

@@ -1,0 +1,220 @@
+// Scale probe: drives the event-loop execution backend (ISSUE 6) through
+// neighbor-allreduce consensus sweeps at 64 / 1024 / 10000 ranks on the
+// static exponential-2 topology and emits machine-readable
+// `BENCH_scale.json`. Thread-per-rank simulation tops out around a few
+// hundred ranks (8 MiB stacks, OS scheduler thrash); the event-driven
+// core parks every rank on a virtual-time priority queue, so the sweep is
+// bounded by per-rank *state*, not per-rank *threads at full tilt*.
+//
+// Per row the probe records and enforces:
+//
+//   * consensus contraction: the per-iteration decay rate of the RMS
+//     consensus error must beat `1 - 0.1 * spectral_gap` (theory says the
+//     rate is ~`1 - gap` for the doubly-stochastic expo-2 averaging
+//     matrix, so the gate has a wide margin while still scaling with the
+//     gap — "error shrinks with the spectral gap");
+//   * bounded memory: peak-RSS growth divided by rank count stays under
+//     64 KiB/rank for the 1k+ rows (the 64-rank row is dominated by
+//     fixed process overhead and is reported but not gated).
+//
+// Run: `make bench-scale` (or `cargo run --release --example
+// scale_probe`). Env: SCALE_SMOKE=1 drops the 10k row for CI;
+// BENCH_SCALE_OUT overrides the output path.
+
+use bluefog::launcher::{run_spmd, ExecMode, SpmdConfig};
+use bluefog::rng::Rng;
+use bluefog::topology::{builders, SparseViews};
+
+const D: usize = 16; // elements averaged per rank
+const ITERS: usize = 10; // neighbor-allreduce rounds per row
+
+/// Deterministic per-rank start vector; `main` regenerates the same
+/// vectors to compute the initial consensus error without shipping them
+/// back through the launcher.
+fn start_vector(rank: usize) -> Vec<f32> {
+    Rng::new(0x5ca1e ^ rank as u64).normal_vec(D)
+}
+
+/// RMS consensus error: `sqrt(mean_{i,j} (x_i[j] - mean_i x_i[j])^2)`,
+/// accumulated in f64.
+fn consensus_error(xs: &[Vec<f32>]) -> f64 {
+    let n = xs.len();
+    let d = xs[0].len();
+    let mut mean = vec![0.0f64; d];
+    for x in xs {
+        for (m, v) in mean.iter_mut().zip(x) {
+            *m += f64::from(*v);
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut acc = 0.0f64;
+    for x in xs {
+        for (m, v) in mean.iter().zip(x) {
+            let dvt = f64::from(*v) - m;
+            acc += dvt * dvt;
+        }
+    }
+    (acc / (n * d) as f64).sqrt()
+}
+
+/// Peak resident set size in bytes (`VmHWM` from /proc/self/status).
+/// Peak, not current: node threads join before the row ends, so current
+/// RSS would credit freed stacks back and under-report.
+fn peak_rss_bytes() -> u64 {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+struct Row {
+    ranks: usize,
+    spectral_gap: f64,
+    err0: f64,
+    err_final: f64,
+    contraction: f64,
+    rss_per_rank_bytes: u64,
+    vtime_final: f64,
+    wall_s: f64,
+}
+
+fn sweep(n: usize) -> anyhow::Result<Row> {
+    let graph = builders::exponential_two(n);
+    let gap = SparseViews::uniform_pull(&graph).spectral_gap();
+
+    let rss_before = peak_rss_bytes();
+    let wall0 = std::time::Instant::now();
+
+    let mut cfg = SpmdConfig::new(n)
+        .with_exec(ExecMode::EventLoop)
+        .with_sparse_topology(graph)
+        .with_topo_check(false)
+        .with_stack_size(256 << 10);
+    // Blocking-only workload: skip the per-rank comm engines entirely.
+    cfg.comm_threads = false;
+
+    let results = run_spmd(cfg, move |ctx| {
+        let mut x = start_vector(ctx.rank());
+        for _ in 0..ITERS {
+            x = ctx.neighbor_allreduce(&x)?;
+        }
+        Ok((x, ctx.vtime()))
+    })?;
+
+    let wall_s = wall0.elapsed().as_secs_f64();
+    let rss_delta = peak_rss_bytes().saturating_sub(rss_before);
+
+    let starts: Vec<Vec<f32>> = (0..n).map(start_vector).collect();
+    let finals: Vec<Vec<f32>> = results.iter().map(|(x, _)| x.clone()).collect();
+    let vtime_final = results.iter().map(|&(_, v)| v).fold(0.0f64, f64::max);
+
+    let err0 = consensus_error(&starts);
+    let err_final = consensus_error(&finals);
+    let contraction = (err_final / err0).powf(1.0 / ITERS as f64);
+
+    Ok(Row {
+        ranks: n,
+        spectral_gap: gap,
+        err0,
+        err_final,
+        contraction,
+        rss_per_rank_bytes: rss_delta / n as u64,
+        vtime_final,
+        wall_s,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("SCALE_SMOKE").is_ok();
+    let sizes: &[usize] = if smoke { &[64, 1024] } else { &[64, 1024, 10000] };
+
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let row = sweep(n)?;
+        println!(
+            "ranks={:>6}  gap={:.4}  err {:.4e} -> {:.4e}  contraction/iter={:.4}  \
+             rss/rank={} B  vtime={:.4}s  wall={:.2}s",
+            row.ranks,
+            row.spectral_gap,
+            row.err0,
+            row.err_final,
+            row.contraction,
+            row.rss_per_rank_bytes,
+            row.vtime_final,
+            row.wall_s
+        );
+        rows.push(row);
+    }
+
+    // ---- acceptance gates (ISSUE 6) ---------------------------------------
+    for row in &rows {
+        anyhow::ensure!(
+            row.err_final < row.err0,
+            "consensus error grew at {} ranks: {:.4e} -> {:.4e}",
+            row.ranks,
+            row.err0,
+            row.err_final
+        );
+        let gate = 1.0 - 0.1 * row.spectral_gap;
+        anyhow::ensure!(
+            row.contraction <= gate,
+            "contraction {:.4} at {} ranks misses the spectral-gap gate {:.4} (gap {:.4})",
+            row.contraction,
+            row.ranks,
+            gate,
+            row.spectral_gap
+        );
+        if row.ranks >= 1024 {
+            anyhow::ensure!(
+                row.rss_per_rank_bytes <= 64 * 1024,
+                "per-rank memory {} B at {} ranks exceeds the 64 KiB bound",
+                row.rss_per_rank_bytes,
+                row.ranks
+            );
+        }
+    }
+
+    let mut row_json = String::new();
+    for (i, row) in rows.iter().enumerate() {
+        row_json.push_str(&format!(
+            concat!(
+                "    {{\"ranks\": {}, \"spectral_gap\": {:.6}, \"err0\": {:.8e}, ",
+                "\"err_final\": {:.8e}, \"contraction_per_iter\": {:.6}, ",
+                "\"rss_per_rank_bytes\": {}, \"vtime_final_s\": {:.6}, \"wall_s\": {:.4}}}{}\n"
+            ),
+            row.ranks,
+            row.spectral_gap,
+            row.err0,
+            row.err_final,
+            row.contraction,
+            row.rss_per_rank_bytes,
+            row.vtime_final,
+            row.wall_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    let json = format!(
+        concat!(
+            "{{\n  \"bench\": \"scale\",\n  \"exec\": \"event_loop\",\n",
+            "  \"topology\": \"exponential_two\",\n  \"d\": {},\n  \"iters\": {},\n",
+            "  \"smoke\": {},\n  \"rows\": [\n{}  ]\n}}\n"
+        ),
+        D, ITERS, smoke, row_json
+    );
+    let out_path = std::env::var("BENCH_SCALE_OUT").unwrap_or_else(|_| "BENCH_scale.json".into());
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    println!("scale_probe OK");
+    Ok(())
+}

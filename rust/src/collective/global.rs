@@ -246,7 +246,7 @@ impl NodeContext {
         if !self.enable_topo_check {
             return Ok(None);
         }
-        let clearance = self.negotiation.submit(OpRequest {
+        let req = OpRequest {
             rank: self.rank(),
             name: name.to_string(),
             kind,
@@ -254,7 +254,14 @@ impl NodeContext {
             dsts,
             srcs,
             vtime: self.vtime(),
-        })?;
+        };
+        // EventLoop parks on the inline rendezvous (same resolution code
+        // path as the daemon — `resolve_batch`); Threads blocks on the
+        // negotiation daemon's reply channel.
+        let clearance = match (&self.rendezvous, &self.sched) {
+            (Some(rdv), Some(sched)) => rdv.submit(req, sched)?,
+            _ => self.negotiation.submit(req)?,
+        };
         self.clock().advance_to(clearance.start_vtime);
         if let Some(err) = &clearance.error {
             anyhow::bail!("negotiation failed: {err}");

@@ -86,12 +86,16 @@ impl NodeContext {
         data: &[f32],
         stream: u32,
     ) -> anyhow::Result<Vec<f32>> {
+        // Read the per-rank CSR views under the lock: O(degree) copies, no
+        // dense-matrix clone (the previous `load_topology()` snapshot per
+        // call is O(n^2) — 800 MB per call at 10k ranks).
+        let me = self.rank();
         let (self_w, srcs, dsts) = {
-            let topo = self.load_topology();
-            let (self_w, srcs) = topo.weights.pull_view(self.rank());
+            let topo = self.topology.read().unwrap();
+            let (self_w, srcs) = topo.views.pull_view(me);
             let dsts: Vec<(usize, f64)> =
-                topo.graph.out_neighbors(self.rank()).into_iter().map(|r| (r, 1.0)).collect();
-            (self_w, srcs, dsts)
+                topo.views.out_neighbors(me).iter().map(|&r| (r, 1.0)).collect();
+            (self_w, srcs.to_vec(), dsts)
         };
         self.neighbor_allreduce_impl(
             data,
@@ -335,9 +339,10 @@ impl NodeContext {
         &mut self,
         data: &[f32],
     ) -> anyhow::Result<Vec<(usize, Vec<f32>)>> {
+        let me = self.rank();
         let (srcs, dsts) = {
-            let topo = self.load_topology();
-            (topo.graph.in_neighbors(self.rank()), topo.graph.out_neighbors(self.rank()))
+            let topo = self.topology.read().unwrap();
+            (topo.views.in_neighbor_ranks(me), topo.views.out_neighbors(me).to_vec())
         };
         let name = self.next_collective_name("neighbor_allgather");
         self.negotiate(

@@ -20,7 +20,7 @@ use crate::runtime::DeviceHandle;
 use crate::simnet::NetworkModel;
 use crate::tensor::{weighted_combine_blocked_into, weighted_combine_into};
 use crate::timeline::Timeline;
-use crate::topology::{Graph, WeightMatrix};
+use crate::topology::{Graph, SparseViews, WeightMatrix};
 use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, Tag, VClock};
 use crate::window::WindowTable;
 
@@ -29,8 +29,16 @@ use crate::window::WindowTable;
 pub struct TopologyState {
     /// The global communication graph.
     pub graph: Graph,
-    /// Combine weights respecting `graph`.
+    /// Combine weights respecting `graph`. Under the sparse-only path
+    /// ([`TopologyState::sparse_uniform_pull`]) this is a 1x1 placeholder
+    /// — consult [`TopologyState::views`] instead, which is what the
+    /// collectives read.
     pub weights: WeightMatrix,
+    /// CSR per-rank pull views and neighbor lists derived from
+    /// `graph`/`weights` — the `O(degree)` store the hot paths read
+    /// (cloning a dense row per collective call is 80 KB/rank at 10k
+    /// nodes).
+    pub views: Arc<SparseViews>,
     /// Machine-level (super-node) topology for hierarchical ops.
     pub machine_graph: Option<Graph>,
     /// Machine-level combine weights.
@@ -41,7 +49,24 @@ impl TopologyState {
     /// Validate and bundle a graph with its weight matrix.
     pub fn new(graph: Graph, weights: WeightMatrix) -> Self {
         assert!(weights.respects_graph(&graph), "weight matrix does not respect topology");
-        TopologyState { graph, weights, machine_graph: None, machine_weights: None }
+        let views = Arc::new(SparseViews::from_matrix(&weights, &graph));
+        TopologyState { graph, weights, views, machine_graph: None, machine_weights: None }
+    }
+
+    /// Views-only state with uniform pull weights, built in `O(E)` without
+    /// ever materializing a dense matrix — the only viable path at 10k
+    /// ranks. The dense `weights` field becomes a documented 1x1
+    /// placeholder; everything that routes through `views` (all
+    /// collectives) behaves identically.
+    pub fn sparse_uniform_pull(graph: Graph) -> Self {
+        let views = Arc::new(SparseViews::uniform_pull(&graph));
+        TopologyState {
+            graph,
+            weights: WeightMatrix::from_rows(1, &[1.0]),
+            views,
+            machine_graph: None,
+            machine_weights: None,
+        }
     }
 }
 
@@ -100,6 +125,73 @@ pub struct NodeContext {
     /// Per-rank "left the async loop" flags, shared by all ranks: the
     /// throttle ignores done ranks (their clocks stall forever).
     pub(crate) async_done: Arc<Vec<AtomicBool>>,
+    /// Cooperative scheduler under [`crate::launcher::ExecMode::EventLoop`]
+    /// (`None` under `Threads`). When set, every blocking wait in this
+    /// context routes through it instead of parking the OS thread.
+    pub(crate) sched: Option<Arc<crate::simnet::event::Scheduler>>,
+    /// Inline negotiation rendezvous (EventLoop replacement for the
+    /// threaded negotiation daemon).
+    pub(crate) rendezvous: Option<Arc<crate::negotiation::Rendezvous>>,
+    /// Inline communication engine (EventLoop replacement for the
+    /// dedicated communication thread).
+    pub(crate) inline_comm: Option<Box<crate::nonblocking::CommEngine>>,
+    /// Condvar gate replacing the historical 20 µs sleep-poll in
+    /// [`NodeContext::async_throttle`] under the threads backend.
+    pub(crate) throttle_gate: Option<Arc<ThrottleGate>>,
+}
+
+/// Condvar-based wakeup gate for the threads-backend async throttle: a
+/// generation counter bumped whenever any rank's clock or done-flag
+/// changes in a way that can raise `min_active_vtime()`. Waiters sleep on
+/// the condvar (with a coarse timeout as a missed-wakeup backstop) instead
+/// of spinning in 20 µs sleep-polls.
+pub struct ThrottleGate {
+    gen: std::sync::Mutex<u64>,
+    cv: std::sync::Condvar,
+}
+
+impl Default for ThrottleGate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThrottleGate {
+    /// A fresh gate at generation zero.
+    pub fn new() -> Self {
+        ThrottleGate { gen: std::sync::Mutex::new(0), cv: std::sync::Condvar::new() }
+    }
+
+    /// Announce that the throttle predicate may have changed.
+    pub fn bump(&self) {
+        let mut g = self.gen.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        *g = g.wrapping_add(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Block until the generation moves past `seen` (or a coarse timeout
+    /// elapses — the caller re-checks its predicate either way). Returns
+    /// the latest generation observed.
+    pub fn wait_past(&self, seen: u64) -> u64 {
+        let mut g = self.gen.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        while *g == seen {
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(g, std::time::Duration::from_millis(1))
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            g = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        *g
+    }
+
+    /// Current generation (snapshot before checking the predicate).
+    pub fn generation(&self) -> u64 {
+        *self.gen.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
 }
 
 /// Error-feedback stream-key namespace: unscaled fan-out (one encoded
@@ -170,6 +262,20 @@ impl NodeContext {
             tx_bytes,
             async_spec,
             async_done,
+            sched: None,
+            rendezvous: None,
+            inline_comm: None,
+            throttle_gate: None,
+        }
+    }
+
+    /// Under `EventLoop`, hand the baton back to the scheduler and resume
+    /// when this rank's clock is the smallest pending instant; no-op under
+    /// `Threads`. Inserted wherever the virtual clock advances without a
+    /// matching receive (compute, window ops) so cheaper ranks run first.
+    pub(crate) fn coop_yield(&self) {
+        if let Some(sched) = &self.sched {
+            sched.yield_now(self.rank, self.vtime());
         }
     }
 
@@ -210,9 +316,11 @@ impl NodeContext {
     /// spirit: every rank must call it with the same arguments.
     pub fn set_topology(&self, graph: Graph, weights: WeightMatrix) {
         assert!(weights.respects_graph(&graph), "weight matrix does not respect topology");
+        let views = Arc::new(SparseViews::from_matrix(&weights, &graph));
         let mut t = self.topology.write().unwrap();
         t.graph = graph;
         t.weights = weights;
+        t.views = views;
     }
 
     /// Set the machine-level topology for hierarchical ops
@@ -229,14 +337,15 @@ impl NodeContext {
         self.topology.read().unwrap().clone()
     }
 
-    /// In-coming neighbor ranks under the current global topology.
+    /// In-coming neighbor ranks under the current global topology (read
+    /// from the CSR views: `O(degree)`, not `O(n log n)`).
     pub fn in_neighbor_ranks(&self) -> Vec<usize> {
-        self.topology.read().unwrap().graph.in_neighbors(self.rank)
+        self.topology.read().unwrap().views.in_neighbor_ranks(self.rank)
     }
 
     /// Out-going neighbor ranks under the current global topology.
     pub fn out_neighbor_ranks(&self) -> Vec<usize> {
-        self.topology.read().unwrap().graph.out_neighbors(self.rank)
+        self.topology.read().unwrap().views.out_neighbors(self.rank).to_vec()
     }
 
     /// This node's virtual clock.
@@ -250,8 +359,11 @@ impl NodeContext {
     }
 
     /// Account `dt` seconds of local computation on the virtual clock.
+    /// Under `EventLoop` this is also a cooperative yield point: the rank
+    /// re-enters the run queue at its advanced clock.
     pub fn simulate_compute(&self, dt: f64) {
         self.clock().elapse(dt);
+        self.coop_yield();
     }
 
     /// Account one step of `base` seconds of nominal compute, scaled by
@@ -265,6 +377,14 @@ impl NodeContext {
             Some(spec) => spec.hetero.sample(self.rank, base, &mut self.rng),
         };
         self.clock().elapse(dt);
+        // This clock just moved: peers parked on the throttle may now be
+        // releasable.
+        if self.async_spec.is_some() {
+            if let Some(gate) = &self.throttle_gate {
+                gate.bump();
+            }
+        }
+        self.coop_yield();
         dt
     }
 
@@ -281,6 +401,34 @@ impl NodeContext {
         if !spec.horizon.is_finite() {
             return;
         }
+        if let Some(sched) = &self.sched {
+            // EventLoop: park on the scheduler's throttle waitlist; the
+            // dispatch sweep re-queues this rank (at its *unchanged* clock
+            // — a blocked rank consumes no virtual time while waiting)
+            // once the slowest active clock catches up to the horizon.
+            loop {
+                let threshold = self.vtime() - spec.horizon;
+                if self.min_active_vtime() >= threshold {
+                    return;
+                }
+                sched.throttle_wait(self.rank, threshold);
+            }
+        }
+        if let Some(gate) = &self.throttle_gate {
+            // Threads: condvar wait on the gate generation instead of the
+            // historical 20 µs sleep-poll. Peers bump the gate whenever a
+            // clock or done-flag moves; the coarse wait timeout inside
+            // `wait_past` is only a missed-wakeup backstop.
+            let mut seen = gate.generation();
+            loop {
+                if self.vtime() <= self.min_active_vtime() + spec.horizon {
+                    return;
+                }
+                seen = gate.wait_past(seen);
+            }
+        }
+        // No gate configured (context built outside the launcher): legacy
+        // poll, kept as a safety net.
         loop {
             if self.vtime() <= self.min_active_vtime() + spec.horizon {
                 return;
@@ -297,6 +445,9 @@ impl NodeContext {
     /// the throttle.
     pub fn mark_async_done(&self) {
         self.async_done[self.rank].store(true, Ordering::Release);
+        if let Some(gate) = &self.throttle_gate {
+            gate.bump();
+        }
     }
 
     /// Re-arm this rank's asynchronous-regime membership (clears its done
@@ -305,6 +456,9 @@ impl NodeContext {
     /// like the first instead of silently running unbounded.
     pub fn mark_async_active(&self) {
         self.async_done[self.rank].store(false, Ordering::Release);
+        if let Some(gate) = &self.throttle_gate {
+            gate.bump();
+        }
     }
 
     /// How far this rank's clock runs ahead of the slowest still-active
@@ -521,7 +675,12 @@ impl NodeContext {
     }
 
     /// Send an owned payload (convenience wrapper over [`Self::send_shared`]).
-    pub(crate) fn send_tensor(&self, dst: usize, tag: Tag, payload: Vec<f32>) -> anyhow::Result<()> {
+    pub(crate) fn send_tensor(
+        &self,
+        dst: usize,
+        tag: Tag,
+        payload: Vec<f32>,
+    ) -> anyhow::Result<()> {
         self.send_shared(dst, tag, std::sync::Arc::new(payload))
     }
 
@@ -542,7 +701,11 @@ impl NodeContext {
         let send_done = self.clock().reserve_send(now, ser);
         let recv_done = self.clocks[dst].reserve_recv(send_done - ser, ser);
         let arrival = send_done.max(recv_done) + self.net.latency(self.rank, dst);
-        self.postman.send(dst, Message { src: self.rank, tag, payload, arrival_vtime: arrival })
+        self.postman.send(dst, Message { src: self.rank, tag, payload, arrival_vtime: arrival })?;
+        if let Some(sched) = &self.sched {
+            sched.notify_message(dst, arrival);
+        }
+        Ok(())
     }
 
     /// Blocking receive from `(src, tag)`, advancing the virtual clock to
@@ -552,7 +715,19 @@ impl NodeContext {
         src: usize,
         tag: Tag,
     ) -> anyhow::Result<std::sync::Arc<Vec<f32>>> {
-        let msg = self.mailbox.recv_match(src, tag)?;
+        let msg = if let Some(sched) = &self.sched {
+            // EventLoop: drain-then-park. Anything already delivered is
+            // found without blocking; otherwise the rank parks until a
+            // Message event targets it (consuming no virtual time).
+            loop {
+                if let Some(m) = self.mailbox.try_recv_match(src, tag) {
+                    break m;
+                }
+                sched.block_recv(self.rank, "recv_tensor");
+            }
+        } else {
+            self.mailbox.recv_match(src, tag)?
+        };
         self.clock().advance_to(msg.arrival_vtime);
         Ok(msg.payload)
     }
@@ -562,7 +737,16 @@ impl NodeContext {
         &mut self,
         tag: Tag,
     ) -> anyhow::Result<(usize, std::sync::Arc<Vec<f32>>)> {
-        let msg = self.mailbox.recv_any(tag)?;
+        let msg = if let Some(sched) = &self.sched {
+            loop {
+                if let Some(m) = self.mailbox.try_recv_any(tag) {
+                    break m;
+                }
+                sched.block_recv(self.rank, "recv_tensor_any");
+            }
+        } else {
+            self.mailbox.recv_any(tag)?
+        };
         self.clock().advance_to(msg.arrival_vtime);
         Ok((msg.src, msg.payload))
     }

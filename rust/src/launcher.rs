@@ -7,20 +7,42 @@
 //! communication threads and (optionally) the PJRT device service.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::compress::CompressionSpec;
-use crate::context::{NodeContext, TopologyState};
-use crate::negotiation::NegotiationService;
-use crate::nonblocking::CommThread;
+use crate::context::{NodeContext, ThrottleGate, TopologyState};
+use crate::negotiation::{NegotiationService, Rendezvous};
+use crate::nonblocking::{CommEngine, CommThread};
 use crate::pool::HotPath;
 use crate::runtime::DeviceHandle;
+use crate::simnet::event::{Grant, Scheduler};
 use crate::simnet::hetero::ComputeHeterogeneity;
 use crate::simnet::NetworkModel;
 use crate::timeline::Timeline;
 use crate::topology::{builders, Graph, WeightMatrix};
 use crate::transport::{fabric, VClock};
 use crate::window::WindowTable;
+
+/// Which backend executes the simulated ranks (paper §VI-A scaled up).
+///
+/// Both backends run the *same* per-rank program over the same virtual-time
+/// cost model; `tests/exec_parity.rs` is the differential harness pinning
+/// them against each other.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One free-running OS thread per rank (the original backend and the
+    /// parity oracle). Blocking receives park real threads; fine up to a
+    /// few hundred ranks.
+    #[default]
+    Threads,
+    /// Cooperative rank state machines over a single virtual-time event
+    /// loop ([`crate::simnet::event::Scheduler`]): exactly one rank is
+    /// runnable at any instant, the baton passing through a priority queue
+    /// of `(vtime, rank, wakeup-kind)` events. Deterministic grant order
+    /// independent of OS scheduling, and cheap enough per rank for
+    /// 10k-rank sweeps (`examples/scale_probe.rs`).
+    EventLoop,
+}
 
 /// Configuration of the asynchronous execution regime (paper §IV-C).
 ///
@@ -94,6 +116,22 @@ pub struct SpmdConfig {
     /// and the bounded-staleness throttle. `None` (default) leaves every
     /// rank at nominal speed and every async helper a no-op.
     pub async_spec: Option<AsyncSpec>,
+    /// Execution backend (default: [`ExecMode::Threads`], the parity
+    /// oracle; flip to [`ExecMode::EventLoop`] for large-scale sweeps).
+    pub exec: ExecMode,
+    /// Node-thread stack size in bytes (default 8 MiB). Event-loop ranks
+    /// are parked almost all the time, so 10k-rank sweeps shrink this to
+    /// keep reserved address space proportional to real usage.
+    pub stack_size: usize,
+    /// Sparse topology: build the per-rank CSR views directly from the
+    /// graph with uniform pull weights, skipping the dense `n × n`
+    /// [`WeightMatrix`] entirely (`O(E)` memory — mandatory at 10k ranks).
+    /// Takes precedence over `topology` when set.
+    pub sparse_topology: Option<Graph>,
+    /// When set under [`ExecMode::EventLoop`], the scheduler records its
+    /// grant sequence and the launcher deposits it here after the run
+    /// (the virtual-time trace the parity/property tests compare).
+    pub sched_trace: Option<Arc<Mutex<Vec<Grant>>>>,
 }
 
 impl SpmdConfig {
@@ -119,7 +157,37 @@ impl SpmdConfig {
             hot_path: HotPath::default(),
             compression: CompressionSpec::default(),
             async_spec: None,
+            exec: ExecMode::default(),
+            stack_size: 8 << 20,
+            sparse_topology: None,
+            sched_trace: None,
         }
+    }
+
+    /// Select the execution backend (default: [`ExecMode::Threads`]).
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Set the per-rank thread stack size in bytes.
+    pub fn with_stack_size(mut self, bytes: usize) -> Self {
+        self.stack_size = bytes;
+        self
+    }
+
+    /// Use a sparse CSR topology with uniform pull weights (no dense
+    /// weight matrix is ever materialized — required for 10k-rank runs).
+    pub fn with_sparse_topology(mut self, graph: Graph) -> Self {
+        self.sparse_topology = Some(graph);
+        self
+    }
+
+    /// Record the EventLoop scheduler's grant trace into `sink` after the
+    /// run completes (no-op under [`ExecMode::Threads`]).
+    pub fn with_sched_trace(mut self, sink: Arc<Mutex<Vec<Grant>>>) -> Self {
+        self.sched_trace = Some(sink);
+        self
     }
 
     /// Replace the network cost model.
@@ -202,12 +270,16 @@ where
     let timeline = cfg.timeline.clone().unwrap_or_else(|| Arc::new(Timeline::new(false)));
     let windows = Arc::new(WindowTable::new());
 
-    let (graph, weights) = cfg.topology.clone().unwrap_or_else(|| {
-        let g = builders::exponential_two(n);
-        let w = WeightMatrix::uniform_pull(&g);
-        (g, w)
-    });
-    let topology = Arc::new(RwLock::new(TopologyState::new(graph, weights)));
+    let topology = if let Some(graph) = cfg.sparse_topology.clone() {
+        Arc::new(RwLock::new(TopologyState::sparse_uniform_pull(graph)))
+    } else {
+        let (graph, weights) = cfg.topology.clone().unwrap_or_else(|| {
+            let g = builders::exponential_two(n);
+            let w = WeightMatrix::uniform_pull(&g);
+            (g, w)
+        });
+        Arc::new(RwLock::new(TopologyState::new(graph, weights)))
+    };
 
     // Per-rank wire-byte counters, shared between a node's blocking context
     // and its communication thread.
@@ -220,35 +292,79 @@ where
     let async_done: Arc<Vec<AtomicBool>> =
         Arc::new((0..n).map(|_| AtomicBool::new(false)).collect());
 
-    // Communication threads own the second endpoint fabric.
+    // Backend-specific plumbing: EventLoop gets the virtual-time scheduler,
+    // the inline negotiation rendezvous, and per-rank inline comm engines;
+    // Threads keeps the comm/negotiation daemons and (when the async regime
+    // is on) a condvar gate replacing the old sleep-poll throttle.
+    let event_loop = cfg.exec == ExecMode::EventLoop;
+    let sched = if event_loop {
+        Some(Scheduler::new(
+            n,
+            clocks.as_ref().clone(),
+            async_done.clone(),
+            cfg.sched_trace.is_some(),
+        ))
+    } else {
+        None
+    };
+    let rendezvous =
+        if event_loop { Some(Arc::new(Rendezvous::new(n, cfg.net.clone()))) } else { None };
+    let throttle_gate = if !event_loop && async_spec.is_some() {
+        Some(Arc::new(ThrottleGate::new()))
+    } else {
+        None
+    };
+
+    // The second endpoint fabric backs the non-blocking engines: dedicated
+    // comm threads under `Threads`, rank-owned inline engines under
+    // `EventLoop` (same state machine, driven at enqueue/wait points).
     let mut comm_threads = vec![];
-    let mut comm_queues = vec![];
+    let mut comm_queues: Vec<Option<crate::nonblocking::CommQueue>> =
+        (0..n).map(|_| None).collect();
+    let mut inline_engines: Vec<Option<Box<CommEngine>>> = (0..n).map(|_| None).collect();
     if cfg.comm_threads {
         for (rank, mb) in comm_mailboxes.into_iter().enumerate() {
-            let t = CommThread::spawn(
-                rank,
-                n,
-                mb,
-                comm_postman.clone(),
-                clocks.clone(),
-                net.clone(),
-                cfg.fusion_threshold,
-                cfg.hot_path,
-                cfg.compression,
-                cfg.seed,
-                tx_bytes[rank].clone(),
-            );
-            comm_queues.push(Some(t.queue()));
-            comm_threads.push(t);
+            if event_loop {
+                inline_engines[rank] = Some(Box::new(CommEngine::new(
+                    rank,
+                    n,
+                    mb,
+                    comm_postman.clone(),
+                    clocks.clone(),
+                    net.clone(),
+                    cfg.hot_path,
+                    cfg.compression,
+                    cfg.seed,
+                    tx_bytes[rank].clone(),
+                    sched.clone(),
+                )));
+            } else {
+                let t = CommThread::spawn(
+                    rank,
+                    n,
+                    mb,
+                    comm_postman.clone(),
+                    clocks.clone(),
+                    net.clone(),
+                    cfg.fusion_threshold,
+                    cfg.hot_path,
+                    cfg.compression,
+                    cfg.seed,
+                    tx_bytes[rank].clone(),
+                );
+                comm_queues[rank] = Some(t.queue());
+                comm_threads.push(t);
+            }
         }
-    } else {
-        comm_queues = (0..n).map(|_| None).collect();
     }
 
     let f = Arc::new(f);
     let mut handles = vec![];
-    for (rank, (mailbox, comm_queue)) in
-        mailboxes.into_iter().zip(comm_queues.into_iter()).enumerate()
+    for (rank, ((mailbox, comm_queue), engine)) in mailboxes
+        .into_iter()
+        .zip(comm_queues.into_iter())
+        .zip(inline_engines.into_iter())
+        .enumerate()
     {
         let f = f.clone();
         let mut ctx = NodeContext::new(
@@ -273,10 +389,15 @@ where
         ctx.fusion_threshold = cfg.fusion_threshold;
         ctx.hot_path = cfg.hot_path;
         ctx.comm = comm_queue;
+        ctx.sched = sched.clone();
+        ctx.rendezvous = rendezvous.clone();
+        ctx.inline_comm = engine;
+        ctx.throttle_gate = throttle_gate.clone();
         let done_on_exit = async_done.clone();
+        let sched_exit = sched.clone();
         let handle = std::thread::Builder::new()
             .name(format!("bf-node-{rank}"))
-            .stack_size(8 << 20)
+            .stack_size(cfg.stack_size)
             .spawn(move || {
                 // Any exit — success, error, or panic — marks this rank
                 // async-done, so peers spinning in `async_throttle` on its
@@ -288,7 +409,23 @@ where
                         self.0[self.1].store(true, Ordering::Release);
                     }
                 }
+                // EventLoop: hand the baton on no matter how the body
+                // exits. Declared *before* DoneOnExit so it drops *after*
+                // it — the final dispatch's throttle-release sweep must
+                // already see this rank as inactive.
+                struct FinishOnExit(Option<Arc<Scheduler>>, usize);
+                impl Drop for FinishOnExit {
+                    fn drop(&mut self) {
+                        if let Some(s) = &self.0 {
+                            s.finish(self.1);
+                        }
+                    }
+                }
+                let _finish = FinishOnExit(sched_exit.clone(), rank);
                 let _guard = DoneOnExit(done_on_exit, rank);
+                if let Some(s) = &sched_exit {
+                    s.attach(rank);
+                }
                 f(&mut ctx)
             })
             .expect("spawn node thread");
@@ -319,6 +456,10 @@ where
     }
     // Keep comm threads alive until all nodes joined, then drop (shutdown).
     drop(comm_threads);
+    // Deposit the recorded grant sequence for trace-comparing tests.
+    if let (Some(s), Some(sink)) = (&sched, &cfg.sched_trace) {
+        *sink.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = s.grants();
+    }
     match first_err {
         Some(e) => Err(e),
         None => Ok(results),

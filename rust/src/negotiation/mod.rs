@@ -175,13 +175,26 @@ fn service_loop(size: usize, net: NetworkModel, rx: Receiver<ServiceMsg>) {
 
 /// Validate a complete batch, resolve one-sided declarations, release ranks.
 fn respond(batch: &[(OpRequest, Sender<OpClearance>)], net: &NetworkModel, size: usize) {
+    let reqs: Vec<OpRequest> = batch.iter().map(|(r, _)| r.clone()).collect();
+    let clearances = resolve_batch(&reqs, net, size);
+    for ((_, reply), clearance) in batch.iter().zip(clearances) {
+        let _ = reply.send(clearance);
+    }
+}
+
+/// Pure batch resolution: validate, resolve one-sided edge declarations,
+/// and price the scalar gather/broadcast round. Returns one clearance per
+/// request, **in batch order**. Shared by the threaded service loop and
+/// the inline [`Rendezvous`] so both execution modes negotiate
+/// identically.
+pub fn resolve_batch(batch: &[OpRequest], net: &NetworkModel, size: usize) -> Vec<OpClearance> {
     let error = validate(batch, size);
     // Resolve edge sets: a send edge i->j exists when i declared j as dst
     // or j declared i as src.
     let mut send_edges: Vec<Vec<usize>> = vec![vec![]; size]; // by sender
     let mut recv_edges: Vec<Vec<usize>> = vec![vec![]; size]; // by receiver
     if error.is_none() {
-        for (r, _) in batch {
+        for r in batch {
             if let Some(dsts) = &r.dsts {
                 for &d in dsts {
                     push_unique(&mut send_edges[r.rank], d);
@@ -202,17 +215,17 @@ fn respond(batch: &[(OpRequest, Sender<OpClearance>)], net: &NetworkModel, size:
     // Scalar negotiation round: gather to rank 0, broadcast back.
     let gather_done = batch
         .iter()
-        .map(|(r, _)| r.vtime + net.latency(r.rank, 0))
+        .map(|r| r.vtime + net.latency(r.rank, 0))
         .fold(0.0f64, f64::max);
-    for (req, reply) in batch {
-        let start_vtime = gather_done + net.latency(0, req.rank);
-        let _ = reply.send(OpClearance {
-            start_vtime,
+    batch
+        .iter()
+        .map(|req| OpClearance {
+            start_vtime: gather_done + net.latency(0, req.rank),
             error: error.clone(),
             resolved_srcs: recv_edges.get(req.rank).cloned().unwrap_or_default(),
             resolved_dsts: send_edges.get(req.rank).cloned().unwrap_or_default(),
-        });
-    }
+        })
+        .collect()
 }
 
 fn push_unique(v: &mut Vec<usize>, x: usize) {
@@ -221,9 +234,9 @@ fn push_unique(v: &mut Vec<usize>, x: usize) {
     }
 }
 
-fn validate(batch: &[(OpRequest, Sender<OpClearance>)], size: usize) -> Option<String> {
-    let kind = batch[0].0.kind;
-    if let Some((r, _)) = batch.iter().find(|(r, _)| r.kind != kind) {
+fn validate(batch: &[OpRequest], size: usize) -> Option<String> {
+    let kind = batch[0].kind;
+    if let Some(r) = batch.iter().find(|r| r.kind != kind) {
         return Some(format!(
             "operation mismatch for '{}': rank {} issued {} while others issued {}",
             r.name,
@@ -232,18 +245,18 @@ fn validate(batch: &[(OpRequest, Sender<OpClearance>)], size: usize) -> Option<S
             kind.name()
         ));
     }
-    let numel = batch[0].0.numel;
+    let numel = batch[0].numel;
     if kind != OpKind::NeighborAllgather {
-        if let Some((r, _)) = batch.iter().find(|(r, _)| r.numel != numel) {
+        if let Some(r) = batch.iter().find(|r| r.numel != numel) {
             return Some(format!(
                 "tensor size mismatch for '{}': rank {} announced {} elements, rank {} announced {}",
-                r.name, batch[0].0.rank, numel, r.rank, r.numel
+                r.name, batch[0].rank, numel, r.rank, r.numel
             ));
         }
     }
     // Index declarations by rank for the topology cross-check.
     let mut by_rank: Vec<Option<&OpRequest>> = vec![None; size];
-    for (r, _) in batch {
+    for r in batch {
         if r.rank >= size {
             return Some(format!("invalid rank {} (size {})", r.rank, size));
         }
@@ -252,7 +265,7 @@ fn validate(batch: &[(OpRequest, Sender<OpClearance>)], size: usize) -> Option<S
     // Topology check (paper §VI-C): a declared send i->j conflicts when j
     // *also declared* its sources and did not list i; symmetrically for
     // declared receives. One-sided declarations are resolved, not errors.
-    for (r, _) in batch {
+    for r in batch {
         if let Some(dsts) = &r.dsts {
             for &dst in dsts {
                 if dst >= size {
@@ -295,6 +308,81 @@ fn validate(batch: &[(OpRequest, Sender<OpClearance>)], size: usize) -> Option<S
         }
     }
     None
+}
+
+/// Inline negotiation rendezvous for `ExecMode::EventLoop`.
+///
+/// The threaded backend parks ranks inside a channel `recv` to the
+/// negotiation daemon — invisible to the virtual-time scheduler. Here the
+/// first `n-1` submitters park on the scheduler (`Negotiate`), and the
+/// **last** submitter resolves the batch inline via [`resolve_batch`]
+/// (identical validation/resolution/pricing), stores the peers'
+/// clearances, and pushes one `Clearance` event per peer at its
+/// `start_vtime` — which is `>=` every submit-time clock, so grant vtimes
+/// stay monotone.
+pub struct Rendezvous {
+    size: usize,
+    net: NetworkModel,
+    state: std::sync::Mutex<RendezvousState>,
+}
+
+struct RendezvousState {
+    pending: HashMap<String, Vec<OpRequest>>,
+    ready: HashMap<(String, usize), OpClearance>,
+}
+
+impl Rendezvous {
+    /// New rendezvous for `size` ranks over the given network model.
+    pub fn new(size: usize, net: NetworkModel) -> Self {
+        Rendezvous {
+            size,
+            net,
+            state: std::sync::Mutex::new(RendezvousState {
+                pending: HashMap::new(),
+                ready: HashMap::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RendezvousState> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Announce an operation; parks on `sched` until the batch completes.
+    /// Semantically identical to [`NegotiationClient::submit`].
+    pub fn submit(
+        &self,
+        req: OpRequest,
+        sched: &crate::simnet::event::Scheduler,
+    ) -> anyhow::Result<OpClearance> {
+        let rank = req.rank;
+        let name = req.name.clone();
+        {
+            let mut st = self.lock();
+            let entry = st.pending.entry(name.clone()).or_default();
+            entry.push(req);
+            if entry.len() == self.size {
+                let batch = st.pending.remove(&name).unwrap();
+                let clearances = resolve_batch(&batch, &self.net, self.size);
+                let mut own = None;
+                for (peer, clearance) in batch.iter().zip(clearances) {
+                    if peer.rank == rank {
+                        own = Some(clearance);
+                    } else {
+                        let at = clearance.start_vtime;
+                        st.ready.insert((name.clone(), peer.rank), clearance);
+                        sched.notify_clearance(peer.rank, at);
+                    }
+                }
+                return Ok(own.expect("own request is in the batch"));
+            }
+        }
+        sched.block_negotiate(rank);
+        self.lock()
+            .ready
+            .remove(&(name, rank))
+            .ok_or_else(|| anyhow::anyhow!("rendezvous clearance missing after wakeup"))
+    }
 }
 
 #[cfg(test)]

@@ -38,12 +38,21 @@ use crate::pool::{BufferPool, HotPath};
 use crate::simnet::NetworkModel;
 use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, VClock};
 
+/// How a [`Handle`]'s request reaches the communication engine.
+enum Route {
+    /// Threads mode: flushed through the comm thread's request channel.
+    Thread(Sender<CommRequest>),
+    /// EventLoop mode: the engine lives inside the caller's [`NodeContext`]
+    /// (`inline_comm`) and is driven synchronously at wait time.
+    Inline,
+}
+
 /// A non-blocking operation's completion token.
 pub struct Handle {
     rx: Receiver<CommResult>,
     /// Fusion group of the request (flushed on wait).
     group: u64,
-    flush_tx: Sender<CommRequest>,
+    route: Route,
     /// The node's group counter/accumulator: waiting on a handle closes the
     /// open group so later requests start a fresh one (every rank waits in
     /// the same program order, so grouping stays globally deterministic).
@@ -52,13 +61,13 @@ pub struct Handle {
 }
 
 impl Handle {
-    fn flush(&self) {
+    /// Close the node's open fusion group so later requests start fresh.
+    fn close_group(&self) {
         use std::sync::atomic::Ordering;
         if self.group_counter.load(Ordering::Relaxed) == self.group {
             self.group_counter.store(self.group + 1, Ordering::Relaxed);
             self.acc_bytes.store(0, Ordering::Relaxed);
         }
-        let _ = self.flush_tx.send(CommRequest::Flush(self.group));
     }
 }
 
@@ -72,24 +81,58 @@ impl Handle {
     /// Block until the communication finishes; returns the reduced tensor
     /// and advances the caller's virtual clock to the completion time
     /// (`bf.wait(handle)`).
-    pub fn wait(self, ctx: &NodeContext) -> anyhow::Result<Vec<f32>> {
-        self.flush();
-        let res = self
-            .rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("communication thread dropped the request"))?;
+    ///
+    /// Under [`crate::launcher::ExecMode::EventLoop`] the flush drives the
+    /// rank's inline engine directly (cooperatively yielding to peers while
+    /// receives are outstanding); under `Threads` it joins the comm thread's
+    /// reply channel. Virtual-time accounting is identical in both modes:
+    /// the op starts at its enqueue vtime and `wait` advances the caller to
+    /// the completion time, so compute in between is overlapped.
+    pub fn wait(self, ctx: &mut NodeContext) -> anyhow::Result<Vec<f32>> {
+        self.close_group();
+        let res = match &self.route {
+            Route::Thread(tx) => {
+                let _ = tx.send(CommRequest::Flush(self.group));
+                self.rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("communication thread dropped the request"))?
+            }
+            Route::Inline => {
+                let mut engine = ctx
+                    .inline_comm
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("inline communication engine missing"))?;
+                engine.handle(CommRequest::Flush(self.group));
+                ctx.inline_comm = Some(engine);
+                self.rx.try_recv().map_err(|_| {
+                    anyhow::anyhow!("inline communication engine did not complete the request")
+                })?
+            }
+        };
         ctx.clock().advance_to(res.done_vtime);
         Ok(res.data)
     }
 
     /// Non-advancing wait, for callers that manage virtual time themselves.
+    ///
+    /// Only available in `Threads` mode: the inline engine needs the owning
+    /// [`NodeContext`] to run, so EventLoop callers must use
+    /// [`Handle::wait`].
     pub fn wait_raw(self) -> anyhow::Result<(Vec<f32>, f64)> {
-        self.flush();
-        let res = self
-            .rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("communication thread dropped the request"))?;
-        Ok((res.data, res.done_vtime))
+        self.close_group();
+        match &self.route {
+            Route::Thread(tx) => {
+                let _ = tx.send(CommRequest::Flush(self.group));
+                let res = self
+                    .rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("communication thread dropped the request"))?;
+                Ok((res.data, res.done_vtime))
+            }
+            Route::Inline => anyhow::bail!(
+                "wait_raw is unsupported under ExecMode::EventLoop; use Handle::wait"
+            ),
+        }
     }
 }
 
@@ -159,19 +202,26 @@ impl CommThread {
         let handle = std::thread::Builder::new()
             .name(format!("bf-comm-{rank}"))
             .spawn(move || {
-                comm_loop(
+                let mut engine = CommEngine::new(
                     rank,
                     size,
                     mailbox,
                     postman,
                     clocks,
                     net,
-                    rx,
                     hot_path,
                     compression,
                     seed,
                     tx_bytes,
-                )
+                    None,
+                );
+                while let Ok(req) = rx.recv() {
+                    let stop = matches!(req, CommRequest::Shutdown);
+                    engine.handle(req);
+                    if stop {
+                        break;
+                    }
+                }
             })
             .expect("spawn comm thread");
         CommThread { tx, handle: Some(handle) }
@@ -199,60 +249,103 @@ struct PendingGroup {
     items: Vec<(Vec<f32>, f64, Sender<CommResult>)>,
 }
 
-#[allow(clippy::too_many_arguments)]
-fn comm_loop(
+/// The communication engine: the resumable state machine behind both comm
+/// backends. In `Threads` mode a dedicated thread drives it off a request
+/// channel; in `EventLoop` mode each rank owns one inline
+/// (`NodeContext::inline_comm`) and drives it at enqueue/wait points, with
+/// receives routed through the virtual-time scheduler instead of parking an
+/// OS thread. Identical request handling in both modes is what the
+/// differential parity suite (`tests/exec_parity.rs`) leans on.
+pub struct CommEngine {
     rank: usize,
     size: usize,
-    mut mailbox: Mailbox,
+    mailbox: Mailbox,
     postman: Postman,
     clocks: Arc<Vec<VClock>>,
     net: Arc<NetworkModel>,
-    rx: Receiver<CommRequest>,
     hot_path: HotPath,
-    compression: CompressionSpec,
-    seed: u64,
     tx_bytes: Arc<AtomicU64>,
-) {
-    let mut rounds: HashMap<u32, u32> = HashMap::new();
-    // Groups are issued in nondecreasing order; at most one is open.
-    let mut pending: Option<PendingGroup> = None;
-    let mut flushed_below: u64 = 0; // groups < this are already done
-    // This thread's buffer pool plus a dedicated fusion-pack allocation,
-    // both reused across rounds (zero-allocation steady state).
-    let pool = BufferPool::new();
-    let mut fusion_storage: Vec<f32> = Vec::new();
-    // This thread's compression endpoint: fused packs are encoded *after*
-    // packing (one wire stream per destination) and decoded before
-    // unpacking, with residuals independent of the blocking path's.
-    let mut comp = CompressionState::new(
-        compression,
-        seed ^ 0x5eed ^ (rank as u64).wrapping_mul(0xA24BAED4963EE407),
-    );
+    rounds: HashMap<u32, u32>,
+    /// Groups are issued in nondecreasing order; at most one is open.
+    pending: Option<PendingGroup>,
+    /// Groups below this are already done.
+    flushed_below: u64,
+    /// This engine's buffer pool plus a dedicated fusion-pack allocation,
+    /// both reused across rounds (zero-allocation steady state).
+    pool: BufferPool,
+    fusion_storage: Vec<f32>,
+    /// This engine's compression endpoint: fused packs are encoded *after*
+    /// packing (one wire stream per destination) and decoded before
+    /// unpacking, with residuals independent of the blocking path's.
+    comp: CompressionState,
+    /// Set in EventLoop mode: receives park the rank on the scheduler.
+    sched: Option<Arc<crate::simnet::event::Scheduler>>,
+}
 
-    let mut transmit = |pg: PendingGroup,
-                        mailbox: &mut Mailbox,
-                        rounds: &mut HashMap<u32, u32>,
-                        storage: &mut Vec<f32>,
-                        comp: &mut CompressionState| {
-        let tensors: Vec<&[f32]> = pg.items.iter().map(|(d, _, _)| d.as_slice()).collect();
-        let buf = FusionBuffer::pack_into_vec(&tensors, std::mem::take(storage));
-        drop(tensors);
-        let start_vtime =
-            pg.items.iter().map(|(_, t, _)| *t).fold(f64::NEG_INFINITY, f64::max);
-        let mut ep = Endpoint::new(
+impl CommEngine {
+    /// Build an engine over the node's second transport endpoint. `sched`
+    /// is `None` for the comm-thread backend (receives block the thread)
+    /// and `Some` for the inline EventLoop backend (receives cooperatively
+    /// yield).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        rank: usize,
+        size: usize,
+        mailbox: Mailbox,
+        postman: Postman,
+        clocks: Arc<Vec<VClock>>,
+        net: Arc<NetworkModel>,
+        hot_path: HotPath,
+        compression: CompressionSpec,
+        seed: u64,
+        tx_bytes: Arc<AtomicU64>,
+        sched: Option<Arc<crate::simnet::event::Scheduler>>,
+    ) -> Self {
+        let comp = CompressionState::new(
+            compression,
+            seed ^ 0x5eed ^ (rank as u64).wrapping_mul(0xA24BAED4963EE407),
+        );
+        CommEngine {
             rank,
             size,
             mailbox,
-            &postman,
-            &clocks,
-            &net,
-            &pool,
+            postman,
+            clocks,
+            net,
             hot_path,
+            tx_bytes,
+            rounds: HashMap::new(),
+            pending: None,
+            flushed_below: 0,
+            pool: BufferPool::new(),
+            fusion_storage: Vec::new(),
+            comp,
+            sched,
+        }
+    }
+
+    /// Pack and exchange one fusion group, replying to every member.
+    fn transmit(&mut self, pg: PendingGroup) {
+        let tensors: Vec<&[f32]> = pg.items.iter().map(|(d, _, _)| d.as_slice()).collect();
+        let buf = FusionBuffer::pack_into_vec(&tensors, std::mem::take(&mut self.fusion_storage));
+        drop(tensors);
+        let start_vtime =
+            pg.items.iter().map(|(_, t, _)| *t).fold(f64::NEG_INFINITY, f64::max);
+        let tag = next_tag(&mut self.rounds, "nb.neighbor");
+        let mut ep = Endpoint::new(
+            self.rank,
+            self.size,
+            &mut self.mailbox,
+            &self.postman,
+            &self.clocks,
+            &self.net,
+            &self.pool,
+            self.hot_path,
             start_vtime,
-            &tx_bytes,
+            &self.tx_bytes,
+            self.sched.as_deref(),
         );
-        let out =
-            ep.neighbor_exchange(buf.data(), &pg.plan, next_tag(rounds, "nb.neighbor"), comp);
+        let out = ep.neighbor_exchange(buf.data(), &pg.plan, tag, &mut self.comp);
         let done_vtime = ep.completion;
         // Scatter-free unpack: each request's own input buffer is
         // overwritten in place and becomes its reply — no per-slot `Vec`.
@@ -260,74 +353,78 @@ fn comm_loop(
             buf.unpack_slot_into(&out, i, &mut data);
             let _ = reply.send(CommResult { data, done_vtime });
         }
-        *storage = buf.into_data();
-        if hot_path == HotPath::Pooled {
-            pool.recycle_vec(out);
+        self.fusion_storage = buf.into_data();
+        if self.hot_path == HotPath::Pooled {
+            self.pool.recycle_vec(out);
         }
-    };
+    }
 
-    while let Ok(req) = rx.recv() {
+    /// Advance the state machine by one request. Fusable neighbor requests
+    /// accumulate in the open group; a flush, a newer group, or an unfusable
+    /// op transmits it.
+    pub(crate) fn handle(&mut self, req: CommRequest) {
         match req {
             CommRequest::Shutdown => {
-                if let Some(pg) = pending.take() {
-                    transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage, &mut comp);
+                if let Some(pg) = self.pending.take() {
+                    self.transmit(pg);
                 }
-                break;
             }
             CommRequest::Flush(g) => {
-                if g >= flushed_below {
-                    if let Some(pg) = pending.take() {
+                if g >= self.flushed_below {
+                    if let Some(pg) = self.pending.take() {
                         if pg.group <= g {
-                            flushed_below = pg.group + 1;
-                            transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage, &mut comp);
+                            self.flushed_below = pg.group + 1;
+                            self.transmit(pg);
                         } else {
-                            pending = Some(pg);
+                            self.pending = Some(pg);
                         }
                     }
                 }
             }
             CommRequest::RingAllreduceAvg { group, data, enqueue_vtime, reply } => {
                 // Ring ops are never fused; close any open group first.
-                if let Some(pg) = pending.take() {
-                    flushed_below = pg.group + 1;
-                    transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage, &mut comp);
+                if let Some(pg) = self.pending.take() {
+                    self.flushed_below = pg.group + 1;
+                    self.transmit(pg);
                 }
-                flushed_below = flushed_below.max(group + 1);
+                self.flushed_below = self.flushed_below.max(group + 1);
+                let tag = next_tag(&mut self.rounds, "nb.ring");
                 let mut ep = Endpoint::new(
-                    rank,
-                    size,
-                    &mut mailbox,
-                    &postman,
-                    &clocks,
-                    &net,
-                    &pool,
-                    hot_path,
+                    self.rank,
+                    self.size,
+                    &mut self.mailbox,
+                    &self.postman,
+                    &self.clocks,
+                    &self.net,
+                    &self.pool,
+                    self.hot_path,
                     enqueue_vtime,
-                    &tx_bytes,
+                    &self.tx_bytes,
+                    self.sched.as_deref(),
                 );
                 // The request's own buffer is reduced in place — no copy.
-                let mut out = ep.ring_allreduce(data, next_tag(&mut rounds, "nb.ring"));
-                let inv = 1.0 / size as f32;
+                let mut out = ep.ring_allreduce(data, tag);
+                let done_vtime = ep.completion;
+                let inv = 1.0 / self.size as f32;
                 for x in out.iter_mut() {
                     *x *= inv;
                 }
-                let _ = reply.send(CommResult { data: out, done_vtime: ep.completion });
+                let _ = reply.send(CommResult { data: out, done_vtime });
             }
             CommRequest::NeighborAllreduce { group, data, plan, enqueue_vtime, reply } => {
                 // A request for a newer group closes the previous one.
-                if let Some(pg) = pending.take() {
+                if let Some(pg) = self.pending.take() {
                     if pg.group < group || pg.plan != plan {
-                        flushed_below = pg.group + 1;
-                        transmit(pg, &mut mailbox, &mut rounds, &mut fusion_storage, &mut comp);
-                        pending = None;
+                        self.flushed_below = pg.group + 1;
+                        self.transmit(pg);
                     } else {
-                        pending = Some(pg);
+                        self.pending = Some(pg);
                     }
                 }
-                match pending.as_mut() {
+                match self.pending.as_mut() {
                     Some(pg) => pg.items.push((data, enqueue_vtime, reply)),
                     None => {
-                        pending = Some(PendingGroup {
+                        self.pending = Some(PendingGroup {
                             group,
                             plan,
                             items: vec![(data, enqueue_vtime, reply)],
@@ -367,6 +464,9 @@ struct Endpoint<'a> {
     completion: f64,
     /// The node's wire-byte counter (shared with the blocking context).
     tx_bytes: &'a AtomicU64,
+    /// EventLoop mode: receives park the owning rank on the scheduler and
+    /// sends post wakeup events, instead of blocking an OS thread.
+    sched: Option<&'a crate::simnet::event::Scheduler>,
 }
 
 impl<'a> Endpoint<'a> {
@@ -382,6 +482,7 @@ impl<'a> Endpoint<'a> {
         hot_path: HotPath,
         base_vtime: f64,
         tx_bytes: &'a AtomicU64,
+        sched: Option<&'a crate::simnet::event::Scheduler>,
     ) -> Self {
         Endpoint {
             rank,
@@ -395,6 +496,7 @@ impl<'a> Endpoint<'a> {
             base_vtime,
             completion: base_vtime,
             tx_bytes,
+            sched,
         }
     }
 
@@ -435,10 +537,23 @@ impl<'a> Endpoint<'a> {
             dst,
             Message { src: self.rank, tag, payload, arrival_vtime: arrival },
         );
+        if let Some(sched) = self.sched {
+            sched.notify_message(dst, arrival);
+        }
     }
 
     fn recv(&mut self, src: usize, tag: u64) -> Arc<Vec<f32>> {
-        let msg = self.mailbox.recv_match(src, tag).expect("comm endpoint closed");
+        let msg = match self.sched {
+            // EventLoop: drain what's already queued, then park the rank on
+            // the scheduler until a message event wakes it.
+            Some(sched) => loop {
+                if let Some(m) = self.mailbox.try_recv_match(src, tag) {
+                    break m;
+                }
+                sched.block_recv(self.rank, "comm engine recv");
+            },
+            None => self.mailbox.recv_match(src, tag).expect("comm endpoint closed"),
+        };
         self.completion = self.completion.max(msg.arrival_vtime);
         msg.payload
     }
@@ -653,33 +768,51 @@ impl NodeContext {
                 ExchangePlan { self_weight: w.self_weight, srcs, dsts, static_plan: false }
             }
             None => {
-                let topo = self.load_topology();
-                let (self_weight, srcs) = topo.weights.pull_view(self.rank());
+                let me = self.rank();
+                let topo = self.topology.read().unwrap();
+                let (self_weight, srcs) = topo.views.pull_view(me);
+                let srcs = srcs.to_vec();
                 let dsts: Vec<(usize, f64)> =
-                    topo.graph.out_neighbors(self.rank()).into_iter().map(|r| (r, 1.0)).collect();
+                    topo.views.out_neighbors(me).iter().map(|&r| (r, 1.0)).collect();
                 ExchangePlan { self_weight, srcs, dsts, static_plan: true }
             }
         };
         let group = self.assign_fusion_group(data.len() * 4);
         let (tx, rx) = channel();
-        let q = self.comm_queue()?;
-        let flush_tx = q.tx.clone();
         let data = self.vec_from(data);
-        q.tx.send(CommRequest::NeighborAllreduce {
+        let req = CommRequest::NeighborAllreduce {
             group,
             data,
             plan,
             enqueue_vtime: self.vtime(),
             reply: tx,
-        })
-        .map_err(|_| anyhow::anyhow!("communication thread down"))?;
+        };
+        let route = self.dispatch_comm(req)?;
         Ok(Handle {
             rx,
             group,
-            flush_tx,
+            route,
             group_counter: self.fusion_group.clone(),
             acc_bytes: self.fusion_acc_bytes.clone(),
         })
+    }
+
+    /// Route a request to the rank's communication backend: the inline
+    /// engine when one is installed (EventLoop), otherwise the comm thread's
+    /// queue (Threads).
+    fn dispatch_comm(&mut self, req: CommRequest) -> anyhow::Result<Route> {
+        if self.inline_comm.is_some() {
+            let mut engine =
+                self.inline_comm.take().expect("inline engine presence just checked");
+            engine.handle(req);
+            self.inline_comm = Some(engine);
+            Ok(Route::Inline)
+        } else {
+            let q = self.comm_queue()?;
+            let flush_tx = q.tx.clone();
+            q.tx.send(req).map_err(|_| anyhow::anyhow!("communication thread down"))?;
+            Ok(Route::Thread(flush_tx))
+        }
     }
 
     /// Non-blocking global average via ring allreduce (the overlapped
@@ -690,20 +823,18 @@ impl NodeContext {
         let group = self.fusion_group.fetch_add(1, Ordering::Relaxed) + 1;
         self.fusion_acc_bytes.store(0, Ordering::Relaxed);
         let (tx, rx) = channel();
-        let q = self.comm_queue()?;
-        let flush_tx = q.tx.clone();
         let data = self.vec_from(data);
-        q.tx.send(CommRequest::RingAllreduceAvg {
+        let req = CommRequest::RingAllreduceAvg {
             group,
             data,
             enqueue_vtime: self.vtime(),
             reply: tx,
-        })
-        .map_err(|_| anyhow::anyhow!("communication thread down"))?;
+        };
+        let route = self.dispatch_comm(req)?;
         Ok(Handle {
             rx,
             group,
-            flush_tx,
+            route,
             group_counter: self.fusion_group.clone(),
             acc_bytes: self.fusion_acc_bytes.clone(),
         })

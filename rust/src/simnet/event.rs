@@ -1,0 +1,501 @@
+//! Virtual-time event scheduler — the `ExecMode::EventLoop` core.
+//!
+//! Under [`crate::launcher::ExecMode::EventLoop`] every rank still owns an
+//! OS thread (so four PRs' worth of blocking collective code runs
+//! unchanged), but the threads are *cooperative*: exactly one is runnable
+//! at any instant, and the baton is passed through a single virtual-time
+//! priority queue. A rank runs until it reaches a yield point — a mailbox
+//! receive with nothing to read, a negotiation waiting for peers, an
+//! async-throttle horizon, or an explicit cooperative yield after compute
+//! — parks on its own condvar, and the scheduler grants the globally
+//! smallest pending [`Event`] `(vtime, rank, kind)`. The result is a
+//! deterministic discrete-event simulation: grant order is a pure function
+//! of the virtual-time cost model, independent of OS scheduling, which is
+//! what lets `tests/exec_parity.rs` pin the event backend bit-for-bit
+//! against the free-running thread backend.
+//!
+//! Invariants (property-tested in `tests/properties.rs`):
+//! - pops from the [`EventQueue`] are nondecreasing in vtime;
+//! - same-vtime ties break deterministically by rank, then kind, then
+//!   insertion sequence;
+//! - no event is lost or duplicated: the popped multiset equals the pushed
+//!   multiset;
+//! - a rank parked on a receive consumes **no virtual time** while parked
+//!   (its clock moves only when the matched message's arrival stamp does).
+//!
+//! Deadlock watchdog: if the queue drains while unfinished ranks remain
+//! parked, the scheduler poisons itself with a per-rank diagnostic (park
+//! kind, what it was waiting on, its clock) and wakes everyone; parked
+//! ranks panic with that diagnostic, which the launcher converts into a
+//! run error — a mismatched collective fails in milliseconds instead of
+//! hanging the test suite.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+use crate::transport::VClock;
+
+/// What a queued event delivers to its target rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum WakeKind {
+    /// Initial grant releasing an attached rank into its node body.
+    Start,
+    /// A point-to-point message became (virtually) available.
+    Message,
+    /// A self-scheduled resume: cooperative yield or throttle release.
+    Resume,
+    /// A negotiation batch this rank submitted to has been resolved.
+    Clearance,
+}
+
+/// A scheduler event: rank `actor` becomes eligible to run at `vtime`.
+///
+/// Total order: vtime (IEEE `total_cmp`), then rank, then kind, then the
+/// insertion sequence number — so same-instant ties are deterministic and
+/// independent of heap internals.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Virtual time at which the wakeup fires.
+    pub vtime: f64,
+    /// Target rank.
+    pub actor: usize,
+    /// What the wakeup delivers.
+    pub kind: WakeKind,
+    /// Insertion sequence number (final tie-breaker).
+    pub seq: u64,
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.vtime
+            .total_cmp(&other.vtime)
+            .then(self.actor.cmp(&other.actor))
+            .then(self.kind.cmp(&other.kind))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+/// Deterministic min-priority queue over [`Event`]s.
+///
+/// Exposed on its own (rather than buried in the scheduler) so property
+/// tests can drive it directly with randomized interleavings.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+}
+
+impl EventQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new() }
+    }
+
+    /// Insert an event.
+    pub fn push(&mut self, ev: Event) {
+        self.heap.push(std::cmp::Reverse(ev));
+    }
+
+    /// Remove and return the smallest event (earliest vtime, lowest rank).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|r| r.0)
+    }
+
+    /// The smallest event without removing it.
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek().map(|r| &r.0)
+    }
+
+    /// Number of queued events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events are queued.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// What a rank is currently parked on (its resumable-state-machine state;
+/// the rest of the per-rank record — parameters, pool, pending window
+/// slots, staleness counters — lives on `NodeContext` and is simply not
+/// touched while the rank is parked).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Park {
+    /// Attached, waiting for the initial grant.
+    Start,
+    /// Currently running (holds the baton).
+    Running,
+    /// Cooperative yield; resumes on its own `Resume` event.
+    Yield,
+    /// Blocked on a mailbox receive; resumes on a `Message` event.
+    Recv,
+    /// Blocked on a negotiation batch; resumes on a `Clearance` event.
+    Negotiate,
+    /// Blocked on the bounded-staleness throttle; resumes on a `Resume`
+    /// event pushed by the release sweep.
+    Throttle,
+    /// Node body returned; never granted again.
+    Finished,
+}
+
+/// One granted wakeup, recorded when tracing is enabled — the
+/// deterministic "virtual-time trace" the parity tests compare.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Grant {
+    /// Virtual time of the granting event.
+    pub vtime: f64,
+    /// Rank that received the baton.
+    pub actor: usize,
+    /// Kind of the granting event.
+    pub kind: WakeKind,
+}
+
+struct ActorState {
+    park: Park,
+    granted: bool,
+    /// Human-readable description of what the rank is blocked on
+    /// (deadlock diagnostics).
+    info: &'static str,
+    /// Clock reading when the rank parked (deadlock diagnostics).
+    parked_at: f64,
+}
+
+struct Inner {
+    queue: EventQueue,
+    seq: u64,
+    actors: Vec<ActorState>,
+    /// Ranks that have called `attach`; dispatch is gated on all `n` so
+    /// OS-racy thread spawn order cannot perturb the first grant.
+    attached: usize,
+    unfinished: usize,
+    /// `(rank, threshold)`: release when `min_active_vtime() >= threshold`.
+    throttle: Vec<(usize, f64)>,
+    poison: Option<Arc<String>>,
+    trace: Option<Vec<Grant>>,
+}
+
+impl Inner {
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+}
+
+/// The baton-passing cooperative scheduler (one per `EventLoop` run).
+pub struct Scheduler {
+    n: usize,
+    inner: Mutex<Inner>,
+    /// One condvar per rank (all paired with the single `inner` mutex) so
+    /// a grant wakes exactly its target — no thundering herd at 10k ranks.
+    cvs: Vec<Condvar>,
+    clocks: Vec<VClock>,
+    async_done: Arc<Vec<AtomicBool>>,
+}
+
+impl Scheduler {
+    /// New scheduler over `n` ranks sharing `clocks`/`async_done` with the
+    /// launcher. `trace` enables grant recording (parity/property tests).
+    pub fn new(
+        n: usize,
+        clocks: Vec<VClock>,
+        async_done: Arc<Vec<AtomicBool>>,
+        trace: bool,
+    ) -> Arc<Self> {
+        let actors = (0..n)
+            .map(|_| ActorState {
+                park: Park::Start,
+                granted: false,
+                info: "attach",
+                parked_at: 0.0,
+            })
+            .collect();
+        Arc::new(Scheduler {
+            n,
+            inner: Mutex::new(Inner {
+                queue: EventQueue::new(),
+                seq: 0,
+                actors,
+                attached: 0,
+                unfinished: n,
+                throttle: Vec::new(),
+                poison: None,
+                trace: if trace { Some(Vec::new()) } else { None },
+            }),
+            cvs: (0..n).map(|_| Condvar::new()).collect(),
+            clocks,
+            async_done,
+        })
+    }
+
+    /// Number of ranks.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Register the calling rank and park until the scheduler grants its
+    /// `Start` event. Dispatch begins only once all `n` ranks attached, so
+    /// the first baton always goes to rank 0 regardless of spawn order.
+    pub fn attach(&self, rank: usize) {
+        let mut g = self.lock();
+        let seq = g.next_seq();
+        g.queue.push(Event { vtime: 0.0, actor: rank, kind: WakeKind::Start, seq });
+        g.attached += 1;
+        g.actors[rank] =
+            ActorState { park: Park::Start, granted: false, info: "attach", parked_at: 0.0 };
+        self.dispatch(&mut g);
+        self.wait_granted(g, rank);
+    }
+
+    /// Cooperative yield: hand the baton back and resume once `vtime` is
+    /// the smallest pending instant. Called after compute advances the
+    /// local clock so cheaper ranks run first.
+    pub fn yield_now(&self, rank: usize, vtime: f64) {
+        let mut g = self.lock();
+        let seq = g.next_seq();
+        g.queue.push(Event { vtime, actor: rank, kind: WakeKind::Resume, seq });
+        self.park(g, rank, Park::Yield, "cooperative yield", vtime);
+    }
+
+    /// Park until a `Message` event targets this rank. The caller must
+    /// have drained its mailbox first (`try_recv_*`) — arrivals pushed
+    /// before this park are already queued as events and will be granted.
+    pub fn block_recv(&self, rank: usize, info: &'static str) {
+        let g = self.lock();
+        let at = self.clocks[rank].now();
+        self.park(g, rank, Park::Recv, info, at);
+    }
+
+    /// Park until the negotiation batch this rank submitted to resolves
+    /// (a `Clearance` event pushed by the batch's last submitter).
+    pub fn block_negotiate(&self, rank: usize) {
+        let g = self.lock();
+        let at = self.clocks[rank].now();
+        self.park(g, rank, Park::Negotiate, "negotiation rendezvous", at);
+    }
+
+    /// Park until `min_active_vtime() >= threshold` (the bounded-staleness
+    /// throttle). The release sweep runs at every dispatch.
+    pub fn throttle_wait(&self, rank: usize, threshold: f64) {
+        let mut g = self.lock();
+        g.throttle.push((rank, threshold));
+        let at = self.clocks[rank].now();
+        self.park(g, rank, Park::Throttle, "async throttle horizon", at);
+    }
+
+    /// Announce a message delivered to `dst`'s mailbox with the given
+    /// virtual arrival time. Called by the (running) sender; does not
+    /// dispatch — the sender keeps the baton.
+    pub fn notify_message(&self, dst: usize, vtime: f64) {
+        let mut g = self.lock();
+        let seq = g.next_seq();
+        g.queue.push(Event { vtime, actor: dst, kind: WakeKind::Message, seq });
+    }
+
+    /// Announce a resolved negotiation clearance for `dst` effective at
+    /// `vtime`. Called by the batch's last submitter (still running).
+    pub fn notify_clearance(&self, dst: usize, vtime: f64) {
+        let mut g = self.lock();
+        let seq = g.next_seq();
+        g.queue.push(Event { vtime, actor: dst, kind: WakeKind::Clearance, seq });
+    }
+
+    /// Mark the calling rank finished and pass the baton on. Must never
+    /// panic — it runs from a drop guard during unwinding.
+    pub fn finish(&self, rank: usize) {
+        let mut g = self.lock();
+        if g.actors[rank].park == Park::Finished {
+            return;
+        }
+        g.actors[rank].park = Park::Finished;
+        g.unfinished = g.unfinished.saturating_sub(1);
+        if g.attached == self.n && g.poison.is_none() {
+            self.dispatch(&mut g);
+        }
+    }
+
+    /// The recorded grant sequence (empty unless tracing was enabled).
+    pub fn grants(&self) -> Vec<Grant> {
+        self.lock().trace.clone().unwrap_or_default()
+    }
+
+    /// The watchdog diagnostic, if the run deadlocked.
+    pub fn poison_message(&self) -> Option<String> {
+        self.lock().poison.as_ref().map(|p| p.as_str().to_string())
+    }
+
+    fn park(
+        &self,
+        mut g: MutexGuard<'_, Inner>,
+        rank: usize,
+        park: Park,
+        info: &'static str,
+        at: f64,
+    ) {
+        {
+            let a = &mut g.actors[rank];
+            a.park = park;
+            a.info = info;
+            a.parked_at = at;
+        }
+        self.dispatch(&mut g);
+        self.wait_granted(g, rank);
+    }
+
+    fn wait_granted(&self, mut g: MutexGuard<'_, Inner>, rank: usize) {
+        loop {
+            if let Some(p) = &g.poison {
+                let msg = Arc::clone(p);
+                drop(g);
+                panic!("{msg}");
+            }
+            if g.actors[rank].granted {
+                g.actors[rank].granted = false;
+                g.actors[rank].park = Park::Running;
+                return;
+            }
+            g = self.cvs[rank].wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Smallest clock among ranks still participating in the async regime
+    /// (`async_done` ranks are skipped, matching
+    /// `NodeContext::min_active_vtime`).
+    fn min_active_vtime(&self) -> f64 {
+        let mut min = f64::INFINITY;
+        for (i, c) in self.clocks.iter().enumerate() {
+            if !self.async_done[i].load(AtomicOrdering::SeqCst) {
+                min = min.min(c.now());
+            }
+        }
+        min
+    }
+
+    /// Grant the smallest matching pending event, or poison on drain.
+    /// Called with the lock held, only when no rank holds the baton.
+    fn dispatch(&self, g: &mut Inner) {
+        if g.attached < self.n || g.poison.is_some() {
+            return;
+        }
+        // Throttle release sweep: waiters whose horizon condition now
+        // holds re-enter the queue at their own clock, competing in
+        // vtime order with everything else.
+        if !g.throttle.is_empty() {
+            let min_active = self.min_active_vtime();
+            let released: Vec<usize> = g
+                .throttle
+                .iter()
+                .filter(|&&(_, th)| min_active >= th)
+                .map(|&(r, _)| r)
+                .collect();
+            g.throttle.retain(|&(_, th)| min_active < th);
+            for r in released {
+                let seq = g.next_seq();
+                let vt = self.clocks[r].now();
+                g.queue.push(Event { vtime: vt, actor: r, kind: WakeKind::Resume, seq });
+            }
+        }
+        loop {
+            let Some(ev) = g.queue.pop() else {
+                if g.unfinished > 0 {
+                    self.poison_deadlock(g);
+                }
+                return;
+            };
+            let matches = matches!(
+                (g.actors[ev.actor].park, ev.kind),
+                (Park::Start, WakeKind::Start)
+                    | (Park::Yield, WakeKind::Resume)
+                    | (Park::Throttle, WakeKind::Resume)
+                    | (Park::Recv, WakeKind::Message)
+                    | (Park::Negotiate, WakeKind::Clearance)
+            );
+            if matches {
+                g.actors[ev.actor].granted = true;
+                if let Some(tr) = &mut g.trace {
+                    tr.push(Grant { vtime: ev.vtime, actor: ev.actor, kind: ev.kind });
+                }
+                self.cvs[ev.actor].notify_one();
+                return;
+            }
+            // Mismatched (park, kind) pairs are discarded: a Message for a
+            // rank that is not recv-parked is already sitting in its
+            // mailbox (every recv path drains before parking), and waking
+            // a Yield-parked rank early would run it out of vtime order.
+        }
+    }
+
+    fn poison_deadlock(&self, g: &mut Inner) {
+        let mut msg = format!(
+            "simnet deadlock: event queue drained with {} unfinished rank(s); pending waits:\n",
+            g.unfinished
+        );
+        for (r, a) in g.actors.iter().enumerate() {
+            if a.park != Park::Finished {
+                msg.push_str(&format!(
+                    "  rank {r}: parked on {:?} ({}) at vtime {:.9}\n",
+                    a.park, a.info, a.parked_at
+                ));
+            }
+        }
+        for &(r, th) in &g.throttle {
+            msg.push_str(&format!("  rank {r}: throttle threshold {th:.9}\n"));
+        }
+        g.poison = Some(Arc::new(msg));
+        for cv in &self.cvs {
+            cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(vtime: f64, actor: usize, kind: WakeKind, seq: u64) -> Event {
+        Event { vtime, actor, kind, seq }
+    }
+
+    #[test]
+    fn queue_pops_in_vtime_then_rank_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(2.0, 0, WakeKind::Resume, 1));
+        q.push(ev(1.0, 5, WakeKind::Message, 2));
+        q.push(ev(1.0, 3, WakeKind::Message, 3));
+        assert_eq!(q.pop().unwrap().actor, 3);
+        assert_eq!(q.pop().unwrap().actor, 5);
+        assert_eq!(q.pop().unwrap().vtime, 2.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn same_rank_same_vtime_breaks_by_kind_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(ev(1.0, 2, WakeKind::Resume, 7));
+        q.push(ev(1.0, 2, WakeKind::Message, 9));
+        q.push(ev(1.0, 2, WakeKind::Message, 8));
+        assert_eq!(q.pop().unwrap(), ev(1.0, 2, WakeKind::Message, 8));
+        assert_eq!(q.pop().unwrap(), ev(1.0, 2, WakeKind::Message, 9));
+        assert_eq!(q.pop().unwrap().kind, WakeKind::Resume);
+    }
+}

@@ -32,6 +32,7 @@ pub enum LinkTier {
     Loopback,
 }
 
+pub mod event;
 pub mod hetero;
 pub mod schedule;
 

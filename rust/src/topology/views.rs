@@ -1,0 +1,220 @@
+//! Sparse per-rank topology views — the O(E) companion to the dense
+//! [`WeightMatrix`].
+//!
+//! A dense `n x n` matrix is 800 MB at `n = 10k`, i.e. 80 KB/rank before a
+//! single parameter — over the scale probe's whole per-rank budget. The
+//! collectives only ever ask two per-rank questions ("what is my pull
+//! view?", "who are my out-neighbors?"), so [`SparseViews`] stores exactly
+//! those answers in CSR form: `O(E)` total, `O(degree)` per rank, with the
+//! same ascending-rank ordering the dense [`WeightMatrix::pull_view`]
+//! produces — hot paths can switch backing stores without perturbing the
+//! bitwise-deterministic combine order.
+
+use super::graph::Graph;
+use super::weights::WeightMatrix;
+
+/// CSR-packed per-rank pull views and out-neighbor lists for a fixed
+/// topology, plus a sparse spectral-gap estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseViews {
+    n: usize,
+    /// `w_ii` per rank.
+    self_w: Vec<f64>,
+    /// Row offsets into `srcs`, length `n + 1`.
+    src_off: Vec<usize>,
+    /// Concatenated in-neighbor `(rank, weight)` lists, ascending by rank
+    /// within each row (matches `WeightMatrix::pull_view`).
+    srcs: Vec<(usize, f64)>,
+    /// Row offsets into `outs`, length `n + 1`.
+    out_off: Vec<usize>,
+    /// Concatenated out-neighbor lists, ascending within each row.
+    outs: Vec<usize>,
+}
+
+impl SparseViews {
+    /// Uniform pull weights over `g` (node `i` weighs itself and each
+    /// in-neighbor by `1/(deg_in(i)+1)`) in `O(E)` — the sparse equivalent
+    /// of [`WeightMatrix::uniform_pull`] without materializing `n^2`
+    /// entries.
+    pub fn uniform_pull(g: &Graph) -> Self {
+        let n = g.size();
+        let mut in_deg = vec![0usize; n];
+        let mut out_deg = vec![0usize; n];
+        for (s, d) in g.edges() {
+            out_deg[s] += 1;
+            in_deg[d] += 1;
+        }
+        let mut src_off = vec![0usize; n + 1];
+        let mut out_off = vec![0usize; n + 1];
+        for i in 0..n {
+            src_off[i + 1] = src_off[i] + in_deg[i];
+            out_off[i + 1] = out_off[i] + out_deg[i];
+        }
+        let self_w: Vec<f64> = in_deg.iter().map(|&d| 1.0 / (d + 1) as f64).collect();
+        let mut srcs = vec![(0usize, 0.0f64); src_off[n]];
+        let mut outs = vec![0usize; out_off[n]];
+        let mut src_cur = src_off.clone();
+        let mut out_cur = out_off.clone();
+        // `g.edges()` iterates ascending by (src, dst), so each out-row
+        // fills in ascending dst order and each in-row in ascending src
+        // order — the ordering the combine kernels rely on.
+        for (s, d) in g.edges() {
+            outs[out_cur[s]] = d;
+            out_cur[s] += 1;
+            srcs[src_cur[d]] = (s, self_w[d]);
+            src_cur[d] += 1;
+        }
+        SparseViews { n, self_w, src_off, srcs, out_off, outs }
+    }
+
+    /// Extract views from an explicit dense matrix (`O(n^2)` — for runs
+    /// small enough to have built one in the first place).
+    pub fn from_matrix(w: &WeightMatrix, g: &Graph) -> Self {
+        let n = w.size();
+        assert_eq!(n, g.size(), "matrix/graph size mismatch");
+        let mut self_w = Vec::with_capacity(n);
+        let mut src_off = vec![0usize; n + 1];
+        let mut srcs = Vec::new();
+        let mut out_off = vec![0usize; n + 1];
+        let mut outs = Vec::new();
+        for i in 0..n {
+            let (sw, row) = w.pull_view(i);
+            self_w.push(sw);
+            srcs.extend(row);
+            src_off[i + 1] = srcs.len();
+            outs.extend(g.out_neighbors(i));
+            out_off[i + 1] = outs.len();
+        }
+        SparseViews { n, self_w, src_off, srcs, out_off, outs }
+    }
+
+    /// Number of ranks.
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// `(self_weight, in-neighbor (rank, weight) list)` for receiver `i`,
+    /// borrowing from the CSR store (no per-call allocation).
+    pub fn pull_view(&self, i: usize) -> (f64, &[(usize, f64)]) {
+        (self.self_w[i], &self.srcs[self.src_off[i]..self.src_off[i + 1]])
+    }
+
+    /// Out-neighbor ranks of `i`, ascending.
+    pub fn out_neighbors(&self, i: usize) -> &[usize] {
+        &self.outs[self.out_off[i]..self.out_off[i + 1]]
+    }
+
+    /// In-neighbor ranks of `i`, ascending.
+    pub fn in_neighbor_ranks(&self, i: usize) -> Vec<usize> {
+        self.srcs[self.src_off[i]..self.src_off[i + 1]].iter().map(|&(r, _)| r).collect()
+    }
+
+    /// `y = W x` in `O(E)`.
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        for i in 0..self.n {
+            let mut acc = self.self_w[i] * x[i];
+            for &(j, w) in &self.srcs[self.src_off[i]..self.src_off[i + 1]] {
+                acc += w * x[j];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// `y = W^T x` in `O(E)`.
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = self.self_w[i] * x[i];
+        }
+        for i in 0..self.n {
+            for &(j, w) in &self.srcs[self.src_off[i]..self.src_off[i + 1]] {
+                y[j] += w * x[i];
+            }
+        }
+    }
+
+    /// Spectral gap `1 - rho(W - (1/n) 1 1^T)` by power iteration on
+    /// `B^T B`, `O(E)` per iteration — the sparse mirror of
+    /// [`WeightMatrix::spectral_gap`] (same seed vector, same 200
+    /// iterations, so the two agree on dense-representable topologies).
+    pub fn spectral_gap(&self) -> f64 {
+        let n = self.n;
+        if n == 1 {
+            return 1.0;
+        }
+        let sub_mean = |v: &mut [f64]| {
+            let mean: f64 = v.iter().sum::<f64>() / n as f64;
+            for x in v.iter_mut() {
+                *x -= mean;
+            }
+        };
+        let mut v: Vec<f64> =
+            (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5).collect();
+        let mut bv = vec![0.0f64; n];
+        let mut btbv = vec![0.0f64; n];
+        let mut sigma = 0.0;
+        for _ in 0..200 {
+            // bv = B v = W v - mean(v)
+            self.apply(&v, &mut bv);
+            sub_mean(&mut bv);
+            // btbv = B^T bv = W^T bv - mean(bv)
+            self.apply_t(&bv, &mut btbv);
+            sub_mean(&mut btbv);
+            let norm = btbv.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                return 1.0;
+            }
+            for (vi, bi) in v.iter_mut().zip(&btbv) {
+                *vi = bi / norm;
+            }
+            sigma = norm.sqrt();
+        }
+        (1.0 - sigma).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builders;
+    use super::*;
+
+    #[test]
+    fn uniform_pull_matches_dense_views() {
+        let g = builders::exponential_two(12);
+        let dense = WeightMatrix::uniform_pull(&g);
+        let sparse = SparseViews::uniform_pull(&g);
+        for i in 0..12 {
+            let (sw, srcs) = dense.pull_view(i);
+            let (ssw, ssrcs) = sparse.pull_view(i);
+            assert_eq!(sw, ssw, "self weight mismatch at {i}");
+            assert_eq!(srcs.as_slice(), ssrcs, "src view mismatch at {i}");
+            assert_eq!(g.out_neighbors(i).as_slice(), sparse.out_neighbors(i));
+            assert_eq!(g.in_neighbors(i), sparse.in_neighbor_ranks(i));
+        }
+    }
+
+    #[test]
+    fn from_matrix_round_trips_metropolis() {
+        let g = builders::ring(9);
+        let w = WeightMatrix::metropolis_hastings(&g);
+        let sparse = SparseViews::from_matrix(&w, &g);
+        for i in 0..9 {
+            let (sw, srcs) = w.pull_view(i);
+            let (ssw, ssrcs) = sparse.pull_view(i);
+            assert_eq!(sw, ssw);
+            assert_eq!(srcs.as_slice(), ssrcs);
+        }
+    }
+
+    #[test]
+    fn sparse_spectral_gap_matches_dense() {
+        for n in [4usize, 16, 64] {
+            let g = builders::exponential_two(n);
+            let dense = WeightMatrix::uniform_pull(&g).spectral_gap();
+            let sparse = SparseViews::uniform_pull(&g).spectral_gap();
+            assert!(
+                (dense - sparse).abs() < 1e-9,
+                "gap mismatch at n={n}: dense {dense} sparse {sparse}"
+            );
+        }
+    }
+}

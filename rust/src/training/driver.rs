@@ -359,8 +359,11 @@ pub fn train_node_async(
         if ctx.vtime() - v_entry >= vtime_budget {
             break;
         }
-        // Bounded staleness: wait (in real time) until the slowest active
-        // rank's virtual clock is within the horizon.
+        // Bounded staleness: hold this rank until the slowest active
+        // rank's virtual clock is within the horizon. Under
+        // ExecMode::Threads that is a condvar wait on the throttle gate;
+        // under ExecMode::EventLoop the rank parks on the scheduler and
+        // consumes no virtual time until released.
         ctx.async_throttle();
         let wall_exec = ctx.timeline.now_us();
         let v_before = ctx.vtime();

@@ -61,10 +61,13 @@ pub struct Mailbox {
     stash: HashMap<(usize, Tag), VecDeque<Message>>,
 }
 
-/// Sending side: the cloneable sender handles for every rank.
+/// Sending side: the cloneable sender handles for every rank. The handle
+/// table is `Arc`-shared so a per-rank clone costs one pointer, not
+/// `O(n)` senders — at 10k ranks a by-value table would dominate the
+/// per-rank memory budget.
 #[derive(Clone)]
 pub struct Postman {
-    senders: Vec<Sender<Message>>,
+    senders: Arc<Vec<Sender<Message>>>,
 }
 
 /// Create the transport fabric for `n` nodes: one mailbox per rank plus a
@@ -77,7 +80,7 @@ pub fn fabric(n: usize) -> (Vec<Mailbox>, Postman) {
         senders.push(tx);
         mailboxes.push(Mailbox { rank, rx, stash: HashMap::new() });
     }
-    (mailboxes, Postman { senders })
+    (mailboxes, Postman { senders: Arc::new(senders) })
 }
 
 impl Postman {
@@ -145,6 +148,43 @@ impl Mailbox {
             }
             self.stash.entry((m.src, m.tag)).or_default().push_back(m);
         }
+    }
+
+    /// Drain everything currently sitting in the channel into the stash
+    /// without blocking (the event-loop backend drains before parking so
+    /// no already-delivered message can be missed).
+    fn drain_channel(&mut self) {
+        while let Ok(m) = self.rx.try_recv() {
+            self.stash.entry((m.src, m.tag)).or_default().push_back(m);
+        }
+    }
+
+    /// Non-blocking receive of the next message matching `(src, tag)`.
+    /// Returns `None` when no such message has been delivered yet.
+    pub fn try_recv_match(&mut self, src: usize, tag: Tag) -> Option<Message> {
+        self.drain_channel();
+        let q = self.stash.get_mut(&(src, tag))?;
+        let m = q.pop_front().expect("stash entries are non-empty");
+        if q.is_empty() {
+            self.stash.remove(&(src, tag));
+        }
+        Some(m)
+    }
+
+    /// Non-blocking receive of the next message with `tag` from any
+    /// source, picking the **lowest source rank** among candidates so the
+    /// choice is deterministic (the blocking `recv_any` inherits hash-map
+    /// iteration order, which varies run to run — unusable under the
+    /// reproducible event-loop backend).
+    pub fn try_recv_any(&mut self, tag: Tag) -> Option<Message> {
+        self.drain_channel();
+        let src = self
+            .stash
+            .keys()
+            .filter(|&&(_, t)| t == tag)
+            .map(|&(s, _)| s)
+            .min()?;
+        self.try_recv_match(src, tag)
     }
 
     /// Number of stashed (unmatched) messages — used by shutdown sanity

@@ -145,6 +145,11 @@ impl NodeContext {
     /// at each destination with `w * tensor`. Destinations default to the
     /// out-neighbors with weight 1 when `dst_weights` is empty.
     pub fn win_put(&self, name: &str, tensor: &[f32], dst_weights: &[(usize, f64)]) -> anyhow::Result<()> {
+        // One-sided ops never block, but under ExecMode::EventLoop they
+        // yield cooperatively first so remote writes land in global
+        // virtual-time order (a peer with an earlier clock drains its
+        // window before this later write appears in it).
+        self.coop_yield();
         let dsts = self.default_dsts(dst_weights);
         for (dst, w) in dsts {
             let arrival = self.one_sided_arrival(dst, tensor.len() * 4);
@@ -186,6 +191,8 @@ impl NodeContext {
         self_weight: f64,
         dst_weights: &[(usize, f64)],
     ) -> anyhow::Result<()> {
+        // Same vtime-ordering yield as win_put (see there).
+        self.coop_yield();
         let dsts = self.default_dsts(dst_weights);
         for &(dst, w) in &dsts {
             let arrival = self.one_sided_arrival(dst, tensor.len() * 4);
@@ -215,6 +222,8 @@ impl NodeContext {
     /// *registered* tensor (as of its last `win_update*`) into this rank's
     /// own window slots, scaled by the source weight.
     pub fn win_get(&self, name: &str, src_weights: &[(usize, f64)]) -> anyhow::Result<()> {
+        // Same vtime-ordering yield as win_put (see there).
+        self.coop_yield();
         let srcs = self.default_srcs(src_weights);
         let own = self.windows.get(self.rank(), name)?;
         for (src, w) in srcs {

@@ -1,0 +1,333 @@
+//! Differential tests: the event-driven execution backend (ISSUE 6) must
+//! reproduce the thread-per-rank backend exactly. Threads is the oracle —
+//! it has been validated by every tier-1 test since the seed — so for
+//! synchronous workloads (blocking collectives, DSGD, gradient tracking,
+//! non-blocking overlap with deterministic wait points) the event loop
+//! must produce *bitwise-identical* final parameters, identical per-rank
+//! `bytes_sent()`, and identical virtual-time traces. Asynchronous
+//! workloads are OS-race-dependent under Threads, so there the contract
+//! is run-to-run determinism of the event loop itself (identical grants,
+//! identical parameters) plus the regime's algebraic invariants.
+
+use std::sync::{Arc, Mutex};
+
+use bluefog::launcher::{run_spmd, AsyncSpec, ExecMode, SpmdConfig};
+use bluefog::optim::{
+    AsyncDecentralizedOptimizer, AsyncPushSumSgd, CommSpec, DecentralizedOptimizer, Dgd,
+    GradientTracking, StepOrder,
+};
+use bluefog::simnet::event::Grant;
+use bluefog::simnet::hetero::ComputeHeterogeneity;
+use bluefog::tensor::axpy;
+use bluefog::timeline::Timeline;
+
+const N: usize = 8;
+
+/// Per-rank timeline spans reduced to their deterministic parts. Wall
+/// times differ between backends by construction; operation names and
+/// virtual-time endpoints must not.
+fn vtime_trace(tl: &Timeline) -> Vec<Vec<(String, u64, u64)>> {
+    let mut per_rank: Vec<Vec<(String, u64, u64)>> = vec![vec![]; N];
+    for e in tl.events() {
+        per_rank[e.rank].push((e.name, e.vtime_start.to_bits(), e.vtime_end.to_bits()));
+    }
+    per_rank
+}
+
+/// Run `f` under the given backend with a timeline attached; returns
+/// (per-rank results, per-rank vtime traces).
+fn run_traced<T, F>(exec: ExecMode, f: F) -> (Vec<T>, Vec<Vec<(String, u64, u64)>>)
+where
+    T: Send + 'static,
+    F: Fn(&mut bluefog::context::NodeContext) -> anyhow::Result<T> + Send + Sync + 'static,
+{
+    let tl = Arc::new(Timeline::new(true));
+    let cfg = SpmdConfig::new(N).with_exec(exec).with_timeline(tl.clone());
+    let results = run_spmd(cfg, f).unwrap();
+    let trace = vtime_trace(&tl);
+    (results, trace)
+}
+
+fn assert_bitwise_eq(threads: &[f32], event: &[f32], what: &str) {
+    assert_eq!(threads.len(), event.len(), "{what}: length mismatch");
+    for (i, (a, b)) in threads.iter().zip(event).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}[{i}]: threads {a} != event-loop {b} (bitwise)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synchronous workloads: bitwise parity against the Threads oracle.
+// ---------------------------------------------------------------------------
+
+/// Quickstart-scale average consensus: 30 rounds of blocking
+/// `neighbor_allreduce` on the default expo-2 topology.
+#[test]
+fn consensus_parity_bitwise() {
+    let body = |ctx: &mut bluefog::context::NodeContext| -> anyhow::Result<(Vec<f32>, u64, f64)> {
+        let d = 4;
+        let mut x: Vec<f32> = (0..d).map(|j| (ctx.rank() * d + j) as f32).collect();
+        for _ in 0..30 {
+            x = ctx.neighbor_allreduce(&x)?;
+        }
+        Ok((x, ctx.bytes_sent(), ctx.vtime()))
+    };
+    let (t_res, t_trace) = run_traced(ExecMode::Threads, body);
+    let (e_res, e_trace) = run_traced(ExecMode::EventLoop, body);
+    for rank in 0..N {
+        let (tx, tb, tv) = &t_res[rank];
+        let (ex, eb, ev) = &e_res[rank];
+        assert_bitwise_eq(tx, ex, &format!("consensus rank {rank}"));
+        assert_eq!(tb, eb, "rank {rank}: bytes_sent diverged");
+        assert_eq!(tv.to_bits(), ev.to_bits(), "rank {rank}: final vtime diverged");
+        assert_eq!(t_trace[rank], e_trace[rank], "rank {rank}: vtime trace diverged");
+    }
+}
+
+/// Quickstart-scale DSGD (ATC order) on the node-local quadratic.
+#[test]
+fn dsgd_parity_bitwise() {
+    let body = |ctx: &mut bluefog::context::NodeContext| -> anyhow::Result<(Vec<f32>, u64)> {
+        let c = ctx.rank() as f32;
+        let mut x = vec![0.0f32];
+        let mut opt = Dgd::new(0.05, StepOrder::Atc, CommSpec::Static);
+        for _ in 0..200 {
+            let grad = vec![x[0] - c];
+            opt.step(ctx, &mut x, &grad)?;
+        }
+        Ok((x, ctx.bytes_sent()))
+    };
+    let (t_res, t_trace) = run_traced(ExecMode::Threads, body);
+    let (e_res, e_trace) = run_traced(ExecMode::EventLoop, body);
+    for rank in 0..N {
+        assert_bitwise_eq(&t_res[rank].0, &e_res[rank].0, &format!("dsgd rank {rank}"));
+        assert_eq!(t_res[rank].1, e_res[rank].1, "rank {rank}: bytes_sent diverged");
+        assert_eq!(t_trace[rank], e_trace[rank], "rank {rank}: vtime trace diverged");
+    }
+}
+
+/// Gradient tracking: two collectives per step (iterate + tracker), so it
+/// exercises interleaved negotiation rounds under the scheduler.
+#[test]
+fn gradient_tracking_parity_bitwise() {
+    let body = |ctx: &mut bluefog::context::NodeContext| -> anyhow::Result<(Vec<f32>, u64)> {
+        let d = 3;
+        let c: Vec<f32> = (0..d).map(|j| (ctx.rank() * d + j) as f32).collect();
+        let mut x = vec![0.0f32; d];
+        let mut opt = GradientTracking::new(0.05, CommSpec::Static);
+        for _ in 0..150 {
+            let grad: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| xi - ci).collect();
+            opt.step(ctx, &mut x, &grad)?;
+        }
+        Ok((x, ctx.bytes_sent()))
+    };
+    let (t_res, _) = run_traced(ExecMode::Threads, body);
+    let (e_res, _) = run_traced(ExecMode::EventLoop, body);
+    for rank in 0..N {
+        assert_bitwise_eq(&t_res[rank].0, &e_res[rank].0, &format!("gt rank {rank}"));
+        assert_eq!(t_res[rank].1, e_res[rank].1, "rank {rank}: bytes_sent diverged");
+    }
+}
+
+/// Non-blocking overlap (quickstart's AWC loop): under Threads the fused
+/// group is flushed by a communication thread; under the event loop the
+/// same `CommEngine` runs inline at the wait point. Same state machine,
+/// same wait vtimes — results must agree bitwise.
+#[test]
+fn nonblocking_awc_parity_bitwise() {
+    let body = |ctx: &mut bluefog::context::NodeContext| -> anyhow::Result<(Vec<f32>, u64, f64)> {
+        let c = ctx.rank() as f32;
+        let mut x = vec![0.0f32];
+        for _ in 0..100 {
+            let handle = ctx.neighbor_allreduce_nonblocking(&x, None)?;
+            let grad = vec![x[0] - c];
+            x = handle.wait(ctx)?;
+            axpy(-0.05, &grad, &mut x);
+        }
+        Ok((x, ctx.bytes_sent(), ctx.vtime()))
+    };
+    let (t_res, _) = run_traced(ExecMode::Threads, body);
+    let (e_res, _) = run_traced(ExecMode::EventLoop, body);
+    for rank in 0..N {
+        let (tx, tb, tv) = &t_res[rank];
+        let (ex, eb, ev) = &e_res[rank];
+        assert_bitwise_eq(tx, ex, &format!("awc rank {rank}"));
+        assert_eq!(tb, eb, "rank {rank}: bytes_sent diverged");
+        assert_eq!(tv.to_bits(), ev.to_bits(), "rank {rank}: final vtime diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous workload: event-loop determinism + regime invariants.
+// ---------------------------------------------------------------------------
+
+/// `AsyncPushSumSgd` under a 4x straggler. The Threads backend is
+/// OS-race-dependent here (async is the one regime where races are by
+/// design), so the oracle property is the event loop against *itself*:
+/// two runs with the same seed must produce bitwise-identical parameters,
+/// identical push weights, and identical scheduler grant traces — and the
+/// run must still satisfy push-sum mass conservation and consensus.
+#[test]
+fn async_push_sum_event_loop_deterministic() {
+    let n = 6;
+    let d = 3;
+    let base = 1e-3;
+    let t_end = 0.1;
+    let run_once = || {
+        let hetero = ComputeHeterogeneity::straggler(n, 0, 4.0).with_jitter(0.1);
+        let trace = Arc::new(Mutex::new(Vec::<Grant>::new()));
+        let cfg = SpmdConfig::new(n)
+            .with_exec(ExecMode::EventLoop)
+            .with_topo_check(false)
+            .with_async(AsyncSpec::new(hetero).with_horizon(16.0 * base))
+            .with_sched_trace(trace.clone());
+        let results = run_spmd(cfg, move |ctx| {
+            let mut x = vec![ctx.rank() as f32; d];
+            let zeros = vec![0.0f32; d];
+            let mut opt = AsyncPushSumSgd::new(0.0, "cons");
+            for _ in 0..10_000 {
+                if ctx.vtime() >= t_end {
+                    break;
+                }
+                ctx.async_throttle();
+                ctx.simulate_compute_hetero(base);
+                opt.refresh(ctx, &mut x)?;
+                opt.step(ctx, &mut x, &zeros)?;
+            }
+            opt.finalize(ctx, &mut x)?;
+            Ok((x, opt.push_weight()))
+        })
+        .unwrap();
+        let grants = trace.lock().unwrap().clone();
+        (results, grants)
+    };
+
+    let (res_a, grants_a) = run_once();
+    let (res_b, grants_b) = run_once();
+
+    // Run-to-run determinism: parameters, push weights, grant trace.
+    for rank in 0..n {
+        assert_bitwise_eq(&res_a[rank].0, &res_b[rank].0, &format!("async rank {rank}"));
+        assert_eq!(
+            res_a[rank].1.to_bits(),
+            res_b[rank].1.to_bits(),
+            "rank {rank}: push weight diverged between identical runs"
+        );
+    }
+    assert!(!grants_a.is_empty(), "sched_trace recorded no grants");
+    assert_eq!(grants_a, grants_b, "scheduler grant traces diverged between identical runs");
+
+    // Regime invariants: mass conservation and consensus.
+    let v_total: f64 = res_a.iter().map(|(_, v)| f64::from(*v)).sum();
+    assert!((v_total - n as f64).abs() < 1e-3, "push-sum mass leaked: {v_total}");
+    let mean = (0..n).sum::<usize>() as f32 / n as f32;
+    for (rank, (x, _)) in res_a.iter().enumerate() {
+        for v in x {
+            assert!((v - mean).abs() < 5e-3, "rank {rank} off consensus: {v} vs {mean}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Throttle regression: a blocked rank consumes no virtual time.
+// ---------------------------------------------------------------------------
+
+/// `async_throttle` used to spin on `thread::sleep(20us)`; it now parks on
+/// the scheduler (event loop) or a generation-counted condvar (threads).
+/// Either way, the *virtual* clock of a waiting rank must not move: the
+/// fast rank's final vtime is exactly its own compute time, even though it
+/// spent most of the run throttled behind the 4x straggler.
+#[test]
+fn throttled_rank_consumes_no_virtual_time() {
+    let base = 1e-3;
+    let steps = 40;
+    for exec in [ExecMode::Threads, ExecMode::EventLoop] {
+        let hetero = ComputeHeterogeneity::straggler(2, 0, 4.0);
+        let cfg = SpmdConfig::new(2)
+            .with_exec(exec)
+            .with_topo_check(false)
+            .with_async(AsyncSpec::new(hetero).with_horizon(2.0 * base));
+        let results = run_spmd(cfg, move |ctx| {
+            for _ in 0..steps {
+                ctx.async_throttle();
+                ctx.simulate_compute_hetero(base);
+            }
+            Ok(ctx.vtime())
+        })
+        .unwrap();
+        // Rank 1 runs at nominal speed: its clock must read exactly
+        // `steps` compute intervals — waiting added nothing.
+        let mut expected = 0.0f64;
+        for _ in 0..steps {
+            expected += base;
+        }
+        assert!(
+            (results[1] - expected).abs() < 1e-12,
+            "{exec:?}: fast rank vtime {} != compute-only {} — waiting leaked virtual time",
+            results[1],
+            expected
+        );
+        // And the straggler reads exactly 4x that.
+        assert!(
+            (results[0] - 4.0 * expected).abs() < 1e-9,
+            "{exec:?}: straggler vtime {} != {}",
+            results[0],
+            4.0 * expected
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Watchdog: drained queue with unfinished ranks fails fast.
+// ---------------------------------------------------------------------------
+
+/// Rank 0 blocks on a collective its peer never joins. Under threads this
+/// would hang forever; the event-loop watchdog must poison the run and
+/// name the stuck rank's pending wait instead.
+#[test]
+fn watchdog_reports_stuck_ranks() {
+    let err = run_spmd(
+        SpmdConfig::new(2).with_exec(ExecMode::EventLoop).with_topo_check(false),
+        |ctx| {
+            if ctx.rank() == 0 {
+                let x = vec![1.0f32];
+                ctx.neighbor_allreduce(&x)?;
+            }
+            Ok(())
+        },
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("simnet deadlock"), "unexpected error: {msg}");
+    assert!(msg.contains("unfinished rank"), "diagnostic lost rank info: {msg}");
+}
+
+/// The PR-4 `win_create` duplicate-name scenario under the event loop:
+/// the erroring rank must still reach the create barrier (no deadlock —
+/// the watchdog would fire) and the error must propagate.
+#[test]
+fn win_create_error_reaches_barrier_under_event_loop() {
+    let results = run_spmd(
+        SpmdConfig::new(3).with_exec(ExecMode::EventLoop).with_topo_check(false),
+        |ctx| {
+            ctx.win_create("dupwin", &[1.0], false)?;
+            let dup_err = if ctx.rank() == 0 {
+                ctx.win_create("dupwin", &[1.0], false).is_err()
+            } else {
+                ctx.win_create("other", &[1.0], false)?;
+                true
+            };
+            ctx.barrier()?;
+            ctx.win_free("dupwin")?;
+            if ctx.rank() != 0 {
+                ctx.win_free("other")?;
+            }
+            Ok(dup_err)
+        },
+    )
+    .unwrap();
+    assert!(results.iter().all(|&e| e), "duplicate create must error after the barrier");
+}

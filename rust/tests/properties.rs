@@ -5,11 +5,12 @@
 use bluefog::collective::neighbor::NeighborWeights;
 use bluefog::collective::{AllreduceAlgo, ReduceOp};
 use bluefog::fusion::{fusion_groups, FusionBuffer};
-use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::launcher::{run_spmd, ExecMode, SpmdConfig};
 use bluefog::pool::BufferPool;
 use bluefog::prop_assert;
 use bluefog::proptest::{check, Gen};
 use bluefog::simnet::analytic;
+use bluefog::simnet::event::{Event, EventQueue, Grant, WakeKind};
 use bluefog::tensor::{
     max_abs_diff, weighted_combine, weighted_combine_blocked, weighted_combine_blocked_into,
     weighted_combine_into, COMBINE_BLOCK,
@@ -379,4 +380,136 @@ fn prop_virtual_time_monotone() {
         prop_assert!(results.iter().all(|&m| m), "virtual clock went backwards");
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Event-driven scheduler core (ISSUE 6).
+// ---------------------------------------------------------------------------
+
+/// The scheduler's priority queue against a brute-force model, under
+/// randomized push/pop interleavings: every pop returns exactly the
+/// model's minimum under the documented order (vtime, then rank, then
+/// kind, then sequence number), and the popped multiset equals the pushed
+/// multiset — no event lost, none duplicated, ties deterministic.
+#[test]
+fn prop_event_queue_matches_model_under_interleavings() {
+    let kinds =
+        [WakeKind::Start, WakeKind::Message, WakeKind::Resume, WakeKind::Clearance];
+    check("event-queue-model", 40, |g: &mut Gen| {
+        let n_events = g.usize_in(1, 80);
+        let mut q = EventQueue::new();
+        let mut model: Vec<Event> = Vec::new();
+        let mut pushed = 0usize;
+        let mut popped = Vec::new();
+        let mut seq = 0u64;
+        while pushed < n_events || !model.is_empty() {
+            let do_push = pushed < n_events && (model.is_empty() || g.bool());
+            if do_push {
+                // A coarse vtime grid forces plenty of same-instant ties.
+                let ev = Event {
+                    vtime: g.usize_in(0, 5) as f64 * 0.25,
+                    actor: g.usize_in(0, 5),
+                    kind: kinds[g.usize_in(0, 4)],
+                    seq,
+                };
+                seq += 1;
+                q.push(ev);
+                model.push(ev);
+                pushed += 1;
+            } else {
+                let got = q.pop();
+                prop_assert!(got.is_some(), "queue empty but model has {}", model.len());
+                let got = got.unwrap();
+                let (mi, _) = model
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| a.cmp(b))
+                    .expect("model non-empty");
+                let want = model.swap_remove(mi);
+                prop_assert!(
+                    got == want && got.seq == want.seq,
+                    "pop {got:?} != model min {want:?}"
+                );
+                popped.push(got);
+            }
+        }
+        prop_assert!(q.pop().is_none(), "queue retained events past the model");
+        prop_assert!(popped.len() == pushed, "lost/duplicated events");
+        Ok(())
+    });
+}
+
+/// Same-instant ties break by rank: a burst of events at one virtual time
+/// drains in ascending rank order regardless of insertion order.
+#[test]
+fn prop_event_queue_same_vtime_ties_break_by_rank() {
+    check("event-queue-ties", 20, |g: &mut Gen| {
+        let n = g.usize_in(2, 32);
+        let mut q = EventQueue::new();
+        // Random insertion order over a permutation of ranks 0..n.
+        let mut ranks: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            ranks.swap(i, g.usize_in(0, i + 1));
+        }
+        for (seq, &actor) in ranks.iter().enumerate() {
+            q.push(Event { vtime: 1.5, actor, kind: WakeKind::Resume, seq: seq as u64 });
+        }
+        let mut last = None;
+        while let Some(ev) = q.pop() {
+            if let Some(prev) = last {
+                prop_assert!(ev.actor > prev, "rank order violated: {prev} before {}", ev.actor);
+            }
+            last = Some(ev.actor);
+        }
+        prop_assert!(last == Some(n - 1), "events lost in tie drain");
+        Ok(())
+    });
+}
+
+/// Event-loop determinism sweep: for >= 8 distinct seeds, a blocking
+/// consensus workload replays with an *identical* scheduler grant trace
+/// (same grants, same order) and bitwise-identical results — and every
+/// trace's grant vtimes are nondecreasing (blocking workloads never
+/// schedule into the past; non-blocking ops relax this by design, since
+/// enqueue-time stamps can trail the flushing rank's clock).
+#[test]
+fn prop_event_loop_grant_traces_reproduce_across_seeds() {
+    for seed in 0..8u64 {
+        let n = 4 + (seed as usize % 4);
+        let iters = 8;
+        let run_once = || {
+            let trace = std::sync::Arc::new(std::sync::Mutex::new(Vec::<Grant>::new()));
+            let cfg = SpmdConfig::new(n)
+                .with_exec(ExecMode::EventLoop)
+                .with_seed(0xd15c0 + seed)
+                .with_sched_trace(trace.clone());
+            let results = run_spmd(cfg, move |ctx| {
+                let mut x = vec![ctx.rank() as f32 + seed as f32; 2];
+                for _ in 0..iters {
+                    x = ctx.neighbor_allreduce(&x)?;
+                }
+                Ok(x)
+            })
+            .unwrap();
+            let grants = trace.lock().unwrap().clone();
+            (results, grants)
+        };
+        let (res_a, grants_a) = run_once();
+        let (res_b, grants_b) = run_once();
+        assert!(!grants_a.is_empty(), "seed {seed}: no grants recorded");
+        assert_eq!(grants_a, grants_b, "seed {seed}: grant trace not reproducible");
+        for (x, y) in res_a.iter().zip(&res_b) {
+            let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "seed {seed}: results not bitwise reproducible");
+        }
+        for w in grants_a.windows(2) {
+            assert!(
+                w[0].vtime.total_cmp(&w[1].vtime) != std::cmp::Ordering::Greater,
+                "seed {seed}: grant vtimes decreased: {:?} -> {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
 }
