@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: verify build test examples benches bench-hotpath bench-compress bench-async bench-scale artifacts clean
+.PHONY: verify build test examples benches bench-hotpath bench-compress bench-async bench-scale bench-chaos artifacts clean
 
 verify: build test
 
@@ -44,6 +44,14 @@ bench-async:
 # memory bound. Set SCALE_SMOKE=1 to drop the 10k row for CI.
 bench-scale:
 	cargo run --release --example scale_probe
+
+# Fault-injection sweep: consensus + sync DSGD on ring(8)+MH under a rank
+# crash at T/2, 5% packet drop, and a 10% partition window, on both exec
+# backends; writes BENCH_chaos.json and gates survivor contraction, <=10%
+# final-loss degradation, and cross-backend fault-free agreement. Set
+# CHAOS_SMOKE=1 for a CI-sized run.
+bench-chaos:
+	cargo run --release --example chaos_probe
 
 # Sweep every BENCH_*.json the probes have produced into ./artifacts — a
 # glob, so new probes are picked up without editing this target — then

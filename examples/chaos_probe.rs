@@ -1,0 +1,455 @@
+// Chaos probe: fault injection + failure-resilient decentralized training
+// (ISSUE 7). Two workloads on the ring(8) + Metropolis-Hastings topology —
+// pure consensus (repeated neighbor averaging) and synchronous DSGD on the
+// decentralized linear-regression problem — each run fault-free first to
+// calibrate the total virtual time T, then re-run under three seeded fault
+// scenarios on BOTH exec backends:
+//
+//   * crash      — rank 3 dies at T/2. Survivors convert the hang into
+//                  `CommError::PeerDown` within the receive deadline, evict
+//                  the corpse, and re-derive a Metropolis-Hastings row over
+//                  the survivor graph (self-healing topology).
+//   * drop       — every link loses 5% of first-attempt packets; bounded
+//                  retransmission with exponential backoff recovers them as
+//                  (virtually) delayed deliveries.
+//   * partition  — the 1-2 ring edge is cut for the middle 10% of the run;
+//                  retries ride past the heal instant, and receives that
+//                  expire meanwhile fold the missing weight back onto the
+//                  receiver (mass-conserving degraded rounds).
+//
+// Gates (per scenario, per exec mode):
+//   * consensus: the survivor spread still contracts to <= 0.5x its
+//     initial value (numerically validated margin: orders of magnitude);
+//   * DSGD: the global loss at the survivor-averaged iterate degrades
+//     <= 10% vs the fault-free run;
+//   * the fault machinery demonstrably fired (crashed rank stopped early /
+//     retransmissions observed), and nothing hung — the probe completing
+//     at all is the no-infinite-hang gate;
+//   * fault-free baselines agree across Threads and EventLoop.
+//
+// Run: `make bench-chaos` (or `cargo run --release --example chaos_probe`).
+// Env: CHAOS_SMOKE=1 shrinks the problem for CI; BENCH_CHAOS_OUT overrides
+// the output path.
+
+use bluefog::launcher::{run_spmd, ExecMode, SpmdConfig};
+use bluefog::optim::{CommSpec, DecentralizedOptimizer, Dgd, StepOrder};
+use bluefog::rng::Rng;
+use bluefog::simnet::faults::FaultPlan;
+use bluefog::topology::{builders, WeightMatrix};
+
+const N: usize = 8;
+const CRASH_RANK: usize = 3;
+const PART_A: usize = 1;
+const PART_B: usize = 2;
+/// Receive deadline budget (virtual seconds): several round times, so
+/// in-flight retries beat it and only genuine failures expire.
+const DEADLINE: f64 = 2e-3;
+/// Retransmission backoff base: attempt k fires at +base*(2^k - 1), so
+/// four retries probe ~2.25 ms past the original send.
+const BACKOFF: f64 = 0.15e-3;
+/// Timeouts only *suspect* a peer; with the crash oracle driving real
+/// evictions, keep the miss threshold far above any transient burst so a
+/// partition never permanently shrinks the graph.
+const MISS_THRESHOLD: u32 = 64;
+/// Per-round compute charge (consensus) keeps vtime advancing uniformly.
+const ROUND_COMPUTE: f64 = 200e-6;
+/// Per-iteration compute charge (DSGD).
+const STEP_COMPUTE: f64 = 1e-3;
+
+#[derive(Clone, Copy)]
+struct Problem {
+    d: usize,      // features (DSGD) / vector length (consensus)
+    rows: usize,   // rows per node
+    iters: usize,  // DSGD iterations
+    rounds: usize, // consensus rounds
+    gamma: f32,    // DSGD step size
+}
+
+fn ring_cfg(mode: ExecMode, plan: FaultPlan) -> SpmdConfig {
+    let graph = builders::ring(N);
+    let weights = WeightMatrix::metropolis_hastings(&graph);
+    SpmdConfig::new(N)
+        .with_topo_check(false)
+        .with_exec(mode)
+        .with_topology(graph, weights)
+        .with_faults(plan)
+}
+
+/// Deterministic per-rank consensus start vector (main rebuilds the same
+/// vectors to measure the initial survivor spread).
+fn consensus_x0(rank: usize, d: usize) -> Vec<f32> {
+    Rng::new(0xC0A5_EED0 + rank as u64).normal_vec(d)
+}
+
+/// Per-node data `A_i [rows, d]`, `b_i [rows]`; `b = A x* + 0.1 noise`.
+fn make_data(rank: usize, p: &Problem) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0xCAA5 + rank as u64);
+    let mut x_star_rng = Rng::new(0x57A8);
+    let x_star: Vec<f32> = x_star_rng.normal_vec(p.d);
+    let a: Vec<f32> = rng.normal_vec(p.rows * p.d);
+    let mut b = vec![0.0f32; p.rows];
+    for r in 0..p.rows {
+        let mut dot = 0.0f32;
+        for (ac, xc) in a[r * p.d..(r + 1) * p.d].iter().zip(&x_star) {
+            dot += ac * xc;
+        }
+        b[r] = dot + 0.1 * rng.normal() as f32;
+    }
+    (a, b)
+}
+
+fn global_data(p: &Problem) -> Vec<(Vec<f32>, Vec<f32>)> {
+    (0..N).map(|r| make_data(r, p)).collect()
+}
+
+/// Global loss `(1/2 N rows) Σ_i ||A_i x − b_i||²` — the FIXED objective
+/// (all 8 nodes' data), so fault-free and faulty runs are compared on the
+/// same yardstick even when a rank died mid-training.
+fn global_loss(data: &[(Vec<f32>, Vec<f32>)], p: &Problem, x: &[f32]) -> f64 {
+    let mut sum = 0.0f64;
+    for (a, b) in data {
+        for r in 0..p.rows {
+            let mut dot = 0.0f32;
+            for (ac, xc) in a[r * p.d..(r + 1) * p.d].iter().zip(x) {
+                dot += ac * xc;
+            }
+            sum += ((dot - b[r]) as f64).powi(2);
+        }
+    }
+    sum / (2.0 * (N * p.rows) as f64)
+}
+
+/// Full-batch local gradient `A^T (A x − b) / rows` into `grad`.
+fn local_grad(a: &[f32], b: &[f32], x: &[f32], p: &Problem, grad: &mut [f32]) {
+    let d = p.d;
+    for g in grad.iter_mut() {
+        *g = 0.0;
+    }
+    for (r, br) in b.iter().enumerate() {
+        let row = &a[r * d..(r + 1) * d];
+        let mut dot = 0.0f32;
+        for (ac, xc) in row.iter().zip(x) {
+            dot += ac * xc;
+        }
+        let scale = (dot - br) / p.rows as f32;
+        for (g, ac) in grad.iter_mut().zip(row) {
+            *g += scale * ac;
+        }
+    }
+}
+
+/// Repeated neighbor averaging; a rank whose crash vtime passes unwinds
+/// with its partial iterate instead of erroring the whole run.
+fn run_consensus(
+    mode: ExecMode,
+    p: &Problem,
+    plan: FaultPlan,
+) -> anyhow::Result<Vec<(Vec<f32>, f64)>> {
+    let prob = *p;
+    run_spmd(ring_cfg(mode, plan), move |ctx| {
+        let mut x = consensus_x0(ctx.rank(), prob.d);
+        for _ in 0..prob.rounds {
+            if ctx.crashed_now() {
+                break;
+            }
+            ctx.simulate_compute(ROUND_COMPUTE);
+            match ctx.neighbor_allreduce(&x) {
+                Ok(y) => x = y,
+                Err(e) => {
+                    if ctx.crashed_now() {
+                        break; // own crash surfaced mid-round
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok((x, ctx.vtime()))
+    })
+}
+
+/// Synchronous DSGD (ATC, static topology) with the same crash unwind.
+fn run_dsgd(mode: ExecMode, p: &Problem, plan: FaultPlan) -> anyhow::Result<Vec<(Vec<f32>, f64)>> {
+    let prob = *p;
+    run_spmd(ring_cfg(mode, plan), move |ctx| {
+        let p = prob;
+        let (a, b) = make_data(ctx.rank(), &p);
+        let mut x = vec![0.0f32; p.d];
+        let mut grad = vec![0.0f32; p.d];
+        let mut opt = Dgd::new(p.gamma, StepOrder::Atc, CommSpec::Static);
+        for _ in 0..p.iters {
+            if ctx.crashed_now() {
+                break;
+            }
+            ctx.simulate_compute(STEP_COMPUTE);
+            local_grad(&a, &b, &x, &p, &mut grad);
+            if let Err(e) = opt.step(ctx, &mut x, &grad) {
+                if ctx.crashed_now() {
+                    break;
+                }
+                return Err(e);
+            }
+        }
+        Ok((x, ctx.vtime()))
+    })
+}
+
+/// Max per-coordinate spread (max - min) across the given ranks.
+fn spread(xs: &[(Vec<f32>, f64)], ranks: &[usize]) -> f64 {
+    let d = xs[0].0.len();
+    let mut worst = 0.0f64;
+    for c in 0..d {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &r in ranks {
+            let v = xs[r].0[c] as f64;
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        worst = worst.max(hi - lo);
+    }
+    worst
+}
+
+/// Spread of the deterministic consensus start vectors over `ranks`.
+fn initial_spread(d: usize, ranks: &[usize]) -> f64 {
+    let xs: Vec<(Vec<f32>, f64)> = (0..N).map(|r| (consensus_x0(r, d), 0.0)).collect();
+    spread(&xs, ranks)
+}
+
+/// Coordinate-wise mean of the iterates held by `ranks`.
+fn mean_iterate(xs: &[(Vec<f32>, f64)], ranks: &[usize]) -> Vec<f32> {
+    let d = xs[0].0.len();
+    let mut m = vec![0.0f32; d];
+    for &r in ranks {
+        for (mc, xc) in m.iter_mut().zip(&xs[r].0) {
+            *mc += xc;
+        }
+    }
+    let inv = 1.0 / ranks.len() as f32;
+    for mc in m.iter_mut() {
+        *mc *= inv;
+    }
+    m
+}
+
+fn mode_name(mode: ExecMode) -> &'static str {
+    match mode {
+        ExecMode::Threads => "threads",
+        ExecMode::EventLoop => "event_loop",
+    }
+}
+
+/// One scenario's measured outcome (both workloads).
+struct ScenarioOutcome {
+    name: &'static str,
+    spread_ratio: f64,
+    loss_ratio: f64,
+    stats: (u64, u64, u64, u64, u64),
+}
+
+/// Fault-free calibration of one exec mode.
+struct Baseline {
+    t_cons: f64,
+    t_dsgd: f64,
+    spread_ff: f64,
+    loss_ff: f64,
+}
+
+fn run_mode(mode: ExecMode, p: &Problem) -> anyhow::Result<(Baseline, Vec<ScenarioOutcome>)> {
+    let all: Vec<usize> = (0..N).collect();
+    let survivors: Vec<usize> = (0..N).filter(|&r| r != CRASH_RANK).collect();
+    let data = global_data(p);
+    let m = mode_name(mode);
+
+    // ---- fault-free calibration runs ----------------------------------
+    let cons0 = run_consensus(mode, p, FaultPlan::none())?;
+    let t_cons = cons0.iter().map(|r| r.1).fold(0.0f64, f64::max);
+    let spread0 = initial_spread(p.d, &all);
+    let spread_ff = spread(&cons0, &all);
+    let dsgd0 = run_dsgd(mode, p, FaultPlan::none())?;
+    let t_dsgd = dsgd0.iter().map(|r| r.1).fold(0.0f64, f64::max);
+    let loss_ff = global_loss(&data, p, &mean_iterate(&dsgd0, &all));
+    println!(
+        "  {m:>10} | baseline : T_cons {:.4}s T_dsgd {:.4}s | spread {spread0:.4} -> {spread_ff:.3e} | loss {loss_ff:.6}",
+        t_cons, t_dsgd
+    );
+    anyhow::ensure!(spread0 > 0.0, "degenerate consensus start (zero spread)");
+
+    // ---- fault scenarios: plans are functions of the calibrated T -----
+    let scenarios: Vec<(&'static str, FaultPlan, FaultPlan)> = vec![
+        (
+            "crash",
+            FaultPlan::seeded(0xC4A5, DEADLINE)
+                .with_crash(CRASH_RANK, 0.5 * t_cons)
+                .with_miss_threshold(MISS_THRESHOLD),
+            FaultPlan::seeded(0xC4A5, DEADLINE)
+                .with_crash(CRASH_RANK, 0.5 * t_dsgd)
+                .with_miss_threshold(MISS_THRESHOLD),
+        ),
+        (
+            "drop",
+            FaultPlan::seeded(0xD201, DEADLINE)
+                .with_drop(0.05, 3, BACKOFF)
+                .with_miss_threshold(MISS_THRESHOLD),
+            FaultPlan::seeded(0xD201, DEADLINE)
+                .with_drop(0.05, 3, BACKOFF)
+                .with_miss_threshold(MISS_THRESHOLD),
+        ),
+        (
+            "partition",
+            FaultPlan::seeded(0xBA22, DEADLINE)
+                .with_drop(0.0, 4, BACKOFF)
+                .with_partition(vec![PART_A], vec![PART_B], 0.45 * t_cons, 0.55 * t_cons)
+                .with_miss_threshold(MISS_THRESHOLD),
+            FaultPlan::seeded(0xBA22, DEADLINE)
+                .with_drop(0.0, 4, BACKOFF)
+                .with_partition(vec![PART_A], vec![PART_B], 0.45 * t_dsgd, 0.55 * t_dsgd)
+                .with_miss_threshold(MISS_THRESHOLD),
+        ),
+    ];
+
+    let mut outcomes = Vec::new();
+    for (name, cons_plan, dsgd_plan) in scenarios {
+        let live: &[usize] = if name == "crash" { &survivors } else { &all };
+        let cons_stats = cons_plan.stats.clone();
+        let cons = run_consensus(mode, p, cons_plan)?;
+        let spread_f = spread(&cons, live);
+        let spread_ratio = spread_f / initial_spread(p.d, live);
+
+        let dsgd_stats = dsgd_plan.stats.clone();
+        let dsgd = run_dsgd(mode, p, dsgd_plan)?;
+        let loss_f = global_loss(&data, p, &mean_iterate(&dsgd, live));
+        let loss_ratio = loss_f / loss_ff;
+
+        let (c_lost, c_retried, ..) = cons_stats.snapshot();
+        let (d_lost, d_retried, d_delayed, d_dup, d_crashed) = dsgd_stats.snapshot();
+        println!(
+            "  {m:>10} | {name:<9}: spread ratio {spread_ratio:.3e} | loss ratio {loss_ratio:.4} | \
+             dsgd faults lost {d_lost} retried {d_retried} delayed {d_delayed} dup {d_dup} \
+             crashed-sends {d_crashed}"
+        );
+
+        // -- gates -----------------------------------------------------
+        anyhow::ensure!(
+            spread_ratio <= 0.5,
+            "{m}/{name}: survivor consensus failed to contract (spread ratio {spread_ratio:.3})"
+        );
+        anyhow::ensure!(
+            loss_ratio <= 1.10,
+            "{m}/{name}: DSGD final loss degraded {:.1}% vs fault-free (gate: 10%)",
+            100.0 * (loss_ratio - 1.0)
+        );
+        match name {
+            "crash" => {
+                let crashed_end = dsgd[CRASH_RANK].1;
+                anyhow::ensure!(
+                    crashed_end < 0.8 * t_dsgd,
+                    "{m}/crash: rank {CRASH_RANK} ran to vtime {crashed_end:.4}s — the crash \
+                     schedule never fired (T = {t_dsgd:.4}s)"
+                );
+            }
+            _ => {
+                anyhow::ensure!(
+                    c_retried + c_lost + d_retried + d_lost > 0,
+                    "{m}/{name}: fault plan was active but no packet was ever dropped or retried"
+                );
+            }
+        }
+        outcomes.push(ScenarioOutcome {
+            name,
+            spread_ratio,
+            loss_ratio,
+            stats: dsgd_stats.snapshot(),
+        });
+    }
+    Ok((Baseline { t_cons, t_dsgd, spread_ff, loss_ff }, outcomes))
+}
+
+fn scenario_json(s: &ScenarioOutcome) -> String {
+    let (lost, retried, delayed, duplicated, crashed_sends) = s.stats;
+    format!(
+        concat!(
+            "    \"{}\": {{\"spread_ratio\": {:.6e}, \"loss_ratio\": {:.6}, ",
+            "\"lost\": {}, \"retried\": {}, \"delayed\": {}, \"duplicated\": {}, ",
+            "\"crashed_sends\": {}}}"
+        ),
+        s.name, s.spread_ratio, s.loss_ratio, lost, retried, delayed, duplicated, crashed_sends
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("CHAOS_SMOKE").is_ok();
+    let p = if smoke {
+        Problem { d: 16, rows: 32, iters: 48, rounds: 24, gamma: 0.25 }
+    } else {
+        Problem { d: 24, rows: 48, iters: 80, rounds: 40, gamma: 0.25 }
+    };
+    println!(
+        "chaos probe: {N} nodes (ring + Metropolis-Hastings), d={} rows/node={} \
+         iters={} rounds={} | crash@T/2 rank {CRASH_RANK}, 5% drop, 10% partition {PART_A}-{PART_B}",
+        p.d, p.rows, p.iters, p.rounds
+    );
+
+    let (base_t, out_t) = run_mode(ExecMode::Threads, &p)?;
+    let (base_e, out_e) = run_mode(ExecMode::EventLoop, &p)?;
+
+    // Fault-free runs must agree across backends (the parity suite pins
+    // this bitwise; the probe re-checks the derived metrics).
+    let loss_gap = (base_t.loss_ff - base_e.loss_ff).abs();
+    anyhow::ensure!(
+        loss_gap <= 1e-9 * base_t.loss_ff.max(1e-30),
+        "fault-free DSGD loss diverged across exec modes: threads {:.9e} vs event loop {:.9e}",
+        base_t.loss_ff,
+        base_e.loss_ff
+    );
+    let spread_gap = (base_t.spread_ff - base_e.spread_ff).abs();
+    anyhow::ensure!(
+        spread_gap <= 1e-9 * base_t.spread_ff.max(1e-30),
+        "fault-free consensus spread diverged across exec modes: {:.9e} vs {:.9e}",
+        base_t.spread_ff,
+        base_e.spread_ff
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n  \"bench\": \"chaos\",\n  \"nodes\": {},\n  \"d\": {},\n",
+            "  \"rows_per_node\": {},\n  \"dsgd_iters\": {},\n  \"consensus_rounds\": {},\n",
+            "  \"smoke\": {},\n  \"deadline_s\": {},\n  \"crash_rank\": {},\n",
+            "  \"threads\": {{\n",
+            "    \"t_cons_s\": {:.6}, \"t_dsgd_s\": {:.6}, ",
+            "\"spread_ff\": {:.6e}, \"loss_ff\": {:.8},\n",
+            "{},\n{},\n{}\n  }},\n",
+            "  \"event_loop\": {{\n",
+            "    \"t_cons_s\": {:.6}, \"t_dsgd_s\": {:.6}, ",
+            "\"spread_ff\": {:.6e}, \"loss_ff\": {:.8},\n",
+            "{},\n{},\n{}\n  }}\n}}\n"
+        ),
+        N,
+        p.d,
+        p.rows,
+        p.iters,
+        p.rounds,
+        smoke,
+        DEADLINE,
+        CRASH_RANK,
+        base_t.t_cons,
+        base_t.t_dsgd,
+        base_t.spread_ff,
+        base_t.loss_ff,
+        scenario_json(&out_t[0]),
+        scenario_json(&out_t[1]),
+        scenario_json(&out_t[2]),
+        base_e.t_cons,
+        base_e.t_dsgd,
+        base_e.spread_ff,
+        base_e.loss_ff,
+        scenario_json(&out_e[0]),
+        scenario_json(&out_e[1]),
+        scenario_json(&out_e[2]),
+    );
+    let out_path = std::env::var("BENCH_CHAOS_OUT").unwrap_or_else(|_| "BENCH_chaos.json".into());
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    println!("chaos_probe OK");
+    Ok(())
+}

@@ -32,7 +32,9 @@ impl NodeContext {
             let src = (self.rank() + n - hop) % n;
             let rtag = tag + u64::from(round);
             self.send_tensor(dst, rtag, vec![])?;
-            let _ = self.recv_tensor(src, rtag)?;
+            let _ = self
+                .recv_tensor(src, rtag)
+                .map_err(|e| e.context(format!("barrier round {round}: waiting on rank {src}")))?;
             hop *= 2;
             round += 1;
         }
@@ -160,7 +162,9 @@ impl NodeContext {
         if self.rank() == 0 {
             let mut acc = self.vec_from(data);
             for src in 1..n {
-                let part = self.recv_tensor(src, tag)?;
+                let part = self
+                    .recv_tensor(src, tag)
+                    .map_err(|e| e.context(format!("ps_allreduce: gathering from rank {src}")))?;
                 for (a, p) in acc.iter_mut().zip(part.iter()) {
                     *a += p;
                 }
@@ -204,7 +208,9 @@ impl NodeContext {
         let (mlo, mhi) = bounds[me];
         let mut served = self.vec_from(&data[mlo..mhi]);
         for _ in 0..(n - 1) {
-            let (_, part) = self.recv_tensor_any(tag)?;
+            let (_, part) = self
+                .recv_tensor_any(tag)
+                .map_err(|e| e.context("byteps_allreduce: gathering chunk contributions"))?;
             for (a, p) in served.iter_mut().zip(part.iter()) {
                 *a += p;
             }

@@ -89,7 +89,11 @@ impl NodeContext {
                 }
                 let mut incoming: Vec<(f32, Vec<f32>)> = Vec::with_capacity(srcs.len());
                 for &(src_machine, w) in &srcs {
-                    let y = self.recv_tensor(src_machine * g, tag)?;
+                    let y = self.recv_tensor(src_machine * g, tag).map_err(|e| {
+                        e.context(format!(
+                            "hierarchical: inter-machine recv from machine {src_machine}"
+                        ))
+                    })?;
                     let mut dec = self.codec_scratch(d);
                     self.comp.decode(ef_key(EF_HIER, stream, src_machine, d), &y, &mut dec)?;
                     self.reclaim_payload(y);
@@ -131,7 +135,11 @@ impl NodeContext {
                 }
                 let mut incoming = Vec::with_capacity(srcs.len());
                 for &(src_machine, w) in &srcs {
-                    let y = self.recv_tensor(src_machine * g, tag)?;
+                    let y = self.recv_tensor(src_machine * g, tag).map_err(|e| {
+                        e.context(format!(
+                            "hierarchical: inter-machine recv from machine {src_machine}"
+                        ))
+                    })?;
                     incoming.push((w as f32, y));
                 }
                 let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();

@@ -22,6 +22,8 @@
 
 use crate::context::{ef_key, NodeContext, EF_PEER, EF_SHARED};
 use crate::negotiation::OpKind;
+use crate::simnet::faults::CommError;
+use crate::topology::health::survivor_mh_row;
 
 /// Arguments of a dynamic `neighbor_allreduce` (BlueFog's optional
 /// `self_weight` / `src_weights` / `dst_weights`).
@@ -92,10 +94,29 @@ impl NodeContext {
         let me = self.rank();
         let (self_w, srcs, dsts) = {
             let topo = self.topology.read().unwrap();
-            let (self_w, srcs) = topo.views.pull_view(me);
-            let dsts: Vec<(usize, f64)> =
-                topo.views.out_neighbors(me).iter().map(|&r| (r, 1.0)).collect();
-            (self_w, srcs.to_vec(), dsts)
+            if self.faults().active() && self.health.evicted_count() > 0 {
+                // Self-healing static form: re-derive a Metropolis–
+                // Hastings row over the survivor-induced subgraph. The MH
+                // formula is symmetric in (i, j), so once neighbors share
+                // an eviction view the healed matrix is again doubly
+                // stochastic over the survivors and consensus keeps
+                // contracting (DESIGN.md §Faults).
+                let dead = self.health.evicted_set().clone();
+                let (self_w, srcs) = survivor_mh_row(&topo.graph, &dead, me);
+                let dsts: Vec<(usize, f64)> = topo
+                    .views
+                    .out_neighbors(me)
+                    .iter()
+                    .filter(|r| !dead.contains(r))
+                    .map(|&r| (r, 1.0))
+                    .collect();
+                (self_w, srcs, dsts)
+            } else {
+                let (self_w, srcs) = topo.views.pull_view(me);
+                let dsts: Vec<(usize, f64)> =
+                    topo.views.out_neighbors(me).iter().map(|&r| (r, 1.0)).collect();
+                (self_w, srcs.to_vec(), dsts)
+            }
         };
         self.neighbor_allreduce_impl(
             data,
@@ -202,6 +223,9 @@ impl NodeContext {
             // rank-local pool in pooled mode (EXPERIMENTS.md §Perf).
             let mut shared: Option<std::sync::Arc<Vec<f32>>> = None;
             for &(dst, s) in &dsts_sorted {
+                if self.faults().active() && self.health.is_evicted(dst) {
+                    continue;
+                }
                 if scale_on_send && s != 1.0 {
                     self.send_shared(dst, tag, self.scaled_payload(data, s as f32))?;
                 } else {
@@ -209,11 +233,37 @@ impl NodeContext {
                     self.send_shared(dst, tag, p)?;
                 }
             }
-            // Combine: out = self_weight * x + sum_j r_ij * y_ij.
+            // Combine: out = self_weight * x + sum_j r_ij * y_ij. A
+            // neighbor that misses its deadline (or is known crashed)
+            // contributes nothing this round; its weight folds into the
+            // self weight so the row stays stochastic, and the health
+            // view records the evidence (suspicion on Timeout, immediate
+            // eviction on PeerDown) so later rounds re-derive survivor
+            // rows instead of waiting again.
+            let mut self_w_eff = self_weight;
+            let dl = self.default_deadline();
             let mut incoming: Vec<(f32, std::sync::Arc<Vec<f32>>)> =
                 Vec::with_capacity(srcs.len());
             for &(src, r) in &srcs {
-                let y = self.recv_tensor(src, tag)?;
+                let y = match self.recv_tensor_within(src, tag, dl) {
+                    Ok(y) => y,
+                    Err(CommError::PeerDown { peer, at }) => {
+                        self.health.evict(peer);
+                        self.timeline.record(me, "peer_down", "fault", wall, at, at);
+                        self_w_eff += r;
+                        continue;
+                    }
+                    Err(CommError::Timeout { .. }) => {
+                        self.health.record_miss(src);
+                        self_w_eff += r;
+                        continue;
+                    }
+                    Err(e @ CommError::SelfCrash { .. }) => return Err(e.into()),
+                };
+                if self.faults().active() {
+                    let at = self.vtime();
+                    self.health.record_heard(src, at);
+                }
                 anyhow::ensure!(
                     y.len() == data.len(),
                     "neighbor_allreduce: rank {src} sent {} elements, expected {}",
@@ -224,7 +274,7 @@ impl NodeContext {
             }
             let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
             let ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
-            let out = self.combine_hotpath(data, self_weight as f32, &parts, &ws);
+            let out = self.combine_hotpath(data, self_w_eff as f32, &parts, &ws);
             drop(parts);
             for (_, y) in incoming {
                 self.reclaim_payload(y);

@@ -17,7 +17,9 @@ use crate::negotiation::NegotiationClient;
 use crate::pool::{BufferPool, HotPath};
 use crate::rng::Rng;
 use crate::runtime::DeviceHandle;
+use crate::simnet::faults::{CommDeadline, CommError, FaultPlan, LinkFate};
 use crate::simnet::NetworkModel;
+use crate::topology::health::HealthView;
 use crate::tensor::{weighted_combine_blocked_into, weighted_combine_into};
 use crate::timeline::Timeline;
 use crate::topology::{Graph, SparseViews, WeightMatrix};
@@ -138,6 +140,25 @@ pub struct NodeContext {
     /// Condvar gate replacing the historical 20 µs sleep-poll in
     /// [`NodeContext::async_throttle`] under the threads backend.
     pub(crate) throttle_gate: Option<Arc<ThrottleGate>>,
+    /// The fault schedule for this run ([`FaultPlan::none`] by default —
+    /// provably inert).
+    pub(crate) faults: Arc<FaultPlan>,
+    /// Per-rank liveness flags: cleared by the launcher's exit guard when
+    /// a node thread leaves its body (finish or crash), so deadline waits
+    /// under `ExecMode::Threads` stop polling for a sender that will
+    /// never exist again.
+    pub(crate) alive: Arc<Vec<AtomicBool>>,
+    /// Per-destination message sequence numbers on this rank's main
+    /// fabric — the deterministic coordinate of every fault-fate roll.
+    pub(crate) link_seq: Vec<std::cell::Cell<u64>>,
+    /// Per-destination last arrival vtime: the fault layer keeps per-link
+    /// arrivals monotone (FIFO delivery, like a reliable byte stream)
+    /// even when the random-delay fault reorders raw arrivals.
+    pub(crate) link_last_arrival: Vec<std::cell::Cell<f64>>,
+    /// Rank-local failure detector over the current topology: miss
+    /// counters and last-heard vtimes feeding neighbor eviction + weight
+    /// renormalization in the self-healing collectives.
+    pub health: HealthView,
 }
 
 /// Condvar-based wakeup gate for the threads-backend async throttle: a
@@ -232,7 +253,10 @@ impl NodeContext {
         tx_bytes: Arc<AtomicU64>,
         async_spec: Option<Arc<crate::launcher::AsyncSpec>>,
         async_done: Arc<Vec<AtomicBool>>,
+        faults: Arc<FaultPlan>,
+        alive: Arc<Vec<AtomicBool>>,
     ) -> Self {
+        let health = HealthView::new(size, rank, faults.miss_threshold);
         NodeContext {
             rank,
             size,
@@ -266,6 +290,11 @@ impl NodeContext {
             rendezvous: None,
             inline_comm: None,
             throttle_gate: None,
+            faults,
+            alive,
+            link_seq: (0..size).map(|_| std::cell::Cell::new(0)).collect(),
+            link_last_arrival: (0..size).map(|_| std::cell::Cell::new(0.0)).collect(),
+            health,
         }
     }
 
@@ -684,10 +713,113 @@ impl NodeContext {
         self.send_shared(dst, tag, std::sync::Arc::new(payload))
     }
 
+    // ----------------------------------------------------------- faults --
+
+    /// The fault schedule this run was launched with.
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// True once this rank's virtual clock has reached its scheduled
+    /// crash vtime. Fault-resilient loops poll this between iterations
+    /// and unwind cleanly; the comm paths additionally enforce it via
+    /// [`NodeContext::fault_guard`].
+    pub fn crashed_now(&self) -> bool {
+        self.faults.crashed_by(self.rank, self.vtime())
+    }
+
+    /// Crash oracle for a peer at this rank's current vtime — the
+    /// simulator's stand-in for the connection error a real transport
+    /// would raise. Pure in vtime, so every caller (in either exec mode)
+    /// classifies the same failure identically.
+    pub fn peer_down(&self, peer: usize) -> bool {
+        self.faults.crashed_by(peer, self.vtime())
+    }
+
+    /// Ranks whose crash vtime has not passed at this rank's clock.
+    pub fn survivors(&self) -> Vec<usize> {
+        self.faults.survivors_at(self.size, self.vtime())
+    }
+
+    /// The default receive deadline of this run ([`CommDeadline::none`]
+    /// unless the plan sets a finite budget).
+    pub fn default_deadline(&self) -> CommDeadline {
+        CommDeadline::after(self.faults.deadline)
+    }
+
+    /// Enforce this rank's own crash schedule: once the clock passes the
+    /// planned crash vtime every guarded comm call returns
+    /// [`CommError::SelfCrash`], unwinding the node body. The launcher's
+    /// exit guard then marks the rank dead for everyone else. Liveness is
+    /// published immediately so peers' deadline polls stop early.
+    pub(crate) fn fault_guard(&self) -> Result<(), CommError> {
+        if !self.faults.crashes.is_empty() {
+            if let Some(at) = self.faults.crash_vtime(self.rank) {
+                if self.vtime() >= at {
+                    self.alive[self.rank].store(false, Ordering::Release);
+                    self.mark_async_done();
+                    return Err(CommError::SelfCrash { rank: self.rank, at });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Publish this rank's finite-deadline receive park (Threads mode
+    /// only), returning a guard that unpublishes it on *every* exit path
+    /// — delivery, expiry, or unwind.
+    fn publish_wait(&self, deadline_v: f64) -> Option<WaitDeadlineGuard> {
+        if self.sched.is_some() {
+            return None;
+        }
+        let clock = self.clock().clone();
+        clock.set_wait_deadline(deadline_v);
+        Some(WaitDeadlineGuard(clock))
+    }
+
+    /// Expire a deadline wait: land the clock exactly on the deadline
+    /// vtime (identical in both exec modes) and classify the failure via
+    /// the crash oracle.
+    fn expire_recv(&self, src: usize, deadline_v: f64) -> CommError {
+        self.clock().advance_to(deadline_v);
+        self.faults.classify_expiry(src, deadline_v)
+    }
+
+    /// True when no message from `src` can still arrive (virtually) by
+    /// `deadline_v` under `ExecMode::Threads`: the peer has left its node
+    /// body, or its virtual clock has already passed the deadline (every
+    /// future send would arrive later). Both checks synchronize with the
+    /// peer's completed sends, so a final in-flight message is always
+    /// drained before the caller gives up.
+    ///
+    /// The third clause breaks mutual-wait cycles. When a partition eats
+    /// a round's messages in both directions, the two ranks park on each
+    /// other and neither clock advances — the first two conditions would
+    /// poll forever. Every parked rank publishes its deadline on its
+    /// [`VClock`]; expiry then fires in the same order the event loop
+    /// fires `Timeout` events — smallest `(deadline, rank)` first — so
+    /// any wait cycle has exactly one rank (the lexicographic minimum)
+    /// eligible to give up, and its post-expiry progress unblocks the
+    /// rest through the first two conditions.
+    fn threads_sender_exhausted(&self, src: usize, deadline_v: f64) -> bool {
+        if !self.alive[src].load(Ordering::Acquire) || self.clocks[src].now() > deadline_v {
+            return true;
+        }
+        let d_src = self.clocks[src].wait_deadline();
+        d_src.is_finite() && (d_src > deadline_v || (d_src == deadline_v && src > self.rank))
+    }
+
     /// Send `payload` to `dst` with virtual-clock accounting: the message
     /// occupies this node's egress port and the destination's ingress port
     /// for its serialization time, then arrives after the link latency.
     /// `Arc`-shared so multi-destination sends avoid copying.
+    ///
+    /// The fault layer sits exactly here, at the transport boundary: the
+    /// per-link sequence number and virtual send time (both identical
+    /// across exec modes) feed [`FaultPlan::link_fate`], which may drop
+    /// the message, delay it (retransmission backoff and/or random link
+    /// delay), or duplicate it. Port reservations are charged before the
+    /// fate roll — a dropped packet still occupied the NIC.
     pub(crate) fn send_shared(
         &self,
         dst: usize,
@@ -700,54 +832,243 @@ impl NodeContext {
         let ser = self.net.port_time(self.rank, dst, bytes);
         let send_done = self.clock().reserve_send(now, ser);
         let recv_done = self.clocks[dst].reserve_recv(send_done - ser, ser);
-        let arrival = send_done.max(recv_done) + self.net.latency(self.rank, dst);
-        self.postman.send(dst, Message { src: self.rank, tag, payload, arrival_vtime: arrival })?;
+        let mut arrival = send_done.max(recv_done) + self.net.latency(self.rank, dst);
+        let mut duplicate = false;
+        if self.faults.active() {
+            self.fault_guard()?;
+            let seq = self.link_seq[dst].get();
+            self.link_seq[dst].set(seq + 1);
+            if self.faults.crashed_by(dst, now) {
+                // Sending into a dead peer: the packet leaves the NIC and
+                // vanishes. Counted as lost; no delivery, no wakeup.
+                self.faults.stats.lost.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Ok(());
+            }
+            match self.faults.link_fate(self.rank, dst, seq, now) {
+                LinkFate::Lost => return Ok(()),
+                LinkFate::Delivered { extra_delay, duplicate: dup } => {
+                    arrival += extra_delay;
+                    // Reliable-stream FIFO: per-link arrivals stay
+                    // monotone even when the delay fault reorders them.
+                    arrival = arrival.max(self.link_last_arrival[dst].get());
+                    self.link_last_arrival[dst].set(arrival);
+                    duplicate = dup;
+                }
+            }
+        }
+        match self.postman.send(
+            dst,
+            Message { src: self.rank, tag, payload, arrival_vtime: arrival },
+        ) {
+            Ok(()) => {}
+            // Under an active plan a closed mailbox is an already-exited
+            // peer: equivalent to a lost packet, not a launch bug.
+            Err(_) if self.faults.active() => {
+                self.faults.stats.lost.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        }
         if let Some(sched) = &self.sched {
             sched.notify_message(dst, arrival);
+            if duplicate {
+                // The dedup layer absorbs the duplicated packet before
+                // matching; all that remains observable is this spurious
+                // wakeup (exercising the re-park path) and the stats
+                // counter bumped by `link_fate`.
+                sched.notify_message(dst, arrival);
+            }
         }
         Ok(())
     }
 
-    /// Blocking receive from `(src, tag)`, advancing the virtual clock to
-    /// the message's arrival time.
+    /// Blocking receive from `(src, tag)` under the run's default
+    /// deadline, advancing the virtual clock to the message's arrival
+    /// time.
     pub(crate) fn recv_tensor(
         &mut self,
         src: usize,
         tag: Tag,
     ) -> anyhow::Result<std::sync::Arc<Vec<f32>>> {
-        let msg = if let Some(sched) = &self.sched {
-            // EventLoop: drain-then-park. Anything already delivered is
-            // found without blocking; otherwise the rank parks until a
-            // Message event targets it (consuming no virtual time).
-            loop {
-                if let Some(m) = self.mailbox.try_recv_match(src, tag) {
-                    break m;
-                }
-                sched.block_recv(self.rank, "recv_tensor");
-            }
-        } else {
-            self.mailbox.recv_match(src, tag)?
-        };
-        self.clock().advance_to(msg.arrival_vtime);
-        Ok(msg.payload)
+        let dl = self.default_deadline();
+        Ok(self.recv_tensor_within(src, tag, dl)?)
     }
 
-    /// Blocking receive from any source with `tag`; returns `(src, data)`.
+    /// Deadline-bounded receive from `(src, tag)`. A message whose
+    /// virtual arrival beats the deadline is delivered (clock advances to
+    /// its arrival); otherwise the wait converts into a typed
+    /// [`CommError`] with the clock landing exactly on the deadline —
+    /// identically in both exec modes, because expiry is a pure function
+    /// of virtual time (wall clock only affects how soon the failure is
+    /// *discovered* under `Threads`).
+    pub(crate) fn recv_tensor_within(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        dl: CommDeadline,
+    ) -> Result<std::sync::Arc<Vec<f32>>, CommError> {
+        self.fault_guard()?;
+        if !dl.is_finite() {
+            // The seed's behavior, bit for bit: no timeout events, no
+            // arrival-vs-deadline checks.
+            let msg = if let Some(sched) = &self.sched {
+                // EventLoop: drain-then-park. Anything already delivered
+                // is found without blocking; otherwise the rank parks
+                // until a Message event targets it (consuming no virtual
+                // time).
+                loop {
+                    if let Some(m) = self.mailbox.try_recv_match(src, tag) {
+                        break m;
+                    }
+                    sched.block_recv_with(
+                        self.rank,
+                        Some(src),
+                        Some(tag),
+                        f64::INFINITY,
+                        "recv_tensor",
+                    );
+                }
+            } else {
+                self.mailbox.recv_match(src, tag).map_err(|_| CommError::PeerDown {
+                    peer: src,
+                    at: self.vtime(),
+                })?
+            };
+            self.clock().advance_to(msg.arrival_vtime);
+            return Ok(msg.payload);
+        }
+        let deadline_v = self.vtime() + dl.budget;
+        if let Some(sched) = &self.sched {
+            sched.schedule_timeout(self.rank, deadline_v);
+        }
+        let _wait = self.publish_wait(deadline_v);
+        loop {
+            match self.mailbox.earliest_match(src, tag) {
+                Some(arr) if arr <= deadline_v => {
+                    let m = self.mailbox.try_recv_match(src, tag).expect("peeked match");
+                    self.clock().advance_to(m.arrival_vtime);
+                    return Ok(m.payload);
+                }
+                // The next message exists but arrives (virtually) too
+                // late: the deadline fires first. Leave it stashed for a
+                // later receive.
+                Some(_) => return Err(self.expire_recv(src, deadline_v)),
+                None => {}
+            }
+            if let Some(sched) = &self.sched {
+                let kind = sched.block_recv_with(
+                    self.rank,
+                    Some(src),
+                    Some(tag),
+                    deadline_v,
+                    "recv_tensor",
+                );
+                let deliverable =
+                    matches!(self.mailbox.earliest_match(src, tag), Some(a) if a <= deadline_v);
+                if kind == crate::simnet::event::WakeKind::Timeout && !deliverable {
+                    return Err(self.expire_recv(src, deadline_v));
+                }
+            } else {
+                if self.threads_sender_exhausted(src, deadline_v)
+                    && self.mailbox.earliest_match(src, tag).is_none()
+                {
+                    return Err(self.expire_recv(src, deadline_v));
+                }
+                self.mailbox.wait_for_message(std::time::Duration::from_millis(1));
+            }
+        }
+    }
+
+    /// Blocking receive from any source with `tag` under the run's
+    /// default deadline; returns `(src, data)`.
     pub(crate) fn recv_tensor_any(
         &mut self,
         tag: Tag,
     ) -> anyhow::Result<(usize, std::sync::Arc<Vec<f32>>)> {
-        let msg = if let Some(sched) = &self.sched {
-            loop {
-                if let Some(m) = self.mailbox.try_recv_any(tag) {
-                    break m;
+        let dl = self.default_deadline();
+        Ok(self.recv_tensor_any_within(tag, dl)?)
+    }
+
+    /// Deadline-bounded receive from any source (see
+    /// [`NodeContext::recv_tensor_within`]). Expiry is always classified
+    /// as [`CommError::Timeout`] — with no named peer there is no crash
+    /// oracle to consult.
+    pub(crate) fn recv_tensor_any_within(
+        &mut self,
+        tag: Tag,
+        dl: CommDeadline,
+    ) -> Result<(usize, std::sync::Arc<Vec<f32>>), CommError> {
+        self.fault_guard()?;
+        if !dl.is_finite() {
+            let msg = if let Some(sched) = &self.sched {
+                loop {
+                    if let Some(m) = self.mailbox.try_recv_any(tag) {
+                        break m;
+                    }
+                    sched.block_recv_with(
+                        self.rank,
+                        None,
+                        Some(tag),
+                        f64::INFINITY,
+                        "recv_tensor_any",
+                    );
                 }
-                sched.block_recv(self.rank, "recv_tensor_any");
+            } else {
+                self.mailbox.recv_any(tag).map_err(|_| CommError::Timeout {
+                    src: usize::MAX,
+                    deadline: self.vtime(),
+                })?
+            };
+            self.clock().advance_to(msg.arrival_vtime);
+            return Ok((msg.src, msg.payload));
+        }
+        let deadline_v = self.vtime() + dl.budget;
+        if let Some(sched) = &self.sched {
+            sched.schedule_timeout(self.rank, deadline_v);
+        }
+        let _wait = self.publish_wait(deadline_v);
+        loop {
+            match self.mailbox.earliest_any(tag) {
+                Some((src, arr)) if arr <= deadline_v => {
+                    let m = self.mailbox.try_recv_match(src, tag).expect("peeked match");
+                    self.clock().advance_to(m.arrival_vtime);
+                    return Ok((m.src, m.payload));
+                }
+                Some(_) => return Err(self.expire_recv(usize::MAX, deadline_v)),
+                None => {}
             }
-        } else {
-            self.mailbox.recv_any(tag)?
-        };
-        self.clock().advance_to(msg.arrival_vtime);
-        Ok((msg.src, msg.payload))
+            if let Some(sched) = &self.sched {
+                let kind = sched.block_recv_with(
+                    self.rank,
+                    None,
+                    Some(tag),
+                    deadline_v,
+                    "recv_tensor_any",
+                );
+                let deliverable =
+                    matches!(self.mailbox.earliest_any(tag), Some((_, a)) if a <= deadline_v);
+                if kind == crate::simnet::event::WakeKind::Timeout && !deliverable {
+                    return Err(self.expire_recv(usize::MAX, deadline_v));
+                }
+            } else {
+                let exhausted = (0..self.size)
+                    .filter(|&r| r != self.rank)
+                    .all(|r| self.threads_sender_exhausted(r, deadline_v));
+                if exhausted && self.mailbox.earliest_any(tag).is_none() {
+                    return Err(self.expire_recv(usize::MAX, deadline_v));
+                }
+                self.mailbox.wait_for_message(std::time::Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+/// Drop guard clearing a [`VClock`]'s published receive-park deadline
+/// (set by [`NodeContext::publish_wait`] for Threads-mode finite waits).
+struct WaitDeadlineGuard(VClock);
+
+impl Drop for WaitDeadlineGuard {
+    fn drop(&mut self) {
+        self.0.clear_wait_deadline();
     }
 }

@@ -16,6 +16,7 @@ use crate::nonblocking::{CommEngine, CommThread};
 use crate::pool::HotPath;
 use crate::runtime::DeviceHandle;
 use crate::simnet::event::{Grant, Scheduler};
+use crate::simnet::faults::FaultPlan;
 use crate::simnet::hetero::ComputeHeterogeneity;
 use crate::simnet::NetworkModel;
 use crate::timeline::Timeline;
@@ -132,6 +133,11 @@ pub struct SpmdConfig {
     /// grant sequence and the launcher deposits it here after the run
     /// (the virtual-time trace the parity/property tests compare).
     pub sched_trace: Option<Arc<Mutex<Vec<Grant>>>>,
+    /// Seeded fault schedule injected at the transport boundary: rank
+    /// crashes, link drops/delays/duplication, partitions, and the
+    /// default receive deadline. [`FaultPlan::none`] (the default) is a
+    /// bitwise no-op on every existing path.
+    pub faults: FaultPlan,
 }
 
 impl SpmdConfig {
@@ -161,7 +167,14 @@ impl SpmdConfig {
             stack_size: 8 << 20,
             sparse_topology: None,
             sched_trace: None,
+            faults: FaultPlan::none(),
         }
+    }
+
+    /// Inject a fault schedule (crashes, drops, partitions, deadlines).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Select the execution backend (default: [`ExecMode::Threads`]).
@@ -266,7 +279,12 @@ where
     let (mailboxes, postman) = fabric(n);
     let (comm_mailboxes, comm_postman) = fabric(n);
     let clocks: Arc<Vec<VClock>> = Arc::new((0..n).map(|_| VClock::new()).collect());
-    let negotiation = NegotiationService::spawn(n, cfg.net.clone());
+    // Per-rank liveness, cleared by the exit guard (and eagerly by a
+    // rank's own crash guard). Peers' deadline waits and the negotiation
+    // daemon's dead-batch sweep read it.
+    let alive: Arc<Vec<AtomicBool>> = Arc::new((0..n).map(|_| AtomicBool::new(true)).collect());
+    let faults = Arc::new(cfg.faults.clone());
+    let negotiation = NegotiationService::spawn_with_liveness(n, cfg.net.clone(), alive.clone());
     let timeline = cfg.timeline.clone().unwrap_or_else(|| Arc::new(Timeline::new(false)));
     let windows = Arc::new(WindowTable::new());
 
@@ -307,6 +325,18 @@ where
     } else {
         None
     };
+    if let Some(s) = &sched {
+        // Pre-seed the fault schedule as scheduler events: Crash marks
+        // the actor for the watchdog's diagnostics, Heal wakes the loop
+        // when a partition window closes (delivery retries were already
+        // priced at send time; the event is for observability).
+        for &(rank, at) in &faults.crashes {
+            s.schedule_crash(rank, at);
+        }
+        for p in &faults.partitions {
+            s.schedule_heal(p.until);
+        }
+    }
     let rendezvous =
         if event_loop { Some(Arc::new(Rendezvous::new(n, cfg.net.clone()))) } else { None };
     let throttle_gate = if !event_loop && async_spec.is_some() {
@@ -384,6 +414,8 @@ where
             tx_bytes[rank].clone(),
             async_spec.clone(),
             async_done.clone(),
+            faults.clone(),
+            alive.clone(),
         );
         ctx.enable_topo_check = cfg.enable_topo_check;
         ctx.fusion_threshold = cfg.fusion_threshold;
@@ -395,6 +427,8 @@ where
         ctx.throttle_gate = throttle_gate.clone();
         let done_on_exit = async_done.clone();
         let sched_exit = sched.clone();
+        let alive_exit = alive.clone();
+        let rendezvous_exit = rendezvous.clone();
         let handle = std::thread::Builder::new()
             .name(format!("bf-node-{rank}"))
             .stack_size(cfg.stack_size)
@@ -421,8 +455,33 @@ where
                         }
                     }
                 }
+                // Liveness teardown, dropped first (declared last): clear
+                // the alive flag so Threads-mode deadline waits stop
+                // early, and resolve any negotiation batch this rank was
+                // the last missing announcer of — both must land before
+                // `finish` hands the baton on.
+                struct AliveOnExit {
+                    alive: Arc<Vec<AtomicBool>>,
+                    rendezvous: Option<Arc<Rendezvous>>,
+                    sched: Option<Arc<Scheduler>>,
+                    rank: usize,
+                }
+                impl Drop for AliveOnExit {
+                    fn drop(&mut self) {
+                        self.alive[self.rank].store(false, Ordering::Release);
+                        if let (Some(r), Some(s)) = (&self.rendezvous, &self.sched) {
+                            r.rank_exited(self.rank, s);
+                        }
+                    }
+                }
                 let _finish = FinishOnExit(sched_exit.clone(), rank);
                 let _guard = DoneOnExit(done_on_exit, rank);
+                let _alive = AliveOnExit {
+                    alive: alive_exit,
+                    rendezvous: rendezvous_exit,
+                    sched: sched_exit.clone(),
+                    rank,
+                };
                 if let Some(s) = &sched_exit {
                     s.attach(rank);
                 }

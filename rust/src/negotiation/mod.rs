@@ -22,8 +22,10 @@
 //! per-rank times — matching the paper's claim that the check "only adds a
 //! small overhead … since it is just a scalar".
 
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::simnet::NetworkModel;
@@ -131,10 +133,25 @@ pub struct NegotiationService {
 impl NegotiationService {
     /// Spawn the service for `size` ranks over the given network model.
     pub fn spawn(size: usize, net: NetworkModel) -> Self {
+        let alive = Arc::new((0..size).map(|_| AtomicBool::new(true)).collect());
+        Self::spawn_with_liveness(size, net, alive)
+    }
+
+    /// Spawn with a shared per-rank liveness array (cleared by the
+    /// launcher's exit guards). A batch whose missing announcers are all
+    /// dead is resolved among the present ranks — with dead peers
+    /// filtered from the resolved edge sets — instead of waiting
+    /// forever, so a crash mid-round surfaces as a short survivor round
+    /// rather than a hang.
+    pub fn spawn_with_liveness(
+        size: usize,
+        net: NetworkModel,
+        alive: Arc<Vec<AtomicBool>>,
+    ) -> Self {
         let (tx, rx) = channel();
         let handle = std::thread::Builder::new()
             .name("bf-negotiation".into())
-            .spawn(move || service_loop(size, net, rx))
+            .spawn(move || service_loop(size, net, rx, alive))
             .expect("spawn negotiation service");
         NegotiationService { tx, handle: Some(handle) }
     }
@@ -154,10 +171,27 @@ impl Drop for NegotiationService {
     }
 }
 
-fn service_loop(size: usize, net: NetworkModel, rx: Receiver<ServiceMsg>) {
+fn service_loop(
+    size: usize,
+    net: NetworkModel,
+    rx: Receiver<ServiceMsg>,
+    alive: Arc<Vec<AtomicBool>>,
+) {
     // Pending announcements per op name (readiness across ranks).
     let mut pending: HashMap<String, Vec<(OpRequest, Sender<OpClearance>)>> = HashMap::new();
-    while let Ok(msg) = rx.recv() {
+    loop {
+        // The timeout is the daemon's failure-detection heartbeat: quiet
+        // periods trigger a sweep of batches whose missing announcers
+        // have all exited. Wall-clock only — it decides *when* the
+        // survivor round is discovered, never its virtual-time pricing.
+        let msg = match rx.recv_timeout(std::time::Duration::from_millis(10)) {
+            Ok(m) => m,
+            Err(RecvTimeoutError::Timeout) => {
+                sweep_dead(&mut pending, &net, size, &alive);
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
         match msg {
             ServiceMsg::Shutdown => break,
             ServiceMsg::Submit(req, reply) => {
@@ -166,17 +200,55 @@ fn service_loop(size: usize, net: NetworkModel, rx: Receiver<ServiceMsg>) {
                 entry.push((req, reply));
                 if entry.len() == size {
                     let batch = pending.remove(&name).unwrap();
-                    respond(&batch, &net, size);
+                    respond(&batch, &net, size, &[]);
                 }
             }
         }
     }
 }
 
-/// Validate a complete batch, resolve one-sided declarations, release ranks.
-fn respond(batch: &[(OpRequest, Sender<OpClearance>)], net: &NetworkModel, size: usize) {
+/// Release every pending batch whose missing announcers are all dead,
+/// resolving among the present ranks.
+fn sweep_dead(
+    pending: &mut HashMap<String, Vec<(OpRequest, Sender<OpClearance>)>>,
+    net: &NetworkModel,
+    size: usize,
+    alive: &[AtomicBool],
+) {
+    let dead: Vec<usize> = (0..size).filter(|&r| !alive[r].load(Ordering::Acquire)).collect();
+    if dead.is_empty() {
+        return;
+    }
+    let ready: Vec<String> = pending
+        .iter()
+        .filter(|(_, batch)| {
+            let present: BTreeSet<usize> = batch.iter().map(|(r, _)| r.rank).collect();
+            (0..size).all(|r| present.contains(&r) || dead.contains(&r))
+        })
+        .map(|(name, _)| name.clone())
+        .collect();
+    for name in ready {
+        let batch = pending.remove(&name).unwrap();
+        respond(&batch, net, size, &dead);
+    }
+}
+
+/// Validate a complete batch, resolve one-sided declarations, release
+/// ranks. `dead` ranks are filtered from the resolved edge sets so
+/// survivors never wait on a crashed peer the service already knows
+/// about.
+fn respond(
+    batch: &[(OpRequest, Sender<OpClearance>)],
+    net: &NetworkModel,
+    size: usize,
+    dead: &[usize],
+) {
     let reqs: Vec<OpRequest> = batch.iter().map(|(r, _)| r.clone()).collect();
-    let clearances = resolve_batch(&reqs, net, size);
+    let mut clearances = resolve_batch(&reqs, net, size);
+    for c in &mut clearances {
+        c.resolved_srcs.retain(|r| !dead.contains(r));
+        c.resolved_dsts.retain(|r| !dead.contains(r));
+    }
     for ((_, reply), clearance) in batch.iter().zip(clearances) {
         let _ = reply.send(clearance);
     }
@@ -329,6 +401,16 @@ pub struct Rendezvous {
 struct RendezvousState {
     pending: HashMap<String, Vec<OpRequest>>,
     ready: HashMap<(String, usize), OpClearance>,
+    exited: BTreeSet<usize>,
+}
+
+/// A batch is releasable when every rank either announced or exited.
+fn batch_complete(entry: &[OpRequest], exited: &BTreeSet<usize>, size: usize) -> bool {
+    if entry.len() == size {
+        return true;
+    }
+    let present: BTreeSet<usize> = entry.iter().map(|r| r.rank).collect();
+    (0..size).all(|r| present.contains(&r) || exited.contains(&r))
 }
 
 impl Rendezvous {
@@ -340,12 +422,45 @@ impl Rendezvous {
             state: std::sync::Mutex::new(RendezvousState {
                 pending: HashMap::new(),
                 ready: HashMap::new(),
+                exited: BTreeSet::new(),
             }),
         }
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, RendezvousState> {
         self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Resolve a releasable batch: price it, filter exited ranks from
+    /// the resolved edge sets, stash peers' clearances and wake them.
+    /// Returns the clearance for `own_rank` if it is in the batch.
+    fn release(
+        st: &mut RendezvousState,
+        net: &NetworkModel,
+        size: usize,
+        name: &str,
+        own_rank: Option<usize>,
+        sched: &crate::simnet::event::Scheduler,
+    ) -> Option<OpClearance> {
+        let batch = st.pending.remove(name).expect("releasable batch exists");
+        let mut clearances = resolve_batch(&batch, net, size);
+        for c in &mut clearances {
+            c.resolved_srcs.retain(|r| !st.exited.contains(r));
+            c.resolved_dsts.retain(|r| !st.exited.contains(r));
+        }
+        let mut own = None;
+        for (peer, clearance) in batch.iter().zip(clearances) {
+            if Some(peer.rank) == own_rank {
+                own = Some(clearance);
+            } else {
+                let at = clearance.start_vtime;
+                st.ready.insert((name.to_string(), peer.rank), clearance);
+                // Clearance events to exited ranks are discarded by the
+                // scheduler (the actor is parked Finished).
+                sched.notify_clearance(peer.rank, at);
+            }
+        }
+        own
     }
 
     /// Announce an operation; parks on `sched` until the batch completes.
@@ -359,21 +474,10 @@ impl Rendezvous {
         let name = req.name.clone();
         {
             let mut st = self.lock();
-            let entry = st.pending.entry(name.clone()).or_default();
-            entry.push(req);
-            if entry.len() == self.size {
-                let batch = st.pending.remove(&name).unwrap();
-                let clearances = resolve_batch(&batch, &self.net, self.size);
-                let mut own = None;
-                for (peer, clearance) in batch.iter().zip(clearances) {
-                    if peer.rank == rank {
-                        own = Some(clearance);
-                    } else {
-                        let at = clearance.start_vtime;
-                        st.ready.insert((name.clone(), peer.rank), clearance);
-                        sched.notify_clearance(peer.rank, at);
-                    }
-                }
+            st.pending.entry(name.clone()).or_default().push(req);
+            let entry = st.pending.get(&name).expect("just inserted");
+            if batch_complete(entry, &st.exited, self.size) {
+                let own = Self::release(&mut st, &self.net, self.size, &name, Some(rank), sched);
                 return Ok(own.expect("own request is in the batch"));
             }
         }
@@ -382,6 +486,27 @@ impl Rendezvous {
             .ready
             .remove(&(name, rank))
             .ok_or_else(|| anyhow::anyhow!("rendezvous clearance missing after wakeup"))
+    }
+
+    /// Notify the rendezvous that `rank` left its node body (crash or
+    /// normal exit). Any pending batch now missing only exited ranks is
+    /// resolved among the present announcers so survivors parked in
+    /// `block_negotiate` wake with a clearance instead of deadlocking
+    /// into the watchdog.
+    pub fn rank_exited(&self, rank: usize, sched: &crate::simnet::event::Scheduler) {
+        let mut st = self.lock();
+        if !st.exited.insert(rank) {
+            return;
+        }
+        let releasable: Vec<String> = st
+            .pending
+            .iter()
+            .filter(|(_, batch)| batch_complete(batch, &st.exited, self.size))
+            .map(|(name, _)| name.clone())
+            .collect();
+        for name in releasable {
+            Self::release(&mut st, &self.net, self.size, &name, None, sched);
+        }
     }
 }
 

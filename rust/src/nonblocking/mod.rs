@@ -24,6 +24,13 @@
 //!   agreement without a round trip. A group is transmitted when the first
 //!   request of the *next* group arrives, or when the caller `wait()`s on
 //!   one of its handles (which enqueues a flush marker).
+//! - **Faults**: the engine's dedicated endpoint is *not* instrumented by
+//!   [`crate::simnet::faults::FaultPlan`] — the chaos sweeps exercise the
+//!   blocking path, where drops/partitions/deadlines live. What the fault
+//!   layer does enforce here is the crash schedule: a rank whose crash
+//!   vtime has passed cannot enqueue new non-blocking work (the enqueue
+//!   APIs return [`crate::simnet::faults::CommError::SelfCrash`]), so a
+//!   crashed rank never parks peers on an exchange it will not complete.
 
 use std::collections::HashMap;
 use std::sync::atomic::AtomicU64;
@@ -757,6 +764,7 @@ impl NodeContext {
         data: &[f32],
         weights: Option<&crate::collective::neighbor::NeighborWeights>,
     ) -> anyhow::Result<Handle> {
+        self.fault_guard()?;
         let plan = match weights {
             Some(w) => {
                 let srcs = w.src_weights.clone().ok_or_else(|| {
@@ -819,6 +827,7 @@ impl NodeContext {
     /// Horovod baseline).
     pub fn allreduce_nonblocking(&mut self, data: &[f32]) -> anyhow::Result<Handle> {
         use std::sync::atomic::Ordering;
+        self.fault_guard()?;
         // Ring ops close the open fusion group.
         let group = self.fusion_group.fetch_add(1, Ordering::Relaxed) + 1;
         self.fusion_acc_bytes.store(0, Ordering::Relaxed);

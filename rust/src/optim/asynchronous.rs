@@ -152,6 +152,33 @@ impl AsyncPushSumSgd {
             *xi = ui / self.v;
         }
     }
+
+    /// Self-healing redirect: drop destinations the health view (crash
+    /// oracle or miss counter) has evicted and recompute the
+    /// column-stochastic split over the survivors, so the crashed peer's
+    /// outbound share is redirected and `Σ (v_i + pending)` over the
+    /// survivors stays conserved from this step on. Mass already in the
+    /// dead rank's window is gone — but because every wire message
+    /// carries `[u; v]` *jointly*, the debiased iterate `x = u/v` of
+    /// every survivor stays unbiased (u and v lose the same fraction).
+    fn heal_dsts(&mut self, ctx: &mut NodeContext) {
+        if !ctx.faults().active() {
+            return;
+        }
+        for i in 0..self.dsts.len() {
+            let r = self.dsts[i].0;
+            if !ctx.health.is_evicted(r) && ctx.peer_down(r) {
+                ctx.health.evict(r);
+            }
+        }
+        if self.dsts.iter().any(|&(r, _)| ctx.health.is_evicted(r)) {
+            self.dsts.retain(|&(r, _)| !ctx.health.is_evicted(r));
+            self.share = 1.0 / (self.dsts.len() + 1) as f64;
+            for d in &mut self.dsts {
+                d.1 = self.share;
+            }
+        }
+    }
 }
 
 impl AsyncDecentralizedOptimizer for AsyncPushSumSgd {
@@ -175,6 +202,7 @@ impl AsyncDecentralizedOptimizer for AsyncPushSumSgd {
             self.created = true;
         }
         anyhow::ensure!(self.u.len() == d, "parameter size changed mid-run");
+        self.heal_dsts(ctx);
         self.last_staleness = ctx.win_staleness(&self.window)?;
         self.fill_ext();
         ctx.win_update_then_collect_causal(&self.window, &mut self.ext)?;
@@ -213,8 +241,20 @@ impl AsyncDecentralizedOptimizer for AsyncPushSumSgd {
         }
         ctx.mark_async_done();
         // After the barrier no rank issues further accumulates, so the
-        // blocking drain below observes every write ever made.
-        ctx.barrier()?;
+        // blocking drain below observes every write ever made. Under an
+        // active fault plan the barrier is best-effort: a crashed peer
+        // makes it expire at the receive deadline, which still bounds how
+        // early any survivor can pass — loose synchronization is enough
+        // for the teardown drain.
+        if ctx.faults().active() {
+            if let Err(e) = ctx.barrier() {
+                if ctx.crashed_now() {
+                    return Err(e);
+                }
+            }
+        } else {
+            ctx.barrier()?;
+        }
         let d = x.len();
         self.fill_ext();
         ctx.win_update_then_collect(&self.window, &mut self.ext)?;

@@ -48,6 +48,20 @@ pub enum WakeKind {
     Resume,
     /// A negotiation batch this rank submitted to has been resolved.
     Clearance,
+    // New kinds are appended (never inserted) so the derived `Ord` —
+    // and with it the same-vtime tie-break order the parity suite
+    // pins — is preserved for all pre-existing kinds.
+    /// A receive deadline expired (fault layer): grants a recv-parked
+    /// rank whose recorded deadline is `<=` the event vtime so the wait
+    /// converts into a typed `CommError` instead of a hang.
+    Timeout,
+    /// Informational: `actor` reaches its scheduled crash vtime. Never
+    /// granted — dispatch consumes it to mark the rank crashed so the
+    /// watchdog can distinguish "deadlocked" from "peer crashed".
+    Crash,
+    /// Informational: a link partition heals at this vtime. Never
+    /// granted; kept in the queue so chaos traces show heal instants.
+    Heal,
 }
 
 /// A scheduler event: rank `actor` becomes eligible to run at `vtime`.
@@ -170,11 +184,39 @@ pub struct Grant {
 struct ActorState {
     park: Park,
     granted: bool,
+    /// Kind of the event that granted the current wakeup (read by the
+    /// waiter to distinguish a message wake from a deadline expiry).
+    granted_kind: WakeKind,
     /// Human-readable description of what the rank is blocked on
     /// (deadlock diagnostics).
     info: &'static str,
     /// Clock reading when the rank parked (deadlock diagnostics).
     parked_at: f64,
+    /// Peer rank a `Recv` park is matched against (`None` = any source).
+    recv_peer: Option<usize>,
+    /// Tag a `Recv` park is matched against.
+    recv_tag: Option<u64>,
+    /// Absolute vtime deadline of the current `Recv` park (`INFINITY`
+    /// when the wait has no deadline — the seed behavior).
+    recv_deadline: f64,
+    /// Set when a `Crash` event for this rank has been consumed.
+    crashed: bool,
+}
+
+impl ActorState {
+    fn fresh() -> Self {
+        ActorState {
+            park: Park::Start,
+            granted: false,
+            granted_kind: WakeKind::Start,
+            info: "attach",
+            parked_at: 0.0,
+            recv_peer: None,
+            recv_tag: None,
+            recv_deadline: f64::INFINITY,
+            crashed: false,
+        }
+    }
 }
 
 struct Inner {
@@ -218,14 +260,7 @@ impl Scheduler {
         async_done: Arc<Vec<AtomicBool>>,
         trace: bool,
     ) -> Arc<Self> {
-        let actors = (0..n)
-            .map(|_| ActorState {
-                park: Park::Start,
-                granted: false,
-                info: "attach",
-                parked_at: 0.0,
-            })
-            .collect();
+        let actors = (0..n).map(|_| ActorState::fresh()).collect();
         Arc::new(Scheduler {
             n,
             inner: Mutex::new(Inner {
@@ -261,8 +296,9 @@ impl Scheduler {
         let seq = g.next_seq();
         g.queue.push(Event { vtime: 0.0, actor: rank, kind: WakeKind::Start, seq });
         g.attached += 1;
-        g.actors[rank] =
-            ActorState { park: Park::Start, granted: false, info: "attach", parked_at: 0.0 };
+        let crashed = g.actors[rank].crashed;
+        g.actors[rank] = ActorState::fresh();
+        g.actors[rank].crashed = crashed;
         self.dispatch(&mut g);
         self.wait_granted(g, rank);
     }
@@ -281,9 +317,73 @@ impl Scheduler {
     /// have drained its mailbox first (`try_recv_*`) — arrivals pushed
     /// before this park are already queued as events and will be granted.
     pub fn block_recv(&self, rank: usize, info: &'static str) {
-        let g = self.lock();
+        self.block_recv_with(rank, None, None, f64::INFINITY, info);
+    }
+
+    /// Deadline-aware receive park: like [`Scheduler::block_recv`] but
+    /// records the awaited peer/tag (watchdog diagnostics) and the
+    /// absolute vtime `deadline` at which a previously scheduled
+    /// [`WakeKind::Timeout`] event may grant the park. Returns the kind
+    /// of the granting event so the waiter can tell a message wake from
+    /// a deadline expiry (either way it re-drains its mailbox — a
+    /// `Timeout` grant racing an already-stashed match must lose).
+    pub fn block_recv_with(
+        &self,
+        rank: usize,
+        peer: Option<usize>,
+        tag: Option<u64>,
+        deadline: f64,
+        info: &'static str,
+    ) -> WakeKind {
+        let mut g = self.lock();
         let at = self.clocks[rank].now();
+        {
+            let a = &mut g.actors[rank];
+            a.recv_peer = peer;
+            a.recv_tag = tag;
+            a.recv_deadline = deadline;
+        }
         self.park(g, rank, Park::Recv, info, at);
+        let mut g = self.lock();
+        let a = &mut g.actors[rank];
+        a.recv_peer = None;
+        a.recv_tag = None;
+        a.recv_deadline = f64::INFINITY;
+        a.granted_kind
+    }
+
+    /// Schedule a [`WakeKind::Timeout`] event for `rank` at `vtime`. The
+    /// caller pushes this once per logical deadline-bounded receive (not
+    /// per re-park) so drained queues still wake the waiter exactly at
+    /// its deadline. Stale timeout events (from receives that completed
+    /// early) are discarded by the dispatch deadline check.
+    pub fn schedule_timeout(&self, rank: usize, vtime: f64) {
+        let mut g = self.lock();
+        let seq = g.next_seq();
+        g.queue.push(Event { vtime, actor: rank, kind: WakeKind::Timeout, seq });
+    }
+
+    /// Schedule an informational [`WakeKind::Crash`] marker for `rank` at
+    /// its planned crash vtime (consumed by dispatch, never granted).
+    pub fn schedule_crash(&self, rank: usize, vtime: f64) {
+        let mut g = self.lock();
+        let seq = g.next_seq();
+        g.queue.push(Event { vtime, actor: rank, kind: WakeKind::Crash, seq });
+    }
+
+    /// Schedule an informational [`WakeKind::Heal`] marker at a partition
+    /// heal instant (consumed by dispatch, never granted).
+    pub fn schedule_heal(&self, vtime: f64) {
+        let mut g = self.lock();
+        let seq = g.next_seq();
+        g.queue.push(Event { vtime, actor: 0, kind: WakeKind::Heal, seq });
+    }
+
+    /// True when `rank` has finished (returned or crashed out of) its
+    /// node body. Used by the inline rendezvous to resolve negotiation
+    /// batches whose missing submitters will never arrive.
+    pub fn is_finished(&self, rank: usize) -> bool {
+        self.lock().actors[rank].park == Park::Finished
     }
 
     /// Park until the negotiation batch this rank submitted to resolves
@@ -422,6 +522,14 @@ impl Scheduler {
                 }
                 return;
             };
+            // Informational fault markers: consumed, never granted.
+            if ev.kind == WakeKind::Crash {
+                g.actors[ev.actor].crashed = true;
+                continue;
+            }
+            if ev.kind == WakeKind::Heal {
+                continue;
+            }
             let matches = matches!(
                 (g.actors[ev.actor].park, ev.kind),
                 (Park::Start, WakeKind::Start)
@@ -429,9 +537,16 @@ impl Scheduler {
                     | (Park::Throttle, WakeKind::Resume)
                     | (Park::Recv, WakeKind::Message)
                     | (Park::Negotiate, WakeKind::Clearance)
-            );
+            )
+                // A Timeout event grants a recv park only once the park's
+                // recorded deadline is due; earlier (stale) timeouts from
+                // receives that completed are discarded here.
+                || (g.actors[ev.actor].park == Park::Recv
+                    && ev.kind == WakeKind::Timeout
+                    && g.actors[ev.actor].recv_deadline <= ev.vtime);
             if matches {
                 g.actors[ev.actor].granted = true;
+                g.actors[ev.actor].granted_kind = ev.kind;
                 if let Some(tr) = &mut g.trace {
                     tr.push(Grant { vtime: ev.vtime, actor: ev.actor, kind: ev.kind });
                 }
@@ -445,17 +560,61 @@ impl Scheduler {
         }
     }
 
+    /// Status word for the peer a stuck receive is waiting on, so the
+    /// watchdog can say *why* the message never came: a crashed peer is
+    /// not a deadlock, it is a missing deadline.
+    fn peer_status(g: &Inner, peer: usize) -> &'static str {
+        let a = &g.actors[peer];
+        if a.crashed {
+            "crashed"
+        } else {
+            match a.park {
+                Park::Finished => "finished",
+                Park::Throttle => "throttled",
+                Park::Running => "running",
+                Park::Recv => "itself recv-parked",
+                Park::Negotiate => "negotiating",
+                Park::Yield => "yield-parked",
+                Park::Start => "not yet started",
+            }
+        }
+    }
+
     fn poison_deadlock(&self, g: &mut Inner) {
         let mut msg = format!(
             "simnet deadlock: event queue drained with {} unfinished rank(s); pending waits:\n",
             g.unfinished
         );
-        for (r, a) in g.actors.iter().enumerate() {
+        for r in 0..g.actors.len() {
+            let a = &g.actors[r];
             if a.park != Park::Finished {
                 msg.push_str(&format!(
-                    "  rank {r}: parked on {:?} ({}) at vtime {:.9}\n",
+                    "  rank {r}: parked on {:?} ({}) at vtime {:.9}",
                     a.park, a.info, a.parked_at
                 ));
+                if a.park == Park::Recv {
+                    match a.recv_peer {
+                        Some(p) => {
+                            msg.push_str(&format!(
+                                " awaiting src={p} tag={:#x}; peer {p} is {}",
+                                a.recv_tag.unwrap_or(0),
+                                Self::peer_status(g, p)
+                            ));
+                        }
+                        None => {
+                            if let Some(t) = a.recv_tag {
+                                msg.push_str(&format!(" awaiting any-source tag={t:#x}"));
+                            }
+                        }
+                    }
+                    if a.recv_deadline.is_finite() {
+                        msg.push_str(&format!(" (deadline {:.9})", a.recv_deadline));
+                    }
+                }
+                if a.crashed {
+                    msg.push_str(" [rank itself crashed]");
+                }
+                msg.push('\n');
             }
         }
         for &(r, th) in &g.throttle {

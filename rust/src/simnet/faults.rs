@@ -1,0 +1,499 @@
+//! Deterministic fault injection at the transport boundary (ISSUE 7).
+//!
+//! The paper's fault-tolerance claim — decentralized algorithms have no
+//! single point of failure — is only testable if failures can actually
+//! happen. This module defines a seeded, deterministic [`FaultPlan`]
+//! carried by `SpmdConfig`: rank crash-at-vtime, per-link message
+//! drop/delay/duplication probabilities, and link partitions over vtime
+//! windows.
+//!
+//! **Determinism across exec modes.** Every fault decision is a *pure
+//! function* of `(plan seed, src, dst, per-link message sequence number,
+//! virtual send time)`. Per-link sequence numbers follow the sender's
+//! program order, which the exec-parity suite already pins to be
+//! identical under `ExecMode::Threads` and `ExecMode::EventLoop`; virtual
+//! send times are likewise bitwise-identical across modes. Both backends
+//! therefore observe the *same* fault schedule — verified by the
+//! differential test in `tests/faults.rs`.
+//!
+//! **Drop + retry model.** The simulated transport is "reliable protocol
+//! over a lossy link": a dropped packet is retransmitted up to
+//! [`FaultPlan::max_retries`] times with exponential backoff
+//! ([`FaultPlan::backoff_base`]` * 2^k` before attempt `k+1`). Attempt
+//! `k` occurs at virtual time `send + backoff_base * (2^k - 1)`; it
+//! succeeds if the link is not partitioned at that instant and the
+//! per-attempt drop roll passes. A surviving attempt delivers with the
+//! accumulated backoff as extra delay; if every attempt fails the message
+//! is truly lost and the receiver's [`CommDeadline`] converts the loss
+//! into a typed [`CommError`] instead of an infinite hang. Retries
+//! happening *after* a partition heals model the self-healing transport.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Typed communication failures surfaced by deadline-based receives.
+///
+/// These replace the two infinite hangs the seed had: blocking on a peer
+/// that crashed, and blocking on a message that the (faulty) link lost.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CommError {
+    /// No matching message arrived (virtually) before the deadline and
+    /// the fault oracle does not mark the peer as crashed — the message
+    /// was lost or the peer is partitioned/slow.
+    Timeout {
+        /// Peer the receive was matched against (`usize::MAX` = any).
+        src: usize,
+        /// Virtual time at which the deadline expired.
+        deadline: f64,
+    },
+    /// The awaited peer is crashed at the deadline instant, per the
+    /// plan's crash oracle (the simulator's stand-in for a transport
+    /// connection error).
+    PeerDown {
+        /// The crashed peer.
+        peer: usize,
+        /// Virtual time at which the failure was observed.
+        at: f64,
+    },
+    /// This rank itself has reached its scheduled crash point; the
+    /// caller must unwind (the launcher's exit guards mark the rank dead
+    /// for everyone else).
+    SelfCrash {
+        /// The crashing rank.
+        rank: usize,
+        /// The scheduled crash virtual time.
+        at: f64,
+    },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Timeout { src, deadline } => {
+                if *src == usize::MAX {
+                    write!(f, "recv-any timed out at vtime {deadline:.6}s")
+                } else {
+                    write!(f, "recv from rank {src} timed out at vtime {deadline:.6}s")
+                }
+            }
+            CommError::PeerDown { peer, at } => {
+                write!(f, "peer rank {peer} is down (observed at vtime {at:.6}s)")
+            }
+            CommError::SelfCrash { rank, at } => {
+                write!(f, "rank {rank} crashed at its scheduled vtime {at:.6}s")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Virtual-time budget for a blocking receive or drain.
+///
+/// `budget` is relative to the instant the wait starts; the absolute
+/// deadline is `wait-start vtime + budget`. On expiry the waiter's clock
+/// advances to exactly the deadline in *both* exec modes (Threads: direct
+/// `advance_to`; EventLoop: a `WakeKind::Timeout` event at that vtime),
+/// so fault-path vtimes stay bitwise mode-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommDeadline {
+    /// Virtual seconds to wait before giving up (`f64::INFINITY` = wait
+    /// forever, the seed's behavior).
+    pub budget: f64,
+}
+
+impl CommDeadline {
+    /// Wait forever — bitwise-identical to the pre-fault-layer behavior.
+    pub fn none() -> Self {
+        CommDeadline { budget: f64::INFINITY }
+    }
+
+    /// Give up after `budget` virtual seconds.
+    pub fn after(budget: f64) -> Self {
+        CommDeadline { budget }
+    }
+
+    /// True when this deadline can actually expire.
+    pub fn is_finite(&self) -> bool {
+        self.budget.is_finite()
+    }
+}
+
+/// A link partition: messages between group `a` and group `b` (either
+/// direction) are lost while `from <= vtime < until`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    /// One side of the cut.
+    pub a: Vec<usize>,
+    /// The other side of the cut.
+    pub b: Vec<usize>,
+    /// Partition start (virtual seconds).
+    pub from: f64,
+    /// Partition end — the heal instant (virtual seconds).
+    pub until: f64,
+}
+
+impl Partition {
+    /// True when the `src -> dst` link is cut at `vtime`.
+    pub fn cuts(&self, src: usize, dst: usize, vtime: f64) -> bool {
+        if vtime < self.from || vtime >= self.until {
+            return false;
+        }
+        (self.a.contains(&src) && self.b.contains(&dst))
+            || (self.b.contains(&src) && self.a.contains(&dst))
+    }
+}
+
+/// Shared fault-event counters, one instance per `run_spmd` launch. The
+/// differential test compares these across exec modes: identical plans
+/// must produce identical counts.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    /// Messages lost after exhausting every retry.
+    pub lost: AtomicU64,
+    /// Messages delivered only after at least one retransmission.
+    pub retried: AtomicU64,
+    /// Messages hit by the random-delay fault.
+    pub delayed: AtomicU64,
+    /// Messages duplicated by the link (the dedup layer absorbs the
+    /// copy; it is observable only as a spurious wakeup and this count).
+    pub duplicated: AtomicU64,
+    /// Sends suppressed because the sender had already crashed.
+    pub crashed_sends: AtomicU64,
+}
+
+impl FaultStats {
+    /// Snapshot `(lost, retried, delayed, duplicated, crashed_sends)`.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.lost.load(Ordering::Relaxed),
+            self.retried.load(Ordering::Relaxed),
+            self.delayed.load(Ordering::Relaxed),
+            self.duplicated.load(Ordering::Relaxed),
+            self.crashed_sends.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Outcome of injecting faults into one point-to-point message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LinkFate {
+    /// The message arrives, `extra_delay` virtual seconds later than the
+    /// fault-free schedule (retransmission backoff + random link delay);
+    /// `duplicate` marks a transport-level duplicated packet riding
+    /// along (absorbed by the receiver's dedup layer).
+    Delivered {
+        /// Additional virtual delay beyond the fault-free arrival.
+        extra_delay: f64,
+        /// A duplicated copy is delivered alongside the original.
+        duplicate: bool,
+    },
+    /// Every transmission attempt was dropped or partitioned away — the
+    /// message never arrives.
+    Lost,
+}
+
+/// Seeded, deterministic fault schedule for one SPMD launch.
+///
+/// [`FaultPlan::none`] is the default and is guaranteed to be a bitwise
+/// no-op: no crash events are scheduled, no fate rolls alter arrival
+/// times, and every deadline is infinite, so all pre-existing parity and
+/// BENCH gates see exactly the seed behavior.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed mixed into every fate roll (independent of the data RNG).
+    pub seed: u64,
+    /// `(rank, vtime)` pairs: the rank observes its crash the first time
+    /// its virtual clock reaches `vtime` inside a fault-guarded call.
+    pub crashes: Vec<(usize, f64)>,
+    /// Per-attempt probability a message transmission is dropped.
+    pub drop_prob: f64,
+    /// Probability a delivered message is hit by extra link delay.
+    pub delay_prob: f64,
+    /// Maximum extra delay (virtual seconds, uniform in `(0, max]`).
+    pub delay_max: f64,
+    /// Probability a delivered message is duplicated by the link.
+    pub dup_prob: f64,
+    /// Link partitions over vtime windows.
+    pub partitions: Vec<Partition>,
+    /// Retransmission attempts after the first (reliable-over-lossy).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub backoff_base: f64,
+    /// Default receive budget (virtual seconds) applied to every
+    /// blocking comm path when the caller does not pass an explicit
+    /// [`CommDeadline`]. Infinite in [`FaultPlan::none`].
+    pub deadline: f64,
+    /// Consecutive deadline misses after which a peer is evicted from
+    /// the local [`crate::topology::health::HealthView`] (crash-oracle
+    /// `PeerDown` evicts immediately regardless).
+    pub miss_threshold: u32,
+    /// Shared event counters (cloned handles observe the same totals).
+    pub stats: Arc<FaultStats>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, infinite deadlines, bitwise no-op.
+    pub fn none() -> Self {
+        FaultPlan {
+            seed: 0,
+            crashes: Vec::new(),
+            drop_prob: 0.0,
+            delay_prob: 0.0,
+            delay_max: 0.0,
+            dup_prob: 0.0,
+            partitions: Vec::new(),
+            max_retries: 0,
+            backoff_base: 0.0,
+            deadline: f64::INFINITY,
+            miss_threshold: 8,
+            stats: Arc::new(FaultStats::default()),
+        }
+    }
+
+    /// A plan with a seed and a finite default receive deadline — the
+    /// usual starting point for chaos runs.
+    pub fn seeded(seed: u64, deadline: f64) -> Self {
+        FaultPlan { seed, deadline, ..FaultPlan::none() }
+    }
+
+    /// Schedule `rank` to crash at `vtime` (builder style).
+    pub fn with_crash(mut self, rank: usize, vtime: f64) -> Self {
+        self.crashes.push((rank, vtime));
+        self
+    }
+
+    /// Set per-attempt drop probability with `retries` retransmissions
+    /// backed off from `backoff_base` (builder style).
+    pub fn with_drop(mut self, prob: f64, retries: u32, backoff_base: f64) -> Self {
+        self.drop_prob = prob;
+        self.max_retries = retries;
+        self.backoff_base = backoff_base;
+        self
+    }
+
+    /// Set the random extra-delay fault (builder style).
+    pub fn with_delay(mut self, prob: f64, max: f64) -> Self {
+        self.delay_prob = prob;
+        self.delay_max = max;
+        self
+    }
+
+    /// Set the duplication fault (builder style).
+    pub fn with_dup(mut self, prob: f64) -> Self {
+        self.dup_prob = prob;
+        self
+    }
+
+    /// Cut links between `a` and `b` over `[from, until)` (builder
+    /// style).
+    pub fn with_partition(mut self, a: Vec<usize>, b: Vec<usize>, from: f64, until: f64) -> Self {
+        self.partitions.push(Partition { a, b, from, until });
+        self
+    }
+
+    /// Set the eviction miss threshold (builder style).
+    pub fn with_miss_threshold(mut self, misses: u32) -> Self {
+        self.miss_threshold = misses;
+        self
+    }
+
+    /// True when the plan can affect message delivery at all. The hot
+    /// paths branch on this once and skip every fate computation when
+    /// false, which is what makes [`FaultPlan::none`] a provable no-op.
+    pub fn active(&self) -> bool {
+        !self.crashes.is_empty()
+            || self.drop_prob > 0.0
+            || self.delay_prob > 0.0
+            || self.dup_prob > 0.0
+            || !self.partitions.is_empty()
+    }
+
+    /// The scheduled crash vtime of `rank`, if any (earliest wins).
+    pub fn crash_vtime(&self, rank: usize) -> Option<f64> {
+        self.crashes
+            .iter()
+            .filter(|(r, _)| *r == rank)
+            .map(|&(_, t)| t)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Crash oracle: is `rank` crashed at (or before) `vtime`? This is
+    /// the simulator's stand-in for the transport-layer connection error
+    /// a real shm/TCP backend would surface; it is a pure function of
+    /// the plan, so every rank — in either exec mode — classifies the
+    /// same failure identically.
+    pub fn crashed_by(&self, rank: usize, vtime: f64) -> bool {
+        self.crash_vtime(rank).is_some_and(|t| t <= vtime)
+    }
+
+    /// Ranks not crashed by `vtime`, out of `n`.
+    pub fn survivors_at(&self, n: usize, vtime: f64) -> Vec<usize> {
+        (0..n).filter(|&r| !self.crashed_by(r, vtime)).collect()
+    }
+
+    /// True when the `src -> dst` link is cut at `vtime`.
+    pub fn partitioned(&self, src: usize, dst: usize, vtime: f64) -> bool {
+        self.partitions.iter().any(|p| p.cuts(src, dst, vtime))
+    }
+
+    /// splitmix64-style stateless mix of the fate coordinates.
+    fn fate_hash(&self, src: usize, dst: usize, seq: u64, salt: u64) -> u64 {
+        let mut z = self
+            .seed
+            .wrapping_add((src as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((dst as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add(seq.wrapping_mul(0x94D0_49BB_1331_11EB))
+            .wrapping_add(salt.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform roll in `[0, 1)` for one fate coordinate.
+    fn roll(&self, src: usize, dst: usize, seq: u64, salt: u64) -> f64 {
+        (self.fate_hash(src, dst, seq, salt) >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Fate of the `seq`-th message the sending entity puts on the
+    /// `src -> dst` link at virtual time `send_vtime`. Pure in
+    /// `(seed, src, dst, seq, send_vtime)`; both exec modes present
+    /// identical coordinates, so the schedule is mode-invariant.
+    /// Updates the shared [`FaultStats`].
+    pub fn link_fate(&self, src: usize, dst: usize, seq: u64, send_vtime: f64) -> LinkFate {
+        if !self.active() {
+            return LinkFate::Delivered { extra_delay: 0.0, duplicate: false };
+        }
+        for attempt in 0..=self.max_retries {
+            // Attempt k happens after the cumulative exponential backoff
+            // base*(2^k - 1) (k = 0 -> immediately).
+            let backoff = if attempt == 0 {
+                0.0
+            } else {
+                self.backoff_base * ((1u64 << attempt) - 1) as f64
+            };
+            let at = send_vtime + backoff;
+            if self.partitioned(src, dst, at) {
+                continue; // attempt swallowed by the partition
+            }
+            if self.drop_prob > 0.0 && self.roll(src, dst, seq, attempt as u64) < self.drop_prob {
+                continue; // attempt dropped by the lossy link
+            }
+            let mut extra = backoff;
+            if attempt > 0 {
+                self.stats.retried.fetch_add(1, Ordering::Relaxed);
+            }
+            if self.delay_prob > 0.0 && self.roll(src, dst, seq, 0xDE1A) < self.delay_prob {
+                extra += self.roll(src, dst, seq, 0xDE1B) * self.delay_max;
+                self.stats.delayed.fetch_add(1, Ordering::Relaxed);
+            }
+            let duplicate = self.dup_prob > 0.0 && self.roll(src, dst, seq, 0xD0B1) < self.dup_prob;
+            if duplicate {
+                self.stats.duplicated.fetch_add(1, Ordering::Relaxed);
+            }
+            return LinkFate::Delivered { extra_delay: extra, duplicate };
+        }
+        self.stats.lost.fetch_add(1, Ordering::Relaxed);
+        LinkFate::Lost
+    }
+
+    /// Classify a deadline expiry on a receive from `src`: `PeerDown`
+    /// when the crash oracle marks the peer crashed at the deadline,
+    /// `Timeout` otherwise. Pure in vtime, hence mode-invariant.
+    pub fn classify_expiry(&self, src: usize, deadline: f64) -> CommError {
+        if src != usize::MAX && self.crashed_by(src, deadline) {
+            CommError::PeerDown { peer: src, at: deadline }
+        } else {
+            CommError::Timeout { src, deadline }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_is_inert() {
+        let p = FaultPlan::none();
+        assert!(!p.active());
+        let clean = LinkFate::Delivered { extra_delay: 0.0, duplicate: false };
+        assert_eq!(p.link_fate(0, 1, 7, 0.5), clean);
+        assert!(!p.crashed_by(3, 1e9));
+        assert!(p.deadline.is_infinite());
+    }
+
+    #[test]
+    fn fates_are_deterministic() {
+        let a = FaultPlan::seeded(42, 1.0).with_drop(0.3, 2, 1e-4).with_delay(0.2, 1e-3);
+        let b = FaultPlan::seeded(42, 1.0).with_drop(0.3, 2, 1e-4).with_delay(0.2, 1e-3);
+        for seq in 0..200 {
+            assert_eq!(a.link_fate(1, 2, seq, 0.01), b.link_fate(1, 2, seq, 0.01));
+        }
+    }
+
+    #[test]
+    fn drop_rate_is_approximately_honored() {
+        let p = FaultPlan::seeded(7, 1.0).with_drop(0.5, 0, 0.0);
+        let lost = (0..2000).filter(|&s| p.link_fate(0, 1, s, 0.0) == LinkFate::Lost).count();
+        assert!((800..1200).contains(&lost), "lost {lost} of 2000 at p=0.5");
+    }
+
+    #[test]
+    fn retries_recover_most_drops_with_backoff_delay() {
+        let p = FaultPlan::seeded(7, 1.0).with_drop(0.3, 3, 1e-4);
+        let mut lost = 0;
+        for seq in 0..1000 {
+            match p.link_fate(0, 1, seq, 0.0) {
+                LinkFate::Lost => lost += 1,
+                LinkFate::Delivered { extra_delay, .. } => assert!(extra_delay >= 0.0),
+            }
+        }
+        // p_loss = 0.3^4 = 0.81% -> ~8 of 1000.
+        assert!(lost < 40, "lost {lost} of 1000 with 3 retries at p=0.3");
+    }
+
+    #[test]
+    fn partition_cuts_both_directions_and_heals() {
+        let p = FaultPlan::seeded(1, 1.0).with_partition(vec![0, 1], vec![2, 3], 1.0, 2.0);
+        assert!(p.partitioned(0, 2, 1.5));
+        assert!(p.partitioned(3, 1, 1.5));
+        assert!(!p.partitioned(0, 1, 1.5)); // same side
+        assert!(!p.partitioned(0, 2, 2.0)); // healed
+        assert_eq!(p.link_fate(0, 2, 9, 1.5), LinkFate::Lost);
+        assert!(matches!(p.link_fate(0, 2, 9, 0.5), LinkFate::Delivered { .. }));
+    }
+
+    #[test]
+    fn retry_backoff_rides_past_a_short_partition() {
+        // Partition [1.0, 1.001); backoff base 1 ms reaches past it.
+        let p = FaultPlan::seeded(1, 1.0)
+            .with_partition(vec![0], vec![1], 1.0, 1.001)
+            .with_drop(0.0, 2, 1e-3);
+        match p.link_fate(0, 1, 0, 1.0) {
+            LinkFate::Delivered { extra_delay, .. } => assert!(extra_delay >= 1e-3),
+            LinkFate::Lost => panic!("retry should outlive the partition"),
+        }
+    }
+
+    #[test]
+    fn crash_oracle_is_a_step_function() {
+        let p = FaultPlan::none().with_crash(2, 0.5);
+        assert!(!p.crashed_by(2, 0.49));
+        assert!(p.crashed_by(2, 0.5));
+        assert!(!p.crashed_by(1, 9.0));
+        assert_eq!(p.survivors_at(4, 1.0), vec![0, 1, 3]);
+        assert_eq!(
+            p.classify_expiry(2, 1.0),
+            CommError::PeerDown { peer: 2, at: 1.0 }
+        );
+        assert_eq!(p.classify_expiry(1, 1.0), CommError::Timeout { src: 1, deadline: 1.0 });
+    }
+}

@@ -33,6 +33,7 @@ pub enum LinkTier {
 }
 
 pub mod event;
+pub mod faults;
 pub mod hetero;
 pub mod schedule;
 

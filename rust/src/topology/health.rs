@@ -1,0 +1,249 @@
+//! Rank-local failure detection and self-healing weight renormalization.
+//!
+//! Real decentralized deployments lose peers: a machine crashes, a link
+//! partitions, a straggler falls behind the deadline. BlueFog's static
+//! weight matrices assume every neighbor answers every round — one dead
+//! peer either deadlocks the round (blocking recv) or silently skews the
+//! average (weight mass sent to nobody). This module gives each rank a
+//! *local* view of neighbor health and a way to re-derive valid combine
+//! weights over the survivors, with no global membership protocol:
+//!
+//! - [`HealthView`] keeps per-peer miss counters and last-heard virtual
+//!   times. A peer reported dead by the crash oracle
+//!   ([`crate::simnet::faults::CommError::PeerDown`]) is evicted
+//!   immediately; deadline [`Timeout`](crate::simnet::faults::CommError)s
+//!   only *suspect* the peer and evict after `miss_threshold` consecutive
+//!   misses, so a transient partition does not permanently shrink the
+//!   graph.
+//! - [`survivor_mh_row`] re-derives a Metropolis–Hastings row over the
+//!   survivor-induced subgraph. Because the MH formula is symmetric in
+//!   `(i, j)` and every rank computes degrees from the same base graph
+//!   minus the same dead set (once their views agree), pairwise weights
+//!   agree across ranks and the healed matrix stays doubly stochastic on
+//!   the survivor set — the condition for average-consensus to keep
+//!   contracting after a failure.
+
+use std::collections::BTreeSet;
+
+use super::Graph;
+
+/// Rank-local liveness view over this rank's neighbors.
+///
+/// Purely local state — no consensus, no gossip. Each rank evicts on its
+/// own evidence (crash-oracle verdicts immediately, repeated deadline
+/// misses after `miss_threshold`), mirroring how production failure
+/// detectors (e.g. SWIM-style suspicion) trade detection latency for
+/// false-positive robustness.
+#[derive(Debug, Clone)]
+pub struct HealthView {
+    me: usize,
+    miss_threshold: u32,
+    misses: Vec<u32>,
+    last_heard: Vec<f64>,
+    evicted: BTreeSet<usize>,
+}
+
+impl HealthView {
+    /// A fresh view for rank `me` of a `size`-rank run. `miss_threshold`
+    /// consecutive deadline misses mark a peer dead ([`Timeout`]s only
+    /// suspect; [`PeerDown`] verdicts bypass the counter).
+    ///
+    /// [`Timeout`]: crate::simnet::faults::CommError::Timeout
+    /// [`PeerDown`]: crate::simnet::faults::CommError::PeerDown
+    pub fn new(size: usize, me: usize, miss_threshold: u32) -> Self {
+        HealthView {
+            me,
+            miss_threshold: miss_threshold.max(1),
+            misses: vec![0; size],
+            last_heard: vec![0.0; size],
+            evicted: BTreeSet::new(),
+        }
+    }
+
+    /// Record a successful receive from `peer` at virtual time `vtime`:
+    /// clears its suspicion counter. An evicted peer stays evicted —
+    /// rejoin is out of scope (as in BlueFog, a restarted worker comes
+    /// back with a fresh rank assignment).
+    pub fn record_heard(&mut self, peer: usize, vtime: f64) {
+        if peer < self.misses.len() {
+            self.misses[peer] = 0;
+            if vtime > self.last_heard[peer] {
+                self.last_heard[peer] = vtime;
+            }
+        }
+    }
+
+    /// Record a deadline miss against `peer`. Returns `true` if this miss
+    /// crossed `miss_threshold` and evicted the peer.
+    pub fn record_miss(&mut self, peer: usize) -> bool {
+        if peer >= self.misses.len() || self.evicted.contains(&peer) {
+            return false;
+        }
+        self.misses[peer] = self.misses[peer].saturating_add(1);
+        if self.misses[peer] >= self.miss_threshold {
+            self.evicted.insert(peer);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Evict `peer` unconditionally (crash-oracle verdict). Returns
+    /// `true` if the peer was newly evicted.
+    pub fn evict(&mut self, peer: usize) -> bool {
+        if peer < self.misses.len() {
+            self.evicted.insert(peer)
+        } else {
+            false
+        }
+    }
+
+    /// Whether `peer` has been evicted from this rank's view.
+    pub fn is_evicted(&self, peer: usize) -> bool {
+        self.evicted.contains(&peer)
+    }
+
+    /// The evicted set, ascending.
+    pub fn evicted_set(&self) -> &BTreeSet<usize> {
+        &self.evicted
+    }
+
+    /// Current miss count against `peer` (0 if unknown or healthy).
+    pub fn misses(&self, peer: usize) -> u32 {
+        self.misses.get(peer).copied().unwrap_or(0)
+    }
+
+    /// Last virtual time a message from `peer` was received.
+    pub fn last_heard(&self, peer: usize) -> f64 {
+        self.last_heard.get(peer).copied().unwrap_or(0.0)
+    }
+
+    /// All ranks this view still considers alive (always includes `me`).
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.misses.len()).filter(|r| *r == self.me || !self.evicted.contains(r)).collect()
+    }
+
+    /// Number of peers evicted so far.
+    pub fn evicted_count(&self) -> usize {
+        self.evicted.len()
+    }
+}
+
+/// Metropolis–Hastings combine row for rank `i` over the survivors of
+/// `graph` after removing `dead`: in-neighbor weights
+/// `w_ij = 1 / (1 + max(deg'_i, deg'_j))` with degrees taken in the
+/// survivor-induced subgraph, and the self weight absorbing the
+/// remainder.
+///
+/// Returns `(self_weight, vec![(neighbor, weight)])` with neighbors
+/// ascending. Properties (pinned by `tests/faults.rs`):
+///
+/// - row-stochastic: `self_weight + Σ w_ij = 1`, all entries `≥ 0`;
+/// - symmetric-pair-consistent: for an undirected base graph,
+///   `w_ij == w_ji` whenever ranks `i` and `j` hold the same `dead` set —
+///   so the healed matrix is doubly stochastic over survivors;
+/// - reduces to [`super::WeightMatrix::metropolis_hastings`]'s rows when
+///   `dead` is empty.
+///
+/// `dead` may be passed in any order; `i` itself must not be dead.
+pub fn survivor_mh_row(
+    graph: &Graph,
+    dead: &BTreeSet<usize>,
+    i: usize,
+) -> (f64, Vec<(usize, f64)>) {
+    assert!(!dead.contains(&i), "rank {i} asked for its own survivor row while dead");
+    let deg = |r: usize| -> usize {
+        graph.in_neighbors(r).into_iter().filter(|n| !dead.contains(n)).count()
+    };
+    let deg_i = deg(i);
+    let mut row = Vec::new();
+    let mut self_w = 1.0;
+    for j in graph.in_neighbors(i) {
+        if dead.contains(&j) {
+            continue;
+        }
+        let w = 1.0 / (1 + deg_i.max(deg(j))) as f64;
+        self_w -= w;
+        row.push((j, w));
+    }
+    // Guard against accumulated rounding: the remainder is mathematically
+    // >= 1/(1+deg') * 1 > 0 minus deg' terms each <= 1/(1+deg'), so >= 0.
+    (self_w.max(0.0), row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builders;
+
+    #[test]
+    fn miss_counter_evicts_at_threshold() {
+        let mut hv = HealthView::new(4, 0, 3);
+        assert!(!hv.record_miss(2));
+        assert!(!hv.record_miss(2));
+        assert!(hv.record_miss(2));
+        assert!(hv.is_evicted(2));
+        // Further misses against an evicted peer are no-ops.
+        assert!(!hv.record_miss(2));
+        assert_eq!(hv.survivors(), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn heard_resets_suspicion() {
+        let mut hv = HealthView::new(4, 1, 2);
+        hv.record_miss(3);
+        hv.record_heard(3, 1.5);
+        assert_eq!(hv.misses(3), 0);
+        assert!((hv.last_heard(3) - 1.5).abs() < 1e-12);
+        assert!(!hv.record_miss(3));
+        assert!(!hv.is_evicted(3));
+    }
+
+    #[test]
+    fn oracle_eviction_is_immediate() {
+        let mut hv = HealthView::new(5, 0, 8);
+        assert!(hv.evict(4));
+        assert!(!hv.evict(4));
+        assert!(hv.is_evicted(4));
+        assert_eq!(hv.evicted_count(), 1);
+    }
+
+    #[test]
+    fn survivor_row_matches_mh_when_nobody_died() {
+        let graph = builders::ring(6);
+        let weights = crate::topology::WeightMatrix::metropolis_hastings(&graph);
+        let dead = BTreeSet::new();
+        for i in 0..6 {
+            let (self_w, row) = survivor_mh_row(&graph, &dead, i);
+            assert!((self_w - weights.get(i, i)).abs() < 1e-12);
+            for (j, w) in row {
+                assert!((w - weights.get(i, j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn survivor_row_is_stochastic_and_pair_consistent() {
+        let graph = builders::ring(8);
+        let dead: BTreeSet<usize> = [3, 6].into_iter().collect();
+        for i in 0..8 {
+            if dead.contains(&i) {
+                continue;
+            }
+            let (self_w, row) = survivor_mh_row(&graph, &dead, i);
+            let sum: f64 = self_w + row.iter().map(|(_, w)| w).sum::<f64>();
+            assert!((sum - 1.0).abs() < 1e-12, "row {i} sums to {sum}");
+            assert!(self_w >= 0.0);
+            for &(j, w) in &row {
+                assert!(!dead.contains(&j), "row {i} kept dead peer {j}");
+                let (_, back) = survivor_mh_row(&graph, &dead, j);
+                let w_ji = back
+                    .iter()
+                    .find(|(k, _)| *k == i)
+                    .map(|(_, w)| *w)
+                    .expect("undirected graph: reverse entry exists");
+                assert!((w - w_ji).abs() < 1e-12, "w[{i},{j}]={w} vs w[{j},{i}]={w_ji}");
+            }
+        }
+    }
+}

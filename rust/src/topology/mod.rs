@@ -12,15 +12,20 @@
 //! - [`views`] — CSR-packed per-rank pull views and neighbor lists, the
 //!   `O(E)` store the collectives read at scale (a dense matrix is 80
 //!   KB/rank at 10k nodes).
+//! - [`health`] — rank-local failure detection and self-healing weight
+//!   renormalization: miss counters over neighbors, eviction of suspected
+//!   dead peers, and survivor Metropolis–Hastings rows.
 
 pub mod builders;
 pub mod dynamic;
 pub mod graph;
+pub mod health;
 pub mod views;
 pub mod weights;
 
 pub use builders::*;
 pub use dynamic::{DynamicTopology, InnerOuterExpo, OnePeerExpo};
 pub use graph::Graph;
+pub use health::HealthView;
 pub use views::SparseViews;
 pub use weights::WeightMatrix;

@@ -359,6 +359,13 @@ pub fn train_node_async(
         if ctx.vtime() - v_entry >= vtime_budget {
             break;
         }
+        // A rank whose scheduled crash vtime has passed unwinds here
+        // instead of erroring deep inside a comm call: the partial log is
+        // preserved, and the caller distinguishes the crash from a real
+        // failure via `ctx.crashed_now()`.
+        if ctx.crashed_now() {
+            break;
+        }
         // Bounded staleness: hold this rank until the slowest active
         // rank's virtual clock is within the horizon. Under
         // ExecMode::Threads that is a condvar wait on the throttle gate;
@@ -393,7 +400,12 @@ pub fn train_node_async(
             logs.push(log_entry(ctx, &*opt, &t0, step, loss));
         }
     }
-    opt.finalize(ctx, &mut params)?;
+    // A crashed rank must not enter the collective teardown (its peers
+    // will time out on it and evict it); its partial results still come
+    // back so the caller can report where it stopped.
+    if !ctx.crashed_now() {
+        opt.finalize(ctx, &mut params)?;
+    }
     Ok((logs, params))
 }
 

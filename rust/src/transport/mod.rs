@@ -192,6 +192,41 @@ impl Mailbox {
     pub fn stashed(&self) -> usize {
         self.stash.values().map(|v| v.len()).sum()
     }
+
+    /// Block up to `timeout` (wall clock) for one more message to land,
+    /// stashing it. Returns `true` when a message arrived, `false` on
+    /// timeout or a closed channel. Deadline-based receives under
+    /// `ExecMode::Threads` poll through this tick so a dead peer cannot
+    /// hold the receiver forever the way the bare blocking `recv` does.
+    pub fn wait_for_message(&mut self, timeout: std::time::Duration) -> bool {
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => {
+                self.stash.entry((m.src, m.tag)).or_default().push_back(m);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Virtual arrival time of the next `(src, tag)` match, without
+    /// consuming it. Per-link delivery is FIFO (the fault layer keeps
+    /// arrivals monotone per link), so the queue front is the earliest.
+    pub fn earliest_match(&mut self, src: usize, tag: Tag) -> Option<f64> {
+        self.drain_channel();
+        self.stash.get(&(src, tag)).and_then(|q| q.front()).map(|m| m.arrival_vtime)
+    }
+
+    /// `(src, arrival_vtime)` of the earliest-arriving message with `tag`
+    /// from any source (ties broken toward the lowest source rank, so the
+    /// choice is deterministic across runs and exec modes).
+    pub fn earliest_any(&mut self, tag: Tag) -> Option<(usize, f64)> {
+        self.drain_channel();
+        self.stash
+            .iter()
+            .filter(|(&(_, t), q)| t == tag && !q.is_empty())
+            .map(|(&(s, _), q)| (s, q.front().map(|m| m.arrival_vtime).unwrap_or(f64::INFINITY)))
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+    }
 }
 
 /// Per-node virtual clock plus NIC occupancy, shared with the cost model.
@@ -207,6 +242,12 @@ pub struct VClock {
     send_busy: Arc<Mutex<f64>>,
     /// When this node's ingress port frees up (contended by remote senders).
     recv_busy: Arc<Mutex<f64>>,
+    /// Deadline of the finite-deadline receive this node is currently
+    /// parked in (`INFINITY` = not parked). Published under
+    /// `ExecMode::Threads` so peers waiting *on this node* can break
+    /// mutual-wait cycles: two ranks parked on each other would otherwise
+    /// freeze both virtual clocks and poll forever.
+    wait_deadline: Arc<Mutex<f64>>,
 }
 
 impl Default for VClock {
@@ -222,7 +263,26 @@ impl VClock {
             now: Arc::new(Mutex::new(0.0)),
             send_busy: Arc::new(Mutex::new(0.0)),
             recv_busy: Arc::new(Mutex::new(0.0)),
+            wait_deadline: Arc::new(Mutex::new(f64::INFINITY)),
         }
+    }
+
+    /// Publish the deadline of a finite-deadline receive park (Threads
+    /// mode). Cleared with [`VClock::clear_wait_deadline`] on delivery or
+    /// expiry.
+    pub fn set_wait_deadline(&self, deadline: f64) {
+        *self.wait_deadline.lock().unwrap() = deadline;
+    }
+
+    /// Clear the published receive-park deadline.
+    pub fn clear_wait_deadline(&self) {
+        *self.wait_deadline.lock().unwrap() = f64::INFINITY;
+    }
+
+    /// The published receive-park deadline (`INFINITY` when not parked in
+    /// a finite-deadline wait).
+    pub fn wait_deadline(&self) -> f64 {
+        *self.wait_deadline.lock().unwrap()
     }
 
     /// Current local virtual time in seconds.
@@ -266,6 +326,7 @@ impl VClock {
         *self.now.lock().unwrap() = 0.0;
         *self.send_busy.lock().unwrap() = 0.0;
         *self.recv_busy.lock().unwrap() = 0.0;
+        *self.wait_deadline.lock().unwrap() = f64::INFINITY;
     }
 }
 

@@ -150,6 +150,10 @@ impl NodeContext {
         // virtual-time order (a peer with an earlier clock drains its
         // window before this later write appears in it).
         self.coop_yield();
+        // One-sided ops cannot hang on a dead peer (the table is local),
+        // so the fault layer's only hook here is the caller's own crash
+        // schedule.
+        self.fault_guard()?;
         let dsts = self.default_dsts(dst_weights);
         for (dst, w) in dsts {
             let arrival = self.one_sided_arrival(dst, tensor.len() * 4);
@@ -191,8 +195,9 @@ impl NodeContext {
         self_weight: f64,
         dst_weights: &[(usize, f64)],
     ) -> anyhow::Result<()> {
-        // Same vtime-ordering yield as win_put (see there).
+        // Same vtime-ordering yield and crash guard as win_put (see there).
         self.coop_yield();
+        self.fault_guard()?;
         let dsts = self.default_dsts(dst_weights);
         for &(dst, w) in &dsts {
             let arrival = self.one_sided_arrival(dst, tensor.len() * 4);
@@ -222,8 +227,9 @@ impl NodeContext {
     /// *registered* tensor (as of its last `win_update*`) into this rank's
     /// own window slots, scaled by the source weight.
     pub fn win_get(&self, name: &str, src_weights: &[(usize, f64)]) -> anyhow::Result<()> {
-        // Same vtime-ordering yield as win_put (see there).
+        // Same vtime-ordering yield and crash guard as win_put (see there).
         self.coop_yield();
+        self.fault_guard()?;
         let srcs = self.default_srcs(src_weights);
         let own = self.windows.get(self.rank(), name)?;
         for (src, w) in srcs {
@@ -300,6 +306,7 @@ impl NodeContext {
         src_weights: &[(usize, f64)],
         causal: bool,
     ) -> anyhow::Result<Vec<f32>> {
+        self.fault_guard()?;
         let srcs = self.default_srcs(src_weights);
         let entry = self.windows.get(self.rank(), name)?;
         let mut st = entry.lock().unwrap();
@@ -376,6 +383,7 @@ impl NodeContext {
     /// future is skipped whole (per-source writes arrive in causal order, so
     /// an arrived latest write implies every merged write has arrived).
     fn drain_window(&self, name: &str, tensor: &mut [f32], causal: bool) -> anyhow::Result<usize> {
+        self.fault_guard()?;
         let entry = self.windows.get(self.rank(), name)?;
         let mut guard = entry.lock().unwrap();
         let st = &mut *guard;
