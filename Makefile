@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: verify build test examples benches bench-hotpath bench-compress bench-async bench-scale bench-chaos artifacts clean
+.PHONY: verify build test examples benches bench-hotpath bench-compress bench-async bench-scale bench-chaos bench-wallclock artifacts clean
 
 verify: build test
 
@@ -52,6 +52,16 @@ bench-scale:
 # CHAOS_SMOKE=1 for a CI-sized run.
 bench-chaos:
 	cargo run --release --example chaos_probe
+
+# Real wall-clock milliseconds for consensus + DSGD over both transport
+# backends: in-process SimBackends vs 4 real OS processes on loopback TCP
+# (the probe re-executes itself per rank, DESIGN.md §Transport backends);
+# writes BENCH_wallclock.json (mean/p95/ci90 ms/iter per backend, virtual
+# time alongside) and gates sim/tcp parity <= 1e-6, identical payload byte
+# counters, and the killed-worker -> peer_down path. Set WALLCLOCK_SMOKE=1
+# for a CI-sized run.
+bench-wallclock:
+	cargo run --release --example wallclock_probe
 
 # Sweep every BENCH_*.json the probes have produced into ./artifacts — a
 # glob, so new probes are picked up without editing this target — then

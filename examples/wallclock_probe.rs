@@ -1,0 +1,283 @@
+// Wall-clock probe (ISSUE 8): real milliseconds next to virtual-time
+// numbers, measured over the two transport backends:
+//
+//   * sim — the portable workloads on in-process `SimBackend`s (one OS
+//     thread per rank, no virtual network charging), plus a `run_spmd`
+//     reference run that reports the virtual-time cost model's seconds
+//     for the same DSGD shape;
+//   * tcp — the same workloads as REAL OS processes over loopback TCP
+//     (`run_tcp_job` re-executes this binary, one process per rank).
+//
+// Methodology (EXPERIMENTS.md §E16): the first WARMUP iterations of every
+// run are discarded (socket buffers, allocator pools and branch caches
+// warm up), stats are computed over the trimmed per-iteration wall times
+// with `metrics::Stats` (mean/p95/ci90), and loopback numbers are a LOWER
+// bound on real-network cost — no NIC, no switch, kernel memcpy only.
+//
+// Gates:
+//   * sim/tcp parity: per-workload max |x_sim - x_tcp| <= 1e-6 and
+//     bit-identical payload byte counters on every rank;
+//   * failure path: a worker killed mid-run (abandoned sockets, no
+//     Goodbye) surfaces as `peer_down` on every survivor and the whole
+//     job still completes — the probe finishing is the no-hang gate;
+//   * the JSON artifact (`BENCH_wallclock.json`) always carries real
+//     milliseconds for both backends.
+//
+// Run: `make bench-wallclock` (or `cargo run --release --example
+// wallclock_probe`). Env: WALLCLOCK_SMOKE=1 shrinks sizes for CI;
+// BENCH_WALLCLOCK_OUT overrides the output path.
+
+use bluefog::config::{PortableWorkload, TcpJobSpec};
+use bluefog::launcher::{maybe_run_tcp_worker, run_spmd, run_tcp_job, worker_exit, SpmdConfig};
+use bluefog::metrics::Stats;
+use bluefog::optim::{CommSpec, DecentralizedOptimizer, Dgd, StepOrder};
+use bluefog::topology::builders;
+use bluefog::transport::portable::{local_grad, regression_data, run_sim_fleet, RunOutput, RunSpec};
+
+const NODES: usize = 4;
+const TOPOLOGY: &str = "ring";
+/// Discarded leading iterations (§E16 warmup).
+const WARMUP: usize = 3;
+
+struct Shape {
+    iters: usize,
+    dim: usize,
+    rows: usize,
+    gamma: f32,
+}
+
+fn shape(smoke: bool) -> Shape {
+    if smoke {
+        Shape { iters: 16, dim: 256, rows: 16, gamma: 0.05 }
+    } else {
+        Shape { iters: 48, dim: 4096, rows: 32, gamma: 0.05 }
+    }
+}
+
+fn job(workload: PortableWorkload, s: &Shape) -> TcpJobSpec {
+    TcpJobSpec {
+        workload,
+        nodes: NODES,
+        iters: s.iters,
+        dim: s.dim,
+        rows: s.rows,
+        gamma: s.gamma,
+        topology: TOPOLOGY.into(),
+        deadline_secs: 30.0,
+        kill: None,
+    }
+}
+
+/// Stats over the warmup-trimmed per-iteration wall milliseconds.
+fn trimmed_stats(iter_ms: &[f64]) -> Stats {
+    let trimmed = &iter_ms[WARMUP.min(iter_ms.len() - 1)..];
+    Stats::from(trimmed)
+}
+
+/// Mean per-iteration milliseconds across all ranks (untrimmed; the
+/// caller applies the §E16 warmup trim via [`trimmed_stats`]).
+fn fleet_iter_ms(outs: &[RunOutput]) -> Vec<f64> {
+    let iters = outs[0].iter_ms.len();
+    (0..iters)
+        .map(|i| outs.iter().map(|o| o.iter_ms[i]).sum::<f64>() / outs.len() as f64)
+        .collect()
+}
+
+/// Virtual seconds the simulator's cost model charges for the same DSGD
+/// shape (ring + Metropolis-Hastings, ATC order) — the number printed
+/// next to the real milliseconds.
+fn sim_vtime_dsgd(s: &Shape) -> anyhow::Result<f64> {
+    let (graph, weights) = builders::by_name(TOPOLOGY, NODES)?;
+    let cfg = SpmdConfig::new(NODES).with_topology(graph, weights).with_topo_check(false);
+    let iters = s.iters;
+    let dim = s.dim;
+    let rows = s.rows;
+    let gamma = s.gamma;
+    let results = run_spmd(cfg, move |ctx| {
+        let (a, b) = regression_data(ctx.rank(), dim, rows);
+        let mut x = vec![0.0f32; dim];
+        let mut grad = vec![0.0f32; dim];
+        let mut opt = Dgd::new(gamma, StepOrder::Atc, CommSpec::Static);
+        for _ in 0..iters {
+            local_grad(&a, &b, &x, &mut grad);
+            opt.step(ctx, &mut x, &grad)?;
+        }
+        Ok(ctx.vtime())
+    })?;
+    Ok(results.into_iter().fold(0.0f64, f64::max))
+}
+
+struct BackendRow {
+    ms: Stats,
+    bytes: Vec<u64>,
+    x: Vec<Vec<f32>>,
+}
+
+/// One workload measured over both backends + the parity verdict.
+struct WorkloadResult {
+    name: &'static str,
+    sim: BackendRow,
+    tcp: BackendRow,
+    max_delta: f64,
+}
+
+fn run_workload_rows(workload: PortableWorkload, s: &Shape) -> anyhow::Result<WorkloadResult> {
+    let spec = job(workload, s);
+    let run = RunSpec::from_job(&spec);
+
+    let sim_outs: Vec<RunOutput> = run_sim_fleet(NODES, workload, &run)
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("sim fleet failed: {e}"))?;
+    let sim = BackendRow {
+        ms: trimmed_stats(&fleet_iter_ms(&sim_outs)),
+        bytes: sim_outs.iter().map(|o| o.bytes_sent).collect(),
+        x: sim_outs.into_iter().map(|o| o.x).collect(),
+    };
+
+    let report = run_tcp_job(&spec)?;
+    let tcp_outs = report.outputs()?;
+    let tcp = BackendRow {
+        ms: trimmed_stats(&fleet_iter_ms(&tcp_outs)),
+        bytes: tcp_outs.iter().map(|o| o.bytes_sent).collect(),
+        x: tcp_outs.into_iter().map(|o| o.x).collect(),
+    };
+
+    let mut max_delta = 0.0f64;
+    for (xs, xt) in sim.x.iter().zip(&tcp.x) {
+        for (a, b) in xs.iter().zip(xt) {
+            max_delta = max_delta.max((*a as f64 - *b as f64).abs());
+        }
+    }
+    anyhow::ensure!(
+        max_delta <= 1e-6,
+        "{}: sim/tcp parameters diverged by {max_delta:.3e} (gate 1e-6)",
+        workload.as_str()
+    );
+    anyhow::ensure!(
+        sim.bytes == tcp.bytes,
+        "{}: payload byte counters differ: sim {:?} vs tcp {:?}",
+        workload.as_str(),
+        sim.bytes,
+        tcp.bytes
+    );
+    println!(
+        "  {:<9} | sim {:8.4} ms/iter (p95 {:8.4}) | tcp {:8.4} ms/iter (p95 {:8.4}) | \
+         max |delta| {max_delta:.2e} | bytes/rank {}",
+        workload.as_str(),
+        sim.ms.mean,
+        sim.ms.p95,
+        tcp.ms.mean,
+        tcp.ms.p95,
+        sim.bytes[0]
+    );
+    Ok(WorkloadResult { name: workload.as_str(), sim, tcp, max_delta })
+}
+
+/// Failure path: kill rank 2 before iteration 3 (sockets abandoned, no
+/// Goodbye — a `kill -9` model). Every survivor must observe the typed
+/// `peer_down` error; nothing may hang.
+fn run_kill_gate(s: &Shape) -> anyhow::Result<()> {
+    let mut spec = job(PortableWorkload::Consensus, s);
+    spec.iters = 16.min(s.iters);
+    spec.dim = 64.min(s.dim);
+    spec.deadline_secs = 20.0;
+    spec.kill = Some((2, 3));
+    let report = run_tcp_job(&spec)?;
+    let victim = &report.ranks[2];
+    anyhow::ensure!(
+        victim.exit_code == Some(worker_exit::KILLED),
+        "victim exit code {:?}, expected {}",
+        victim.exit_code,
+        worker_exit::KILLED
+    );
+    for r in report.ranks.iter().filter(|r| r.rank != 2) {
+        let err = r.error.as_ref();
+        anyhow::ensure!(
+            err.map(|e| e.kind == "peer_down").unwrap_or(false),
+            "rank {} did not observe peer_down (got {:?}, exit code {:?})",
+            r.rank,
+            r.error,
+            r.exit_code
+        );
+        anyhow::ensure!(
+            r.exit_code == Some(worker_exit::COMM),
+            "rank {} exit code {:?}, expected {}",
+            r.rank,
+            r.exit_code,
+            worker_exit::COMM
+        );
+    }
+    println!("  kill gate | rank 2 killed at iter 3 -> 3 survivors saw peer_down, no hang");
+    Ok(())
+}
+
+fn stats_json(s: &Stats) -> String {
+    format!(
+        "{{\"mean_ms\": {:.6}, \"p95_ms\": {:.6}, \"ci90_ms\": {:.6}, \"n\": {}}}",
+        s.mean, s.p95, s.ci90, s.n
+    )
+}
+
+fn workload_json(w: &WorkloadResult) -> String {
+    format!(
+        concat!(
+            "    \"{}\": {{\n",
+            "      \"sim_wall\": {},\n",
+            "      \"tcp_wall\": {},\n",
+            "      \"max_delta\": {:.3e},\n",
+            "      \"payload_bytes_per_rank\": {}\n",
+            "    }}"
+        ),
+        w.name,
+        stats_json(&w.sim.ms),
+        stats_json(&w.tcp.ms),
+        w.max_delta,
+        w.sim.bytes[0]
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    // Worker mode first: `run_tcp_job` re-executes THIS binary as the
+    // per-rank worker processes.
+    maybe_run_tcp_worker();
+
+    let smoke = std::env::var("WALLCLOCK_SMOKE").is_ok();
+    let s = shape(smoke);
+    println!(
+        "wallclock probe: {NODES} procs ({TOPOLOGY}) dim={} iters={} warmup={WARMUP} smoke={smoke}",
+        s.dim, s.iters
+    );
+
+    let vtime = sim_vtime_dsgd(&s)?;
+    println!("  virtual   | cost-model DSGD time {vtime:.6} s (ring, ATC)");
+
+    let consensus = run_workload_rows(PortableWorkload::Consensus, &s)?;
+    let dsgd = run_workload_rows(PortableWorkload::Dsgd, &s)?;
+    run_kill_gate(&s)?;
+
+    let json = format!(
+        concat!(
+            "{{\n  \"bench\": \"wallclock\",\n  \"nodes\": {},\n  \"topology\": \"{}\",\n",
+            "  \"dim\": {},\n  \"iters\": {},\n  \"warmup\": {},\n  \"smoke\": {},\n",
+            "  \"loopback_lower_bound\": true,\n",
+            "  \"sim_vtime_dsgd_s\": {:.6},\n",
+            "  \"workloads\": {{\n{},\n{}\n  }}\n}}\n"
+        ),
+        NODES,
+        TOPOLOGY,
+        s.dim,
+        s.iters,
+        WARMUP,
+        smoke,
+        vtime,
+        workload_json(&consensus),
+        workload_json(&dsgd),
+    );
+    let out_path =
+        std::env::var("BENCH_WALLCLOCK_OUT").unwrap_or_else(|_| "BENCH_wallclock.json".into());
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    println!("wallclock_probe OK");
+    Ok(())
+}

@@ -65,6 +65,16 @@ impl Args {
         }
     }
 
+    /// Optional `usize` value of `--key`: `None` when absent, error on
+    /// unparsable input (flags like `--kill-rank` that have no meaningful
+    /// default).
+    pub fn usize_opt(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
     /// `f64` value of `--key` or `default`; errors on unparsable input.
     pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(key) {
@@ -122,6 +132,15 @@ mod tests {
         let a = parse("");
         assert_eq!(a.usize_or("nodes", 4).unwrap(), 4);
         assert!(!a.has("anything"));
+    }
+
+    #[test]
+    fn optional_usize() {
+        let a = parse("--kill-rank 2");
+        assert_eq!(a.usize_opt("kill-rank").unwrap(), Some(2));
+        assert_eq!(a.usize_opt("kill-at").unwrap(), None);
+        let a = parse("--kill-rank two");
+        assert!(a.usize_opt("kill-rank").is_err());
     }
 
     #[test]

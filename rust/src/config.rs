@@ -144,6 +144,163 @@ impl WorkloadModel {
     }
 }
 
+/// Which backend-portable workload a TCP worker process runs
+/// (`transport::portable::{run_consensus, run_dsgd}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PortableWorkload {
+    /// Iterated consensus `x <- W x`.
+    Consensus,
+    /// DSGD with ATC ordering on the shared synthetic regression problem.
+    Dsgd,
+}
+
+impl PortableWorkload {
+    /// Stable name used on the CLI and in the env handshake.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PortableWorkload::Consensus => "consensus",
+            PortableWorkload::Dsgd => "dsgd",
+        }
+    }
+
+    /// Inverse of [`PortableWorkload::as_str`].
+    pub fn parse(s: &str) -> anyhow::Result<PortableWorkload> {
+        match s {
+            "consensus" => Ok(PortableWorkload::Consensus),
+            "dsgd" => Ok(PortableWorkload::Dsgd),
+            other => anyhow::bail!("unknown workload '{other}' (expected consensus|dsgd)"),
+        }
+    }
+}
+
+/// Description of a multi-process TCP job, shipped from the `bfrun`
+/// parent to each worker through environment variables (DESIGN.md
+/// §Transport backends: the launch handshake).
+///
+/// The parent serializes the spec with [`TcpJobSpec::to_env`]; a child
+/// detects worker mode via [`TcpJobSpec::ENV_WORKER`] and reconstructs
+/// everything with [`TcpJobSpec::from_lookup`]. Round-tripping is tested
+/// here so the two directions cannot drift apart.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TcpJobSpec {
+    /// Which portable workload to run.
+    pub workload: PortableWorkload,
+    /// Process count (one OS process per rank).
+    pub nodes: usize,
+    /// Iteration count.
+    pub iters: usize,
+    /// Tensor dimension.
+    pub dim: usize,
+    /// Rows per rank (DSGD only).
+    pub rows: usize,
+    /// DSGD step size.
+    pub gamma: f32,
+    /// Topology name (`topology::builders::by_name`).
+    pub topology: String,
+    /// Per-receive wall deadline in seconds (0 = no deadline).
+    pub deadline_secs: f64,
+    /// Optional crash injection: `(rank, at_iter)`.
+    pub kill: Option<(usize, usize)>,
+}
+
+/// What a worker process reads back from its environment: its rank, the
+/// rendezvous port (absent for rank 0, which *owns* the rendezvous), and
+/// the job spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TcpWorkerSetup {
+    /// This process's rank.
+    pub rank: usize,
+    /// Rank 0's rendezvous port (`None` when `rank == 0`).
+    pub port: Option<u16>,
+    /// The job description, identical across all ranks.
+    pub spec: TcpJobSpec,
+}
+
+impl TcpJobSpec {
+    /// Sentinel: set (to any value) in a child's environment to route
+    /// `main` into the worker entry point instead of the CLI.
+    pub const ENV_WORKER: &'static str = "BF_TCP_WORKER";
+    /// Rendezvous port env var (set for ranks >= 1 only).
+    pub const ENV_PORT: &'static str = "BF_PORT";
+
+    /// Serialize for one child process. `port` is `None` for rank 0
+    /// (which binds the rendezvous itself and prints the port on stdout)
+    /// and `Some` for every other rank.
+    pub fn to_env(&self, rank: usize, port: Option<u16>) -> Vec<(String, String)> {
+        let mut vars = vec![
+            (Self::ENV_WORKER.into(), "1".into()),
+            ("BF_RANK".into(), rank.to_string()),
+            ("BF_SIZE".into(), self.nodes.to_string()),
+            ("BF_JOB".into(), self.workload.as_str().into()),
+            ("BF_ITERS".into(), self.iters.to_string()),
+            ("BF_DIM".into(), self.dim.to_string()),
+            ("BF_ROWS".into(), self.rows.to_string()),
+            ("BF_GAMMA".into(), self.gamma.to_string()),
+            ("BF_TOPOLOGY".into(), self.topology.clone()),
+            ("BF_DEADLINE_SECS".into(), self.deadline_secs.to_string()),
+        ];
+        if let Some(p) = port {
+            vars.push((Self::ENV_PORT.into(), p.to_string()));
+        }
+        if let Some((kr, ka)) = self.kill {
+            vars.push(("BF_KILL_RANK".into(), kr.to_string()));
+            vars.push(("BF_KILL_AT".into(), ka.to_string()));
+        }
+        vars
+    }
+
+    /// Reconstruct a worker's setup from a key -> value lookup (the
+    /// process environment in production, a map in tests).
+    pub fn from_lookup(get: impl Fn(&str) -> Option<String>) -> anyhow::Result<TcpWorkerSetup> {
+        fn req<T: std::str::FromStr>(
+            get: &impl Fn(&str) -> Option<String>,
+            key: &str,
+        ) -> anyhow::Result<T>
+        where
+            T::Err: std::fmt::Display,
+        {
+            let raw = get(key).ok_or_else(|| anyhow::anyhow!("missing env var {key}"))?;
+            raw.parse().map_err(|e| anyhow::anyhow!("{key}={raw}: {e}"))
+        }
+        let rank: usize = req(&get, "BF_RANK")?;
+        let port = match get(Self::ENV_PORT) {
+            None => None,
+            Some(raw) => {
+                Some(raw.parse::<u16>().map_err(|e| anyhow::anyhow!("BF_PORT={raw}: {e}"))?)
+            }
+        };
+        anyhow::ensure!(
+            (rank == 0) == port.is_none(),
+            "BF_PORT must be set exactly when BF_RANK >= 1 (rank={rank}, port={port:?})",
+        );
+        let kill = match (get("BF_KILL_RANK"), get("BF_KILL_AT")) {
+            (None, None) => None,
+            (Some(_), None) | (None, Some(_)) => {
+                anyhow::bail!("BF_KILL_RANK and BF_KILL_AT must be set together")
+            }
+            (Some(_), Some(_)) => {
+                Some((req(&get, "BF_KILL_RANK")?, req(&get, "BF_KILL_AT")?))
+            }
+        };
+        let spec = TcpJobSpec {
+            workload: PortableWorkload::parse(
+                &get("BF_JOB").ok_or_else(|| anyhow::anyhow!("missing env var BF_JOB"))?,
+            )?,
+            nodes: req(&get, "BF_SIZE")?,
+            iters: req(&get, "BF_ITERS")?,
+            dim: req(&get, "BF_DIM")?,
+            rows: req(&get, "BF_ROWS")?,
+            gamma: req(&get, "BF_GAMMA")?,
+            topology: get("BF_TOPOLOGY")
+                .ok_or_else(|| anyhow::anyhow!("missing env var BF_TOPOLOGY"))?,
+            deadline_secs: req(&get, "BF_DEADLINE_SECS")?,
+            kill,
+        };
+        anyhow::ensure!(rank < spec.nodes, "BF_RANK {rank} out of range for BF_SIZE");
+        Ok(TcpWorkerSetup { rank, port, spec })
+    }
+}
+
 /// Split `total` into `k` buckets with geometric ratio `r` (later buckets
 /// larger), summing exactly to `total`.
 fn geometric_buckets(total: usize, k: usize, r: f64) -> Vec<usize> {
@@ -191,6 +348,66 @@ mod tests {
         assert_eq!(WorkloadModel::resnet50().params, 23_000_000);
         assert_eq!(WorkloadModel::vgg16().params, 138_000_000);
         assert_eq!(WorkloadModel::bert_large().params, 345_000_000);
+    }
+
+    fn job() -> TcpJobSpec {
+        TcpJobSpec {
+            workload: PortableWorkload::Dsgd,
+            nodes: 4,
+            iters: 25,
+            dim: 64,
+            rows: 16,
+            gamma: 0.05,
+            topology: "ring".into(),
+            deadline_secs: 10.0,
+            kill: Some((2, 3)),
+        }
+    }
+
+    fn lookup(vars: &[(String, String)]) -> impl Fn(&str) -> Option<String> + '_ {
+        move |k| vars.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone())
+    }
+
+    #[test]
+    fn tcp_job_env_round_trips() {
+        let spec = job();
+        // Rank 0: no BF_PORT.
+        let vars = spec.to_env(0, None);
+        let setup = TcpJobSpec::from_lookup(lookup(&vars)).unwrap();
+        assert_eq!(setup, TcpWorkerSetup { rank: 0, port: None, spec: spec.clone() });
+        // Rank 2: BF_PORT present.
+        let vars = spec.to_env(2, Some(40123));
+        let setup = TcpJobSpec::from_lookup(lookup(&vars)).unwrap();
+        assert_eq!(setup, TcpWorkerSetup { rank: 2, port: Some(40123), spec });
+    }
+
+    #[test]
+    fn tcp_job_env_rejects_inconsistency() {
+        let spec = job();
+        // Rank 1 without a port is a launch bug, not a default.
+        assert!(TcpJobSpec::from_lookup(lookup(&spec.to_env(1, None))).is_err());
+        // Rank 0 with a port likewise.
+        assert!(TcpJobSpec::from_lookup(lookup(&spec.to_env(0, Some(9)))).is_err());
+        // Half a kill spec is rejected.
+        let mut vars = spec.to_env(0, None);
+        vars.retain(|(k, _)| k != "BF_KILL_AT");
+        assert!(TcpJobSpec::from_lookup(lookup(&vars)).is_err());
+        // Out-of-range rank is rejected.
+        let mut vars = spec.to_env(3, Some(9));
+        for (k, v) in vars.iter_mut() {
+            if k == "BF_RANK" {
+                *v = "7".into();
+            }
+        }
+        assert!(TcpJobSpec::from_lookup(lookup(&vars)).is_err());
+    }
+
+    #[test]
+    fn workload_names_round_trip() {
+        for w in [PortableWorkload::Consensus, PortableWorkload::Dsgd] {
+            assert_eq!(PortableWorkload::parse(w.as_str()).unwrap(), w);
+        }
+        assert!(PortableWorkload::parse("blob").is_err());
     }
 
     #[test]

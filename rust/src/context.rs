@@ -23,6 +23,7 @@ use crate::topology::health::HealthView;
 use crate::tensor::{weighted_combine_blocked_into, weighted_combine_into};
 use crate::timeline::Timeline;
 use crate::topology::{Graph, SparseViews, WeightMatrix};
+use crate::transport::backend::payload_nbytes;
 use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, Tag, VClock};
 use crate::window::WindowTable;
 
@@ -827,7 +828,9 @@ impl NodeContext {
         payload: std::sync::Arc<Vec<f32>>,
     ) -> anyhow::Result<()> {
         let bytes = payload.len() * 4;
-        self.tx_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        // Same payload-only accounting rule as `Backend::bytes_sent`, so
+        // sim-vs-tcp byte counters are comparable by construction.
+        self.tx_bytes.fetch_add(payload_nbytes(payload.len()), Ordering::Relaxed);
         let now = self.clock().now();
         let ser = self.net.port_time(self.rank, dst, bytes);
         let send_done = self.clock().reserve_send(now, ser);

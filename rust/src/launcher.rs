@@ -6,21 +6,28 @@
 //! virtual clocks, the negotiation service, the window table, per-node
 //! communication threads and (optionally) the PJRT device service.
 
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::compress::CompressionSpec;
+use crate::config::{TcpJobSpec, TcpWorkerSetup};
 use crate::context::{NodeContext, ThrottleGate, TopologyState};
 use crate::negotiation::{NegotiationService, Rendezvous};
 use crate::nonblocking::{CommEngine, CommThread};
 use crate::pool::HotPath;
 use crate::runtime::DeviceHandle;
 use crate::simnet::event::{Grant, Scheduler};
-use crate::simnet::faults::FaultPlan;
+use crate::simnet::faults::{CommError, FaultPlan};
 use crate::simnet::hetero::ComputeHeterogeneity;
 use crate::simnet::NetworkModel;
 use crate::timeline::Timeline;
 use crate::topology::{builders, Graph, WeightMatrix};
+use crate::transport::backend::Backend;
+use crate::transport::portable::{self, RunOutput, RunSpec};
+use crate::transport::tcp;
 use crate::transport::{fabric, VClock};
 use crate::window::WindowTable;
 
@@ -532,4 +539,351 @@ where
     F: Fn(&mut NodeContext) -> anyhow::Result<T> + Send + Sync + 'static,
 {
     run_spmd(SpmdConfig::new(nodes), f)
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process TCP jobs (ISSUE 8): real OS processes over loopback sockets.
+// ---------------------------------------------------------------------------
+
+/// Which transport a `bfrun` job runs over.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The in-process virtual-time fabric ([`run_spmd`]).
+    #[default]
+    Sim,
+    /// One OS process per rank over loopback TCP ([`run_tcp_job`]).
+    Tcp,
+}
+
+impl BackendKind {
+    /// Parse a `--backend` CLI value.
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        match s {
+            "sim" => Ok(BackendKind::Sim),
+            "tcp" => Ok(BackendKind::Tcp),
+            other => anyhow::bail!("unknown backend '{other}' (expected sim|tcp)"),
+        }
+    }
+}
+
+/// Stable exit codes of TCP worker processes — part of the launch
+/// protocol (DESIGN.md §Transport backends), asserted by the failure
+/// tests so they cannot drift silently.
+pub mod worker_exit {
+    /// Clean run; `BFRES`/`BFMS` lines were printed.
+    pub const OK: i32 = 0;
+    /// Bad environment or failed rendezvous/mesh setup.
+    pub const SETUP: i32 = 2;
+    /// Typed communication failure (`peer_down` or `timeout`).
+    pub const COMM: i32 = 3;
+    /// This rank was the scheduled crash victim (`BF_KILL_RANK`).
+    pub const KILLED: i32 = 17;
+}
+
+/// Worker-process entry point: when [`TcpJobSpec::ENV_WORKER`] is set in
+/// the environment, run the TCP worker to completion and **exit the
+/// process**; otherwise return immediately. `main` must call this before
+/// any CLI handling — it is how one binary serves as both launcher and
+/// rank.
+pub fn maybe_run_tcp_worker() {
+    if std::env::var_os(TcpJobSpec::ENV_WORKER).is_none() {
+        return;
+    }
+    std::process::exit(tcp_worker_main());
+}
+
+/// Build this worker's [`tcp::TcpBackend`]: rank 0 binds the rendezvous
+/// and publishes its port on stdout (§RDZ-1 — the parent relays it to
+/// the other ranks); everyone else dials in.
+fn connect_worker(setup: &TcpWorkerSetup) -> std::io::Result<tcp::TcpBackend> {
+    if setup.rank == 0 {
+        let rdz = tcp::Rendezvous::bind()?;
+        println!("BFPORT port={}", rdz.port()?);
+        std::io::stdout().flush()?;
+        rdz.establish(setup.spec.nodes)
+    } else {
+        let port = setup.port.expect("from_lookup validated BF_PORT for rank >= 1");
+        tcp::TcpBackend::connect(setup.rank, setup.spec.nodes, port)
+    }
+}
+
+fn tcp_worker_main() -> i32 {
+    let setup = match TcpJobSpec::from_lookup(|k| std::env::var(k).ok()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bf-tcp-worker: bad environment: {e:#}");
+            return worker_exit::SETUP;
+        }
+    };
+    let rank = setup.rank;
+    let mut backend = match connect_worker(&setup) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("bf-tcp-worker rank {rank}: setup failed: {e}");
+            return worker_exit::SETUP;
+        }
+    };
+    let run = RunSpec::from_job(&setup.spec);
+    let result = portable::run_workload(&mut backend, setup.spec.workload, &run);
+    // Result lines use `{}` float formatting: Rust's shortest round-trip
+    // representation, so the parent reparses bit-identical values.
+    match result {
+        Ok(out) => {
+            let xs: Vec<String> = out.x.iter().map(|v| v.to_string()).collect();
+            println!("BFRES rank={rank} bytes={} x={}", out.bytes_sent, xs.join(","));
+            let ms: Vec<String> = out.iter_ms.iter().map(|v| v.to_string()).collect();
+            println!("BFMS rank={rank} ms={}", ms.join(","));
+            backend.shutdown();
+            worker_exit::OK
+        }
+        Err(CommError::SelfCrash { .. }) => {
+            println!("BFERR rank={rank} kind=self_crash");
+            worker_exit::KILLED
+        }
+        Err(CommError::PeerDown { peer, .. }) => {
+            println!("BFERR rank={rank} kind=peer_down peer={peer}");
+            worker_exit::COMM
+        }
+        Err(CommError::Timeout { src, .. }) => {
+            println!("BFERR rank={rank} kind=timeout peer={src}");
+            worker_exit::COMM
+        }
+    }
+}
+
+/// A worker's `BFERR` line, parsed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TcpWorkerError {
+    /// `peer_down`, `timeout`, or `self_crash`.
+    pub kind: String,
+    /// The peer rank involved, when the kind names one.
+    pub peer: Option<usize>,
+}
+
+/// Everything the parent learned about one worker process.
+#[derive(Debug, Clone)]
+pub struct TcpRankOutcome {
+    /// The worker's rank.
+    pub rank: usize,
+    /// Parsed results when the run completed (`BFRES` + `BFMS` lines).
+    pub output: Option<RunOutput>,
+    /// Parsed `BFERR` line, if the worker failed.
+    pub error: Option<TcpWorkerError>,
+    /// Process exit code (`None` when killed by a signal) — compare
+    /// against [`worker_exit`].
+    pub exit_code: Option<i32>,
+}
+
+/// Result of a multi-process TCP job, index = rank.
+#[derive(Debug, Clone)]
+pub struct TcpJobReport {
+    /// Per-rank outcomes.
+    pub ranks: Vec<TcpRankOutcome>,
+}
+
+impl TcpJobReport {
+    /// All ranks' outputs; errors (with the failing rank's diagnosis) if
+    /// any worker did not complete.
+    pub fn outputs(&self) -> anyhow::Result<Vec<RunOutput>> {
+        self.ranks
+            .iter()
+            .map(|r| {
+                r.output.clone().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "rank {} failed: {:?} (exit code {:?})",
+                        r.rank,
+                        r.error,
+                        r.exit_code
+                    )
+                })
+            })
+            .collect()
+    }
+}
+
+/// Split a comma-joined protocol list, tolerating the empty string.
+fn split_list(v: &str) -> impl Iterator<Item = &str> {
+    v.split(',').filter(|s| !s.is_empty())
+}
+
+/// Accumulates one worker's protocol lines into a [`TcpRankOutcome`].
+#[derive(Default)]
+struct LineAccumulator {
+    x: Option<Vec<f32>>,
+    bytes: Option<u64>,
+    ms: Option<Vec<f64>>,
+    error: Option<TcpWorkerError>,
+}
+
+impl LineAccumulator {
+    fn feed(&mut self, line: &str) {
+        let mut tokens = line.split_whitespace();
+        let op = tokens.next().unwrap_or("");
+        let kv: HashMap<&str, &str> = tokens.filter_map(|t| t.split_once('=')).collect();
+        match op {
+            "BFRES" => {
+                self.bytes = kv.get("bytes").and_then(|v| v.parse().ok());
+                self.x =
+                    kv.get("x").map(|v| split_list(v).filter_map(|s| s.parse().ok()).collect());
+            }
+            "BFMS" => {
+                self.ms =
+                    kv.get("ms").map(|v| split_list(v).filter_map(|s| s.parse().ok()).collect());
+            }
+            "BFERR" => {
+                self.error = Some(TcpWorkerError {
+                    kind: kv.get("kind").unwrap_or(&"other").to_string(),
+                    peer: kv.get("peer").and_then(|v| v.parse().ok()),
+                });
+            }
+            _ => {}
+        }
+    }
+
+    fn finish(self, out: &mut TcpRankOutcome) {
+        if let (Some(x), Some(bytes)) = (self.x, self.bytes) {
+            out.output =
+                Some(RunOutput { x, bytes_sent: bytes, iter_ms: self.ms.unwrap_or_default() });
+        }
+        out.error = self.error;
+    }
+}
+
+/// Read rank 0's stdout until it publishes `BFPORT port=P`.
+fn read_port(lines: &mut impl Iterator<Item = std::io::Result<String>>) -> anyhow::Result<u16> {
+    for line in lines {
+        let line = line?;
+        if let Some(p) = line.strip_prefix("BFPORT port=") {
+            return Ok(p.trim().parse()?);
+        }
+    }
+    anyhow::bail!("rank 0 exited before publishing its rendezvous port")
+}
+
+/// Launch `spec.nodes` worker processes of the *current executable* over
+/// loopback TCP and collect their results.
+///
+/// Rank 0 is spawned first with no port assignment; it binds the
+/// rendezvous listener on an **ephemeral** port and prints
+/// `BFPORT port=P`, which the parent forwards to ranks 1..n via
+/// `BF_PORT`. Ports are never chosen by the launcher, so parallel jobs
+/// on one host (CI shards) cannot collide — the port-allocation guard of
+/// DESIGN.md §RDZ-1.
+pub fn run_tcp_job(spec: &TcpJobSpec) -> anyhow::Result<TcpJobReport> {
+    anyhow::ensure!(spec.nodes >= 1, "tcp job needs at least one rank");
+    let exe = std::env::current_exe()?;
+    let spawn = |rank: usize, port: Option<u16>| -> anyhow::Result<Child> {
+        let mut cmd = Command::new(&exe);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::inherit());
+        for (k, v) in spec.to_env(rank, port) {
+            cmd.env(k, v);
+        }
+        cmd.spawn().map_err(|e| anyhow::anyhow!("spawn rank {rank}: {e}"))
+    };
+
+    let mut rank0 = spawn(0, None)?;
+    let mut lines0 = BufReader::new(rank0.stdout.take().expect("stdout was piped")).lines();
+    let port = match read_port(&mut lines0) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = rank0.kill();
+            let _ = rank0.wait();
+            return Err(e);
+        }
+    };
+
+    let mut children: Vec<Child> = Vec::with_capacity(spec.nodes - 1);
+    for rank in 1..spec.nodes {
+        match spawn(rank, Some(port)) {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                let _ = rank0.kill();
+                let _ = rank0.wait();
+                for c in children.iter_mut() {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                return Err(e);
+            }
+        }
+    }
+
+    let mut ranks: Vec<TcpRankOutcome> = (0..spec.nodes)
+        .map(|rank| TcpRankOutcome { rank, output: None, error: None, exit_code: None })
+        .collect();
+
+    // Drain rank 0's remaining stdout (the pipe is how we know it's done),
+    // then reap it and the others in rank order.
+    let mut acc = LineAccumulator::default();
+    for line in lines0 {
+        acc.feed(&line?);
+    }
+    ranks[0].exit_code = rank0.wait()?.code();
+    acc.finish(&mut ranks[0]);
+
+    for (i, child) in children.into_iter().enumerate() {
+        let out = child.wait_with_output()?;
+        let mut acc = LineAccumulator::default();
+        for line in String::from_utf8_lossy(&out.stdout).lines() {
+            acc.feed(line);
+        }
+        ranks[i + 1].exit_code = out.status.code();
+        acc.finish(&mut ranks[i + 1]);
+    }
+    Ok(TcpJobReport { ranks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("sim").unwrap(), BackendKind::Sim);
+        assert_eq!(BackendKind::parse("tcp").unwrap(), BackendKind::Tcp);
+        assert!(BackendKind::parse("shm").is_err());
+    }
+
+    #[test]
+    fn protocol_lines_parse() {
+        let mut acc = LineAccumulator::default();
+        acc.feed("BFRES rank=1 bytes=2048 x=1.5,-0.25,3");
+        acc.feed("BFMS rank=1 ms=0.125,0.5");
+        let mut out = TcpRankOutcome { rank: 1, output: None, error: None, exit_code: None };
+        acc.finish(&mut out);
+        let o = out.output.expect("BFRES + BFMS give an output");
+        assert_eq!(o.x, vec![1.5, -0.25, 3.0]);
+        assert_eq!(o.bytes_sent, 2048);
+        assert_eq!(o.iter_ms, vec![0.125, 0.5]);
+        assert!(out.error.is_none());
+    }
+
+    #[test]
+    fn error_lines_parse() {
+        let mut acc = LineAccumulator::default();
+        acc.feed("BFERR rank=3 kind=peer_down peer=2");
+        let mut out = TcpRankOutcome { rank: 3, output: None, error: None, exit_code: None };
+        acc.finish(&mut out);
+        assert_eq!(out.error, Some(TcpWorkerError { kind: "peer_down".into(), peer: Some(2) }));
+        assert!(out.output.is_none());
+    }
+
+    #[test]
+    fn unknown_lines_are_ignored() {
+        let mut acc = LineAccumulator::default();
+        acc.feed("warning: something unrelated");
+        acc.feed("BFPORT port=12345");
+        let mut out = TcpRankOutcome { rank: 0, output: None, error: None, exit_code: None };
+        acc.finish(&mut out);
+        assert!(out.output.is_none() && out.error.is_none());
+    }
+
+    #[test]
+    fn port_line_scanned_past_noise() {
+        let lines = ["note: warming up", "BFPORT port=40321"];
+        let mut iter = lines.iter().map(|s| Ok::<String, std::io::Error>(s.to_string()));
+        assert_eq!(read_port(&mut iter).unwrap(), 40321);
+        let mut empty = std::iter::empty();
+        assert!(read_port(&mut empty).is_err());
+    }
 }

@@ -2,13 +2,20 @@
 //!
 //! Subcommands:
 //! - `train`     decentralized DNN training on simulated nodes (E2E driver)
-//! - `consensus` average-consensus demo over a chosen topology
+//! - `consensus` average-consensus demo (`--backend sim|tcp`)
+//! - `dsgd`      decentralized SGD on synthetic data (`--backend sim|tcp`)
 //! - `info`      artifact + preset inventory
+//!
+//! With `--backend tcp`, the binary re-executes itself as one OS process
+//! per rank over loopback sockets (DESIGN.md §Transport backends) and
+//! cross-checks the result against the in-process simulator.
 //!
 //! Examples:
 //! ```text
 //! bfrun train --preset tiny --nodes 8 --steps 200 --algo atc --topology expo2
 //! bfrun consensus --nodes 16 --topology ring --iters 200
+//! bfrun consensus --backend tcp --nodes 4 --topology ring --iters 50
+//! bfrun dsgd --backend tcp --nodes 4 --topology ring --iters 50 --dim 64
 //! bfrun info
 //! ```
 
@@ -16,8 +23,8 @@ use std::sync::Arc;
 
 use bluefog::cli::Args;
 use bluefog::collective::AllreduceAlgo;
-use bluefog::config::ModelPreset;
-use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::config::{ModelPreset, PortableWorkload, TcpJobSpec};
+use bluefog::launcher::{maybe_run_tcp_worker, run_spmd, run_tcp_job, BackendKind, SpmdConfig};
 use bluefog::optim::{make_optimizer, CommSpec, PeriodicGlobalAveraging};
 use bluefog::runtime::DeviceService;
 use bluefog::simnet::NetworkModel;
@@ -25,8 +32,12 @@ use bluefog::tensor::norm2;
 use bluefog::topology::dynamic::OnePeerExpo;
 use bluefog::topology::builders;
 use bluefog::training::{train_node, TrainRun};
+use bluefog::transport::portable::{run_sim_fleet, RunSpec};
 
 fn main() {
+    // Worker mode: when the parent launcher set BF_TCP_WORKER, this
+    // process is one rank of a TCP job and never reaches the CLI.
+    maybe_run_tcp_worker();
     if let Err(e) = run() {
         eprintln!("bfrun: {e:#}");
         std::process::exit(1);
@@ -38,13 +49,14 @@ fn run() -> anyhow::Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("consensus") => cmd_consensus(&args),
+        Some("dsgd") => cmd_portable(&args, PortableWorkload::Dsgd),
         Some("info") => cmd_info(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand '{o}'");
             }
             eprintln!(
-                "usage: bfrun <train|consensus|info> [--nodes N] [--preset P] [--algo A] ..."
+                "usage: bfrun <train|consensus|dsgd|info> [--backend sim|tcp] [--nodes N] ..."
             );
             std::process::exit(2);
         }
@@ -119,6 +131,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_consensus(args: &Args) -> anyhow::Result<()> {
+    if BackendKind::parse(args.str_or("backend", "sim"))? == BackendKind::Tcp {
+        return cmd_portable(args, PortableWorkload::Consensus);
+    }
     let nodes = args.usize_or("nodes", 16)?;
     let iters = args.usize_or("iters", 100)?;
     let topo_name = args.str_or("topology", "expo2").to_string();
@@ -137,6 +152,88 @@ fn cmd_consensus(args: &Args) -> anyhow::Result<()> {
     let err: f64 = results.iter().map(|&x| (x - mean) as f64).map(|e| e * e).sum::<f64>().sqrt();
     println!("values: {results:?}");
     println!("consensus error vs true mean {mean}: {err:.3e}");
+    Ok(())
+}
+
+/// `consensus --backend tcp` and the `dsgd` subcommand: run a portable
+/// workload over the chosen backend; under TCP, cross-verify against the
+/// in-process simulator (`--verify false` to skip).
+fn cmd_portable(args: &Args, workload: PortableWorkload) -> anyhow::Result<()> {
+    let backend = BackendKind::parse(args.str_or("backend", "sim"))?;
+    let kill = match (args.usize_opt("kill-rank")?, args.usize_opt("kill-at")?) {
+        (Some(r), Some(a)) => Some((r, a)),
+        (None, None) => None,
+        _ => anyhow::bail!("--kill-rank and --kill-at must be given together"),
+    };
+    let spec = TcpJobSpec {
+        workload,
+        nodes: args.usize_or("nodes", 4)?,
+        iters: args.usize_or("iters", 50)?,
+        dim: args.usize_or("dim", 32)?,
+        rows: args.usize_or("rows", 16)?,
+        gamma: args.f64_or("gamma", 0.05)? as f32,
+        topology: args.str_or("topology", "ring").to_string(),
+        deadline_secs: args.f64_or("deadline", 30.0)?,
+        kill,
+    };
+    println!(
+        "# {} backend={:?} nodes={} iters={} dim={} topology={}",
+        workload.as_str(),
+        backend,
+        spec.nodes,
+        spec.iters,
+        spec.dim,
+        spec.topology
+    );
+    let run = RunSpec::from_job(&spec);
+
+    if backend == BackendKind::Sim {
+        let outs = run_sim_fleet(spec.nodes, workload, &run);
+        for (rank, out) in outs.into_iter().enumerate() {
+            match out {
+                Ok(o) => println!("rank {rank}: bytes={} x[0]={:.6}", o.bytes_sent, o.x[0]),
+                Err(e) => println!("rank {rank}: error {e}"),
+            }
+        }
+        return Ok(());
+    }
+
+    let report = run_tcp_job(&spec)?;
+    for r in &report.ranks {
+        match (&r.output, &r.error) {
+            (Some(o), _) => {
+                println!("rank {}: bytes={} x[0]={:.6}", r.rank, o.bytes_sent, o.x[0])
+            }
+            (None, Some(e)) => println!(
+                "rank {}: {}{} (exit code {:?})",
+                r.rank,
+                e.kind,
+                e.peer.map(|p| format!(" peer={p}")).unwrap_or_default(),
+                r.exit_code
+            ),
+            (None, None) => println!("rank {}: no result (exit code {:?})", r.rank, r.exit_code),
+        }
+    }
+    if spec.kill.is_some() {
+        // A killed job has no complete result set to verify; the per-rank
+        // error lines above are the point of the run.
+        return Ok(());
+    }
+    if args.bool_or("verify", true)? {
+        let tcp_outs = report.outputs()?;
+        let sim_outs = run_sim_fleet(spec.nodes, workload, &run);
+        let mut max_delta = 0.0f64;
+        let mut bytes_match = true;
+        for (t, s) in tcp_outs.iter().zip(&sim_outs) {
+            let s = s.as_ref().expect("sim reference rank failed");
+            for (a, b) in t.x.iter().zip(&s.x) {
+                max_delta = max_delta.max((*a as f64 - *b as f64).abs());
+            }
+            bytes_match &= t.bytes_sent == s.bytes_sent;
+        }
+        println!("# sim/tcp parity: max |delta| = {max_delta:.3e}, bytes match = {bytes_match}");
+        anyhow::ensure!(max_delta <= 1e-6, "sim/tcp divergence {max_delta:.3e} exceeds 1e-6");
+    }
     Ok(())
 }
 

@@ -1,0 +1,365 @@
+//! The transport backend abstraction (ISSUE 8 tentpole).
+//!
+//! [`Backend`] is the narrow waist between collectives and the machinery
+//! that actually moves bytes: MPI-style tagged point-to-point sends and
+//! receives, wall-clock deadline hooks, and payload-byte accounting. Two
+//! implementations exist in-tree:
+//!
+//! - [`SimBackend`] (this module) wraps the in-memory [`Mailbox`] /
+//!   [`Postman`] fabric. It *composes* the existing fabric rather than
+//!   reimplementing it, so matching, stash order and delivery semantics
+//!   are bitwise-identical to what `run_spmd` drives directly under both
+//!   `ExecMode`s — the fabric is the same code either way.
+//! - [`crate::transport::tcp::TcpBackend`] speaks the framed wire format
+//!   of [`crate::transport::frame`] over per-peer persistent loopback/LAN
+//!   sockets (DESIGN.md §Transport backends).
+//!
+//! The contract both must honor (and `rust/tests/tcp_parity.rs` checks):
+//! a departed peer surfaces as [`CommError::PeerDown`], an expired wall
+//! deadline as [`CommError::Timeout`], and `bytes_sent` counts *payload*
+//! bytes only (`4 * elements`), excluding headers and control traffic, so
+//! the number is comparable across backends and with
+//! `NodeContext::bytes_sent`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::simnet::faults::CommError;
+use crate::transport::{fabric, Mailbox, Message, Postman, Tag};
+
+/// Payload bytes on the wire for a tensor of `nelems` f32 elements — the
+/// one formula every byte counter in the crate shares (`NodeContext`,
+/// [`SimBackend`], `TcpBackend`).
+pub fn payload_nbytes(nelems: usize) -> u64 {
+    (nelems * std::mem::size_of::<f32>()) as u64
+}
+
+/// Granularity of the wait/recheck loop inside blocking receives: how
+/// often a parked receiver rechecks peer liveness and its deadline.
+const WAIT_SLICE: Duration = Duration::from_millis(25);
+
+/// A point-to-point transport endpoint owned by one rank.
+///
+/// Deadlines here are **wall-clock** (`Option<Duration>`, `None` = wait
+/// forever modulo peer death) — this is the boundary where virtual time
+/// ends. The virtual-time deadline machinery of `NodeContext` stays in
+/// the simulator; real backends map socket timeouts onto the same typed
+/// [`CommError`]s so callers handle failure identically on both.
+pub trait Backend: Send {
+    /// This endpoint's rank.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the job.
+    fn size(&self) -> usize;
+
+    /// Send `payload` to `dst` under `tag`. `vtime` is the sender's
+    /// virtual time, carried for trace comparability (real backends do
+    /// not schedule by it). Fails with [`CommError::PeerDown`] when the
+    /// destination has departed.
+    fn send(
+        &mut self,
+        dst: usize,
+        tag: Tag,
+        payload: Arc<Vec<f32>>,
+        vtime: f64,
+    ) -> Result<(), CommError>;
+
+    /// Blocking receive of the next message matching `(src, tag)`.
+    ///
+    /// Returns [`CommError::PeerDown`] as soon as `src` is known to have
+    /// departed with no matching message buffered, and
+    /// [`CommError::Timeout`] when `deadline` elapses first.
+    fn recv_match(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        deadline: Option<Duration>,
+    ) -> Result<Message, CommError>;
+
+    /// Blocking receive of the next message with `tag` from any source
+    /// (lowest buffered source rank wins, for determinism). Returns
+    /// [`CommError::PeerDown`] when every peer has departed and nothing
+    /// matching is buffered; [`CommError::Timeout`] (with
+    /// `src == usize::MAX`) on deadline expiry.
+    fn recv_any(&mut self, tag: Tag, deadline: Option<Duration>) -> Result<Message, CommError>;
+
+    /// Non-blocking [`Backend::recv_match`]; `None` when nothing matches.
+    fn try_recv_match(&mut self, src: usize, tag: Tag) -> Option<Message>;
+
+    /// Non-blocking [`Backend::recv_any`] (lowest source rank wins).
+    fn try_recv_any(&mut self, tag: Tag) -> Option<Message>;
+
+    /// Total *payload* bytes sent by this endpoint (`4 * elements`,
+    /// headers and control frames excluded — see module docs).
+    fn bytes_sent(&self) -> u64;
+
+    /// Hand a received payload's storage back to the backend's buffer
+    /// pool once the caller is done combining it. Default: plain drop.
+    fn reclaim(&self, payload: Arc<Vec<f32>>) {
+        drop(payload);
+    }
+
+    /// Orderly departure: tell every peer this rank is done (they observe
+    /// [`CommError::PeerDown`] on further receives, never a hang).
+    fn shutdown(&mut self);
+
+    /// Depart *without* notice — the test hook that models a killed
+    /// process. Peers must still observe [`CommError::PeerDown`].
+    fn abandon(&mut self);
+}
+
+/// Shared liveness board for a [`SimBackend`] fleet: `flags[r]` is true
+/// while rank r's endpoint is still participating.
+#[derive(Clone)]
+struct Liveness {
+    flags: Arc<Vec<AtomicBool>>,
+}
+
+impl Liveness {
+    fn new(n: usize) -> Self {
+        Liveness { flags: Arc::new((0..n).map(|_| AtomicBool::new(true)).collect()) }
+    }
+
+    fn is_alive(&self, rank: usize) -> bool {
+        self.flags[rank].load(Ordering::Acquire)
+    }
+
+    fn depart(&self, rank: usize) {
+        self.flags[rank].store(false, Ordering::Release);
+    }
+}
+
+/// The in-memory fabric behind the [`Backend`] trait.
+///
+/// Composition, not reimplementation: all matching/stash behavior is the
+/// [`Mailbox`] the simulator has always used, so `SimBackend` cannot
+/// drift from `run_spmd` semantics. What this wrapper adds is exactly the
+/// trait contract: payload-byte accounting, wall-clock deadlines, and
+/// peer-death detection via a shared liveness board (the in-memory
+/// analogue of a TCP reader thread observing EOF — the raw MPSC channel
+/// cannot signal a *single* dead sender because the sender table is
+/// shared).
+pub struct SimBackend {
+    mailbox: Mailbox,
+    postman: Postman,
+    liveness: Liveness,
+    tx_payload_bytes: u64,
+    start: Instant,
+    departed: bool,
+}
+
+/// Build a connected fleet of `n` [`SimBackend`] endpoints (index = rank).
+pub fn sim_backends(n: usize) -> Vec<SimBackend> {
+    let (mailboxes, postman) = fabric(n);
+    let liveness = Liveness::new(n);
+    let start = Instant::now();
+    mailboxes
+        .into_iter()
+        .map(|mailbox| SimBackend {
+            mailbox,
+            postman: postman.clone(),
+            liveness: liveness.clone(),
+            tx_payload_bytes: 0,
+            start,
+            departed: false,
+        })
+        .collect()
+}
+
+impl SimBackend {
+    /// Wall seconds since the fleet was built — the `at` stamp carried by
+    /// this backend's [`CommError`]s (real backends have no virtual
+    /// clock, so the trait reports failure times on the wall clock).
+    fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Lowest-ranked departed peer, if any peer has departed.
+    fn first_departed_peer(&self) -> Option<usize> {
+        (0..self.size()).find(|&r| r != self.rank() && !self.liveness.is_alive(r))
+    }
+}
+
+impl Backend for SimBackend {
+    fn rank(&self) -> usize {
+        self.mailbox.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.postman.size()
+    }
+
+    fn send(
+        &mut self,
+        dst: usize,
+        tag: Tag,
+        payload: Arc<Vec<f32>>,
+        vtime: f64,
+    ) -> Result<(), CommError> {
+        if !self.liveness.is_alive(dst) {
+            return Err(CommError::PeerDown { peer: dst, at: self.elapsed() });
+        }
+        let nbytes = payload_nbytes(payload.len());
+        let msg = Message { src: self.rank(), tag, payload, arrival_vtime: vtime };
+        self.postman
+            .send(dst, msg)
+            .map_err(|_| CommError::PeerDown { peer: dst, at: self.elapsed() })?;
+        self.tx_payload_bytes += nbytes;
+        Ok(())
+    }
+
+    fn recv_match(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        deadline: Option<Duration>,
+    ) -> Result<Message, CommError> {
+        let wait_start = Instant::now();
+        loop {
+            if let Some(m) = self.mailbox.try_recv_match(src, tag) {
+                return Ok(m);
+            }
+            // Buffered messages win over death: only report PeerDown once
+            // nothing matching remains (same order as the TCP inbox).
+            if !self.liveness.is_alive(src) {
+                return Err(CommError::PeerDown { peer: src, at: self.elapsed() });
+            }
+            let slice = match deadline {
+                None => WAIT_SLICE,
+                Some(d) => {
+                    let remaining = d.saturating_sub(wait_start.elapsed());
+                    if remaining.is_zero() {
+                        return Err(CommError::Timeout { src, deadline: self.elapsed() });
+                    }
+                    remaining.min(WAIT_SLICE)
+                }
+            };
+            self.mailbox.wait_for_message(slice);
+        }
+    }
+
+    fn recv_any(&mut self, tag: Tag, deadline: Option<Duration>) -> Result<Message, CommError> {
+        let wait_start = Instant::now();
+        loop {
+            if let Some(m) = self.mailbox.try_recv_any(tag) {
+                return Ok(m);
+            }
+            let all_peers_departed =
+                (0..self.size()).all(|r| r == self.rank() || !self.liveness.is_alive(r));
+            if all_peers_departed {
+                let peer = self.first_departed_peer().unwrap_or(self.rank());
+                return Err(CommError::PeerDown { peer, at: self.elapsed() });
+            }
+            let slice = match deadline {
+                None => WAIT_SLICE,
+                Some(d) => {
+                    let remaining = d.saturating_sub(wait_start.elapsed());
+                    if remaining.is_zero() {
+                        return Err(CommError::Timeout {
+                            src: usize::MAX,
+                            deadline: self.elapsed(),
+                        });
+                    }
+                    remaining.min(WAIT_SLICE)
+                }
+            };
+            self.mailbox.wait_for_message(slice);
+        }
+    }
+
+    fn try_recv_match(&mut self, src: usize, tag: Tag) -> Option<Message> {
+        self.mailbox.try_recv_match(src, tag)
+    }
+
+    fn try_recv_any(&mut self, tag: Tag) -> Option<Message> {
+        self.mailbox.try_recv_any(tag)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.tx_payload_bytes
+    }
+
+    fn shutdown(&mut self) {
+        self.departed = true;
+        self.liveness.depart(self.rank());
+    }
+
+    fn abandon(&mut self) {
+        // In-memory there is no Goodbye frame to withhold; departing is
+        // departing. The distinction matters only on real sockets.
+        self.shutdown();
+    }
+}
+
+impl Drop for SimBackend {
+    fn drop(&mut self) {
+        if !self.departed {
+            self.liveness.depart(self.mailbox.rank());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_send_recv_and_byte_accounting() {
+        let mut fleet = sim_backends(2);
+        let mut b1 = fleet.pop().unwrap();
+        let mut b0 = fleet.pop().unwrap();
+        let tag = crate::transport::make_tag(crate::transport::op_id("x"), 0);
+        b0.send(1, tag, Arc::new(vec![1.0, 2.0, 3.0]), 0.5).unwrap();
+        let m = b1.recv_match(0, tag, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(*m.payload, vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.arrival_vtime, 0.5);
+        assert_eq!(b0.bytes_sent(), 12, "payload bytes only: 3 f32 = 12");
+        assert_eq!(b1.bytes_sent(), 0);
+    }
+
+    #[test]
+    fn departed_peer_is_typed_peer_down() {
+        let mut fleet = sim_backends(2);
+        let mut b1 = fleet.pop().unwrap();
+        let mut b0 = fleet.pop().unwrap();
+        b0.shutdown();
+        let tag = crate::transport::make_tag(crate::transport::op_id("x"), 0);
+        match b1.recv_match(0, tag, Some(Duration::from_secs(5))) {
+            Err(CommError::PeerDown { peer: 0, .. }) => {}
+            other => panic!("expected PeerDown from rank 0, got {other:?}"),
+        }
+        match b1.send(0, tag, Arc::new(vec![1.0]), 0.0) {
+            Err(CommError::PeerDown { peer: 0, .. }) => {}
+            other => panic!("expected send-side PeerDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn buffered_messages_win_over_peer_death() {
+        let mut fleet = sim_backends(2);
+        let mut b1 = fleet.pop().unwrap();
+        let mut b0 = fleet.pop().unwrap();
+        let tag = crate::transport::make_tag(crate::transport::op_id("x"), 7);
+        b0.send(1, tag, Arc::new(vec![4.0]), 0.0).unwrap();
+        b0.shutdown();
+        let m = b1.recv_match(0, tag, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(*m.payload, vec![4.0]);
+        assert!(b1.recv_match(0, tag, Some(Duration::from_millis(50))).is_err());
+    }
+
+    #[test]
+    fn deadline_expiry_is_typed_timeout() {
+        let mut fleet = sim_backends(2);
+        let mut b1 = fleet.pop().unwrap();
+        let tag = crate::transport::make_tag(crate::transport::op_id("x"), 0);
+        match b1.recv_match(0, tag, Some(Duration::from_millis(30))) {
+            Err(CommError::Timeout { src: 0, .. }) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        match b1.recv_any(tag, Some(Duration::from_millis(30))) {
+            Err(CommError::Timeout { src: usize::MAX, .. }) => {}
+            other => panic!("expected recv-any Timeout, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! Wire-format codec for out-of-process transport backends.
+//!
+//! This module is the executable form of the frame specification in
+//! `DESIGN.md` §Transport backends — every constant and layout decision
+//! below cites its spec section (§WF-1 … §WF-6), and the property tests in
+//! `rust/tests/frames.rs` are organized by those same sections. Keep the
+//! two in lock-step: a change here without a spec bump (§WF-6) is a
+//! protocol break.
+//!
+//! One codec serves every out-of-process message: tensor payloads (`Data`),
+//! the rendezvous handshake (`Hello` / `AddrMap`), orderly shutdown
+//! (`Goodbye`) and mid-stream aborts (`Error`) all ride the same
+//! fixed-header + f32-payload frame, so a backend implementation needs
+//! exactly one parser.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// §WF-2: frame magic, the ASCII bytes `"BFOG"`. A connection whose first
+/// four bytes differ is not speaking this protocol and must be dropped.
+pub const MAGIC: [u8; 4] = *b"BFOG";
+
+/// §WF-6: wire-format version byte. Bump on any layout change; a decoder
+/// rejects frames from a different version instead of guessing.
+pub const VERSION: u8 = 1;
+
+/// §WF-2: fixed header length in bytes (magic through payload length).
+pub const HEADER_LEN: usize = 40;
+
+/// §WF-5: maximum payload length in f32 elements (2^28 elements = 1 GiB).
+/// A length field above this is treated as a corrupt frame *before* any
+/// allocation happens — a malformed peer cannot OOM the receiver.
+pub const MAX_PAYLOAD_ELEMS: u64 = 1 << 28;
+
+/// §WF-4: frame kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// A tensor message: `src`/`tag`/`vtime` meaningful, payload is data.
+    Data,
+    /// Rendezvous registration: `src` = sender rank, `tag` = the data-plane
+    /// port the sender listens on (§RDZ-2); empty payload.
+    Hello,
+    /// Rendezvous reply from rank 0: payload is the full address map,
+    /// `payload[r]` = rank r's data port as an exactly-representable f32
+    /// (§RDZ-3); empty tag.
+    AddrMap,
+    /// Orderly shutdown: the sender will write nothing further. Receivers
+    /// treat subsequent receives from this peer as `PeerDown` (§WF-4).
+    Goodbye,
+    /// Mid-stream abort: `tag` carries a reason code; the sender closes
+    /// right after. Receivers treat the peer as down, exactly as for an
+    /// unexpected EOF — the frame only makes failure propagation faster.
+    Error,
+}
+
+impl FrameKind {
+    /// §WF-4 wire encoding of the kind byte.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            FrameKind::Data => 0,
+            FrameKind::Hello => 1,
+            FrameKind::AddrMap => 2,
+            FrameKind::Goodbye => 3,
+            FrameKind::Error => 4,
+        }
+    }
+
+    /// Inverse of [`FrameKind::as_u8`]; unknown bytes are a decode error
+    /// (§WF-4: receivers must not guess at future kinds).
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        match b {
+            0 => Some(FrameKind::Data),
+            1 => Some(FrameKind::Hello),
+            2 => Some(FrameKind::AddrMap),
+            3 => Some(FrameKind::Goodbye),
+            4 => Some(FrameKind::Error),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded frame (§WF-2). The payload is `f32` because every tensor in
+/// this codebase is; compressed streams ride the existing self-describing
+/// f32 format from `crate::compress` unchanged, so they need no special
+/// framing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Frame kind (§WF-4).
+    pub kind: FrameKind,
+    /// Sending rank.
+    pub src: u64,
+    /// Operation/round tag ([`crate::transport::make_tag`] layout), or the
+    /// kind-specific overload documented on [`FrameKind`].
+    pub tag: u64,
+    /// Sender's virtual time at send (informational on real backends:
+    /// wall clock is authoritative there, but carrying it keeps sim/tcp
+    /// traces comparable).
+    pub vtime: f64,
+    /// f32 payload, little-endian on the wire (§WF-3).
+    pub payload: Vec<f32>,
+}
+
+impl Frame {
+    /// A payload-free frame of the given kind.
+    pub fn control(kind: FrameKind, src: u64, tag: u64) -> Frame {
+        Frame { kind, src, tag, vtime: 0.0, payload: Vec::new() }
+    }
+
+    /// A data frame.
+    pub fn data(src: u64, tag: u64, vtime: f64, payload: Vec<f32>) -> Frame {
+        Frame { kind: FrameKind::Data, src, tag, vtime, payload }
+    }
+}
+
+/// Why a byte sequence failed to decode as a frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// First four bytes were not [`MAGIC`] (§WF-2).
+    BadMagic([u8; 4]),
+    /// Version byte differed from [`VERSION`] (§WF-6).
+    BadVersion(u8),
+    /// Unknown kind byte (§WF-4).
+    BadKind(u8),
+    /// Payload length field exceeded [`MAX_PAYLOAD_ELEMS`] (§WF-5).
+    Oversize(u64),
+    /// The buffer ended mid-header or mid-payload (§WF-5: a decoder never
+    /// consumes a partial frame).
+    Truncated {
+        /// Bytes the complete frame needs.
+        needed: usize,
+        /// Bytes actually available.
+        have: usize,
+    },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported wire-format version {v} (this build speaks {VERSION})")
+            }
+            FrameError::BadKind(k) => write!(f, "unknown frame kind byte {k}"),
+            FrameError::Oversize(n) => {
+                write!(f, "payload length {n} exceeds the {MAX_PAYLOAD_ELEMS}-element cap")
+            }
+            FrameError::Truncated { needed, have } => {
+                write!(f, "truncated frame: need {needed} bytes, have {have}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Total encoded size in bytes of a frame carrying `nelems` f32 elements.
+pub fn encoded_len(nelems: usize) -> usize {
+    HEADER_LEN + nelems * std::mem::size_of::<f32>()
+}
+
+/// Encode `frame` to the §WF-2 layout, appending to `out` (callers reuse
+/// one scratch buffer across sends — the byte-level analogue of the PR-2
+/// pool discipline).
+pub fn encode_into(frame: &Frame, out: &mut Vec<u8>) {
+    out.reserve(encoded_len(frame.payload.len()));
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(frame.kind.as_u8());
+    out.extend_from_slice(&[0u8, 0u8]); // §WF-2: reserved, zero on send
+    out.extend_from_slice(&frame.src.to_le_bytes());
+    out.extend_from_slice(&frame.tag.to_le_bytes());
+    out.extend_from_slice(&frame.vtime.to_le_bytes());
+    out.extend_from_slice(&(frame.payload.len() as u64).to_le_bytes());
+    for v in &frame.payload {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode `frame` into a fresh buffer.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(encoded_len(frame.payload.len()));
+    encode_into(frame, &mut out);
+    out
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b.try_into().expect("8-byte slice"))
+}
+
+/// Validate a §WF-2 header and return `(kind, src, tag, vtime, nelems)`.
+fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(FrameKind, u64, u64, f64, usize), FrameError> {
+    if h[0..4] != MAGIC {
+        return Err(FrameError::BadMagic([h[0], h[1], h[2], h[3]]));
+    }
+    if h[4] != VERSION {
+        return Err(FrameError::BadVersion(h[4]));
+    }
+    let kind = FrameKind::from_u8(h[5]).ok_or(FrameError::BadKind(h[5]))?;
+    // h[6..8] reserved: ignored on receive (§WF-2).
+    let src = le_u64(&h[8..16]);
+    let tag = le_u64(&h[16..24]);
+    let vtime = f64::from_le_bytes(h[24..32].try_into().expect("8-byte slice"));
+    let nelems = le_u64(&h[32..40]);
+    if nelems > MAX_PAYLOAD_ELEMS {
+        return Err(FrameError::Oversize(nelems));
+    }
+    Ok((kind, src, tag, vtime, nelems as usize))
+}
+
+/// Decode one frame from the front of `buf`, returning it and the number
+/// of bytes consumed. Fails without consuming anything on a malformed or
+/// incomplete prefix (§WF-5).
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Err(FrameError::Truncated { needed: HEADER_LEN, have: buf.len() });
+    }
+    let header: &[u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().expect("checked length");
+    let (kind, src, tag, vtime, nelems) = decode_header(header)?;
+    let total = encoded_len(nelems);
+    if buf.len() < total {
+        return Err(FrameError::Truncated { needed: total, have: buf.len() });
+    }
+    let mut payload = Vec::with_capacity(nelems);
+    for chunk in buf[HEADER_LEN..total].chunks_exact(4) {
+        payload.push(f32::from_le_bytes(chunk.try_into().expect("4-byte chunk")));
+    }
+    Ok((Frame { kind, src, tag, vtime, payload }, total))
+}
+
+/// Outcome of reading one frame from a byte stream.
+#[derive(Debug)]
+pub enum ReadFrame {
+    /// A complete, well-formed frame.
+    Ok(Frame),
+    /// Clean end of stream at a frame boundary (zero bytes read).
+    Eof,
+    /// The stream violated the spec (bad magic/version/kind/length, or it
+    /// ended mid-frame). The connection must be dropped — framing cannot
+    /// be re-synchronized (§WF-1).
+    Malformed(FrameError),
+    /// Underlying I/O error (connection reset, timeout, …).
+    Io(std::io::Error),
+}
+
+/// Read exactly one frame from `r`, decoding the payload into `payload`
+/// (cleared first — pass a pooled buffer to recycle tensor storage across
+/// receives). Distinguishes a clean EOF at a frame boundary from a
+/// mid-frame truncation, which is malformed (§WF-5).
+pub fn read_frame_into<R: Read>(r: &mut R, payload: &mut Vec<f32>) -> ReadFrame {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    ReadFrame::Eof
+                } else {
+                    ReadFrame::Malformed(FrameError::Truncated { needed: HEADER_LEN, have: got })
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return ReadFrame::Io(e),
+        }
+    }
+    let (kind, src, tag, vtime, nelems) = match decode_header(&header) {
+        Ok(h) => h,
+        Err(e) => return ReadFrame::Malformed(e),
+    };
+    payload.clear();
+    payload.reserve(nelems);
+    let mut chunk = [0u8; 4096];
+    let mut remaining = nelems * std::mem::size_of::<f32>();
+    let mut carry: Vec<u8> = Vec::new();
+    while remaining > 0 {
+        let want = remaining.min(chunk.len());
+        match r.read(&mut chunk[..want]) {
+            Ok(0) => {
+                return ReadFrame::Malformed(FrameError::Truncated {
+                    needed: encoded_len(nelems),
+                    have: encoded_len(nelems) - remaining,
+                });
+            }
+            Ok(n) => {
+                remaining -= n;
+                // Reads may split an f32 across calls; carry the tail.
+                carry.extend_from_slice(&chunk[..n]);
+                let whole = carry.len() / 4 * 4;
+                for c in carry[..whole].chunks_exact(4) {
+                    payload.push(f32::from_le_bytes(c.try_into().expect("4-byte chunk")));
+                }
+                carry.drain(..whole);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return ReadFrame::Io(e),
+        }
+    }
+    debug_assert!(carry.is_empty(), "payload bytes are a multiple of 4");
+    ReadFrame::Ok(Frame { kind, src, tag, vtime, payload: std::mem::take(payload) })
+}
+
+/// Write one frame to `w` (buffered writers should flush afterwards),
+/// reusing `scratch` as the encode buffer.
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    frame: &Frame,
+    scratch: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    scratch.clear();
+    encode_into(frame, scratch);
+    w.write_all(scratch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let f = Frame::data(3, 0xABCD_EF01_2345_6789, 1.5, vec![1.0, -2.5, 0.0]);
+        let bytes = encode(&f);
+        assert_eq!(bytes.len(), encoded_len(3));
+        let (g, used) = decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let f = Frame::control(FrameKind::Goodbye, 7, 0);
+        let (g, used) = decode(&encode(&f)).unwrap();
+        assert_eq!(used, HEADER_LEN);
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode(&Frame::control(FrameKind::Hello, 0, 0));
+        bytes[0] = b'X';
+        assert!(matches!(decode(&bytes), Err(FrameError::BadMagic(_))));
+    }
+
+    #[test]
+    fn oversize_len_rejected_before_alloc() {
+        let mut bytes = encode(&Frame::control(FrameKind::Data, 0, 0));
+        bytes[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(FrameError::Oversize(_))));
+    }
+
+    #[test]
+    fn stream_reader_matches_buffer_decoder() {
+        let f = Frame::data(1, 42, 0.25, (0..1025).map(|i| i as f32).collect());
+        let bytes = encode(&f);
+        let mut cursor = &bytes[..];
+        let mut payload = Vec::new();
+        match read_frame_into(&mut cursor, &mut payload) {
+            ReadFrame::Ok(g) => assert_eq!(f, g),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        match read_frame_into(&mut cursor, &mut payload) {
+            ReadFrame::Eof => {}
+            other => panic!("expected EOF, got {other:?}"),
+        }
+    }
+}

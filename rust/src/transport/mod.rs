@@ -11,6 +11,18 @@
 //! [`crate::simnet`] cost model at send time; receivers advance their
 //! virtual clock to `max(own, arrival)`. This yields the discrete-event
 //! timing the benchmarks report without a global event queue.
+//!
+//! Since ISSUE 8 the module is split along the [`backend::Backend`]
+//! seam: this file keeps the in-memory fabric and virtual clock;
+//! [`frame`] defines the versioned wire format (DESIGN.md §Transport
+//! backends); [`tcp`] implements the first out-of-process backend;
+//! [`portable`] hosts the backend-agnostic collectives and workloads
+//! used by the sim/tcp parity suite.
+
+pub mod backend;
+pub mod frame;
+pub mod portable;
+pub mod tcp;
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -22,11 +34,40 @@ use std::sync::{Arc, Mutex};
 pub type Tag = u64;
 
 /// Build a tag from an op identifier and a round counter.
+///
+/// ```
+/// use bluefog::transport::{make_tag, op_id};
+/// let id = op_id("neighbor_allreduce");
+/// let tag = make_tag(id, 7);
+/// assert_eq!(tag >> 32, id as u64, "high half is the op id");
+/// assert_eq!(tag & 0xFFFF_FFFF, 7, "low half is the round");
+/// ```
 pub fn make_tag(op_id: u32, round: u32) -> Tag {
     ((op_id as u64) << 32) | round as u64
 }
 
 /// FNV-1a hash of an operation name into a 32-bit op id space.
+///
+/// ```
+/// use bluefog::transport::op_id;
+/// // FNV-1a reference values: offset basis for "", one round for "a".
+/// assert_eq!(op_id(""), 0x811c9dc5);
+/// assert_eq!(op_id("a"), 0xe40c292c);
+/// assert_ne!(op_id("hier.intra"), op_id("hier.inter"));
+/// ```
+///
+/// # Collision analysis
+///
+/// Two distinct op names hashing to the same id would let unrelated
+/// collectives match each other's messages — silent data corruption, not
+/// a crash. With the [`KNOWN_OP_NAMES`] census of k = 17 in-tree names,
+/// the birthday bound on any collision is k(k−1)/2 / 2³² ≈ 3.2 × 10⁻⁸;
+/// negotiation's per-call names (`"{kind}.{seq}"`) are never hashed —
+/// they travel as strings — so the hashed universe really is this static
+/// list. Rather than trusting the estimate, [`fabric`] debug-asserts
+/// pairwise distinctness over the census (and a unit test checks it in
+/// every build), so adding a colliding name fails loudly at the first
+/// test run instead of corrupting a training job.
 pub fn op_id(name: &str) -> u32 {
     let mut h: u32 = 0x811c9dc5;
     for b in name.as_bytes() {
@@ -34,6 +75,37 @@ pub fn op_id(name: &str) -> u32 {
         h = h.wrapping_mul(0x01000193);
     }
     h
+}
+
+/// Census of every op name the crate passes to [`op_id`] (tag-forming
+/// call sites in `collective/`, `context.rs`, `nonblocking/` and
+/// `transport/portable.rs`). Keep in sync when adding a collective: the
+/// guard in [`fabric`] and the `known_op_ids_are_collision_free` test
+/// check pairwise distinctness of exactly this list.
+pub const KNOWN_OP_NAMES: [&str; 17] = [
+    "barrier",
+    "broadcast",
+    "byteps_allreduce",
+    "hier.bcast",
+    "hier.inter",
+    "hier.intra",
+    "nb.neighbor",
+    "nb.ring",
+    "negotiation.allreduce",
+    "negotiation.hier_neighbor_allreduce",
+    "negotiation.neighbor_allgather",
+    "negotiation.neighbor_allreduce",
+    "neighbor_allgather",
+    "neighbor_allreduce",
+    "portable.neighbor_allreduce",
+    "ps_allreduce",
+    "ring_allreduce",
+];
+
+/// True when every pair of [`KNOWN_OP_NAMES`] hashes to a distinct id.
+fn known_op_ids_distinct() -> bool {
+    let ids: Vec<u32> = KNOWN_OP_NAMES.iter().map(|n| op_id(n)).collect();
+    ids.iter().enumerate().all(|(i, a)| ids[..i].iter().all(|b| a != b))
 }
 
 /// A point-to-point message. The payload is `Arc`-shared so one tensor can
@@ -73,6 +145,10 @@ pub struct Postman {
 /// Create the transport fabric for `n` nodes: one mailbox per rank plus a
 /// shared postman.
 pub fn fabric(n: usize) -> (Vec<Mailbox>, Postman) {
+    debug_assert!(
+        known_op_ids_distinct(),
+        "op_id collision inside KNOWN_OP_NAMES — rename the new collective"
+    );
     let mut senders = Vec::with_capacity(n);
     let mut mailboxes = Vec::with_capacity(n);
     for rank in 0..n {
@@ -422,5 +498,14 @@ mod tests {
     fn op_ids_distinct_for_distinct_names() {
         assert_ne!(op_id("neighbor.allreduce.x"), op_id("neighbor.allreduce.y"));
         assert_eq!(op_id("same"), op_id("same"));
+    }
+
+    #[test]
+    fn known_op_ids_are_collision_free() {
+        assert!(known_op_ids_distinct(), "op_id collision among in-tree op names");
+        // The census must at least stay deduplicated as a name list too.
+        for (i, a) in KNOWN_OP_NAMES.iter().enumerate() {
+            assert!(!KNOWN_OP_NAMES[..i].contains(a), "duplicate census entry {a}");
+        }
     }
 }

@@ -1,0 +1,391 @@
+//! Backend-portable workloads: the collectives and training loops that
+//! run identically over any [`Backend`] — the in-memory [`SimBackend`]
+//! or a real [`TcpBackend`] mesh of OS processes.
+//!
+//! The point of this module is the sim/tcp **parity contract**
+//! (`rust/tests/tcp_parity.rs`, `examples/wallclock_probe.rs`): the
+//! static `neighbor_allreduce` here reproduces the simulator's dense
+//! path *arithmetic* exactly — same `pull_view` source order, same
+//! ring-distance destination sort, same
+//! [`crate::tensor::weighted_combine_blocked_into`] kernel, same f32
+//! cast points — so a TCP job and a `run_spmd` job produce bitwise-equal
+//! parameters, and the 1e-6 acceptance bound of ISSUE 8 holds with zero
+//! slack lost to reimplementation drift. Data generators are shared for
+//! the same reason: both sides call [`regression_data`] /
+//! [`consensus_x0`], so cross-process comparisons never depend on a
+//! duplicated constant.
+//!
+//! [`SimBackend`]: crate::transport::backend::SimBackend
+//! [`TcpBackend`]: crate::transport::tcp::TcpBackend
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{PortableWorkload, TcpJobSpec};
+use crate::rng::Rng;
+use crate::simnet::faults::CommError;
+use crate::tensor::{axpy, weighted_combine_blocked_into};
+use crate::topology::builders;
+use crate::topology::views::SparseViews;
+use crate::transport::backend::{sim_backends, Backend};
+use crate::transport::{make_tag, op_id};
+
+/// Seed base for per-rank design matrices ([`regression_data`]).
+const SEED_A: u64 = 0x5EED_0A11;
+/// Seed for the shared ground-truth parameter vector.
+const SEED_XSTAR: u64 = 0x5EED_57A8;
+/// Seed base for per-rank label noise.
+const SEED_NOISE: u64 = 0x5EED_B0B0;
+/// Seed base for per-rank consensus initial vectors.
+const SEED_X0: u64 = 0x5EED_C0A5;
+
+/// One rank's static-topology communication pattern, precomputed once so
+/// the per-round hot path allocates nothing topology-related.
+#[derive(Debug, Clone)]
+pub struct LocalTopology {
+    /// `w_ii` from the weight matrix's pull view.
+    pub self_weight: f64,
+    /// In-neighbor `(rank, weight)` pairs, ascending by rank — the
+    /// receive/combine order of the simulator's dense path.
+    pub srcs: Vec<(usize, f64)>,
+    /// Out-neighbor ranks sorted by ring distance `(d + n - rank) % n`,
+    /// the paper §VI-B send order the simulator uses.
+    pub dsts: Vec<usize>,
+}
+
+/// Build rank `rank`'s [`LocalTopology`] for a named topology
+/// ([`builders::by_name`]) over `n` ranks.
+pub fn local_topology(name: &str, n: usize, rank: usize) -> anyhow::Result<LocalTopology> {
+    let (graph, weights) = builders::by_name(name, n)?;
+    let views = SparseViews::from_matrix(&weights, &graph);
+    let (self_weight, srcs) = views.pull_view(rank);
+    let mut dsts = views.out_neighbors(rank).to_vec();
+    dsts.sort_by_key(|&d| (d + n - rank) % n);
+    Ok(LocalTopology { self_weight, srcs: srcs.to_vec(), dsts })
+}
+
+/// Static partial averaging over any [`Backend`] — the portable form of
+/// the simulator's dense `neighbor_allreduce` (paper eq. (5)):
+/// `x <- w_ii x + Σ_j w_ij x_j`. Fails fast with the backend's typed
+/// [`CommError`] (no weight folding — failure handling is the caller's
+/// policy at this layer).
+pub fn neighbor_allreduce_portable<B: Backend>(
+    backend: &mut B,
+    topo: &LocalTopology,
+    round: u32,
+    data: &[f32],
+    deadline: Option<Duration>,
+) -> Result<Vec<f32>, CommError> {
+    let tag = make_tag(op_id("portable.neighbor_allreduce"), round);
+    let shared = Arc::new(data.to_vec());
+    for &dst in &topo.dsts {
+        backend.send(dst, tag, Arc::clone(&shared), 0.0)?;
+    }
+    let mut incoming: Vec<(f32, Arc<Vec<f32>>)> = Vec::with_capacity(topo.srcs.len());
+    for &(src, w) in &topo.srcs {
+        let m = backend.recv_match(src, tag, deadline)?;
+        incoming.push((w as f32, m.payload));
+    }
+    let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
+    let ws: Vec<f32> = incoming.iter().map(|(w, _)| *w).collect();
+    let mut out = data.to_vec();
+    weighted_combine_blocked_into(&mut out, topo.self_weight as f32, &parts, &ws);
+    drop(parts);
+    for (_, y) in incoming {
+        backend.reclaim(y);
+    }
+    Ok(out)
+}
+
+/// Deterministic consensus start vector for `rank` (shared by every
+/// runner that wants cross-backend comparability).
+pub fn consensus_x0(rank: usize, dim: usize) -> Vec<f32> {
+    Rng::new(SEED_X0 + rank as u64).normal_vec(dim)
+}
+
+/// Per-rank synthetic linear-regression data: design matrix `a`
+/// (`rows x dim`, row-major) and labels `b = A x* + 0.1 ε`, with `x*`
+/// shared across ranks and `A`, `ε` rank-specific — the heterogeneous
+/// local objectives every DSGD experiment in this repo trains on.
+pub fn regression_data(rank: usize, dim: usize, rows: usize) -> (Vec<f32>, Vec<f32>) {
+    let a = Rng::new(SEED_A + rank as u64).normal_vec(rows * dim);
+    let x_star = Rng::new(SEED_XSTAR).normal_vec(dim);
+    let mut noise_rng = Rng::new(SEED_NOISE + rank as u64);
+    let b: Vec<f32> = (0..rows)
+        .map(|r| {
+            let row = &a[r * dim..(r + 1) * dim];
+            let clean: f32 = row.iter().zip(&x_star).map(|(ai, xi)| ai * xi).sum();
+            clean + 0.1 * noise_rng.normal() as f32
+        })
+        .collect();
+    (a, b)
+}
+
+/// Gradient of the local least-squares objective
+/// `f(x) = (1/rows) ||A x - b||^2` into `grad` (no allocation).
+pub fn local_grad(a: &[f32], b: &[f32], x: &[f32], grad: &mut [f32]) {
+    let dim = x.len();
+    let rows = b.len();
+    grad.fill(0.0);
+    for r in 0..rows {
+        let row = &a[r * dim..(r + 1) * dim];
+        let resid: f32 = row.iter().zip(x).map(|(ai, xi)| ai * xi).sum::<f32>() - b[r];
+        let scale = 2.0 * resid / rows as f32;
+        for (g, ai) in grad.iter_mut().zip(row) {
+            *g += scale * ai;
+        }
+    }
+}
+
+/// Local least-squares loss `(1/rows) ||A x - b||^2`.
+pub fn local_loss(a: &[f32], b: &[f32], x: &[f32]) -> f64 {
+    let dim = x.len();
+    let rows = b.len();
+    let mut acc = 0.0f64;
+    for r in 0..rows {
+        let row = &a[r * dim..(r + 1) * dim];
+        let resid = row.iter().zip(x).map(|(ai, xi)| (*ai as f64) * (*xi as f64)).sum::<f64>()
+            - b[r] as f64;
+        acc += resid * resid;
+    }
+    acc / rows as f64
+}
+
+/// Crash injection for the failure-path acceptance test: rank
+/// [`KillSpec::rank`] abandons its sockets (no Goodbye — a model of
+/// `kill -9`) just before iteration [`KillSpec::at_iter`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillSpec {
+    /// Rank that dies.
+    pub rank: usize,
+    /// Iteration before which it dies.
+    pub at_iter: usize,
+}
+
+/// Parameters of a portable run (one struct so sim/tcp callers cannot
+/// diverge on defaults).
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Iteration count.
+    pub iters: usize,
+    /// Tensor dimension.
+    pub dim: usize,
+    /// Rows per rank (DSGD only).
+    pub rows: usize,
+    /// DSGD step size.
+    pub gamma: f32,
+    /// Topology name for [`builders::by_name`].
+    pub topology: String,
+    /// Per-receive wall deadline.
+    pub deadline: Option<Duration>,
+    /// Optional crash injection.
+    pub kill: Option<KillSpec>,
+}
+
+impl RunSpec {
+    /// Build from the launch-protocol job description ([`TcpJobSpec`]) —
+    /// the single conversion point shared by the TCP worker, the CLI's
+    /// sim reference, and the parity tests, so a unit mix-up (seconds vs
+    /// millis, say) cannot affect only one side of a comparison.
+    pub fn from_job(job: &TcpJobSpec) -> RunSpec {
+        let secs = job.deadline_secs;
+        let deadline = (secs > 0.0).then(|| Duration::from_secs_f64(secs));
+        RunSpec {
+            iters: job.iters,
+            dim: job.dim,
+            rows: job.rows,
+            gamma: job.gamma,
+            topology: job.topology.clone(),
+            deadline,
+            kill: job.kill.map(|(rank, at_iter)| KillSpec { rank, at_iter }),
+        }
+    }
+}
+
+/// What a portable run produced on this rank.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    /// Final parameter vector.
+    pub x: Vec<f32>,
+    /// Payload bytes this rank sent ([`Backend::bytes_sent`]).
+    pub bytes_sent: u64,
+    /// Wall milliseconds per iteration.
+    pub iter_ms: Vec<f64>,
+}
+
+/// If this rank is scheduled to die before `iter`, abandon the backend
+/// and surface the typed self-crash error.
+fn maybe_kill<B: Backend>(
+    backend: &mut B,
+    kill: Option<KillSpec>,
+    iter: usize,
+) -> Result<(), CommError> {
+    if let Some(k) = kill {
+        if k.rank == backend.rank() && iter == k.at_iter {
+            backend.abandon();
+            return Err(CommError::SelfCrash { rank: k.rank, at: iter as f64 });
+        }
+    }
+    Ok(())
+}
+
+/// Iterated consensus (`x <- W x`) over any backend. Returns this rank's
+/// final vector; all ranks converge toward the network mean.
+pub fn run_consensus<B: Backend>(backend: &mut B, spec: &RunSpec) -> Result<RunOutput, CommError> {
+    let topo = local_topology(&spec.topology, backend.size(), backend.rank())
+        .expect("portable run over a known topology");
+    let mut x = consensus_x0(backend.rank(), spec.dim);
+    let mut iter_ms = Vec::with_capacity(spec.iters);
+    for iter in 0..spec.iters {
+        maybe_kill(backend, spec.kill, iter)?;
+        let t0 = Instant::now();
+        x = neighbor_allreduce_portable(backend, &topo, iter as u32, &x, spec.deadline)?;
+        iter_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(RunOutput { x, bytes_sent: backend.bytes_sent(), iter_ms })
+}
+
+/// DSGD with ATC order (`x <- W (x - γ g)`, paper eq. (23)) on the
+/// shared synthetic regression problem, starting from `x = 0`. The
+/// half-step/combine sequence matches `optim::Dgd` exactly, so a
+/// `run_spmd` job with `Dgd::new(γ, Atc, Static)` lands on bitwise the
+/// same parameters.
+pub fn run_dsgd<B: Backend>(backend: &mut B, spec: &RunSpec) -> Result<RunOutput, CommError> {
+    let topo = local_topology(&spec.topology, backend.size(), backend.rank())
+        .expect("portable run over a known topology");
+    let (a, b) = regression_data(backend.rank(), spec.dim, spec.rows);
+    let mut x = vec![0.0f32; spec.dim];
+    let mut grad = vec![0.0f32; spec.dim];
+    let mut iter_ms = Vec::with_capacity(spec.iters);
+    for iter in 0..spec.iters {
+        maybe_kill(backend, spec.kill, iter)?;
+        let t0 = Instant::now();
+        local_grad(&a, &b, &x, &mut grad);
+        let mut half = x.clone();
+        axpy(-spec.gamma, &grad, &mut half);
+        x = neighbor_allreduce_portable(backend, &topo, iter as u32, &half, spec.deadline)?;
+        iter_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(RunOutput { x, bytes_sent: backend.bytes_sent(), iter_ms })
+}
+
+/// Dispatch to the workload named by a [`PortableWorkload`].
+pub fn run_workload<B: Backend>(
+    backend: &mut B,
+    workload: PortableWorkload,
+    spec: &RunSpec,
+) -> Result<RunOutput, CommError> {
+    match workload {
+        PortableWorkload::Consensus => run_consensus(backend, spec),
+        PortableWorkload::Dsgd => run_dsgd(backend, spec),
+    }
+}
+
+/// Run a portable workload on `n` in-process [`SimBackend`]s, one OS
+/// thread per rank — the reference side of every sim/tcp parity check
+/// (`rust/tests/tcp_parity.rs`, `examples/wallclock_probe.rs`, and the
+/// `--backend tcp` CLI's `--verify` pass).
+///
+/// [`SimBackend`]: crate::transport::backend::SimBackend
+pub fn run_sim_fleet(
+    n: usize,
+    workload: PortableWorkload,
+    spec: &RunSpec,
+) -> Vec<Result<RunOutput, CommError>> {
+    let fleet = sim_backends(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = fleet
+            .into_iter()
+            .map(|mut b| s.spawn(move || run_workload(&mut b, workload, spec)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(iters: usize, dim: usize) -> RunSpec {
+        RunSpec {
+            iters,
+            dim,
+            rows: 8,
+            gamma: 0.05,
+            topology: "ring".into(),
+            deadline: Some(Duration::from_secs(10)),
+            kill: None,
+        }
+    }
+
+    /// Drive all ranks of a portable run over SimBackends on threads.
+    fn run_fleet<F>(n: usize, f: F) -> Vec<Result<RunOutput, CommError>>
+    where
+        F: Fn(&mut crate::transport::backend::SimBackend) -> Result<RunOutput, CommError>
+            + Send
+            + Sync,
+    {
+        let fleet = sim_backends(n);
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = fleet
+                .into_iter()
+                .map(|mut b| s.spawn(move || f(&mut b)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+        })
+    }
+
+    #[test]
+    fn consensus_contracts_toward_the_mean() {
+        let n = 4;
+        let dim = 16;
+        let x0s: Vec<Vec<f32>> = (0..n).map(|r| consensus_x0(r, dim)).collect();
+        let mean: Vec<f64> = (0..dim)
+            .map(|j| x0s.iter().map(|x| x[j] as f64).sum::<f64>() / n as f64)
+            .collect();
+        let outs = run_fleet(n, |b| run_consensus(b, &spec(30, dim)));
+        for out in outs {
+            let out = out.expect("consensus run failed");
+            for (xi, mi) in out.x.iter().zip(&mean) {
+                assert!((*xi as f64 - mi).abs() < 1e-4, "not contracted: {xi} vs {mi}");
+            }
+        }
+    }
+
+    #[test]
+    fn dsgd_reduces_mean_loss() {
+        let n = 4;
+        let s = spec(40, 8);
+        let outs = run_fleet(n, |b| run_dsgd(b, &s));
+        let mut loss0 = 0.0;
+        let mut loss1 = 0.0;
+        let zeros = vec![0.0f32; s.dim];
+        for (rank, out) in outs.into_iter().enumerate() {
+            let out = out.expect("dsgd run failed");
+            let (a, b) = regression_data(rank, s.dim, s.rows);
+            loss0 += local_loss(&a, &b, &zeros);
+            loss1 += local_loss(&a, &b, &out.x);
+        }
+        assert!(loss1 < loss0 * 0.5, "loss did not drop: {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn killed_rank_surfaces_as_typed_errors() {
+        let n = 4;
+        let mut s = spec(20, 8);
+        s.kill = Some(KillSpec { rank: 2, at_iter: 3 });
+        let outs = run_fleet(n, |b| run_consensus(b, &s));
+        let mut self_crashes = 0;
+        let mut peer_downs = 0;
+        for out in outs {
+            match out {
+                Err(CommError::SelfCrash { rank: 2, .. }) => self_crashes += 1,
+                Err(CommError::PeerDown { .. }) => peer_downs += 1,
+                other => panic!("expected typed failure, got {other:?}"),
+            }
+        }
+        assert_eq!(self_crashes, 1);
+        assert_eq!(peer_downs, n - 1, "every survivor observes PeerDown");
+    }
+}

@@ -1,0 +1,560 @@
+//! Real multi-process transport: framed messages over loopback/LAN TCP.
+//!
+//! This is the first out-of-process [`Backend`]: one persistent
+//! full-duplex socket per peer pair, every message a
+//! [`crate::transport::frame`] frame (DESIGN.md §Transport backends).
+//! Connection establishment follows the rendezvous protocol of §RDZ-1…4:
+//!
+//! 1. Every rank binds a *data listener* on an ephemeral port.
+//! 2. Ranks 1..n dial rank 0's rendezvous listener and send a `Hello`
+//!    frame whose `tag` carries their data port (§RDZ-2).
+//! 3. Rank 0 replies to each with an `AddrMap` frame: `payload[r]` =
+//!    rank r's data port (§RDZ-3; ports ≤ 65535 are exact in f32).
+//! 4. The mesh forms deadlock-free: rank i dials every j < i (sending a
+//!    `Hello` to identify itself) and accepts from every j > i (§RDZ-4).
+//!
+//! After setup, one reader thread per peer socket decodes frames into a
+//! shared inbox (same `(src, tag)` stash semantics as [`Mailbox`]); a
+//! condvar wakes blocked receivers. EOF or a socket error *without* a
+//! preceding `Goodbye` frame marks the peer dead exactly like a crashed
+//! process — receivers observe [`CommError::PeerDown`], never a hang.
+//! Decode buffers come from the PR-2 [`BufferPool`] and callers hand
+//! payload storage back via [`Backend::reclaim`], so the zero-copy
+//! discipline survives the backend swap.
+//!
+//! [`Mailbox`]: crate::transport::Mailbox
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::pool::BufferPool;
+use crate::simnet::faults::CommError;
+use crate::transport::backend::{payload_nbytes, Backend};
+use crate::transport::frame::{read_frame_into, write_frame, Frame, FrameKind, ReadFrame};
+use crate::transport::{Message, Tag};
+
+/// How long connection establishment (rendezvous + mesh) may take before
+/// a missing peer turns into a setup error instead of a hang.
+pub const SETUP_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Polling granularity for blocked receivers and setup accept loops.
+const WAIT_SLICE: Duration = Duration::from_millis(25);
+
+/// Shared inbox fed by the per-peer reader threads.
+struct InboxState {
+    /// Buffered arrivals, keyed `(src, tag)` — the [`Mailbox`] stash
+    /// discipline, shared across reader threads.
+    stash: HashMap<(usize, Tag), VecDeque<Message>>,
+    /// `dead[r]`: rank r's socket has closed (Goodbye, EOF, or error).
+    dead: Vec<bool>,
+    /// `clean[r]`: the closure was announced by a `Goodbye` frame.
+    clean: Vec<bool>,
+}
+
+struct Inbox {
+    state: Mutex<InboxState>,
+    cond: Condvar,
+}
+
+impl Inbox {
+    fn new(n: usize) -> Arc<Inbox> {
+        Arc::new(Inbox {
+            state: Mutex::new(InboxState {
+                stash: HashMap::new(),
+                dead: vec![false; n],
+                clean: vec![false; n],
+            }),
+            cond: Condvar::new(),
+        })
+    }
+
+    fn push(&self, msg: Message) {
+        let mut st = self.state.lock().unwrap();
+        st.stash.entry((msg.src, msg.tag)).or_default().push_back(msg);
+        self.cond.notify_all();
+    }
+
+    fn mark_dead(&self, peer: usize, clean: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.dead[peer] = true;
+        st.clean[peer] = clean;
+        self.cond.notify_all();
+    }
+}
+
+/// Pop the oldest `(src, tag)` match from the stash.
+fn pop_match(st: &mut InboxState, src: usize, tag: Tag) -> Option<Message> {
+    let q = st.stash.get_mut(&(src, tag))?;
+    let m = q.pop_front().expect("stash entries are non-empty");
+    if q.is_empty() {
+        st.stash.remove(&(src, tag));
+    }
+    Some(m)
+}
+
+/// Pop the `tag` match from the lowest buffered source rank.
+fn pop_any(st: &mut InboxState, tag: Tag) -> Option<Message> {
+    let src = st.stash.keys().filter(|&&(_, t)| t == tag).map(|&(s, _)| s).min()?;
+    pop_match(st, src, tag)
+}
+
+/// The write half of one peer connection.
+struct WriterConn {
+    stream: TcpStream,
+    scratch: Vec<u8>,
+}
+
+impl WriterConn {
+    fn write(&mut self, frame: &Frame) -> std::io::Result<usize> {
+        write_frame(&mut self.stream, frame, &mut self.scratch)?;
+        self.stream.flush()?;
+        Ok(self.scratch.len())
+    }
+}
+
+/// TCP implementation of [`Backend`] — see module docs for the protocol.
+pub struct TcpBackend {
+    rank: usize,
+    size: usize,
+    /// `writers[r]`: write half of the socket to rank r (`None` for self
+    /// and for peers whose connection has failed).
+    writers: Vec<Option<WriterConn>>,
+    inbox: Arc<Inbox>,
+    pool: BufferPool,
+    tx_payload_bytes: u64,
+    tx_wire_bytes: u64,
+    start: Instant,
+    shut_down: bool,
+}
+
+/// Spawn the reader thread for one peer socket.
+fn spawn_reader(peer: usize, stream: TcpStream, inbox: Arc<Inbox>, pool: BufferPool) {
+    std::thread::Builder::new()
+        .name(format!("bf-tcp-rx-{peer}"))
+        .spawn(move || {
+            let mut stream = stream;
+            // Bucket hint so pooled decode buffers land in (and return
+            // from) the bucket matching the workload's tensor size.
+            let mut hint: usize = 64;
+            loop {
+                let mut scratch = pool.checkout_empty(hint).into_vec();
+                match read_frame_into(&mut stream, &mut scratch) {
+                    ReadFrame::Ok(frame) => match frame.kind {
+                        FrameKind::Data => {
+                            hint = hint.max(frame.payload.len());
+                            inbox.push(Message {
+                                src: frame.src as usize,
+                                tag: frame.tag,
+                                payload: Arc::new(frame.payload),
+                                arrival_vtime: frame.vtime,
+                            });
+                        }
+                        FrameKind::Goodbye => {
+                            inbox.mark_dead(peer, true);
+                            return;
+                        }
+                        FrameKind::Error => {
+                            inbox.mark_dead(peer, false);
+                            return;
+                        }
+                        // Setup-phase kinds are a protocol violation
+                        // after the mesh is up; treat as peer failure.
+                        FrameKind::Hello | FrameKind::AddrMap => {
+                            inbox.mark_dead(peer, false);
+                            return;
+                        }
+                    },
+                    // EOF without Goodbye = the peer process died.
+                    ReadFrame::Eof | ReadFrame::Malformed(_) | ReadFrame::Io(_) => {
+                        inbox.mark_dead(peer, false);
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawn tcp reader thread");
+}
+
+/// Dial `port` on loopback, retrying until `SETUP_TIMEOUT` (the listener
+/// may not be up yet when a fast child starts dialing).
+fn dial_retry(port: u16) -> std::io::Result<TcpStream> {
+    let deadline = Instant::now() + SETUP_TIMEOUT;
+    loop {
+        match TcpStream::connect(("127.0.0.1", port)) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Accept one connection within `SETUP_TIMEOUT`.
+fn accept_timeout(listener: &TcpListener) -> std::io::Result<TcpStream> {
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + SETUP_TIMEOUT;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "timed out waiting for a peer connection",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Read one frame of the expected `kind` during setup.
+fn read_setup_frame(stream: &mut TcpStream, kind: FrameKind) -> std::io::Result<Frame> {
+    let mut payload = Vec::new();
+    match read_frame_into(stream, &mut payload) {
+        ReadFrame::Ok(f) if f.kind == kind => Ok(f),
+        ReadFrame::Ok(f) => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("expected {kind:?} during setup, got {:?}", f.kind),
+        )),
+        ReadFrame::Eof => Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "peer closed during setup",
+        )),
+        ReadFrame::Malformed(e) => {
+            Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+        }
+        ReadFrame::Io(e) => Err(e),
+    }
+}
+
+fn send_setup_frame(stream: &mut TcpStream, frame: &Frame) -> std::io::Result<()> {
+    let mut scratch = Vec::new();
+    write_frame(stream, frame, &mut scratch)?;
+    stream.flush()
+}
+
+/// Rank 0's rendezvous service, bound before any child dials in so the
+/// port can be published to them (the launcher prints it on stdout — the
+/// port-allocation guard that lets parallel CI jobs coexist).
+pub struct Rendezvous {
+    listener: TcpListener,
+}
+
+impl Rendezvous {
+    /// Bind the rendezvous listener on an ephemeral loopback port.
+    pub fn bind() -> std::io::Result<Rendezvous> {
+        Ok(Rendezvous { listener: TcpListener::bind(("127.0.0.1", 0))? })
+    }
+
+    /// The port peers must dial (publish out-of-band; see §RDZ-1).
+    pub fn port(&self) -> std::io::Result<u16> {
+        Ok(self.listener.local_addr()?.port())
+    }
+
+    /// Run rank 0's side to completion: collect `Hello`s from ranks
+    /// 1..n, reply with the address map, then form rank 0's mesh edges.
+    pub fn establish(self, size: usize) -> std::io::Result<TcpBackend> {
+        let data_listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let mut ports = vec![0u16; size];
+        ports[0] = data_listener.local_addr()?.port();
+
+        // §RDZ-2/3: one Hello per joining rank, one AddrMap reply each.
+        let mut rdz_conns: Vec<TcpStream> = Vec::with_capacity(size - 1);
+        for _ in 1..size {
+            let mut conn = accept_timeout(&self.listener)?;
+            let hello = read_setup_frame(&mut conn, FrameKind::Hello)?;
+            let peer = hello.src as usize;
+            if peer == 0 || peer >= size {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("rendezvous Hello from out-of-range rank {peer}"),
+                ));
+            }
+            ports[peer] = hello.tag as u16;
+            rdz_conns.push(conn);
+        }
+        let map = Frame {
+            kind: FrameKind::AddrMap,
+            src: 0,
+            tag: 0,
+            vtime: 0.0,
+            payload: ports.iter().map(|&p| p as f32).collect(),
+        };
+        for conn in &mut rdz_conns {
+            send_setup_frame(conn, &map)?;
+        }
+        drop(rdz_conns);
+        TcpBackend::finish_mesh(0, size, data_listener)
+    }
+}
+
+impl TcpBackend {
+    /// Join a job as rank `rank >= 1` by dialing rank 0's rendezvous
+    /// port (§RDZ-2…4).
+    pub fn connect(rank: usize, size: usize, rendezvous_port: u16) -> std::io::Result<TcpBackend> {
+        assert!(rank >= 1 && rank < size, "rank 0 uses Rendezvous::establish");
+        let data_listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let data_port = data_listener.local_addr()?.port();
+
+        let mut rdz = dial_retry(rendezvous_port)?;
+        let hello = Frame::control(FrameKind::Hello, rank as u64, data_port as u64);
+        send_setup_frame(&mut rdz, &hello)?;
+        let map = read_setup_frame(&mut rdz, FrameKind::AddrMap)?;
+        drop(rdz);
+        if map.payload.len() != size {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("address map has {} entries, expected {size}", map.payload.len()),
+            ));
+        }
+        let ports: Vec<u16> = map.payload.iter().map(|&p| p as u16).collect();
+
+        let mut backend = TcpBackend::empty(rank, size);
+        // §RDZ-4: dial every lower rank, identifying ourselves with a
+        // Hello on the fresh data connection.
+        for peer in 0..rank {
+            let mut stream = dial_retry(ports[peer])?;
+            stream.set_nodelay(true)?;
+            send_setup_frame(&mut stream, &Frame::control(FrameKind::Hello, rank as u64, 0))?;
+            backend.adopt(peer, stream)?;
+        }
+        backend.accept_uppers(&data_listener)?;
+        Ok(backend)
+    }
+
+    fn empty(rank: usize, size: usize) -> TcpBackend {
+        TcpBackend {
+            rank,
+            size,
+            writers: (0..size).map(|_| None).collect(),
+            inbox: Inbox::new(size),
+            pool: BufferPool::new(),
+            tx_payload_bytes: 0,
+            tx_wire_bytes: 0,
+            start: Instant::now(),
+            shut_down: false,
+        }
+    }
+
+    /// Register an established peer socket: keep the write half, spawn
+    /// the reader thread on a clone.
+    fn adopt(&mut self, peer: usize, stream: TcpStream) -> std::io::Result<()> {
+        let read_half = stream.try_clone()?;
+        spawn_reader(peer, read_half, Arc::clone(&self.inbox), self.pool.clone());
+        self.writers[peer] = Some(WriterConn { stream, scratch: Vec::new() });
+        Ok(())
+    }
+
+    /// Accept the mesh edges dialed by every higher rank (§RDZ-4).
+    fn accept_uppers(&mut self, data_listener: &TcpListener) -> std::io::Result<()> {
+        let expected = self.size - 1 - self.rank;
+        for _ in 0..expected {
+            let mut stream = accept_timeout(data_listener)?;
+            stream.set_nodelay(true)?;
+            let hello = read_setup_frame(&mut stream, FrameKind::Hello)?;
+            let peer = hello.src as usize;
+            if peer <= self.rank || peer >= self.size {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("mesh Hello from unexpected rank {peer}"),
+                ));
+            }
+            self.adopt(peer, stream)?;
+        }
+        Ok(())
+    }
+
+    /// Shared tail of mesh formation for rank 0 (dials nobody).
+    fn finish_mesh(
+        rank: usize,
+        size: usize,
+        data_listener: TcpListener,
+    ) -> std::io::Result<TcpBackend> {
+        let mut backend = TcpBackend::empty(rank, size);
+        backend.accept_uppers(&data_listener)?;
+        Ok(backend)
+    }
+
+    /// Total bytes written to sockets, headers and control frames
+    /// included (contrast [`Backend::bytes_sent`], which is payload-only
+    /// for cross-backend comparability).
+    pub fn wire_bytes_sent(&self) -> u64 {
+        self.tx_wire_bytes
+    }
+
+    fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Write a frame to `dst`, mapping any socket error to `PeerDown`
+    /// and dropping the broken write half.
+    fn write_to(&mut self, dst: usize, frame: &Frame) -> Result<u64, CommError> {
+        let at = self.elapsed();
+        let conn = self.writers[dst].as_mut().ok_or(CommError::PeerDown { peer: dst, at })?;
+        match conn.write(frame) {
+            Ok(n) => Ok(n as u64),
+            Err(_) => {
+                self.writers[dst] = None;
+                self.inbox.mark_dead(dst, false);
+                Err(CommError::PeerDown { peer: dst, at })
+            }
+        }
+    }
+}
+
+impl Backend for TcpBackend {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(
+        &mut self,
+        dst: usize,
+        tag: Tag,
+        payload: Arc<Vec<f32>>,
+        vtime: f64,
+    ) -> Result<(), CommError> {
+        let nbytes = payload_nbytes(payload.len());
+        if dst == self.rank {
+            // Loopback-in-the-small: self-sends skip the socket but are
+            // accounted identically on both backends.
+            self.inbox.push(Message { src: dst, tag, payload, arrival_vtime: vtime });
+            self.tx_payload_bytes += nbytes;
+            return Ok(());
+        }
+        let frame = Frame::data(self.rank as u64, tag, vtime, payload.as_ref().clone());
+        let wire = self.write_to(dst, &frame)?;
+        self.pool.recycle_vec(frame.payload);
+        self.tx_payload_bytes += nbytes;
+        self.tx_wire_bytes += wire;
+        Ok(())
+    }
+
+    fn recv_match(
+        &mut self,
+        src: usize,
+        tag: Tag,
+        deadline: Option<Duration>,
+    ) -> Result<Message, CommError> {
+        let wait_start = Instant::now();
+        let inbox = Arc::clone(&self.inbox);
+        let mut st = inbox.state.lock().unwrap();
+        loop {
+            if let Some(m) = pop_match(&mut st, src, tag) {
+                return Ok(m);
+            }
+            if st.dead[src] {
+                return Err(CommError::PeerDown { peer: src, at: self.elapsed() });
+            }
+            let slice = match deadline {
+                None => WAIT_SLICE,
+                Some(d) => {
+                    let remaining = d.saturating_sub(wait_start.elapsed());
+                    if remaining.is_zero() {
+                        return Err(CommError::Timeout { src, deadline: self.elapsed() });
+                    }
+                    remaining.min(WAIT_SLICE)
+                }
+            };
+            st = inbox.cond.wait_timeout(st, slice).unwrap().0;
+        }
+    }
+
+    fn recv_any(&mut self, tag: Tag, deadline: Option<Duration>) -> Result<Message, CommError> {
+        let wait_start = Instant::now();
+        let inbox = Arc::clone(&self.inbox);
+        let mut st = inbox.state.lock().unwrap();
+        loop {
+            if let Some(m) = pop_any(&mut st, tag) {
+                return Ok(m);
+            }
+            let all_dead = (0..self.size).all(|r| r == self.rank || st.dead[r]);
+            if all_dead {
+                let peer = (0..self.size).find(|&r| r != self.rank).unwrap_or(self.rank);
+                return Err(CommError::PeerDown { peer, at: self.elapsed() });
+            }
+            let slice = match deadline {
+                None => WAIT_SLICE,
+                Some(d) => {
+                    let remaining = d.saturating_sub(wait_start.elapsed());
+                    if remaining.is_zero() {
+                        return Err(CommError::Timeout {
+                            src: usize::MAX,
+                            deadline: self.elapsed(),
+                        });
+                    }
+                    remaining.min(WAIT_SLICE)
+                }
+            };
+            st = inbox.cond.wait_timeout(st, slice).unwrap().0;
+        }
+    }
+
+    fn try_recv_match(&mut self, src: usize, tag: Tag) -> Option<Message> {
+        pop_match(&mut self.inbox.state.lock().unwrap(), src, tag)
+    }
+
+    fn try_recv_any(&mut self, tag: Tag) -> Option<Message> {
+        pop_any(&mut self.inbox.state.lock().unwrap(), tag)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.tx_payload_bytes
+    }
+
+    fn reclaim(&self, payload: Arc<Vec<f32>>) {
+        self.pool.reclaim(payload);
+    }
+
+    fn shutdown(&mut self) {
+        if self.shut_down {
+            return;
+        }
+        self.shut_down = true;
+        let goodbye = Frame::control(FrameKind::Goodbye, self.rank as u64, 0);
+        for dst in 0..self.size {
+            if dst != self.rank {
+                let _ = self.write_to(dst, &goodbye);
+            }
+        }
+        // Keep the write halves open until drop: peers may still be
+        // mid-receive and closing early would race their final reads.
+    }
+
+    fn abandon(&mut self) {
+        // Model a killed process: slam every socket shut with no
+        // Goodbye. Peers observe EOF → PeerDown.
+        self.shut_down = true;
+        for conn in self.writers.iter_mut() {
+            if let Some(c) = conn.take() {
+                let _ = c.stream.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Drop for TcpBackend {
+    fn drop(&mut self) {
+        if !self.shut_down {
+            // An unannounced drop is indistinguishable from a crash on
+            // the wire — which is exactly the semantics we want.
+            self.abandon();
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Property tests for the wire-format codec (ISSUE 8 satellite 4).
+//!
+//! Organized by the spec sections of DESIGN.md §Transport backends: each
+//! test names the §WF rule it enforces, so a spec change without a
+//! matching codec change (or vice versa) fails loudly here.
+
+use bluefog::rng::Rng;
+use bluefog::transport::frame::{
+    decode, encode, encoded_len, read_frame_into, Frame, FrameError, FrameKind, ReadFrame,
+    HEADER_LEN, MAGIC, MAX_PAYLOAD_ELEMS, VERSION,
+};
+
+/// Deterministic "arbitrary" frames: seeded payload lengths (including 0
+/// and non-multiple-of-chunk sizes), values, and header fields.
+fn arbitrary_frames() -> Vec<Frame> {
+    let mut rng = Rng::new(0xF7A3_E5);
+    let lens = [0usize, 1, 2, 3, 15, 16, 17, 63, 64, 255, 1000, 4096];
+    lens.iter()
+        .enumerate()
+        .map(|(i, &len)| Frame {
+            kind: FrameKind::Data,
+            src: i as u64 * 0x0123_4567_89AB_CDEF,
+            tag: rng.normal().to_bits() ^ i as u64,
+            vtime: rng.normal() * 1e3,
+            payload: rng.normal_vec(len),
+        })
+        .collect()
+}
+
+/// §WF-2/§WF-3: encode/decode is the identity on every frame, the byte
+/// count matches the layout formula, and special f32 values survive.
+#[test]
+fn roundtrip_arbitrary_payloads() {
+    for f in arbitrary_frames() {
+        let bytes = encode(&f);
+        assert_eq!(bytes.len(), encoded_len(f.payload.len()), "§WF-2 length formula");
+        let (g, used) = decode(&bytes).expect("well-formed frame decodes");
+        assert_eq!(used, bytes.len());
+        assert_eq!(f, g);
+    }
+    // Non-finite and signed-zero payloads are bit-preserved (§WF-3: the
+    // payload is raw IEEE-754 bits, not a numeric format).
+    let f = Frame::data(0, 1, 0.0, vec![f32::NAN, f32::INFINITY, -0.0, f32::MIN_POSITIVE]);
+    let (g, _) = decode(&encode(&f)).unwrap();
+    for (a, b) in f.payload.iter().zip(&g.payload) {
+        assert_eq!(a.to_bits(), b.to_bits(), "§WF-3 bit preservation");
+    }
+}
+
+/// §WF-4: every kind round-trips through its wire byte; unknown kind
+/// bytes are rejected rather than guessed at.
+#[test]
+fn kind_bytes_round_trip_and_reject() {
+    let kinds = [
+        FrameKind::Data,
+        FrameKind::Hello,
+        FrameKind::AddrMap,
+        FrameKind::Goodbye,
+        FrameKind::Error,
+    ];
+    for k in kinds {
+        assert_eq!(FrameKind::from_u8(k.as_u8()), Some(k));
+        let f = Frame::control(k, 3, 9);
+        let (g, _) = decode(&encode(&f)).unwrap();
+        assert_eq!(g.kind, k);
+    }
+    for b in 5..=u8::MAX {
+        assert_eq!(FrameKind::from_u8(b), None, "§WF-4: kind byte {b} must not parse");
+    }
+    let mut bytes = encode(&Frame::control(FrameKind::Data, 0, 0));
+    bytes[5] = 200;
+    assert!(matches!(decode(&bytes), Err(FrameError::BadKind(200))));
+}
+
+/// §WF-5: EVERY strict prefix of a valid encoding is Truncated — the
+/// decoder never consumes a partial frame, whatever the cut point.
+#[test]
+fn all_truncated_prefixes_rejected() {
+    let f = Frame::data(2, 77, -1.25, (0..19).map(|i| i as f32 * 0.5).collect());
+    let bytes = encode(&f);
+    for cut in 0..bytes.len() {
+        match decode(&bytes[..cut]) {
+            Err(FrameError::Truncated { needed, have }) => {
+                assert_eq!(have, cut);
+                assert!(needed > cut, "needed {needed} must exceed available {cut}");
+                // §WF-5: the full-frame need is reported once the header
+                // is readable; before that only the header size is known.
+                if cut >= HEADER_LEN {
+                    assert_eq!(needed, bytes.len());
+                } else {
+                    assert_eq!(needed, HEADER_LEN);
+                }
+            }
+            other => panic!("prefix of {cut} bytes must be Truncated, got {other:?}"),
+        }
+    }
+}
+
+/// §WF-2: corrupting any magic byte is BadMagic; §WF-6: any other
+/// version byte is BadVersion, never a silent best-effort parse.
+#[test]
+fn bad_magic_and_version_rejected() {
+    let good = encode(&Frame::control(FrameKind::Hello, 1, 2));
+    assert_eq!(&good[0..4], &MAGIC, "encoder writes the spec magic");
+    for i in 0..4 {
+        let mut bytes = good.clone();
+        bytes[i] ^= 0xFF;
+        assert!(
+            matches!(decode(&bytes), Err(FrameError::BadMagic(_))),
+            "§WF-2: corrupt magic byte {i} must be rejected"
+        );
+    }
+    for v in (0..=u8::MAX).filter(|&v| v != VERSION) {
+        let mut bytes = good.clone();
+        bytes[4] = v;
+        assert!(matches!(decode(&bytes), Err(FrameError::BadVersion(b)) if b == v));
+    }
+}
+
+/// §WF-5: a length field beyond the cap is rejected before any payload
+/// allocation, even when the buffer claims to hold the bytes.
+#[test]
+fn oversize_rejected_before_allocation() {
+    let mut bytes = encode(&Frame::control(FrameKind::Data, 0, 0));
+    bytes[32..40].copy_from_slice(&(MAX_PAYLOAD_ELEMS + 1).to_le_bytes());
+    assert!(matches!(decode(&bytes), Err(FrameError::Oversize(n)) if n == MAX_PAYLOAD_ELEMS + 1));
+    // The cap itself is within spec: with only the header present the
+    // decoder must report Truncated (more bytes wanted), never Oversize.
+    bytes[32..40].copy_from_slice(&MAX_PAYLOAD_ELEMS.to_le_bytes());
+    assert!(matches!(decode(&bytes), Err(FrameError::Truncated { .. })));
+}
+
+/// §WF-2: reserved bytes are zero on send and ignored on receive — a
+/// nonzero reserved field from a future sender still decodes today.
+#[test]
+fn reserved_bytes_ignored_on_receive() {
+    let f = Frame::data(5, 6, 7.0, vec![1.0, 2.0]);
+    let mut bytes = encode(&f);
+    assert_eq!(&bytes[6..8], &[0, 0], "encoder zeroes reserved bytes");
+    bytes[6] = 0xAA;
+    bytes[7] = 0x55;
+    let (g, _) = decode(&bytes).expect("§WF-2: reserved bytes are ignored");
+    assert_eq!(f, g);
+}
+
+/// §WF-1: the stream reader yields back-to-back frames, reports a clean
+/// EOF only at a frame boundary, and treats a mid-frame cut as malformed.
+#[test]
+fn stream_reader_boundaries() {
+    let frames = arbitrary_frames();
+    let mut wire = Vec::new();
+    for f in &frames {
+        wire.extend_from_slice(&encode(f));
+    }
+    let mut cursor = &wire[..];
+    let mut payload = Vec::new();
+    for f in &frames {
+        match read_frame_into(&mut cursor, &mut payload) {
+            ReadFrame::Ok(g) => assert_eq!(*f, g),
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+    assert!(matches!(read_frame_into(&mut cursor, &mut payload), ReadFrame::Eof));
+
+    // Mid-frame cut: truncated stream is Malformed, not Eof (§WF-5).
+    let one = encode(frames.last().expect("non-empty"));
+    let mut cut = &one[..one.len() - 3];
+    match read_frame_into(&mut cut, &mut payload) {
+        ReadFrame::Malformed(FrameError::Truncated { .. }) => {}
+        other => panic!("mid-frame EOF must be Malformed, got {other:?}"),
+    }
+}

@@ -1,0 +1,158 @@
+//! Sim/TCP parity and failure-path integration tests (ISSUE 8).
+//!
+//! The TCP meshes here are formed IN-PROCESS: one thread per rank over
+//! real loopback sockets (rank 0 runs the rendezvous, ranks 1..n dial
+//! in). The multi-process launch path (`run_tcp_job`) re-executes the
+//! current binary, which under the libtest harness never reaches
+//! `maybe_run_tcp_worker`; that path is exercised end-to-end by
+//! `examples/wallclock_probe.rs` (blocking WALLCLOCK_SMOKE CI step) and
+//! by `bfrun --backend tcp`.
+
+use std::time::Duration;
+
+use bluefog::config::PortableWorkload;
+use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::optim::{CommSpec, DecentralizedOptimizer, Dgd, StepOrder};
+use bluefog::simnet::faults::CommError;
+use bluefog::topology::builders;
+use bluefog::transport::backend::Backend;
+use bluefog::transport::portable::{
+    local_grad, regression_data, run_sim_fleet, run_workload, KillSpec, RunOutput, RunSpec,
+};
+use bluefog::transport::tcp::{Rendezvous, TcpBackend};
+
+const N: usize = 4;
+
+fn spec() -> RunSpec {
+    RunSpec {
+        iters: 30,
+        dim: 48,
+        rows: 16,
+        gamma: 0.05,
+        topology: "ring".into(),
+        deadline: Some(Duration::from_secs(20)),
+        kill: None,
+    }
+}
+
+/// One rank's life: run the workload, say Goodbye on success (an error
+/// exit drops the backend unannounced — the crash model, on purpose).
+fn run_rank<B: Backend>(
+    mut b: B,
+    workload: PortableWorkload,
+    spec: &RunSpec,
+) -> Result<RunOutput, CommError> {
+    let out = run_workload(&mut b, workload, spec);
+    if out.is_ok() {
+        b.shutdown();
+    }
+    out
+}
+
+/// Real loopback TCP mesh, one thread per rank inside this process.
+fn tcp_fleet(workload: PortableWorkload, spec: &RunSpec) -> Vec<Result<RunOutput, CommError>> {
+    let rdz = Rendezvous::bind().expect("bind rendezvous listener");
+    let port = rdz.port().expect("rendezvous port");
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(N);
+        handles.push(
+            s.spawn(move || run_rank(rdz.establish(N).expect("rank 0 mesh"), workload, spec)),
+        );
+        for rank in 1..N {
+            handles.push(s.spawn(move || {
+                let b = TcpBackend::connect(rank, N, port).expect("worker dial-in");
+                run_rank(b, workload, spec)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    })
+}
+
+/// Identical parameters (<= 1e-6) and bit-identical payload byte
+/// counters across the two backends — the ISSUE 8 acceptance gate.
+fn assert_parity(workload: PortableWorkload) {
+    let spec = spec();
+    let sim: Vec<RunOutput> =
+        run_sim_fleet(N, workload, &spec).into_iter().map(|r| r.expect("sim rank")).collect();
+    let tcp: Vec<RunOutput> =
+        tcp_fleet(workload, &spec).into_iter().map(|r| r.expect("tcp rank")).collect();
+    let mut max_delta = 0.0f64;
+    for (s, t) in sim.iter().zip(&tcp) {
+        assert_eq!(s.x.len(), t.x.len());
+        assert_eq!(s.bytes_sent, t.bytes_sent, "payload accounting must not depend on backend");
+        for (a, b) in s.x.iter().zip(&t.x) {
+            max_delta = max_delta.max((*a as f64 - *b as f64).abs());
+        }
+    }
+    assert!(max_delta <= 1e-6, "sim/tcp parameters diverged by {max_delta:.3e}");
+}
+
+#[test]
+fn tcp_consensus_matches_sim() {
+    assert_parity(PortableWorkload::Consensus);
+}
+
+#[test]
+fn tcp_dsgd_matches_sim() {
+    assert_parity(PortableWorkload::Dsgd);
+}
+
+/// The portable DSGD loop and `optim::Dgd` (ATC order) under `run_spmd`
+/// are the same algorithm — paper eq. (23) computed two independent
+/// ways must land on the same parameters.
+#[test]
+fn portable_dsgd_matches_run_spmd_dgd() {
+    let spec = spec();
+    let sim: Vec<Vec<f32>> = run_sim_fleet(N, PortableWorkload::Dsgd, &spec)
+        .into_iter()
+        .map(|r| r.expect("sim rank").x)
+        .collect();
+
+    let (graph, weights) = builders::by_name("ring", N).expect("ring topology");
+    let cfg = SpmdConfig::new(N).with_topology(graph, weights).with_topo_check(false);
+    let (iters, dim, rows, gamma) = (spec.iters, spec.dim, spec.rows, spec.gamma);
+    let spmd: Vec<Vec<f32>> = run_spmd(cfg, move |ctx| {
+        let (a, b) = regression_data(ctx.rank(), dim, rows);
+        let mut x = vec![0.0f32; dim];
+        let mut grad = vec![0.0f32; dim];
+        let mut opt = Dgd::new(gamma, StepOrder::Atc, CommSpec::Static);
+        for _ in 0..iters {
+            local_grad(&a, &b, &x, &mut grad);
+            opt.step(ctx, &mut x, &grad)?;
+        }
+        Ok(x)
+    })
+    .expect("run_spmd");
+
+    for (rank, (p, q)) in sim.iter().zip(&spmd).enumerate() {
+        for (a, b) in p.iter().zip(q) {
+            let delta = (*a as f64 - *b as f64).abs();
+            assert!(delta <= 1e-6, "rank {rank}: portable vs Dgd delta {delta:.3e}");
+        }
+    }
+}
+
+/// A rank killed mid-run (sockets slammed, no Goodbye) surfaces as a
+/// typed error on every rank: `SelfCrash` on the victim, `PeerDown` on
+/// all survivors. The test completing at all is the no-hang gate.
+#[test]
+fn killed_tcp_peer_surfaces_peer_down_without_hang() {
+    let mut spec = spec();
+    spec.iters = 12;
+    spec.deadline = Some(Duration::from_secs(10));
+    spec.kill = Some(KillSpec { rank: 2, at_iter: 2 });
+    let outs = tcp_fleet(PortableWorkload::Consensus, &spec);
+    match &outs[2] {
+        Err(CommError::SelfCrash { rank: 2, .. }) => {}
+        other => panic!("victim must report SelfCrash, got {other:?}"),
+    }
+    for (rank, out) in outs.iter().enumerate() {
+        if rank == 2 {
+            continue;
+        }
+        match out {
+            Err(CommError::PeerDown { .. }) => {}
+            other => panic!("rank {rank} must observe PeerDown, got {other:?}"),
+        }
+    }
+}
