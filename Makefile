@@ -16,11 +16,15 @@ examples:
 benches:
 	cargo build --benches
 
-# A/B the naive vs pooled/blocked communication hot path and write
-# BENCH_hotpath.json (ms/op, effective GB/s, pool hit rate). Set
-# HOTPATH_SMOKE=1 for a seconds-long CI-sized run.
+# A/B the naive vs pooled/blocked communication hot path plus the
+# single-rank kernel section (seed scalar vs SIMD vs SIMD + intra-rank
+# worker pool) and write BENCH_hotpath.json (ms/op, effective GB/s, pool
+# hit rate, kernel GB/s, cpu model/features). Set HOTPATH_SMOKE=1 for a
+# seconds-long CI-sized run; HOTPATH_THREADS sizes the worker pool
+# (default: available cores capped at 4), e.g.
+# `make bench-hotpath HOTPATH_THREADS=2`.
 bench-hotpath:
-	cargo run --release --example perf_probe
+	HOTPATH_THREADS=$(HOTPATH_THREADS) cargo run --release --example perf_probe
 
 # Compare dense vs compressed neighbor averaging (topk/randk/q8/lowrank with
 # error feedback) on the linear-regression workload and write

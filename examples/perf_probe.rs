@@ -5,13 +5,23 @@
 // fans out to n-1 neighbors). Emits machine-readable `BENCH_hotpath.json`
 // with ms/op, effective GB/s and the pool hit rate after warm-up.
 //
+// A second section A/Bs the combine kernels themselves on one rank:
+// the frozen seed k-pass scalar kernel vs the blocked SIMD kernel at 1
+// thread vs the same kernel sharded over the intra-rank worker pool.
+// With >= 2 worker threads the probe *gates* on the SIMD+threads kernel
+// reaching 2x the scalar GB/s.
+//
 // Run: `make bench-hotpath` (or `cargo run --release --example perf_probe`).
-// Env: HOTPATH_SMOKE=1 shrinks sizes/reps for CI; BENCH_HOTPATH_OUT
-// overrides the output path.
+// Env: HOTPATH_SMOKE=1 shrinks sizes/reps for CI; HOTPATH_THREADS sizes the
+// intra-rank worker pool (default: available cores capped at 4);
+// BENCH_HOTPATH_OUT overrides the output path.
 use std::time::Instant;
 
 use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::metrics::{cpu_features, cpu_model};
+use bluefog::parallel::WorkerPool;
 use bluefog::pool::{HotPath, PoolStats};
+use bluefog::tensor::{scalar, weighted_combine_blocked_into_par};
 use bluefog::topology::builders;
 use bluefog::topology::WeightMatrix;
 
@@ -35,6 +45,7 @@ fn run_mode(
     reps: usize,
     warmup: usize,
     hot: HotPath,
+    intra_threads: usize,
 ) -> anyhow::Result<ModeRun> {
     let graph = builders::fully_connected(nodes);
     let weights = WeightMatrix::uniform_pull(&graph);
@@ -43,7 +54,8 @@ fn run_mode(
         SpmdConfig::new(nodes)
             .with_topology(graph, weights)
             .with_topo_check(false)
-            .with_hot_path(hot),
+            .with_hot_path(hot)
+            .with_intra_threads(intra_threads),
         move |ctx| {
             let data = vec![1.0f32; numel];
             for _ in 0..warmup {
@@ -88,6 +100,87 @@ fn best_of(
     Ok(best.expect("at least one trial"))
 }
 
+/// Intra-rank worker count: `HOTPATH_THREADS` env, else available cores
+/// capped at 4 (the combine shards saturate memory bandwidth quickly).
+fn resolve_threads() -> usize {
+    match std::env::var("HOTPATH_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4),
+    }
+}
+
+/// Best total wall time of `trials` timed loops of `reps` calls each,
+/// after one discarded warmup call.
+fn time_best(trials: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+struct KernelRun {
+    numel: usize,
+    parts: usize,
+    reps: usize,
+    scalar_gbps: f64,
+    simd_gbps: f64,
+    simd_mt_gbps: f64,
+}
+
+/// Single-rank combine-kernel A/B: the frozen seed k-pass kernel
+/// ([`scalar::weighted_combine`]) vs the blocked SIMD kernel serial vs
+/// sharded over `threads` workers. All three compute the same
+/// `w0*base + sum(w_i * p_i)`; GB/s uses the logical traffic of one
+/// combine (read `parts + 1` buffers, write one output).
+fn bench_kernels(numel: usize, parts: usize, reps: usize, threads: usize) -> KernelRun {
+    let base = vec![1.0f32; numel];
+    let peers: Vec<Vec<f32>> = (0..parts)
+        .map(|i| (0..numel).map(|j| ((i * 31 + j) % 17) as f32 * 0.125 - 1.0).collect())
+        .collect();
+    let views: Vec<&[f32]> = peers.iter().map(|p| p.as_slice()).collect();
+    let w = 1.0 / (parts + 1) as f32;
+    let ws = vec![w; parts];
+    let bytes = ((parts + 2) * numel * 4 * reps) as f64;
+    let trials = 3;
+
+    let mut all_views = vec![base.as_slice()];
+    all_views.extend(views.iter().copied());
+    let mut all_ws = vec![w];
+    all_ws.extend(ws.iter().copied());
+    let t_scalar = time_best(trials, reps, || {
+        std::hint::black_box(scalar::weighted_combine(&all_views, &all_ws));
+    });
+
+    let mut acc = vec![0.0f32; numel];
+    let t_simd = time_best(trials, reps, || {
+        acc.copy_from_slice(&base);
+        weighted_combine_blocked_into_par(WorkerPool::serial(), &mut acc, w, &views, &ws);
+        std::hint::black_box(&acc);
+    });
+
+    let pool = WorkerPool::new(threads);
+    let t_mt = time_best(trials, reps, || {
+        acc.copy_from_slice(&base);
+        weighted_combine_blocked_into_par(&pool, &mut acc, w, &views, &ws);
+        std::hint::black_box(&acc);
+    });
+
+    KernelRun {
+        numel,
+        parts,
+        reps,
+        scalar_gbps: bytes / t_scalar / 1e9,
+        simd_gbps: bytes / t_simd / 1e9,
+        simd_mt_gbps: bytes / t_mt / 1e9,
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::var("HOTPATH_SMOKE").is_ok();
     // 9 fully-connected nodes = the 8-neighbor fan-out case; smoke mode
@@ -99,15 +192,42 @@ fn main() -> anyhow::Result<()> {
     } else {
         (9, 4, vec![(1 << 12, 60), (1 << 16, 40), (1 << 20, 20)])
     };
+    let threads = resolve_threads();
     println!(
-        "hot-path probe: {nodes} nodes fully connected ({} neighbors each), naive vs pooled",
+        "hot-path probe: {nodes} nodes fully connected ({} neighbors each), naive vs pooled, \
+         {threads} intra-rank thread(s)",
         nodes - 1
     );
+
+    let (knumel, kreps) = if smoke { (1 << 18, 8) } else { (1 << 21, 12) };
+    let k = bench_kernels(knumel, 8, kreps, threads);
+    println!(
+        "  kernel A/B ({} KiB, {} parts): scalar {:>6.2} GB/s | SIMD x1 {:>6.2} GB/s | \
+         SIMD x{threads} {:>6.2} GB/s",
+        knumel * 4 / 1024,
+        k.parts,
+        k.scalar_gbps,
+        k.simd_gbps,
+        k.simd_mt_gbps
+    );
+    // The single-rank throughput gate (satisfiable only with real
+    // parallelism; a 1-thread run still reports the numbers).
+    if threads >= 2 {
+        anyhow::ensure!(
+            k.simd_mt_gbps >= 2.0 * k.scalar_gbps,
+            "kernel gate: SIMD x{threads} {:.2} GB/s < 2x scalar {:.2} GB/s",
+            k.simd_mt_gbps,
+            k.scalar_gbps
+        );
+    }
+
     let trials = if smoke { 1 } else { 2 };
     let mut entries = Vec::new();
     for &(numel, reps) in &cases {
-        let naive = best_of(trials, || run_mode(nodes, numel, reps, warmup, HotPath::Naive))?;
-        let pooled = best_of(trials, || run_mode(nodes, numel, reps, warmup, HotPath::Pooled))?;
+        let naive =
+            best_of(trials, || run_mode(nodes, numel, reps, warmup, HotPath::Naive, threads))?;
+        let pooled =
+            best_of(trials, || run_mode(nodes, numel, reps, warmup, HotPath::Pooled, threads))?;
         // The hit rate is deterministic (unlike wall time), so regressions
         // fail the probe — and the CI smoke step — loudly.
         anyhow::ensure!(
@@ -150,11 +270,30 @@ fn main() -> anyhow::Result<()> {
             speedup
         ));
     }
+    let features = cpu_features().iter().map(|f| format!("\"{f}\"")).collect::<Vec<_>>().join(", ");
     let json = format!(
-        "{{\n  \"bench\": \"hotpath\",\n  \"nodes\": {nodes},\n  \"neighbors\": {},\n  \
-         \"smoke\": {smoke},\n  \"cases\": [\n{}\n  ]\n}}\n",
+        concat!(
+            "{{\n  \"bench\": \"hotpath\",\n  \"nodes\": {nodes},\n  \"neighbors\": {},\n",
+            "  \"smoke\": {smoke},\n",
+            "  \"cpu_model\": \"{}\",\n  \"cpu_features\": [{}],\n",
+            "  \"intra_threads\": {threads},\n",
+            "  \"kernel\": {{\"numel\": {}, \"parts\": {}, \"reps\": {}, ",
+            "\"scalar_gbps\": {:.4}, \"simd_gbps\": {:.4}, \"simd_mt_gbps\": {:.4}}},\n",
+            "  \"cases\": [\n{}\n  ]\n}}\n"
+        ),
         nodes - 1,
-        entries.join(",\n")
+        cpu_model().replace('"', "'"),
+        features,
+        k.numel,
+        k.parts,
+        k.reps,
+        k.scalar_gbps,
+        k.simd_gbps,
+        k.simd_mt_gbps,
+        entries.join(",\n"),
+        nodes = nodes,
+        smoke = smoke,
+        threads = threads
     );
     let out_path =
         std::env::var("BENCH_HOTPATH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());

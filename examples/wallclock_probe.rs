@@ -29,7 +29,7 @@
 
 use bluefog::config::{PortableWorkload, TcpJobSpec};
 use bluefog::launcher::{maybe_run_tcp_worker, run_spmd, run_tcp_job, worker_exit, SpmdConfig};
-use bluefog::metrics::Stats;
+use bluefog::metrics::{cpu_features, cpu_model, Stats};
 use bluefog::optim::{CommSpec, DecentralizedOptimizer, Dgd, StepOrder};
 use bluefog::topology::builders;
 use bluefog::transport::portable::{local_grad, regression_data, run_sim_fleet, RunOutput, RunSpec};
@@ -256,10 +256,12 @@ fn main() -> anyhow::Result<()> {
     let dsgd = run_workload_rows(PortableWorkload::Dsgd, &s)?;
     run_kill_gate(&s)?;
 
+    let features = cpu_features().iter().map(|f| format!("\"{f}\"")).collect::<Vec<_>>().join(", ");
     let json = format!(
         concat!(
             "{{\n  \"bench\": \"wallclock\",\n  \"nodes\": {},\n  \"topology\": \"{}\",\n",
             "  \"dim\": {},\n  \"iters\": {},\n  \"warmup\": {},\n  \"smoke\": {},\n",
+            "  \"cpu_model\": \"{}\",\n  \"cpu_features\": [{}],\n",
             "  \"loopback_lower_bound\": true,\n",
             "  \"sim_vtime_dsgd_s\": {:.6},\n",
             "  \"workloads\": {{\n{},\n{}\n  }}\n}}\n"
@@ -270,6 +272,8 @@ fn main() -> anyhow::Result<()> {
         s.iters,
         WARMUP,
         smoke,
+        cpu_model().replace('"', "'"),
+        features,
         vtime,
         workload_json(&consensus),
         workload_json(&dsgd),

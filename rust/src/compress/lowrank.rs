@@ -15,8 +15,9 @@
 //! [TAG_LOWRANK, d, r, n, m, P (n·r row-major), Q (m·r row-major)]
 //! ```
 
-use super::{bits, encode_dense, word, Compressor, TAG_LOWRANK};
+use super::{bits, encode_dense, word, Compressor, EncodeScratch, TAG_LOWRANK};
 use crate::rng::Rng;
+use crate::tensor::axpy;
 
 /// Words for a rank-`r` stream over an `n × m` view.
 fn lowrank_words(r: usize, n: usize, m: usize) -> usize {
@@ -88,25 +89,30 @@ impl Compressor for LowRank {
         lowrank_words(self.rank.max(1).min(n.min(m)), n, m)
     }
 
-    fn encode(&self, data: &[f32], rng: &mut Rng, out: &mut Vec<f32>) {
+    fn encode(&self, data: &[f32], rng: &mut Rng, scratch: &mut EncodeScratch, out: &mut Vec<f32>) {
         let d = data.len();
         let (n, m) = view_shape(d);
         let r = self.rank.max(1).min(n.min(m));
         if d == 0 || lowrank_words(r, n, m) >= d + 2 {
             return encode_dense(data, out);
         }
-        // Q0: random m x r start (Gaussian so no column is degenerate).
-        let q0: Vec<f32> = rng.normal_vec(m * r);
-        // P = M Q0 (n x r), rows of M streamed once.
-        let mut p = vec![0.0f32; n * r];
+        // Q0: random m x r start (Gaussian so no column is degenerate);
+        // same draw sequence as the seed's `normal_vec`, staged into
+        // reused scratch.
+        let q0 = &mut scratch.fa;
+        q0.clear();
+        q0.extend((0..m * r).map(|_| rng.normal() as f32));
+        // P = M Q0 (n x r), rows of M streamed once: each row element
+        // contributes one lane-chunked [`axpy`] over the r outputs —
+        // identical accumulation order to the scalar t-loop it replaces.
+        let p = &mut scratch.fb;
+        p.clear();
+        p.resize(n * r, 0.0);
         for i in 0..n {
             let mi = row(data, i, m);
             let pi = &mut p[i * r..(i + 1) * r];
             for (j, &x) in mi.iter().enumerate() {
-                let qj = &q0[j * r..(j + 1) * r];
-                for t in 0..r {
-                    pi[t] += x * qj[t];
-                }
+                axpy(x, &q0[j * r..(j + 1) * r], pi);
             }
         }
         // Orthonormalize the columns of P (modified Gram–Schmidt). A
@@ -135,16 +141,16 @@ impl Compressor for LowRank {
                 }
             }
         }
-        // Q = M^T P (m x r), rows of M streamed once.
-        let mut q = vec![0.0f32; m * r];
+        // Q = M^T P (m x r), rows of M streamed once (lane-chunked axpy
+        // per element, same accumulation order as the scalar loop).
+        let q = &mut scratch.fc;
+        q.clear();
+        q.resize(m * r, 0.0);
         for i in 0..n {
             let mi = row(data, i, m);
             let pi = &p[i * r..(i + 1) * r];
             for (j, &x) in mi.iter().enumerate() {
-                let qj = &mut q[j * r..(j + 1) * r];
-                for t in 0..r {
-                    qj[t] += x * pi[t];
-                }
+                axpy(x, pi, &mut q[j * r..(j + 1) * r]);
             }
         }
         out.push(word(TAG_LOWRANK));
@@ -152,8 +158,8 @@ impl Compressor for LowRank {
         out.push(word(r as u32));
         out.push(word(n as u32));
         out.push(word(m as u32));
-        out.extend_from_slice(&p);
-        out.extend_from_slice(&q);
+        out.extend_from_slice(p);
+        out.extend_from_slice(q);
     }
 }
 
@@ -166,8 +172,9 @@ mod tests {
     fn roundtrip(rank: usize, data: &[f32]) -> (Vec<f32>, usize) {
         let comp = LowRank { rank };
         let mut rng = Rng::new(99);
+        let mut scratch = EncodeScratch::new();
         let mut wire = Vec::new();
-        comp.encode(data, &mut rng, &mut wire);
+        comp.encode(data, &mut rng, &mut scratch, &mut wire);
         let mut out = Vec::new();
         decode_into(&wire, &mut out).unwrap();
         (out, wire.len())
@@ -180,8 +187,7 @@ mod tests {
         let n = 16;
         let u: Vec<f32> = (0..n).map(|i| 0.5 + (i as f32) * 0.1).collect();
         let v: Vec<f32> = (0..n).map(|j| 1.0 - (j as f32) * 0.05).collect();
-        let data: Vec<f32> =
-            (0..n * n).map(|idx| u[idx / n] * v[idx % n]).collect();
+        let data: Vec<f32> = (0..n * n).map(|idx| u[idx / n] * v[idx % n]).collect();
         let (out, words) = roundtrip(1, &data);
         assert_eq!(out.len(), data.len());
         assert!(words < data.len() / 4, "rank-1 stream should be small");

@@ -58,6 +58,8 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::fusion::{FusedSlot, FusionBuffer};
+use crate::parallel::WorkerPool;
 use crate::rng::Rng;
 
 mod lowrank;
@@ -96,13 +98,59 @@ pub(crate) fn encode_dense(data: &[f32], out: &mut Vec<f32>) {
     out.extend_from_slice(data);
 }
 
+/// Reusable encode-side scratch threaded through every
+/// [`Compressor::encode`] call (ISSUE 9 satellite): the index buffer that
+/// [`TopK`]/[`RandomK`] previously allocated fresh per call, `f32` staging
+/// buffers reused by the scan/factorization codecs, and the rank's
+/// intra-thread [`WorkerPool`] so large encodes can shard their output
+/// (serial pool by default = the seed's behavior). Lives inside
+/// [`EfState`] next to the other per-endpoint staging buffers.
+pub struct EncodeScratch {
+    /// Index scratch: TopK's selected coordinates / RandomK's partial
+    /// Fisher–Yates permutation.
+    pub(crate) idx: Vec<usize>,
+    /// f32 scratch A (TopK magnitude copy; LowRank `Q0`).
+    pub(crate) fa: Vec<f32>,
+    /// f32 scratch B (LowRank `P`).
+    pub(crate) fb: Vec<f32>,
+    /// f32 scratch C (LowRank `Q`).
+    pub(crate) fc: Vec<f32>,
+    /// Worker pool for sharded encodes (serial unless the endpoint was
+    /// configured with `intra_threads > 1`).
+    pub(crate) par: WorkerPool,
+}
+
+impl Default for EncodeScratch {
+    fn default() -> Self {
+        EncodeScratch {
+            idx: Vec::new(),
+            fa: Vec::new(),
+            fb: Vec::new(),
+            fc: Vec::new(),
+            par: WorkerPool::serial().clone(),
+        }
+    }
+}
+
+impl EncodeScratch {
+    /// Fresh scratch with a serial pool.
+    pub fn new() -> Self {
+        EncodeScratch::default()
+    }
+
+    /// Fresh scratch whose sharded encodes run on `par`.
+    pub fn with_par(par: WorkerPool) -> Self {
+        EncodeScratch { par, ..EncodeScratch::default() }
+    }
+}
+
 /// A communication compressor: encodes a flat tensor into the
 /// self-describing wire format documented at module level.
 ///
 /// Implementations are stateless parameter bundles (safe to share across
 /// threads behind an `Arc`); all mutable state — error-feedback residuals,
-/// RNG — lives in [`CompressionState`] so one compressor can serve many
-/// streams.
+/// RNG, encode scratch — lives in [`CompressionState`] so one compressor
+/// can serve many streams.
 pub trait Compressor: Send + Sync {
     /// Short scheme name for logs and bench JSON.
     fn name(&self) -> &'static str;
@@ -114,8 +162,9 @@ pub trait Compressor: Send + Sync {
     /// Append the encoded stream for `data` to `out` (the caller clears).
     /// Must fall back to [`encode_dense`] whenever the scheme would not
     /// shrink the message, so decoding never loses information on tensors
-    /// too small to compress.
-    fn encode(&self, data: &[f32], rng: &mut Rng, out: &mut Vec<f32>);
+    /// too small to compress. `scratch` provides reusable buffers and the
+    /// intra-rank pool; encoded bytes must not depend on the pool's size.
+    fn encode(&self, data: &[f32], rng: &mut Rng, scratch: &mut EncodeScratch, out: &mut Vec<f32>);
 }
 
 /// Decode any wire stream produced by a [`Compressor`] into `out`
@@ -304,6 +353,9 @@ pub struct EfState {
     staged: Vec<f32>,
     /// Self-decode buffer for the estimate update (reused across rounds).
     decoded: Vec<f32>,
+    /// Codec encode scratch (index/factor buffers + intra-rank pool),
+    /// reused across rounds like the staging buffers above.
+    scratch: EncodeScratch,
 }
 
 impl EfState {
@@ -365,6 +417,14 @@ impl CompressionState {
         CompressionState { spec, comp: spec.build(), ef: EfState::new(), rng: Rng::new(seed) }
     }
 
+    /// Route this endpoint's sharded encodes through `par`
+    /// (`SpmdConfig::intra_threads`); encoded bytes are identical for any
+    /// pool size (pinned by `tests/kernels.rs`).
+    pub fn with_par(mut self, par: WorkerPool) -> Self {
+        self.ef.scratch.par = par;
+        self
+    }
+
     /// The configured spec.
     pub fn spec(&self) -> CompressionSpec {
         self.spec
@@ -402,7 +462,7 @@ impl CompressionState {
         let comp = self.comp.as_ref().expect("encode called with compression disabled");
         out.clear();
         if !self.spec.error_feedback {
-            comp.encode(data, &mut self.rng, out);
+            comp.encode(data, &mut self.rng, &mut self.ef.scratch, out);
             return;
         }
         let est = self.ef.send_est.entry(key).or_default();
@@ -412,13 +472,72 @@ impl CompressionState {
         }
         self.ef.staged.clear();
         self.ef.staged.extend(data.iter().zip(est.iter()).map(|(x, e)| x - e));
-        comp.encode(&self.ef.staged, &mut self.rng, out);
+        comp.encode(&self.ef.staged, &mut self.rng, &mut self.ef.scratch, out);
         decode_into(out, &mut self.ef.decoded)
             .expect("self-decode of a freshly encoded stream cannot fail");
         debug_assert_eq!(self.ef.decoded.len(), data.len());
         for (e, y) in est.iter_mut().zip(self.ef.decoded.iter()) {
             *e += y;
         }
+    }
+
+    /// Fused compress-into-pack (ISSUE 9 tentpole layer 3): pack `tensors`
+    /// into `storage` exactly as `FusionBuffer::pack_into_vec` would,
+    /// while *simultaneously* staging the error-feedback difference
+    /// `x − x̂` slot by slot, then encode one wire stream for send stream
+    /// `key` into `out`. The seed path packed the whole fusion buffer and
+    /// then re-traversed the multi-MB packed bytes cold to build the
+    /// difference; here the difference is staged per slot while the slot's
+    /// bytes are still cache-hot, so each input element is effectively
+    /// touched once. Byte-identical to pack-then-[`Self::encode`] on the
+    /// same stream (same staging values, same RNG order), pinned by the
+    /// module tests.
+    ///
+    /// Returns the packed [`FusionBuffer`] (the caller still unpacks
+    /// combine results from it). Panics if compression is disabled.
+    pub fn encode_packed(
+        &mut self,
+        key: u64,
+        tensors: &[&[f32]],
+        storage: Vec<f32>,
+        out: &mut Vec<f32>,
+    ) -> FusionBuffer {
+        let comp = self.comp.as_ref().expect("encode_packed called with compression disabled");
+        out.clear();
+        if !self.spec.error_feedback {
+            // No difference pass exists to fuse: pack, then encode the
+            // packed stream directly (single codec traversal, as before).
+            let buf = FusionBuffer::pack_into_vec(tensors, storage);
+            comp.encode(buf.data(), &mut self.rng, &mut self.ef.scratch, out);
+            return buf;
+        }
+        let total: usize = tensors.iter().map(|t| t.len()).sum();
+        let est = self.ef.send_est.entry(key).or_default();
+        if est.len() != total {
+            est.clear();
+            est.resize(total, 0.0);
+        }
+        let mut storage = storage;
+        storage.clear();
+        storage.reserve(total);
+        self.ef.staged.clear();
+        self.ef.staged.reserve(total);
+        let mut slots = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            let off = storage.len();
+            storage.extend_from_slice(t);
+            self.ef.staged.extend(t.iter().zip(&est[off..off + t.len()]).map(|(x, e)| x - e));
+            slots.push(FusedSlot { offset: off, len: t.len() });
+        }
+        comp.encode(&self.ef.staged, &mut self.rng, &mut self.ef.scratch, out);
+        decode_into(out, &mut self.ef.decoded)
+            .expect("self-decode of a freshly encoded stream cannot fail");
+        debug_assert_eq!(self.ef.decoded.len(), total);
+        let est = self.ef.send_est.get_mut(&key).expect("stream created above");
+        for (e, y) in est.iter_mut().zip(self.ef.decoded.iter()) {
+            *e += y;
+        }
+        FusionBuffer::from_packed(storage, slots)
     }
 
     /// Decode a received wire stream for receive stream `key` into `out`:
@@ -459,8 +578,9 @@ mod tests {
 
     fn roundtrip(comp: &dyn Compressor, data: &[f32]) -> Vec<f32> {
         let mut rng = Rng::new(42);
+        let mut scratch = EncodeScratch::new();
         let mut wire = Vec::new();
-        comp.encode(data, &mut rng, &mut wire);
+        comp.encode(data, &mut rng, &mut scratch, &mut wire);
         let mut out = Vec::new();
         decode_into(&wire, &mut out).unwrap();
         assert_eq!(decoded_len(&wire), Some(data.len()));
@@ -569,8 +689,7 @@ mod tests {
 
     #[test]
     fn without_ef_keeps_no_state() {
-        let mut st =
-            CompressionState::new(CompressionSpec::top_k(1).without_error_feedback(), 13);
+        let mut st = CompressionState::new(CompressionSpec::top_k(1).without_error_feedback(), 13);
         let mut wire = Vec::new();
         let mut out = Vec::new();
         st.encode(1, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &mut wire);
@@ -586,6 +705,38 @@ mod tests {
         assert!(decode_into(&[word(99), word(4)], &mut out).is_err());
         // Dense header promising more words than present.
         assert!(decode_into(&[word(TAG_DENSE), word(10), 1.0], &mut out).is_err());
+    }
+
+    #[test]
+    fn encode_packed_matches_pack_then_encode() {
+        // The fused compress-into-pack must be byte-identical to the seed
+        // two-pass flow (pack_into_vec then encode on the packed bytes),
+        // on the same stream across several EF rounds.
+        for spec in [
+            CompressionSpec::top_k(24),
+            CompressionSpec::random_k(24),
+            CompressionSpec::quantize_u8(32),
+            CompressionSpec::low_rank(2),
+            CompressionSpec::top_k(24).without_error_feedback(),
+        ] {
+            let mut fused = CompressionState::new(spec, 99);
+            let mut twopass = CompressionState::new(spec, 99);
+            let mut rng = Rng::new(17);
+            let mut wire_f = Vec::new();
+            let mut wire_t = Vec::new();
+            for _ in 0..4 {
+                let a = rng.normal_vec(130);
+                let b = rng.normal_vec(70);
+                let tensors = [a.as_slice(), b.as_slice()];
+                let buf_f = fused.encode_packed(7, &tensors, Vec::new(), &mut wire_f);
+                let buf_t = FusionBuffer::pack_into_vec(&tensors, Vec::new());
+                twopass.encode(7, buf_t.data(), &mut wire_t);
+                assert_eq!(buf_f.data(), buf_t.data(), "{}: packed bytes", spec.label());
+                let same = wire_f.len() == wire_t.len()
+                    && wire_f.iter().zip(&wire_t).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "{}: fused wire diverged from two-pass", spec.label());
+            }
+        }
     }
 
     #[test]

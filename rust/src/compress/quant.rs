@@ -14,9 +14,16 @@
 //! ratio just under 4× (codes) minus the per-block min/max overhead; the
 //! reconstruction error is at most half a step, `(max − min) / 510`, per
 //! coordinate.
+//!
+//! The encoder writes blocks through a fixed-offset slot writer
+//! ([`encode_block_into`]): every block's wire words start at an offset
+//! that is a pure function of the block index, so large tensors can shard
+//! whole-block ranges across the intra-rank pool with each worker writing
+//! a disjoint output range — byte-identical to the serial encode.
 
-use super::{bits, encode_dense, word, Compressor, TAG_QUANT};
+use super::{bits, encode_dense, word, Compressor, EncodeScratch, TAG_QUANT};
 use crate::rng::Rng;
+use crate::tensor::{LANES, PAR_MIN_ELEMS};
 
 /// Words used by one block of `len` elements: min + max + packed codes.
 fn block_words(len: usize) -> usize {
@@ -61,6 +68,61 @@ pub(super) fn decode(wire: &[f32], d: usize, out: &mut Vec<f32>) -> anyhow::Resu
     Ok(())
 }
 
+/// Lane-chunked min/max fold: per-lane partial extrema reduced at the
+/// end, scalar tail. Same extrema as the sequential fold for any input
+/// without NaNs (the value of a set's min/max does not depend on visit
+/// order), but vectorizable.
+fn minmax(chunk: &[f32]) -> (f32, f32) {
+    let mut mn = [f32::MAX; LANES];
+    let mut mx = [f32::MIN; LANES];
+    let mut it = chunk.chunks_exact(LANES);
+    for q in &mut it {
+        let q: &[f32; LANES] = q.try_into().expect("lane chunk");
+        for l in 0..LANES {
+            mn[l] = mn[l].min(q[l]);
+            mx[l] = mx[l].max(q[l]);
+        }
+    }
+    let mut min = mn.iter().copied().fold(f32::MAX, f32::min);
+    let mut max = mx.iter().copied().fold(f32::MIN, f32::max);
+    for &x in it.remainder() {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    (min, max)
+}
+
+/// Encode one block into its wire slot (`dst.len() == block_words(len)`):
+/// min, max, then four codes per packed word via an exact-quad loop LLVM
+/// can unroll, with one ragged word for the tail.
+fn encode_block_into(chunk: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), block_words(chunk.len()));
+    let (min, max) = minmax(chunk);
+    dst[0] = min;
+    dst[1] = max;
+    let inv_step = if max > min { 255.0 / (max - min) } else { 0.0 };
+    let mut w = 2;
+    let mut quads = chunk.chunks_exact(4);
+    for quad in &mut quads {
+        let mut packed: u32 = 0;
+        for (j, &x) in quad.iter().enumerate() {
+            let q = (((x - min) * inv_step).round() as u32).min(255);
+            packed |= q << (8 * j);
+        }
+        dst[w] = word(packed);
+        w += 1;
+    }
+    let rem = quads.remainder();
+    if !rem.is_empty() {
+        let mut packed: u32 = 0;
+        for (j, &x) in rem.iter().enumerate() {
+            let q = (((x - min) * inv_step).round() as u32).min(255);
+            packed |= q << (8 * j);
+        }
+        dst[w] = word(packed);
+    }
+}
+
 /// Per-block min/max 8-bit linear quantizer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct QuantizeU8 {
@@ -77,7 +139,13 @@ impl Compressor for QuantizeU8 {
         quant_words(d, self.block.max(4))
     }
 
-    fn encode(&self, data: &[f32], _rng: &mut Rng, out: &mut Vec<f32>) {
+    fn encode(
+        &self,
+        data: &[f32],
+        _rng: &mut Rng,
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<f32>,
+    ) {
         let d = data.len();
         let b = self.block.max(4);
         if d == 0 || quant_words(d, b) >= d + 2 {
@@ -86,28 +154,42 @@ impl Compressor for QuantizeU8 {
         out.push(word(TAG_QUANT));
         out.push(word(d as u32));
         out.push(word(b as u32));
-        let mut lo = 0;
-        while lo < d {
-            let chunk = &data[lo..(lo + b).min(d)];
-            let min = chunk.iter().cloned().fold(f32::MAX, f32::min);
-            let max = chunk.iter().cloned().fold(f32::MIN, f32::max);
-            out.push(min);
-            out.push(max);
-            let inv_step = if max > min { 255.0 / (max - min) } else { 0.0 };
-            let mut packed: u32 = 0;
-            for (j, &x) in chunk.iter().enumerate() {
-                let q = (((x - min) * inv_step).round() as u32).min(255);
-                packed |= q << (8 * (j % 4));
-                if j % 4 == 3 {
-                    out.push(word(packed));
-                    packed = 0;
-                }
-            }
-            if chunk.len() % 4 != 0 {
-                out.push(word(packed));
-            }
-            lo += chunk.len();
+        let body = quant_words(d, b) - 3;
+        let start = out.len();
+        out.resize(start + body, 0.0);
+        let nblocks = d.div_ceil(b);
+        // Whole-block shard ranges (fixed boundaries, disjoint wire
+        // words); 1 shard = serial inline. Each non-tail block spans
+        // exactly block_words(b) words, so shard word offsets are a pure
+        // function of the block index.
+        let shards = if scratch.par.threads() > 1 && d >= PAR_MIN_ELEMS {
+            scratch.par.threads().min(nblocks)
+        } else {
+            1
+        };
+        let bw = block_words(b);
+        let per = nblocks.div_ceil(shards);
+        let mut bounds = Vec::with_capacity(shards);
+        let mut branges = Vec::with_capacity(shards);
+        let mut blo = 0;
+        while blo < nblocks {
+            let bhi = (blo + per).min(nblocks);
+            let whi = if bhi == nblocks { body } else { bhi * bw };
+            bounds.push((blo * bw, whi));
+            branges.push((blo, bhi));
+            blo = bhi;
         }
+        scratch.par.run_sharded_mut(&mut out[start..], &bounds, |s, sub| {
+            let (blo, bhi) = branges[s];
+            let mut w = 0;
+            for bi in blo..bhi {
+                let lo = bi * b;
+                let chunk = &data[lo..(lo + b).min(d)];
+                let n = block_words(chunk.len());
+                encode_block_into(chunk, &mut sub[w..w + n]);
+                w += n;
+            }
+        });
     }
 }
 
@@ -115,13 +197,15 @@ impl Compressor for QuantizeU8 {
 mod tests {
     use super::super::decode_into;
     use super::*;
+    use crate::parallel::WorkerPool;
     use crate::tensor::max_abs_diff;
 
     fn roundtrip(block: usize, data: &[f32]) -> (Vec<f32>, usize) {
         let comp = QuantizeU8 { block };
         let mut rng = Rng::new(5);
+        let mut scratch = EncodeScratch::new();
         let mut wire = Vec::new();
-        comp.encode(data, &mut rng, &mut wire);
+        comp.encode(data, &mut rng, &mut scratch, &mut wire);
         let mut out = Vec::new();
         decode_into(&wire, &mut out).unwrap();
         (out, wire.len())
@@ -170,6 +254,27 @@ mod tests {
             (words as f64) < d as f64 / 3.5,
             "quant stream {words} words not ~4x below {d}"
         );
+    }
+
+    #[test]
+    fn sharded_encode_is_byte_identical_to_serial() {
+        // Above PAR_MIN_ELEMS with a ragged tail block, so the last shard
+        // carries the short block; every pool size must produce the
+        // serial bytes.
+        let d = PAR_MIN_ELEMS + 37;
+        let data: Vec<f32> = (0..d).map(|i| ((i * 131) % 1009) as f32 * 0.01 - 5.0).collect();
+        let comp = QuantizeU8 { block: 64 };
+        let mut rng = Rng::new(5);
+        let mut serial = Vec::new();
+        comp.encode(&data, &mut rng, &mut EncodeScratch::new(), &mut serial);
+        for threads in [2usize, 3, 4] {
+            let mut scratch = EncodeScratch::with_par(WorkerPool::new(threads));
+            let mut wire = Vec::new();
+            comp.encode(&data, &mut rng, &mut scratch, &mut wire);
+            let same = wire.len() == serial.len()
+                && wire.iter().zip(&serial).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "sharded quant encode diverged at {threads} threads");
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! dropped mass instead, which is the variant PowerGossip-style analyses
 //! assume and the one that keeps `k = d` lossless.
 
-use super::{bits, encode_dense, word, Compressor, TAG_SPARSE};
+use super::{bits, encode_dense, word, Compressor, EncodeScratch, TAG_SPARSE};
 use crate::rng::Rng;
 
 /// Words needed for a sparse stream with `k` kept coordinates.
@@ -58,7 +58,7 @@ pub(super) fn decode(wire: &[f32], d: usize, out: &mut Vec<f32>) -> anyhow::Resu
 }
 
 /// Keep the `k` largest-magnitude coordinates (deterministic given the
-/// input; ties broken toward lower indices via the selection order).
+/// input; ties broken toward lower indices).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TopK {
     /// Coordinates kept per message (clamped to the tensor length).
@@ -74,21 +74,47 @@ impl Compressor for TopK {
         sparse_words(self.k.min(d))
     }
 
-    fn encode(&self, data: &[f32], _rng: &mut Rng, out: &mut Vec<f32>) {
+    fn encode(
+        &self,
+        data: &[f32],
+        _rng: &mut Rng,
+        scratch: &mut EncodeScratch,
+        out: &mut Vec<f32>,
+    ) {
         let d = data.len();
         let k = self.k.min(d);
         if d == 0 || sparse_words(k) >= d + 2 {
             return encode_dense(data, out);
         }
-        let mut idx: Vec<usize> = (0..d).collect();
+        let idx = &mut scratch.idx;
+        idx.clear();
         if k > 0 {
-            idx.select_nth_unstable_by(k - 1, |&a, &b| {
-                data[b].abs().total_cmp(&data[a].abs())
-            });
+            // Threshold scan replacing the seed's select over a full index
+            // permutation: a lane-friendly `|x|` pass into reused scratch,
+            // a partial select on the magnitudes for the k-th largest
+            // value `t`, then linear compare scans over `data` — strict
+            // winners first, threshold ties filled in ascending index
+            // order until exactly `k` survive. `total_cmp` keeps the
+            // comparison total (NaN-safe) and the tie class bit-exact.
+            let abs = &mut scratch.fa;
+            abs.clear();
+            abs.extend(data.iter().map(|x| x.abs()));
+            let (_, t, _) = abs.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
+            let t = *t;
+            let strict = data.iter().filter(|x| x.abs().total_cmp(&t).is_gt()).count();
+            let mut ties_left = k - strict;
+            for (i, x) in data.iter().enumerate() {
+                let c = x.abs().total_cmp(&t);
+                if c.is_gt() {
+                    idx.push(i);
+                } else if c.is_eq() && ties_left > 0 {
+                    ties_left -= 1;
+                    idx.push(i);
+                }
+            }
+            debug_assert_eq!(idx.len(), k);
         }
-        idx.truncate(k);
-        idx.sort_unstable();
-        encode_sparse(data, &idx, out);
+        encode_sparse(data, idx, out);
     }
 }
 
@@ -110,22 +136,26 @@ impl Compressor for RandomK {
         sparse_words(self.k.min(d))
     }
 
-    fn encode(&self, data: &[f32], rng: &mut Rng, out: &mut Vec<f32>) {
+    fn encode(&self, data: &[f32], rng: &mut Rng, scratch: &mut EncodeScratch, out: &mut Vec<f32>) {
         let d = data.len();
         let k = self.k.min(d);
         if d == 0 || sparse_words(k) >= d + 2 {
             return encode_dense(data, out);
         }
-        // Partial Fisher–Yates: the first k slots become a uniform sample
-        // of distinct indices.
-        let mut idx: Vec<usize> = (0..d).collect();
+        // Partial Fisher–Yates over the reused index scratch: the first k
+        // slots become a uniform sample of distinct indices (same RNG
+        // draws as the seed's fresh-allocation version, so identical
+        // bytes).
+        let idx = &mut scratch.idx;
+        idx.clear();
+        idx.extend(0..d);
         for i in 0..k {
             let j = rng.usize_in(i, d);
             idx.swap(i, j);
         }
         idx.truncate(k);
         idx.sort_unstable();
-        encode_sparse(data, &idx, out);
+        encode_sparse(data, idx, out);
     }
 }
 
@@ -136,8 +166,9 @@ mod tests {
 
     fn roundtrip(comp: &dyn Compressor, data: &[f32]) -> (Vec<f32>, usize) {
         let mut rng = Rng::new(1234);
+        let mut scratch = EncodeScratch::new();
         let mut wire = Vec::new();
-        comp.encode(data, &mut rng, &mut wire);
+        comp.encode(data, &mut rng, &mut scratch, &mut wire);
         let mut out = Vec::new();
         decode_into(&wire, &mut out).unwrap();
         (out, wire.len())
@@ -149,6 +180,33 @@ mod tests {
         let (out, words) = roundtrip(&TopK { k: 3 }, &data);
         assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 4.0, 0.0]);
         assert_eq!(words, 3 + 2 * 3);
+    }
+
+    #[test]
+    fn topk_breaks_magnitude_ties_toward_lower_indices() {
+        // Four coordinates share the boundary magnitude 2.0; k = 3 keeps
+        // the strict winner (5.0) plus the two lowest-indexed ties.
+        let data = [2.0f32, -2.0, 5.0, 2.0, -2.0, 0.5, 0.25, 0.125, 0.1, 0.0];
+        let (out, _) = roundtrip(&TopK { k: 3 }, &data);
+        assert_eq!(out, vec![2.0, -2.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_scratch_reuse_is_clean_across_length_changes() {
+        // One scratch across encodes of different lengths must give the
+        // same wires as fresh scratch every call.
+        let mut rng = Rng::new(9);
+        let mut shared = EncodeScratch::new();
+        for d in [64usize, 16, 100, 8, 64] {
+            let data: Vec<f32> = (0..d).map(|i| ((i * 37 + d) % 101) as f32 - 50.0).collect();
+            let mut wire_shared = Vec::new();
+            TopK { k: 5 }.encode(&data, &mut rng, &mut shared, &mut wire_shared);
+            let mut wire_fresh = Vec::new();
+            TopK { k: 5 }.encode(&data, &mut rng, &mut EncodeScratch::new(), &mut wire_fresh);
+            let same = wire_shared.len() == wire_fresh.len()
+                && wire_shared.iter().zip(&wire_fresh).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "scratch reuse changed the wire at d={d}");
+        }
     }
 
     #[test]
@@ -199,10 +257,11 @@ mod tests {
         let data = vec![1.0f32; 256];
         let comp = RandomK { k: 8 };
         let mut rng = Rng::new(77);
+        let mut scratch = EncodeScratch::new();
         let mut a = Vec::new();
         let mut b = Vec::new();
-        comp.encode(&data, &mut rng, &mut a);
-        comp.encode(&data, &mut rng, &mut b);
+        comp.encode(&data, &mut rng, &mut scratch, &mut a);
+        comp.encode(&data, &mut rng, &mut scratch, &mut b);
         assert_ne!(a[3..11], b[3..11], "index draws should differ across messages");
     }
 

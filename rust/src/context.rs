@@ -14,14 +14,15 @@ use std::sync::{Arc, RwLock};
 
 use crate::compress::{CompressionSpec, CompressionState};
 use crate::negotiation::NegotiationClient;
+use crate::parallel::WorkerPool;
 use crate::pool::{BufferPool, HotPath};
 use crate::rng::Rng;
 use crate::runtime::DeviceHandle;
 use crate::simnet::faults::{CommDeadline, CommError, FaultPlan, LinkFate};
 use crate::simnet::NetworkModel;
-use crate::topology::health::HealthView;
-use crate::tensor::{weighted_combine_blocked_into, weighted_combine_into};
+use crate::tensor::{weighted_combine_blocked_into_par, weighted_combine_into};
 use crate::timeline::Timeline;
+use crate::topology::health::HealthView;
 use crate::topology::{Graph, SparseViews, WeightMatrix};
 use crate::transport::backend::payload_nbytes;
 use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, Tag, VClock};
@@ -108,6 +109,12 @@ pub struct NodeContext {
     pub rng: Rng,
     /// Rank-local buffer pool backing the zero-allocation hot path.
     pub(crate) pool: BufferPool,
+    /// Intra-rank worker pool sharding multi-MB combines (and, through
+    /// [`CompressionState`], codec encodes) across
+    /// `SpmdConfig::intra_threads` OS threads. Serial (1 lane) by default,
+    /// which reproduces the seed path exactly; any size produces
+    /// byte-identical results (fixed shard boundaries).
+    pub(crate) par: WorkerPool,
     /// Fan-out payloads awaiting their receivers' drops; swept on the next
     /// collective so each sender deterministically recovers its own shared
     /// buffer (see [`NodeContext::defer_reclaim`]).
@@ -251,6 +258,7 @@ impl NodeContext {
         device: Option<DeviceHandle>,
         seed: u64,
         compression: CompressionSpec,
+        intra_threads: usize,
         tx_bytes: Arc<AtomicU64>,
         async_spec: Option<Arc<crate::launcher::AsyncSpec>>,
         async_done: Arc<Vec<AtomicBool>>,
@@ -258,6 +266,7 @@ impl NodeContext {
         alive: Arc<Vec<AtomicBool>>,
     ) -> Self {
         let health = HealthView::new(size, rank, faults.miss_threshold);
+        let par = WorkerPool::new(intra_threads);
         NodeContext {
             rank,
             size,
@@ -283,7 +292,9 @@ impl NodeContext {
             comp: CompressionState::new(
                 compression,
                 seed ^ 0xc0de ^ (rank as u64).wrapping_mul(0xD1B54A32D192ED03),
-            ),
+            )
+            .with_par(par.clone()),
+            par,
             tx_bytes,
             async_spec,
             async_done,
@@ -660,7 +671,8 @@ impl NodeContext {
     }
 
     /// The receive-combine kernel of the hot path (shared policy in
-    /// [`BufferPool::combine_from`]).
+    /// [`BufferPool::combine_from_par`]), sharded across this rank's
+    /// intra-thread pool when it is larger than one lane.
     pub(crate) fn combine_hotpath(
         &self,
         base: &[f32],
@@ -668,11 +680,11 @@ impl NodeContext {
         parts: &[&[f32]],
         ws: &[f32],
     ) -> Vec<f32> {
-        self.pool.combine_from(self.hot_path, base, w_self, parts, ws)
+        self.pool.combine_from_par(self.hot_path, base, w_self, parts, ws, &self.par)
     }
 
     /// In-place variant: `acc = w_self * acc + sum_k ws[k] * parts[k]`,
-    /// blocked under [`HotPath::Pooled`].
+    /// blocked (and intra-thread sharded) under [`HotPath::Pooled`].
     pub(crate) fn combine_into_hotpath(
         &self,
         acc: &mut [f32],
@@ -682,7 +694,7 @@ impl NodeContext {
     ) {
         match self.hot_path {
             HotPath::Naive => weighted_combine_into(acc, w_self, parts, ws),
-            HotPath::Pooled => weighted_combine_blocked_into(acc, w_self, parts, ws),
+            HotPath::Pooled => weighted_combine_blocked_into_par(&self.par, acc, w_self, parts, ws),
         }
     }
 

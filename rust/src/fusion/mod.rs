@@ -61,6 +61,28 @@ impl FusionBuffer {
         FusionBuffer { data: storage, slots }
     }
 
+    /// Rebuild a buffer from an already-packed payload and its slot table,
+    /// for callers that interleave packing with another per-slot pass (the
+    /// fused compress-into-pack path in [`crate::compress`]). The slots
+    /// must tile `data` contiguously from offset 0, exactly as
+    /// [`FusionBuffer::pack_into_vec`] lays them out.
+    pub fn from_packed(data: Vec<f32>, slots: Vec<FusedSlot>) -> Self {
+        debug_assert_eq!(
+            slots.iter().map(|s| s.len).sum::<usize>(),
+            data.len(),
+            "packed slots must tile the payload"
+        );
+        debug_assert!(slots
+            .iter()
+            .scan(0usize, |off, s| {
+                let ok = s.offset == *off;
+                *off += s.len;
+                Some(ok)
+            })
+            .all(|ok| ok));
+        FusionBuffer { data, slots }
+    }
+
     /// Consume the buffer, returning the backing allocation for reuse.
     pub fn into_data(self) -> Vec<f32> {
         self.data
@@ -244,6 +266,22 @@ mod tests {
         assert_eq!(buf.data(), &[1.0, 2.0, 3.0]);
         let recovered = buf.into_data();
         assert!(recovered.capacity() >= 64, "backing allocation not recovered");
+    }
+
+    #[test]
+    fn from_packed_matches_pack() {
+        let a = vec![1.0f32, 2.0];
+        let b: Vec<f32> = vec![];
+        let c = vec![3.0f32, 4.0, 5.0];
+        let want = FusionBuffer::pack(&[&a, &b, &c]);
+        let slots = vec![
+            FusedSlot { offset: 0, len: 2 },
+            FusedSlot { offset: 2, len: 0 },
+            FusedSlot { offset: 2, len: 3 },
+        ];
+        let buf = FusionBuffer::from_packed(vec![1.0, 2.0, 3.0, 4.0, 5.0], slots);
+        assert_eq!(buf.data(), want.data());
+        assert_eq!(buf.unpack(buf.data()), want.unpack(want.data()));
     }
 
     #[test]

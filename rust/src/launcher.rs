@@ -120,6 +120,10 @@ pub struct SpmdConfig {
     /// Communication compression applied to neighbor-averaging payloads
     /// (blocking and fused non-blocking), default none.
     pub compression: CompressionSpec,
+    /// Intra-rank worker threads for combine/codec kernels (default 1 =
+    /// fully serial, the seed behavior). Any value produces byte-identical
+    /// results: shards fall on fixed boundaries independent of the count.
+    pub intra_threads: usize,
     /// Asynchronous-regime configuration: per-rank compute heterogeneity
     /// and the bounded-staleness throttle. `None` (default) leaves every
     /// rank at nominal speed and every async helper a no-op.
@@ -169,6 +173,7 @@ impl SpmdConfig {
             enable_topo_check: true,
             hot_path: HotPath::default(),
             compression: CompressionSpec::default(),
+            intra_threads: 1,
             async_spec: None,
             exec: ExecMode::default(),
             stack_size: 8 << 20,
@@ -271,6 +276,13 @@ impl SpmdConfig {
         self.async_spec = Some(spec);
         self
     }
+
+    /// Size the intra-rank worker pool for combine/codec kernels. Results
+    /// are byte-identical for every value; 1 (the default) runs serial.
+    pub fn with_intra_threads(mut self, threads: usize) -> Self {
+        self.intra_threads = threads;
+        self
+    }
 }
 
 /// Run `f` as a single program on `cfg.nodes` simulated nodes and return
@@ -371,6 +383,7 @@ where
                     net.clone(),
                     cfg.hot_path,
                     cfg.compression,
+                    cfg.intra_threads,
                     cfg.seed,
                     tx_bytes[rank].clone(),
                     sched.clone(),
@@ -386,6 +399,7 @@ where
                     cfg.fusion_threshold,
                     cfg.hot_path,
                     cfg.compression,
+                    cfg.intra_threads,
                     cfg.seed,
                     tx_bytes[rank].clone(),
                 );
@@ -418,6 +432,7 @@ where
             cfg.device.clone(),
             cfg.seed,
             cfg.compression,
+            cfg.intra_threads,
             tx_bytes[rank].clone(),
             async_spec.clone(),
             async_done.clone(),

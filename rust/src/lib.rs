@@ -30,6 +30,9 @@
 //!   communication hot path (pooled payloads, reclaimed receives).
 //! - [`nonblocking`] — non-blocking communication handles backed by a
 //!   dedicated per-node communication thread (compute/comm overlap).
+//! - [`parallel`] — rank-local worker pool sharding multi-MB combines and
+//!   codec encodes across `intra_threads` (deterministic fixed-boundary
+//!   shards; 1 = serial).
 //! - [`optim`] — decentralized optimizers: DGD, Exact-Diffusion,
 //!   Gradient-Tracking, push-sum, D-SGD (ATC/AWC), DmSGD, QG-DmSGD and the
 //!   periodic-global-averaging wrapper.
@@ -56,6 +59,7 @@ pub mod metrics;
 pub mod negotiation;
 pub mod nonblocking;
 pub mod optim;
+pub mod parallel;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

@@ -119,6 +119,49 @@ pub fn table_row(cells: &[String], widths: &[usize]) -> String {
     out
 }
 
+/// SIMD-relevant ISA feature flags worth recording next to a benchmark
+/// number; anything else in `/proc/cpuinfo`'s flag soup is noise here.
+const SIMD_FLAGS: [&str; 7] = ["sse2", "avx", "avx2", "fma", "avx512f", "neon", "asimd"];
+
+fn parse_cpuinfo_model(cpuinfo: &str) -> Option<String> {
+    cpuinfo
+        .lines()
+        // x86 calls it "model name", ARM "Processor" or a bare "Hardware".
+        .find(|l| l.starts_with("model name") || l.starts_with("Processor"))
+        .and_then(|l| l.split_once(':'))
+        .map(|(_, v)| v.trim().to_string())
+        .filter(|v| !v.is_empty())
+}
+
+fn parse_cpuinfo_features(cpuinfo: &str) -> Vec<String> {
+    let flags = cpuinfo
+        .lines()
+        .find(|l| l.starts_with("flags") || l.starts_with("Features"))
+        .and_then(|l| l.split_once(':'))
+        .map(|(_, v)| v.to_string())
+        .unwrap_or_default();
+    let present: Vec<&str> = flags.split_whitespace().collect();
+    SIMD_FLAGS.iter().filter(|f| present.contains(f)).map(|f| f.to_string()).collect()
+}
+
+/// Best-effort CPU model string from `/proc/cpuinfo` ("unknown" when the
+/// file or field is unavailable, e.g. non-Linux). Benchmark JSON records
+/// it so numbers from different machines are never compared blindly.
+pub fn cpu_model() -> String {
+    std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| parse_cpuinfo_model(&s))
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// SIMD-relevant ISA flags the host advertises (subset of
+/// sse2/avx/avx2/fma/avx512f/neon/asimd), empty when undetectable.
+pub fn cpu_features() -> Vec<String> {
+    std::fs::read_to_string("/proc/cpuinfo")
+        .map(|s| parse_cpuinfo_features(&s))
+        .unwrap_or_default()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +214,24 @@ mod tests {
     #[should_panic]
     fn stats_empty_panics() {
         Stats::from(&[]);
+    }
+
+    #[test]
+    fn cpuinfo_model_and_flags_parse() {
+        let x86 = "processor\t: 0\nmodel name\t: Example CPU @ 3.0GHz\n\
+                   flags\t\t: fpu sse2 avx avx2 fma obscure_flag\n";
+        assert_eq!(parse_cpuinfo_model(x86).unwrap(), "Example CPU @ 3.0GHz");
+        assert_eq!(parse_cpuinfo_features(x86), vec!["sse2", "avx", "avx2", "fma"]);
+        let arm = "Processor\t: ARMv8 Core\nFeatures\t: fp asimd evtstrm\n";
+        assert_eq!(parse_cpuinfo_model(arm).unwrap(), "ARMv8 Core");
+        assert_eq!(parse_cpuinfo_features(arm), vec!["asimd"]);
+        assert!(parse_cpuinfo_model("bogus: file\n").is_none());
+        assert!(parse_cpuinfo_features("").is_empty());
+    }
+
+    #[test]
+    fn cpu_probes_never_panic() {
+        let _ = cpu_model();
+        let _ = cpu_features();
     }
 }

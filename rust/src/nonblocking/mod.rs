@@ -41,6 +41,7 @@ use std::thread::JoinHandle;
 use crate::compress::{CompressionSpec, CompressionState};
 use crate::context::{ef_key, NodeContext, EF_PEER, EF_SHARED};
 use crate::fusion::FusionBuffer;
+use crate::parallel::WorkerPool;
 use crate::pool::{BufferPool, HotPath};
 use crate::simnet::NetworkModel;
 use crate::transport::{make_tag, op_id, Mailbox, Message, Postman, VClock};
@@ -202,6 +203,7 @@ impl CommThread {
         _fusion_threshold: usize,
         hot_path: HotPath,
         compression: CompressionSpec,
+        intra_threads: usize,
         seed: u64,
         tx_bytes: Arc<AtomicU64>,
     ) -> Self {
@@ -218,6 +220,7 @@ impl CommThread {
                     net,
                     hot_path,
                     compression,
+                    intra_threads,
                     seed,
                     tx_bytes,
                     None,
@@ -281,10 +284,14 @@ pub struct CommEngine {
     /// both reused across rounds (zero-allocation steady state).
     pool: BufferPool,
     fusion_storage: Vec<f32>,
-    /// This engine's compression endpoint: fused packs are encoded *after*
-    /// packing (one wire stream per destination) and decoded before
-    /// unpacking, with residuals independent of the blocking path's.
+    /// This engine's compression endpoint: fused packs are encoded while
+    /// being packed (one pass over the group's bytes, one wire stream) and
+    /// decoded before unpacking, with residuals independent of the
+    /// blocking path's.
     comp: CompressionState,
+    /// Intra-rank worker pool sharding multi-MB combines and codec encodes
+    /// issued by this engine (serial when `intra_threads` is 1).
+    par: WorkerPool,
     /// Set in EventLoop mode: receives park the rank on the scheduler.
     sched: Option<Arc<crate::simnet::event::Scheduler>>,
 }
@@ -304,14 +311,17 @@ impl CommEngine {
         net: Arc<NetworkModel>,
         hot_path: HotPath,
         compression: CompressionSpec,
+        intra_threads: usize,
         seed: u64,
         tx_bytes: Arc<AtomicU64>,
         sched: Option<Arc<crate::simnet::event::Scheduler>>,
     ) -> Self {
+        let par = WorkerPool::new(intra_threads);
         let comp = CompressionState::new(
             compression,
             seed ^ 0x5eed ^ (rank as u64).wrapping_mul(0xA24BAED4963EE407),
-        );
+        )
+        .with_par(par.clone());
         CommEngine {
             rank,
             size,
@@ -327,17 +337,42 @@ impl CommEngine {
             pool: BufferPool::new(),
             fusion_storage: Vec::new(),
             comp,
+            par,
             sched,
         }
     }
 
     /// Pack and exchange one fusion group, replying to every member.
+    ///
+    /// With compression on a static fan-out plan, the error-feedback
+    /// staging pass is fused into the pack traversal (ISSUE 9 tentpole
+    /// layer 3, [`CompressionState::encode_packed`]): each slot's bytes
+    /// are staged while still cache-hot from the pack copy, and the
+    /// resulting wire stream is handed to the exchange prewired, so the
+    /// seed's cold second pass over the multi-MB packed buffer disappears.
+    /// Byte-identical to pack-then-encode (same staging values, same RNG
+    /// order) — the parity suites cannot tell the difference.
     fn transmit(&mut self, pg: PendingGroup) {
         let tensors: Vec<&[f32]> = pg.items.iter().map(|(d, _, _)| d.as_slice()).collect();
-        let buf = FusionBuffer::pack_into_vec(&tensors, std::mem::take(&mut self.fusion_storage));
+        let fuse_encode = self.comp.enabled() && pg.plan.static_plan && !pg.plan.dsts.is_empty();
+        let (buf, prewired) = if fuse_encode {
+            let total: usize = tensors.iter().map(|t| t.len()).sum();
+            let mut wire = match self.hot_path {
+                HotPath::Naive => Vec::with_capacity(self.comp.encoded_cap(total)),
+                HotPath::Pooled => {
+                    self.pool.checkout_empty(self.comp.encoded_cap(total)).into_vec()
+                }
+            };
+            let key = ef_key(EF_SHARED, 0, 0, total);
+            let storage = std::mem::take(&mut self.fusion_storage);
+            let buf = self.comp.encode_packed(key, &tensors, storage, &mut wire);
+            (buf, Some(Arc::new(wire)))
+        } else {
+            let storage = std::mem::take(&mut self.fusion_storage);
+            (FusionBuffer::pack_into_vec(&tensors, storage), None)
+        };
         drop(tensors);
-        let start_vtime =
-            pg.items.iter().map(|(_, t, _)| *t).fold(f64::NEG_INFINITY, f64::max);
+        let start_vtime = pg.items.iter().map(|(_, t, _)| *t).fold(f64::NEG_INFINITY, f64::max);
         let tag = next_tag(&mut self.rounds, "nb.neighbor");
         let mut ep = Endpoint::new(
             self.rank,
@@ -347,12 +382,13 @@ impl CommEngine {
             &self.clocks,
             &self.net,
             &self.pool,
+            &self.par,
             self.hot_path,
             start_vtime,
             &self.tx_bytes,
             self.sched.as_deref(),
         );
-        let out = ep.neighbor_exchange(buf.data(), &pg.plan, tag, &mut self.comp);
+        let out = ep.neighbor_exchange(buf.data(), &pg.plan, tag, &mut self.comp, prewired);
         let done_vtime = ep.completion;
         // Scatter-free unpack: each request's own input buffer is
         // overwritten in place and becomes its reply — no per-slot `Vec`.
@@ -404,6 +440,7 @@ impl CommEngine {
                     &self.clocks,
                     &self.net,
                     &self.pool,
+                    &self.par,
                     self.hot_path,
                     enqueue_vtime,
                     &self.tx_bytes,
@@ -463,6 +500,8 @@ struct Endpoint<'a> {
     net: &'a Arc<NetworkModel>,
     /// The communication thread's buffer pool (payloads + combine scratch).
     pool: &'a BufferPool,
+    /// Intra-rank worker pool for sharded combines (serial = seed path).
+    par: &'a WorkerPool,
     /// Pooled/blocked vs naive implementation switch.
     hot_path: HotPath,
     /// Virtual time the operation became eligible to run.
@@ -486,6 +525,7 @@ impl<'a> Endpoint<'a> {
         clocks: &'a Arc<Vec<VClock>>,
         net: &'a Arc<NetworkModel>,
         pool: &'a BufferPool,
+        par: &'a WorkerPool,
         hot_path: HotPath,
         base_vtime: f64,
         tx_bytes: &'a AtomicU64,
@@ -499,6 +539,7 @@ impl<'a> Endpoint<'a> {
             clocks,
             net,
             pool,
+            par,
             hot_path,
             base_vtime,
             completion: base_vtime,
@@ -567,23 +608,27 @@ impl<'a> Endpoint<'a> {
 
     /// Partial-averaging exchange with explicit plan (srcs/dsts resolved by
     /// the caller). With compression enabled, the (possibly fused) payload
-    /// is encoded once per distinct wire stream — after packing, so one
-    /// stream covers the whole fusion group — and every receive is decoded
-    /// into pooled scratch before the combine.
+    /// is encoded once per distinct wire stream — one stream covers the
+    /// whole fusion group — and every receive is decoded into pooled
+    /// scratch before the combine. `prewired` carries a shared-stream wire
+    /// already produced by the fused pack+encode; the compressed path uses
+    /// it instead of re-encoding.
     fn neighbor_exchange(
         &mut self,
         data: &[f32],
         plan: &ExchangePlan,
         tag: u64,
         comp: &mut CompressionState,
+        prewired: Option<Arc<Vec<f32>>>,
     ) -> Vec<f32> {
         let n = self.size;
         let me = self.rank;
         let mut dsts = plan.dsts.clone();
         dsts.sort_by_key(|&(d, _)| (d + n - me) % n);
         if comp.enabled() {
-            return self.compressed_exchange(data, plan, &dsts, tag, comp);
+            return self.compressed_exchange(data, plan, &dsts, tag, comp, prewired);
         }
+        debug_assert!(prewired.is_none(), "prewired stream without compression");
         let mut shared: Option<Arc<Vec<f32>>> = None;
         for &(dst, s) in &dsts {
             if s != 1.0 {
@@ -602,8 +647,8 @@ impl<'a> Endpoint<'a> {
         }
         let parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
         let ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
-        let out =
-            self.pool.combine_from(self.hot_path, data, plan.self_weight as f32, &parts, &ws);
+        let w0 = plan.self_weight as f32;
+        let out = self.pool.combine_from_par(self.hot_path, data, w0, &parts, &ws, self.par);
         drop(parts);
         for (_, y) in incoming {
             self.reclaim(y);
@@ -616,7 +661,9 @@ impl<'a> Endpoint<'a> {
     /// across the fan-out and apply the mean-conserving self-correction,
     /// explicit-weight plans (whose destination sets may vary) keep one
     /// stream per destination and combine plainly. Fused packs ride a
-    /// single stream id (0): the pack layout is part of the stream.
+    /// single stream id (0): the pack layout is part of the stream. When
+    /// the fused pack+encode already produced the shared-stream wire, it
+    /// arrives in `prewired` and the lazy encode below is skipped.
     fn compressed_exchange(
         &mut self,
         data: &[f32],
@@ -624,6 +671,7 @@ impl<'a> Endpoint<'a> {
         dsts_sorted: &[(usize, f64)],
         tag: u64,
         comp: &mut CompressionState,
+        mut prewired: Option<Arc<Vec<f32>>>,
     ) -> Vec<f32> {
         let d = data.len();
         let cap = comp.encoded_cap(d);
@@ -647,9 +695,14 @@ impl<'a> Endpoint<'a> {
                 let p = match &shared {
                     Some(p) => p.clone(),
                     None => {
-                        let mut wire = self.codec_scratch(cap);
-                        comp.encode(shared_key, data, &mut wire);
-                        let p = Arc::new(wire);
+                        let p = match prewired.take() {
+                            Some(wire) => wire,
+                            None => {
+                                let mut wire = self.codec_scratch(cap);
+                                comp.encode(shared_key, data, &mut wire);
+                                Arc::new(wire)
+                            }
+                        };
                         shared = Some(p.clone());
                         p
                     }
@@ -672,6 +725,7 @@ impl<'a> Endpoint<'a> {
         let mut parts: Vec<&[f32]> = incoming.iter().map(|(_, y)| y.as_slice()).collect();
         let mut ws: Vec<f32> = incoming.iter().map(|(r, _)| *r).collect();
         let correct = had_shared && comp.spec().error_feedback;
+        let w0 = plan.self_weight as f32;
         let out = match comp.estimate(shared_key) {
             Some(est) if correct => {
                 // CHOCO-style relaxed, mean-conserving combine (see the
@@ -681,10 +735,10 @@ impl<'a> Endpoint<'a> {
                     *w *= gamma;
                 }
                 parts.push(est);
-                ws.push(-gamma * (1.0 - plan.self_weight as f32));
-                self.pool.combine_from(self.hot_path, data, 1.0, &parts, &ws)
+                ws.push(-gamma * (1.0 - w0));
+                self.pool.combine_from_par(self.hot_path, data, 1.0, &parts, &ws, self.par)
             }
-            _ => self.pool.combine_from(self.hot_path, data, plan.self_weight as f32, &parts, &ws),
+            _ => self.pool.combine_from_par(self.hot_path, data, w0, &parts, &ws, self.par),
         };
         drop(parts);
         for (_, y) in incoming {

@@ -1,0 +1,337 @@
+//! Rank-local worker pool for intra-rank kernel parallelism (ISSUE 9).
+//!
+//! Each endpoint (node context or communication engine) owns a
+//! [`WorkerPool`] sized by `SpmdConfig::intra_threads` (default 1). The
+//! pool shards multi-MB combines and codec encodes into contiguous,
+//! fixed-boundary output ranges, each written by exactly one worker.
+//!
+//! # Determinism argument (DESIGN.md §Kernels)
+//!
+//! Sharding is deterministic by construction, not by synchronization:
+//!
+//! 1. shard boundaries are a pure function of `(len, threads, align)` —
+//!    see [`shard_bounds`] — never of timing or work stealing;
+//! 2. every shard of the output is written by exactly one task, using the
+//!    same serial kernel over the same operands in the same order the
+//!    single-threaded code would use for that range;
+//! 3. tasks share no mutable state besides their disjoint output shards.
+//!
+//! Therefore the bytes produced are identical for any `intra_threads`
+//! setting, including 1 (pinned by `tests/kernels.rs`). With one thread
+//! the pool spawns nothing and every `run` call executes inline, so the
+//! default configuration is exactly the seed's serial behavior.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Inner {
+    threads: usize,
+    /// `None` once the pool has shut down (drop). Workers exit when the
+    /// channel disconnects.
+    tx: Mutex<Option<Sender<Job>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // Disconnect the channel so the worker loops fall out of recv(),
+        // then join them; a worker that panicked is already accounted for
+        // by the completion barrier, so join errors are ignorable here.
+        drop(self.tx.lock().expect("pool tx lock").take());
+        for h in self.handles.lock().expect("pool handle lock").drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A fixed-size rank-local thread pool executing closures over disjoint
+/// output shards. Cloning is cheap (shared `Arc`); the threads are joined
+/// when the last clone drops.
+#[derive(Clone)]
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.inner.threads).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Pool with `threads` total lanes of execution: the calling thread
+    /// plus `threads - 1` spawned workers. `threads <= 1` spawns nothing
+    /// and makes every [`WorkerPool::run`] call execute inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return WorkerPool {
+                inner: Arc::new(Inner {
+                    threads: 1,
+                    tx: Mutex::new(None),
+                    handles: Mutex::new(Vec::new()),
+                }),
+            };
+        }
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 0..threads - 1 {
+            let rx = Arc::clone(&rx);
+            let h = std::thread::Builder::new()
+                .name(format!("bf-par-{w}"))
+                .spawn(move || worker_loop(&rx))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        WorkerPool {
+            inner: Arc::new(Inner {
+                threads,
+                tx: Mutex::new(Some(tx)),
+                handles: Mutex::new(handles),
+            }),
+        }
+    }
+
+    /// Process-wide inert single-thread pool for callers that were not
+    /// handed an intra-rank pool.
+    pub fn serial() -> &'static WorkerPool {
+        static SERIAL: OnceLock<WorkerPool> = OnceLock::new();
+        SERIAL.get_or_init(|| WorkerPool::new(1))
+    }
+
+    /// Total execution lanes (caller + workers).
+    pub fn threads(&self) -> usize {
+        self.inner.threads
+    }
+
+    /// Run `f(0), f(1), …, f(tasks - 1)`, each exactly once, spread over
+    /// the pool plus the calling thread. Blocks until every task has
+    /// finished; a panicking task is caught on the worker, and `run`
+    /// re-panics on the caller after all tasks complete. Inline (plain
+    /// loop) when the pool is serial or there is at most one task.
+    pub fn run<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let threads = self.inner.threads;
+        if threads <= 1 || tasks <= 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+
+        // Fat pointer to `f`, copied into each dispatched job. SAFETY of
+        // the lifetime erasure: `run` does not return (not even by
+        // unwinding — see WaitOnDrop) until the completion barrier has
+        // counted every dispatched job, so no worker can touch the
+        // pointer after `f` is dropped.
+        #[derive(Clone, Copy)]
+        struct TaskFn(*const (dyn Fn(usize) + Sync));
+        unsafe impl Send for TaskFn {}
+        let task_fn = TaskFn(&f as &(dyn Fn(usize) + Sync) as *const _);
+
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let mut dispatched = 0usize;
+        {
+            let guard = self.inner.tx.lock().expect("pool tx lock");
+            let tx = guard.as_ref().expect("worker pool already shut down");
+            for i in 0..tasks {
+                if i % threads == 0 {
+                    continue; // the caller's share
+                }
+                let done = Arc::clone(&done);
+                let panicked = Arc::clone(&panicked);
+                let job: Job = Box::new(move || {
+                    let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (*task_fn.0)(i) })).is_ok();
+                    if !ok {
+                        panicked.store(true, Ordering::SeqCst);
+                    }
+                    let (count, cv) = &*done;
+                    *count.lock().expect("pool barrier lock") += 1;
+                    cv.notify_one();
+                });
+                tx.send(job).expect("worker pool channel closed");
+                dispatched += 1;
+            }
+        }
+
+        {
+            // Waits for all dispatched jobs even if the caller's own share
+            // panics, keeping the `task_fn` borrow alive past every use.
+            let _barrier = WaitOnDrop { done: &done, need: dispatched };
+            let mut i = 0;
+            while i < tasks {
+                f(i);
+                i += threads;
+            }
+        }
+        assert!(!panicked.load(Ordering::SeqCst), "worker pool task panicked");
+    }
+
+    /// Run a sharded mutation of `data`: `bounds` must be ascending,
+    /// pairwise-disjoint `(lo, hi)` ranges within `data`; task `i`
+    /// receives `(i, &mut data[lo_i..hi_i])`. Panics on malformed bounds.
+    pub fn run_sharded_mut<F>(&self, data: &mut [f32], bounds: &[(usize, usize)], f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let mut prev = 0usize;
+        for &(lo, hi) in bounds {
+            assert!(prev <= lo && lo <= hi && hi <= data.len(), "malformed shard bounds");
+            prev = hi;
+        }
+        let base = data.as_mut_ptr() as usize;
+        self.run(bounds.len(), |i| {
+            let (lo, hi) = bounds[i];
+            // SAFETY: bounds are validated ascending and disjoint above,
+            // and `run` hands each index to exactly one task, so no two
+            // live `&mut` shards alias; all stay within `data`, which
+            // outlives `run` (it blocks until every task completes).
+            let sub =
+                unsafe { std::slice::from_raw_parts_mut((base as *mut f32).add(lo), hi - lo) };
+            f(i, sub);
+        });
+    }
+}
+
+/// Completion barrier armed on the stack of [`WorkerPool::run`]; waiting
+/// in `Drop` makes the barrier unwind-safe (see the SAFETY note there).
+struct WaitOnDrop<'a> {
+    done: &'a (Mutex<usize>, Condvar),
+    need: usize,
+}
+
+impl Drop for WaitOnDrop<'_> {
+    fn drop(&mut self) {
+        let (count, cv) = self.done;
+        let mut n = count.lock().expect("pool barrier lock");
+        while *n < self.need {
+            n = cv.wait(n).expect("pool barrier wait");
+        }
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        let job = match rx.lock().expect("pool rx lock").recv() {
+            Ok(job) => job,
+            Err(_) => return, // pool dropped
+        };
+        job();
+    }
+}
+
+/// Cut `[0, len)` into at most `shards` contiguous ranges whose interior
+/// boundaries are multiples of `align` (so blocked kernels never split a
+/// block across workers). Pure function of its arguments — the center of
+/// the determinism argument in the module docs. Returns an empty vector
+/// for `len == 0`.
+pub fn shard_bounds(len: usize, shards: usize, align: usize) -> Vec<(usize, usize)> {
+    let shards = shards.max(1);
+    let align = align.max(1);
+    if len == 0 {
+        return Vec::new();
+    }
+    let per = len.div_ceil(shards).div_ceil(align) * align;
+    let mut bounds = Vec::with_capacity(shards);
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + per).min(len);
+        bounds.push((lo, hi));
+        lo = hi;
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn shard_bounds_cover_exactly_once_and_align() {
+        for (len, shards, align) in
+            [(0, 4, 8), (1, 4, 8), (17, 4, 8), (100, 3, 8), (4096, 4, 4096), (10000, 4, 4096)]
+        {
+            let b = shard_bounds(len, shards, align);
+            let mut prev = 0;
+            for (i, &(lo, hi)) in b.iter().enumerate() {
+                assert_eq!(lo, prev, "gap at shard {i}");
+                assert!(lo < hi, "empty shard {i}");
+                if hi != len {
+                    assert_eq!(hi % align, 0, "unaligned interior boundary");
+                }
+                prev = hi;
+            }
+            assert_eq!(prev, len, "shards do not cover len={len}");
+            assert!(b.len() <= shards.max(1));
+        }
+    }
+
+    #[test]
+    fn run_executes_each_index_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn run_sharded_mut_writes_disjoint_ranges() {
+        let mut data = vec![0.0f32; 1000];
+        let bounds = shard_bounds(data.len(), 4, 64);
+        let pool = WorkerPool::new(4);
+        pool.run_sharded_mut(&mut data, &bounds, |i, sub| {
+            for x in sub.iter_mut() {
+                *x += (i + 1) as f32;
+            }
+        });
+        for (i, &(lo, hi)) in bounds.iter().enumerate() {
+            assert!(data[lo..hi].iter().all(|&x| x == (i + 1) as f32));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool task panicked")]
+    fn worker_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        pool.run(8, |i| {
+            if i == 5 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_round() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i % 2 == 1 {
+                    panic!("boom");
+                }
+            })
+        }));
+        assert!(r.is_err());
+        // The workers caught the panic and keep serving jobs.
+        let hits = AtomicUsize::new(0);
+        pool.run(8, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+}

@@ -249,7 +249,9 @@ impl BufferPool {
     /// The receive-combine kernel of the hot path:
     /// `out = w_self * base + sum_k ws[k] * parts[k]`. Pooled mode combines
     /// into a pooled buffer with the single-pass blocked kernel; naive mode
-    /// is the original `weighted_combine_from`.
+    /// is the original `weighted_combine_from`. Serial (`par` = the shared
+    /// serial pool); see [`BufferPool::combine_from_par`] for the sharded
+    /// variant.
     pub fn combine_from(
         &self,
         mode: HotPath,
@@ -258,11 +260,28 @@ impl BufferPool {
         parts: &[&[f32]],
         ws: &[f32],
     ) -> Vec<f32> {
+        self.combine_from_par(mode, base, w_self, parts, ws, crate::parallel::WorkerPool::serial())
+    }
+
+    /// [`BufferPool::combine_from`] with the combine sharded across `par`
+    /// (ISSUE 9 tentpole layer 2). Naive mode stays the seed serial kernel
+    /// regardless of the pool — it is the A/B baseline; pooled mode shards
+    /// multi-MB combines on fixed block boundaries, byte-identical to the
+    /// serial result for any pool size.
+    pub fn combine_from_par(
+        &self,
+        mode: HotPath,
+        base: &[f32],
+        w_self: f32,
+        parts: &[&[f32]],
+        ws: &[f32],
+        par: &crate::parallel::WorkerPool,
+    ) -> Vec<f32> {
         match mode {
             HotPath::Naive => crate::tensor::weighted_combine_from(base, w_self, parts, ws),
             HotPath::Pooled => {
                 let mut out = self.checkout_copy(base);
-                crate::tensor::weighted_combine_blocked_into(&mut out, w_self, parts, ws);
+                crate::tensor::weighted_combine_blocked_into_par(par, &mut out, w_self, parts, ws);
                 out.into_vec()
             }
         }

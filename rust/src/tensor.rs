@@ -4,6 +4,32 @@
 //! the PJRT boundary, where the [`crate::runtime`] manifest supplies them.
 //! The helpers here are the BLAS-1 style kernels the decentralized
 //! optimizers are written in.
+//!
+//! # SIMD kernels (DESIGN.md §Kernels)
+//!
+//! The mutating kernels (`axpy`, `scale`, the fused combine passes) are
+//! written as fixed-width lane loops: the buffer is split into
+//! [`LANES`]-element chunks, each chunk is reborrowed as a `[f32; LANES]`
+//! array so LLVM sees a constant trip count it can turn into vector
+//! instructions on stable Rust (no `std::simd`), and a scalar loop handles
+//! the tail. Vectorization runs *across output elements* — every output
+//! element still sees exactly the seed's per-element operation order — so
+//! results are bitwise identical to the frozen references in [`scalar`],
+//! and every downstream parity gate (exec/tcp parity, compression smokes)
+//! is unaffected. The property tests in `tests/kernels.rs` pin this down
+//! at lengths straddling the lane/block/tail boundaries.
+
+use crate::parallel::{shard_bounds, WorkerPool};
+
+/// Lane width (elements) of the chunked kernels: 8 `f32`s = one AVX2
+/// register / two NEON registers, the widest unit that still
+/// autovectorizes cleanly on every tier-1 target.
+pub const LANES: usize = 8;
+
+/// Minimum buffer length before [`weighted_combine_blocked_into_par`]
+/// shards across the worker pool; below this the dispatch overhead
+/// outweighs the combine itself and the serial kernel runs inline.
+pub const PAR_MIN_ELEMS: usize = 1 << 15;
 
 /// Flat f32 tensor with an optional shape annotation.
 #[derive(Debug, Clone, PartialEq)]
@@ -49,18 +75,54 @@ impl Tensor {
     }
 }
 
-/// `y += a * x` (classic axpy). Panics if lengths differ.
+/// `y += a * x` (classic axpy), lane-chunked. Panics if lengths differ.
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len(), "axpy length mismatch");
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yl, xl) in (&mut yc).zip(&mut xc) {
+        let yl: &mut [f32; LANES] = yl.try_into().expect("lane chunk");
+        let xl: &[f32; LANES] = xl.try_into().expect("lane chunk");
+        for l in 0..LANES {
+            yl[l] += a * xl[l];
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
         *yi += a * xi;
     }
 }
 
-/// `x *= a` in place.
+/// `x *= a` in place, lane-chunked.
 pub fn scale(a: f32, x: &mut [f32]) {
-    for xi in x.iter_mut() {
+    let mut xc = x.chunks_exact_mut(LANES);
+    for xl in &mut xc {
+        let xl: &mut [f32; LANES] = xl.try_into().expect("lane chunk");
+        for l in 0..LANES {
+            xl[l] *= a;
+        }
+    }
+    for xi in xc.into_remainder() {
         *xi *= a;
+    }
+}
+
+/// Fused first combine pass: `acc = w_self * acc + w0 * x`, lane-chunked.
+/// One multiply-add per element per pass, exactly the seed's per-element
+/// expression, so the result is bitwise identical to the scalar loop.
+#[inline]
+fn fused_scale_axpy(w_self: f32, w0: f32, x: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(x.len(), acc.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (al, xl) in (&mut ac).zip(&mut xc) {
+        let al: &mut [f32; LANES] = al.try_into().expect("lane chunk");
+        let xl: &[f32; LANES] = xl.try_into().expect("lane chunk");
+        for l in 0..LANES {
+            al[l] = w_self * al[l] + w0 * xl[l];
+        }
+    }
+    for (ai, xi) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *ai = w_self * *ai + w0 * xi;
     }
 }
 
@@ -106,10 +168,7 @@ pub fn weighted_combine_into(acc: &mut [f32], w_self: f32, parts: &[&[f32]], wei
         None => scale(w_self, acc),
         Some((first, rest)) => {
             assert_eq!(first.len(), acc.len(), "combine length mismatch");
-            let w0 = weights[0];
-            for (a, x) in acc.iter_mut().zip(first.iter()) {
-                *a = w_self * *a + w0 * x;
-            }
+            fused_scale_axpy(w_self, weights[0], first, acc);
             for (p, &w) in rest.iter().zip(&weights[1..]) {
                 axpy(w, p, acc);
             }
@@ -152,6 +211,11 @@ pub const COMBINE_BLOCK: usize = 4096;
 /// parts accumulated per block, instead of `k` full-buffer `axpy` sweeps
 /// that evict the output between passes (hot-path optimization,
 /// EXPERIMENTS.md §Perf "Buffer pool & blocked combine").
+///
+/// Each block is *appended* from the first part (`w0 * x`), so the output
+/// vector is written exactly once per block — there is no up-front
+/// zero-fill pass over a buffer whose every element the first part
+/// overwrites anyway.
 pub fn weighted_combine_blocked(parts: &[&[f32]], weights: &[f32]) -> Vec<f32> {
     assert_eq!(parts.len(), weights.len(), "combine arity mismatch");
     assert!(!parts.is_empty(), "combine of zero parts");
@@ -159,15 +223,13 @@ pub fn weighted_combine_blocked(parts: &[&[f32]], weights: &[f32]) -> Vec<f32> {
     for p in parts {
         assert_eq!(p.len(), d, "combine length mismatch");
     }
-    let mut out = vec![0.0f32; d];
     let (first, rest) = parts.split_first().unwrap();
     let w0 = weights[0];
+    let mut out: Vec<f32> = Vec::with_capacity(d);
     let mut lo = 0;
     while lo < d {
         let hi = (lo + COMBINE_BLOCK).min(d);
-        for (o, x) in out[lo..hi].iter_mut().zip(&first[lo..hi]) {
-            *o = w0 * x;
-        }
+        out.extend(first[lo..hi].iter().map(|x| w0 * x));
         for (p, &w) in rest.iter().zip(&weights[1..]) {
             axpy(w, &p[lo..hi], &mut out[lo..hi]);
         }
@@ -197,17 +259,116 @@ pub fn weighted_combine_blocked_into(
         assert_eq!(p.len(), acc.len(), "combine length mismatch");
     }
     let d = acc.len();
-    let w0 = weights[0];
     let mut lo = 0;
     while lo < d {
         let hi = (lo + COMBINE_BLOCK).min(d);
-        for (a, x) in acc[lo..hi].iter_mut().zip(&first[lo..hi]) {
-            *a = w_self * *a + w0 * x;
-        }
+        fused_scale_axpy(w_self, weights[0], &first[lo..hi], &mut acc[lo..hi]);
         for (p, &w) in rest.iter().zip(&weights[1..]) {
             axpy(w, &p[lo..hi], &mut acc[lo..hi]);
         }
         lo = hi;
+    }
+}
+
+/// Sharded variant of [`weighted_combine_blocked_into`]: the output is cut
+/// into contiguous, [`COMBINE_BLOCK`]-aligned shards and each shard is
+/// combined by exactly one worker of `pool`. Shard boundaries depend only
+/// on `acc.len()` and `pool.threads()` — never on timing — and every
+/// output element is computed by the same serial kernel over the same
+/// operands in the same order, so the result is **byte-identical for any
+/// thread count** (pinned by `tests/kernels.rs`).
+///
+/// Falls back to the serial kernel when the pool has a single thread or
+/// the buffer is below [`PAR_MIN_ELEMS`].
+pub fn weighted_combine_blocked_into_par(
+    pool: &WorkerPool,
+    acc: &mut [f32],
+    w_self: f32,
+    parts: &[&[f32]],
+    weights: &[f32],
+) {
+    if pool.threads() <= 1 || acc.len() < PAR_MIN_ELEMS {
+        return weighted_combine_blocked_into(acc, w_self, parts, weights);
+    }
+    assert_eq!(parts.len(), weights.len(), "combine arity mismatch");
+    for p in parts {
+        assert_eq!(p.len(), acc.len(), "combine length mismatch");
+    }
+    let bounds = shard_bounds(acc.len(), pool.threads(), COMBINE_BLOCK);
+    pool.run_sharded_mut(acc, &bounds, |i, sub| {
+        let (lo, hi) = bounds[i];
+        let sub_parts: Vec<&[f32]> = parts.iter().map(|p| &p[lo..hi]).collect();
+        weighted_combine_blocked_into(sub, w_self, &sub_parts, weights);
+    });
+}
+
+/// Frozen scalar reference kernels — the seed implementations, kept
+/// verbatim as (a) the baseline of the `perf_probe` scalar-vs-SIMD A/B
+/// and (b) the bitwise oracle for the SIMD property tests. Do not
+/// optimize these.
+pub mod scalar {
+    use super::COMBINE_BLOCK;
+
+    /// Seed `y += a * x`: plain element loop, no lane chunking.
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// Seed `x *= a`: plain element loop.
+    pub fn scale(a: f32, x: &mut [f32]) {
+        for xi in x.iter_mut() {
+            *xi *= a;
+        }
+    }
+
+    /// Seed combine: zero-fill then `k` full-buffer axpy sweeps — the
+    /// multi-pass memory-traffic pattern the blocked kernels replace.
+    pub fn weighted_combine(parts: &[&[f32]], weights: &[f32]) -> Vec<f32> {
+        assert_eq!(parts.len(), weights.len(), "combine arity mismatch");
+        assert!(!parts.is_empty(), "combine of zero parts");
+        let d = parts[0].len();
+        for p in parts {
+            assert_eq!(p.len(), d, "combine length mismatch");
+        }
+        let mut out = vec![0.0f32; d];
+        for (p, &w) in parts.iter().zip(weights) {
+            axpy(w, p, &mut out);
+        }
+        out
+    }
+
+    /// Seed blocked in-place combine (scalar inner loops).
+    pub fn weighted_combine_blocked_into(
+        acc: &mut [f32],
+        w_self: f32,
+        parts: &[&[f32]],
+        weights: &[f32],
+    ) {
+        assert_eq!(parts.len(), weights.len(), "combine arity mismatch");
+        let Some((first, rest)) = parts.split_first() else {
+            scale(w_self, acc);
+            return;
+        };
+        assert_eq!(first.len(), acc.len(), "combine length mismatch");
+        for p in rest {
+            assert_eq!(p.len(), acc.len(), "combine length mismatch");
+        }
+        let d = acc.len();
+        let w0 = weights[0];
+        let mut lo = 0;
+        while lo < d {
+            let hi = (lo + COMBINE_BLOCK).min(d);
+            for (a, x) in acc[lo..hi].iter_mut().zip(&first[lo..hi]) {
+                *a = w_self * *a + w0 * x;
+            }
+            for (p, &w) in rest.iter().zip(&weights[1..]) {
+                axpy(w, &p[lo..hi], &mut acc[lo..hi]);
+            }
+            lo = hi;
+        }
     }
 }
 
@@ -301,6 +462,25 @@ mod tests {
         let mut a = vec![2.0f32, -4.0];
         weighted_combine_blocked_into(&mut a, 0.5, &[], &[]);
         assert_eq!(a, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn par_combine_matches_serial_above_threshold() {
+        let d = PAR_MIN_ELEMS + 123;
+        let base: Vec<f32> = (0..d).map(|i| ((i * 3) % 23) as f32 - 11.0).collect();
+        let parts: Vec<Vec<f32>> =
+            (0..4).map(|k| (0..d).map(|i| ((i * 7 + k * 13) % 29) as f32 - 14.0).collect()).collect();
+        let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+        let ws = [0.2f32, 0.3, 0.25, 0.25];
+        let mut serial = base.clone();
+        weighted_combine_blocked_into(&mut serial, 0.4, &refs, &ws);
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut par = base.clone();
+            weighted_combine_blocked_into_par(&pool, &mut par, 0.4, &refs, &ws);
+            let same = serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "par combine diverged at {threads} threads");
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! bit-for-bit identical to the uncompressed (PR 2) path.
 
 use bluefog::compress::{
-    decode_into, CompressionSpec, Compressor, LowRank, QuantizeU8, RandomK, TopK,
+    decode_into, CompressionSpec, Compressor, EncodeScratch, LowRank, QuantizeU8, RandomK, TopK,
 };
 use bluefog::launcher::{run_spmd, SpmdConfig};
 use bluefog::optim::{CommSpec, DecentralizedOptimizer, Dgd, StepOrder};
@@ -14,7 +14,7 @@ use bluefog::tensor::{max_abs_diff, norm2};
 
 fn roundtrip(comp: &dyn Compressor, data: &[f32], rng: &mut Rng) -> (Vec<f32>, usize) {
     let mut wire = Vec::new();
-    comp.encode(data, rng, &mut wire);
+    comp.encode(data, rng, &mut EncodeScratch::new(), &mut wire);
     let mut out = Vec::new();
     decode_into(&wire, &mut out).expect("decode of fresh encoding");
     assert_eq!(out.len(), data.len(), "{} changed the length", comp.name());

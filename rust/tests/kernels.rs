@@ -1,0 +1,130 @@
+//! ISSUE 9 property tests: the SIMD kernels are *bitwise* identical to the
+//! frozen seed scalar kernels (same per-element accumulation order — the
+//! vectorization runs across outputs), and the intra-rank worker pool
+//! produces identical bytes for every thread count (shard boundaries are
+//! pure functions of the length, never of the pool size).
+
+use bluefog::compress::{CompressionSpec, CompressionState};
+use bluefog::parallel::WorkerPool;
+use bluefog::tensor::{self, scalar, COMBINE_BLOCK, PAR_MIN_ELEMS};
+
+/// Boundary lengths around the lane width (8) and the combine block size.
+const LENS: [usize; 8] = [0, 1, 7, 8, 9, COMBINE_BLOCK - 1, COMBINE_BLOCK, COMBINE_BLOCK + 1];
+
+/// Deterministic non-NaN test data (LCG; never produces a negative zero,
+/// so f32 min/max lane folds stay order-independent).
+fn gen(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 40) as i64 - (1 << 23)) as f32 / (1 << 20) as f32
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn simd_axpy_bitwise_matches_scalar() {
+    for (i, &n) in LENS.iter().enumerate() {
+        let x = gen(n, 11 + i as u64);
+        let mut y_simd = gen(n, 97 + i as u64);
+        let mut y_ref = y_simd.clone();
+        tensor::axpy(0.73, &x, &mut y_simd);
+        scalar::axpy(0.73, &x, &mut y_ref);
+        assert_eq!(bits(&y_simd), bits(&y_ref), "axpy diverged at n={n}");
+    }
+}
+
+#[test]
+fn simd_scale_bitwise_matches_scalar() {
+    for (i, &n) in LENS.iter().enumerate() {
+        let mut x_simd = gen(n, 23 + i as u64);
+        let mut x_ref = x_simd.clone();
+        tensor::scale(-1.375, &mut x_simd);
+        scalar::scale(-1.375, &mut x_ref);
+        assert_eq!(bits(&x_simd), bits(&x_ref), "scale diverged at n={n}");
+    }
+}
+
+#[test]
+fn simd_blocked_combine_bitwise_matches_scalar() {
+    for (i, &n) in LENS.iter().enumerate() {
+        let parts: Vec<Vec<f32>> = (0..3).map(|p| gen(n, 1000 * p + i as u64)).collect();
+        let views: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+        let ws = [0.25f32, 0.125, 0.5];
+        let mut acc_simd = gen(n, 7 + i as u64);
+        let mut acc_ref = acc_simd.clone();
+        tensor::weighted_combine_blocked_into(&mut acc_simd, 0.125, &views, &ws);
+        scalar::weighted_combine_blocked_into(&mut acc_ref, 0.125, &views, &ws);
+        assert_eq!(bits(&acc_simd), bits(&acc_ref), "blocked combine diverged at n={n}");
+    }
+}
+
+#[test]
+fn simd_blocked_combine_handles_zero_parts() {
+    let mut acc_simd = gen(COMBINE_BLOCK + 1, 3);
+    let mut acc_ref = acc_simd.clone();
+    tensor::weighted_combine_blocked_into(&mut acc_simd, 0.75, &[], &[]);
+    scalar::weighted_combine_blocked_into(&mut acc_ref, 0.75, &[], &[]);
+    assert_eq!(bits(&acc_simd), bits(&acc_ref));
+}
+
+#[test]
+fn parallel_combine_identical_bytes_for_any_thread_count() {
+    // Above PAR_MIN_ELEMS so the pool actually shards; +13 for a ragged
+    // tail that does not fall on a block boundary.
+    let n = PAR_MIN_ELEMS + 13;
+    let parts: Vec<Vec<f32>> = (0..4).map(|p| gen(n, 40 + p)).collect();
+    let views: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+    let ws = [0.25f32, 0.125, 0.0625, 0.25];
+    let base = gen(n, 5);
+    let mut reference = base.clone();
+    tensor::weighted_combine_blocked_into(&mut reference, 0.3125, &views, &ws);
+    for threads in [1usize, 2, 4] {
+        let pool = WorkerPool::new(threads);
+        let mut acc = base.clone();
+        tensor::weighted_combine_blocked_into_par(&pool, &mut acc, 0.3125, &views, &ws);
+        assert_eq!(bits(&acc), bits(&reference), "combine diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn codec_encodes_identical_bytes_for_any_thread_count() {
+    let d = PAR_MIN_ELEMS + 13;
+    let rounds = 3;
+    let specs = [
+        CompressionSpec::top_k(257),
+        CompressionSpec::random_k(129),
+        CompressionSpec::quantize_u8(64),
+        CompressionSpec::low_rank(2),
+    ];
+    for spec in specs {
+        // Reference: serial encode of `rounds` error-feedback steps.
+        let mut reference: Vec<Vec<u32>> = Vec::new();
+        let mut st = CompressionState::new(spec, 42);
+        for r in 0..rounds {
+            let data = gen(d, 300 + r);
+            let mut wire = Vec::new();
+            st.encode(9, &data, &mut wire);
+            reference.push(bits(&wire));
+        }
+        for threads in [2usize, 4] {
+            let mut st = CompressionState::new(spec, 42).with_par(WorkerPool::new(threads));
+            for (r, want) in reference.iter().enumerate() {
+                let data = gen(d, 300 + r as u64);
+                let mut wire = Vec::new();
+                st.encode(9, &data, &mut wire);
+                assert_eq!(
+                    &bits(&wire),
+                    want,
+                    "{} diverged at {threads} threads, round {r}",
+                    spec.label()
+                );
+            }
+        }
+    }
+}
