@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: verify build test examples benches bench-hotpath bench-compress bench-async bench-scale bench-chaos bench-wallclock artifacts clean
+.PHONY: verify build test examples benches bench-hotpath bench-compress bench-algos bench-async bench-scale bench-chaos bench-wallclock artifacts clean
 
 verify: build test
 
@@ -32,6 +32,16 @@ bench-hotpath:
 # COMPRESS_SMOKE=1 for a CI-sized run.
 bench-compress:
 	cargo run --release --example compress_probe
+
+# Exercise the composable algorithm pipeline (schedule x weighting x
+# compression) on the linear-regression workload and write BENCH_algos.json:
+# DIGEST-style LocalUpdateSgd(H=8) bytes-to-target-loss vs dense D-SGD
+# (>=8x alone, >=20x with TopK stacked), DecentralizedADMM convergence on a
+# ring, and AL-DSGD dynamic weighting vs static MH rows on consensus spread
+# under a 4x straggler with non-IID shards. Set ALGOS_SMOKE=1 for a
+# CI-sized run.
+bench-algos:
+	cargo run --release --example algos_probe
 
 # Sync DSGD vs async push-sum SGD (one-sided windows, causal drains) under
 # uniform compute and under a 4x single-rank straggler; writes

@@ -19,12 +19,9 @@
 //! (use `--steps N` to override the default 300).
 
 use bluefog::cli::Args;
-use bluefog::collective::AllreduceAlgo;
-use bluefog::config::ModelPreset;
+use bluefog::config::{AlgoConfig, ModelPreset};
 use bluefog::launcher::{run_spmd, SpmdConfig};
-use bluefog::optim::{
-    make_optimizer, CommSpec, DecentralizedOptimizer, PeriodicGlobalAveraging,
-};
+use bluefog::optim::{make_optimizer_cfg, CommSpec};
 use bluefog::runtime::DeviceService;
 use bluefog::simnet::NetworkModel;
 use bluefog::topology::builders;
@@ -60,6 +57,15 @@ fn run_one(
         .with_topology(graph, weights)
         .with_device(device.handle());
     let run = TrainRun::new(preset, steps);
+    // One registry config covers the whole sweep — global averaging
+    // included (paper Listing 4 is `global_period` in the schedule layer).
+    let acfg = AlgoConfig {
+        algo: algo.to_string(),
+        gamma: lr,
+        beta: 0.9,
+        global_period,
+        ..AlgoConfig::default()
+    };
     let t0 = std::time::Instant::now();
     let results = run_spmd(cfg, move |ctx| {
         // The paper's throughput runs use the *dynamic* exponential-2
@@ -70,14 +76,8 @@ fn run_one(
         } else {
             CommSpec::Static
         };
-        let opt = make_optimizer(algo, lr, 0.9, comm)?;
-        let (logs, params) = if global_period > 0 {
-            let mut w = PeriodicGlobalAveraging::new(opt, global_period, AllreduceAlgo::Ring);
-            train_node(ctx, &run, &mut w)?
-        } else {
-            let mut opt = opt;
-            train_node(ctx, &run, &mut opt)?
-        };
+        let mut opt = make_optimizer_cfg(&acfg, comm)?;
+        let (logs, params) = train_node(ctx, &run, &mut opt)?;
         let (eval_loss, eval_acc) = eval_node(ctx, &run, &params, 4)?;
         Ok((logs, eval_loss, eval_acc, ctx.vtime()))
     })?;

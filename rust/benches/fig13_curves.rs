@@ -12,10 +12,9 @@
 
 use std::sync::Arc;
 
-use bluefog::config::ModelPreset;
+use bluefog::config::{AlgoConfig, ModelPreset};
 use bluefog::launcher::{run_spmd, SpmdConfig};
-use bluefog::optim::{CommSpec, DecentralizedOptimizer, DmSgd, MomentumKind, ParallelMomentumSgd, StepOrder};
-use bluefog::collective::AllreduceAlgo;
+use bluefog::optim::{make_optimizer_cfg, CommSpec, DecentralizedOptimizer};
 use bluefog::runtime::DeviceService;
 use bluefog::simnet::NetworkModel;
 use bluefog::topology::builders;
@@ -33,14 +32,29 @@ struct Curve {
     total_vtime: f64,
 }
 
-fn make_opt(label: &str, hierarchical: bool, order: StepOrder, n: usize) -> Box<dyn DecentralizedOptimizer> {
-    let comm = if hierarchical {
+/// Build the curve's optimizer through the name->algorithm registry:
+/// `Horovod` is the ring baseline, the rest are vanilla DmSGD with the
+/// ATC/AWC order flag over a dynamic (flat) or hierarchical topology.
+fn make_opt(label: &str, n: usize) -> anyhow::Result<Box<dyn DecentralizedOptimizer>> {
+    let (algo, order) = match label {
+        "Horovod" => ("psgd", "atc"),
+        "ATC" | "H-ATC" => ("dmsgd-vanilla", "atc"),
+        "AWC" | "H-AWC" => ("dmsgd-vanilla", "awc"),
+        other => anyhow::bail!("unknown curve label '{other}'"),
+    };
+    let comm = if label.starts_with("H-") {
         CommSpec::Hierarchical
     } else {
         CommSpec::Dynamic(Arc::new(OnePeerExpo::new(n)))
     };
-    let _ = label;
-    Box::new(DmSgd::new(0.08, 0.9, MomentumKind::Vanilla, order, comm))
+    let acfg = AlgoConfig {
+        algo: algo.to_string(),
+        gamma: 0.08,
+        beta: 0.9,
+        order: order.to_string(),
+        ..AlgoConfig::default()
+    };
+    make_optimizer_cfg(&acfg, comm)
 }
 
 fn run_curve(label: &'static str, device: &DeviceService) -> anyhow::Result<Curve> {
@@ -53,15 +67,7 @@ fn run_curve(label: &'static str, device: &DeviceService) -> anyhow::Result<Curv
     let mut run = TrainRun::new(preset, EVAL_EVERY);
     run.log_every = 10;
     let results = run_spmd(cfg, move |ctx| {
-        let n = ctx.size();
-        let mut opt: Box<dyn DecentralizedOptimizer> = match label {
-            "Horovod" => Box::new(ParallelMomentumSgd::new(0.08, 0.9, AllreduceAlgo::Ring)),
-            "ATC" => make_opt(label, false, StepOrder::Atc, n),
-            "AWC" => make_opt(label, false, StepOrder::Awc, n),
-            "H-ATC" => make_opt(label, true, StepOrder::Atc, n),
-            "H-AWC" => make_opt(label, true, StepOrder::Awc, n),
-            _ => unreachable!(),
-        };
+        let mut opt = make_opt(label, ctx.size())?;
         // Train in epoch chunks so we can eval between them. Parameters
         // persist because train_node inits deterministically; instead we
         // run one long session by chaining: train EVAL_EVERY steps, eval,

@@ -15,12 +15,9 @@
 
 use std::sync::Arc;
 
-use bluefog::collective::AllreduceAlgo;
-use bluefog::config::{ModelPreset, WorkloadModel};
+use bluefog::config::{AlgoConfig, ModelPreset, WorkloadModel};
 use bluefog::launcher::{run_spmd, SpmdConfig};
-use bluefog::optim::{
-    CommSpec, DecentralizedOptimizer, DmSgd, MomentumKind, ParallelMomentumSgd, StepOrder,
-};
+use bluefog::optim::{make_optimizer_cfg, CommSpec};
 use bluefog::runtime::DeviceService;
 use bluefog::simnet::schedule::{step_time, CommScheme, TriggerStyle};
 use bluefog::simnet::NetworkModel;
@@ -81,12 +78,12 @@ fn executed_panel() -> anyhow::Result<()> {
     const STEPS: usize = 150;
     println!("## Table II (executed): tiny transformer, {STEPS} steps, {NODES} nodes (4/machine)");
     let device = DeviceService::new();
-    let rows: [(&str, bool, StepOrder); 5] = [
-        ("Horovod", false, StepOrder::Atc), // placeholder; uses ParallelMomentumSgd
-        ("BlueFog(H-ATC)", true, StepOrder::Atc),
-        ("BlueFog(ATC)", false, StepOrder::Atc),
-        ("BlueFog(H-AWC)", true, StepOrder::Awc),
-        ("BlueFog(AWC)", false, StepOrder::Awc),
+    let rows: [(&str, bool, &str); 5] = [
+        ("Horovod", false, "atc"), // order unused; the registry builds psgd
+        ("BlueFog(H-ATC)", true, "atc"),
+        ("BlueFog(ATC)", false, "atc"),
+        ("BlueFog(H-AWC)", true, "awc"),
+        ("BlueFog(AWC)", false, "awc"),
     ];
     let mut base_time = 0.0;
     let mut base_acc = 0.0;
@@ -101,18 +98,22 @@ fn executed_panel() -> anyhow::Result<()> {
         let run = TrainRun::new(preset, STEPS);
         let is_baseline = i == 0;
         let hier = *hierarchical;
-        let ord = *order;
+        // Both rows go through the registry: the baseline is `psgd`, the
+        // decentralized rows are vanilla DmSGD with the ATC/AWC order flag.
+        let acfg = AlgoConfig {
+            algo: if is_baseline { "psgd" } else { "dmsgd-vanilla" }.to_string(),
+            gamma: 0.08,
+            beta: 0.9,
+            order: order.to_string(),
+            ..AlgoConfig::default()
+        };
         let results = run_spmd(cfg, move |ctx| {
-            let mut opt: Box<dyn DecentralizedOptimizer> = if is_baseline {
-                Box::new(ParallelMomentumSgd::new(0.08, 0.9, AllreduceAlgo::Ring))
+            let comm = if hier {
+                CommSpec::Hierarchical
             } else {
-                let comm = if hier {
-                    CommSpec::Hierarchical
-                } else {
-                    CommSpec::Dynamic(Arc::new(OnePeerExpo::new(ctx.size())))
-                };
-                Box::new(DmSgd::new(0.08, 0.9, MomentumKind::Vanilla, ord, comm))
+                CommSpec::Dynamic(Arc::new(OnePeerExpo::new(ctx.size())))
             };
+            let mut opt = make_optimizer_cfg(&acfg, comm)?;
             let (_, params) = train_node(ctx, &run, &mut opt)?;
             let (_, acc) = eval_node(ctx, &run, &params, 3)?;
             Ok((acc, ctx.vtime()))

@@ -15,12 +15,9 @@
 
 use std::sync::Arc;
 
-use bluefog::collective::AllreduceAlgo;
-use bluefog::config::ModelPreset;
+use bluefog::config::{AlgoConfig, ModelPreset};
 use bluefog::launcher::{run_spmd, SpmdConfig};
-use bluefog::optim::{
-    CommSpec, DecentralizedOptimizer, DmSgd, MomentumKind, ParallelMomentumSgd, StepOrder,
-};
+use bluefog::optim::{make_optimizer_cfg, CommSpec};
 use bluefog::runtime::DeviceService;
 use bluefog::simnet::NetworkModel;
 use bluefog::topology::builders;
@@ -43,23 +40,21 @@ fn run_cell(
         .with_topology(graph, weights)
         .with_device(device.handle());
     let run = TrainRun::new(preset, steps);
+    // The whole grid goes through the name->algorithm registry — the bench
+    // exercises exactly the surface `bfrun --algo` exposes.
+    let acfg = AlgoConfig {
+        algo: algo.to_string(),
+        gamma: 0.08,
+        beta: 0.9,
+        ..AlgoConfig::default()
+    };
     let results = run_spmd(cfg, move |ctx| {
         let comm = if dynamic {
             CommSpec::Dynamic(Arc::new(OnePeerExpo::new(ctx.size())))
         } else {
             CommSpec::Static
         };
-        let mut opt: Box<dyn DecentralizedOptimizer> = match algo {
-            "psgd" => Box::new(ParallelMomentumSgd::new(0.08, 0.9, AllreduceAlgo::Ring)),
-            "vanilla-dmsgd" => {
-                Box::new(DmSgd::new(0.08, 0.9, MomentumKind::Vanilla, StepOrder::Atc, comm))
-            }
-            "dmsgd" => Box::new(DmSgd::new(0.08, 0.9, MomentumKind::Synced, StepOrder::Atc, comm)),
-            "qg-dmsgd" => {
-                Box::new(DmSgd::new(0.08, 0.9, MomentumKind::QuasiGlobal, StepOrder::Atc, comm))
-            }
-            _ => unreachable!(),
-        };
+        let mut opt = make_optimizer_cfg(&acfg, comm)?;
         let (_, params) = train_node(ctx, &run, &mut opt)?;
         let (_, acc) = eval_node(ctx, &run, &params, 3)?;
         Ok((acc, ctx.vtime()))
@@ -74,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     }
     let device = DeviceService::new();
     let models: [(&'static str, usize); 2] = [("nano", 150), ("tiny", 120)];
-    let algos: [&'static str; 4] = ["psgd", "vanilla-dmsgd", "dmsgd", "qg-dmsgd"];
+    let algos: [&'static str; 4] = ["psgd", "dmsgd-vanilla", "dmsgd", "qg-dmsgd"];
 
     println!("## Table III — top-1 val accuracy (and simulated time in ms) on 8 nodes");
     println!(

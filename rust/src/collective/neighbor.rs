@@ -128,6 +128,27 @@ impl NodeContext {
         )
     }
 
+    /// This rank's static pull row and out-neighbor list — exactly the
+    /// weights [`NodeContext::neighbor_allreduce`] would combine with
+    /// (survivor-healed MH rows under active fault injection). Returns
+    /// `(self_weight, (src_rank, w_ij) pairs, out_neighbor ranks)`; dynamic
+    /// weighting policies modulate this row per round
+    /// (`optim::weighting`).
+    pub fn static_pull_row(&self) -> (f64, Vec<(usize, f64)>, Vec<usize>) {
+        let me = self.rank();
+        let topo = self.topology.read().unwrap();
+        if self.faults().active() && self.health.evicted_count() > 0 {
+            let dead = self.health.evicted_set().clone();
+            let (self_w, srcs) = survivor_mh_row(&topo.graph, &dead, me);
+            let dsts: Vec<usize> =
+                topo.views.out_neighbors(me).iter().filter(|r| !dead.contains(r)).copied().collect();
+            (self_w, srcs, dsts)
+        } else {
+            let (self_w, srcs) = topo.views.pull_view(me);
+            (self_w, srcs.to_vec(), topo.views.out_neighbors(me).to_vec())
+        }
+    }
+
     /// Dynamic partial averaging
     /// (`bf.neighbor_allreduce(tensor, self_weight, src_weights, dst_weights)`),
     /// paper eq. (10)–(12).

@@ -144,6 +144,72 @@ impl WorkloadModel {
     }
 }
 
+/// Algorithm selection and hyper-parameters for the optimizer registry
+/// ([`crate::optim::make_optimizer_cfg`]) — the surface behind
+/// `bfrun train --algo/--lr/--beta/--order/--local-steps/
+/// --global-period/--weighting/--admm-alpha/--admm-eta`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlgoConfig {
+    /// Registry name (`atc`, `awc`, `dsgd`, `local-sgd`, `digest`,
+    /// `dmsgd-vanilla`, `dmsgd`, `qg-dmsgd`, `ed`, `gt`, `psgt`, `admm`,
+    /// `psgd`).
+    pub algo: String,
+    /// Step size `γ`.
+    pub gamma: f32,
+    /// Momentum coefficient `β` (momentum families).
+    pub beta: f32,
+    /// Communication/adaptation order (`atc` / `awc`) for the momentum
+    /// family; the plain D-SGD names `atc`/`awc` imply their own order.
+    pub order: String,
+    /// Local steps per gossip exchange (DIGEST `H`; 1 = every step).
+    pub local_steps: usize,
+    /// Global allreduce every `global_period` steps (0 = never).
+    pub global_period: usize,
+    /// Neighbor weighting policy (`static`, `al-dsgd`).
+    pub weighting: String,
+    /// ADMM dual coupling strength `α` (`ρ = α·|N_i|`).
+    pub admm_alpha: f32,
+    /// ADMM linearized-prox step size `η`.
+    pub admm_eta: f32,
+}
+
+impl Default for AlgoConfig {
+    fn default() -> Self {
+        AlgoConfig {
+            algo: "atc".into(),
+            gamma: 0.05,
+            beta: 0.9,
+            order: "atc".into(),
+            local_steps: 1,
+            global_period: 0,
+            weighting: "static".into(),
+            admm_alpha: 2.0,
+            admm_eta: 0.05,
+        }
+    }
+}
+
+impl AlgoConfig {
+    /// Read the registry surface from parsed CLI flags; absent flags keep
+    /// the [`Default`] values.
+    pub fn from_args(args: &crate::cli::Args) -> anyhow::Result<AlgoConfig> {
+        let d = AlgoConfig::default();
+        Ok(AlgoConfig {
+            algo: args.str_or("algo", &d.algo).to_string(),
+            gamma: args.f64_or("lr", f64::from(d.gamma))? as f32,
+            beta: args.f64_or("beta", f64::from(d.beta))? as f32,
+            order: args.choice_or("order", &d.order, &["atc", "awc"])?.to_string(),
+            local_steps: args.usize_or("local-steps", d.local_steps)?,
+            global_period: args.usize_or("global-period", d.global_period)?,
+            weighting: args
+                .choice_or("weighting", &d.weighting, &["static", "al-dsgd", "aldsgd"])?
+                .to_string(),
+            admm_alpha: args.f64_or("admm-alpha", f64::from(d.admm_alpha))? as f32,
+            admm_eta: args.f64_or("admm-eta", f64::from(d.admm_eta))? as f32,
+        })
+    }
+}
+
 /// Which backend-portable workload a TCP worker process runs
 /// (`transport::portable::{run_consensus, run_dsgd}`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -408,6 +474,32 @@ mod tests {
             assert_eq!(PortableWorkload::parse(w.as_str()).unwrap(), w);
         }
         assert!(PortableWorkload::parse("blob").is_err());
+    }
+
+    #[test]
+    fn algo_config_from_args() {
+        let args = crate::cli::Args::parse(
+            "--algo digest --local-steps 8 --weighting al-dsgd --lr 0.08 --global-period 50"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let cfg = AlgoConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.algo, "digest");
+        assert_eq!(cfg.local_steps, 8);
+        assert_eq!(cfg.weighting, "al-dsgd");
+        assert_eq!(cfg.global_period, 50);
+        assert!((cfg.gamma - 0.08).abs() < 1e-6);
+        // Untouched fields keep defaults.
+        assert_eq!(cfg.order, "atc");
+        assert_eq!(AlgoConfig::from_args(&crate::cli::Args::default()).unwrap(),
+                   AlgoConfig::default());
+        // Bad weighting is rejected at parse time.
+        let bad = crate::cli::Args::parse(
+            ["--weighting".to_string(), "softmax".to_string()],
+        )
+        .unwrap();
+        assert!(AlgoConfig::from_args(&bad).is_err());
     }
 
     #[test]

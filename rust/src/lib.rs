@@ -33,9 +33,13 @@
 //! - [`parallel`] — rank-local worker pool sharding multi-MB combines and
 //!   codec encodes across `intra_threads` (deterministic fixed-boundary
 //!   shards; 1 = serial).
-//! - [`optim`] — decentralized optimizers: DGD, Exact-Diffusion,
-//!   Gradient-Tracking, push-sum, D-SGD (ATC/AWC), DmSGD, QG-DmSGD and the
-//!   periodic-global-averaging wrapper.
+//! - [`optim`] — decentralized optimizers as a composable pipeline:
+//!   `AlgoStep` kernels (DGD, Exact-Diffusion, Gradient-Tracking,
+//!   push-sum, DmSGD/QG-DmSGD) driven by a `CommSchedule` (every step,
+//!   DIGEST-style `H` local steps, periodic global sync) and a
+//!   `NeighborWeighting` policy (static MH rows or AL-DSGD dynamic rows),
+//!   plus `DecentralizedAdmm` and the name→algorithm registry
+//!   (`make_optimizer_cfg`).
 //! - [`runtime`] — the PJRT runtime executing AOT-compiled JAX/Pallas
 //!   artifacts from the Rust hot path.
 //! - [`launcher`] — the SPMD launcher (`bfrun` analogue) spawning one thread

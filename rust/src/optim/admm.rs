@@ -1,0 +1,135 @@
+//! Decentralized ADMM (consensus form) — the first non-SGD family on the
+//! pipeline's communication substrate.
+//!
+//! Each node holds a primal iterate `x`, a consensus estimate `a` and a
+//! scaled dual `v`, and repeats (SNIPPETS.md §2/§3 idiom, `ρ = α·|N_i|`):
+//!
+//! 1. **Proximal step** — minimize the local loss plus
+//!    `ρ/2 ‖x − v‖²`-style coupling. With [`ProxKind::Linearized`] the
+//!    loss is linearized at the previous prox output (gradient `g`), so
+//!    the solve is closed-form: `x ⟵ (x/η − g + ρ v) / (1/η + ρ)`.
+//!    [`ProxKind::Quadratic`] assumes the caller's gradient is that of a
+//!    unit-curvature quadratic (`g = x − c`), giving the exact prox
+//!    `x ⟵ (c + ρ v) / (1 + ρ)` — useful for property tests where the
+//!    fixed point is known analytically.
+//! 2. **Consensus combine** — `a⁺ = ½ x + ½·(mean of in-neighbor x)`, a
+//!    neighbor allreduce with explicit weights (self ½, each of the `n`
+//!    in-neighbors ½/n).
+//! 3. **Dual ascent** — `v ⟵ v + a⁺ − a`.
+//!
+//! The iterate exposed to the driver stays the *prox output* `x`; the
+//! consensus trace `a` is internal state. On connected graphs the mean
+//! iterate converges to the consensus optimum (probed end to end on the
+//! linear-regression workload by `examples/algos_probe.rs`; the ring
+//! fixed-point property test lives in `tests/optimizers.rs`).
+
+use crate::collective::neighbor::NeighborWeights;
+use crate::context::NodeContext;
+
+use super::DecentralizedOptimizer;
+
+/// Pull row `a⁺ = ½ x_self + ½·mean(in-neighbor x)` over the current
+/// static topology (fault-healed neighbor sets included).
+fn weights_half_mean(ctx: &NodeContext) -> NeighborWeights {
+    let ins = ctx.in_neighbor_ranks();
+    let outs = ctx.out_neighbor_ranks();
+    let n = ins.len().max(1);
+    NeighborWeights::push_pull(
+        0.5,
+        ins.into_iter().map(|j| (j, 0.5 / n as f64)).collect(),
+        outs.into_iter().map(|d| (d, 1.0)).collect(),
+    )
+}
+
+/// Which proximal subproblem the ADMM step solves in closed form.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProxKind {
+    /// Linearize the local loss at the previous iterate; `eta` is the
+    /// proximal step size of the resulting gradient-style solve.
+    Linearized {
+        /// Proximal step size `η`.
+        eta: f32,
+    },
+    /// Exact prox of a unit-curvature quadratic (`g = x − c`).
+    Quadratic,
+}
+
+/// Decentralized consensus ADMM over the static neighbor topology.
+pub struct DecentralizedAdmm {
+    /// Dual coupling strength per neighbor: `ρ = α·|N_i|`.
+    pub alpha: f32,
+    /// Proximal subproblem variant.
+    pub prox: ProxKind,
+    a: Option<Vec<f32>>,
+    v: Option<Vec<f32>>,
+    rounds: usize,
+}
+
+impl DecentralizedAdmm {
+    /// New decentralized ADMM optimizer.
+    pub fn new(alpha: f32, prox: ProxKind) -> Self {
+        DecentralizedAdmm { alpha, prox, a: None, v: None, rounds: 0 }
+    }
+
+    /// The current consensus estimate `a` (None before the first step).
+    pub fn consensus(&self) -> Option<&Vec<f32>> {
+        self.a.as_ref()
+    }
+}
+
+impl DecentralizedOptimizer for DecentralizedAdmm {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let d = x.len();
+        let n_in = ctx.in_neighbor_ranks().len().max(1);
+        let rho = self.alpha * n_in as f32;
+        if self.a.is_none() {
+            self.a = Some(vec![0.0; d]);
+            self.v = Some(vec![0.0; d]);
+        }
+        // 1. Proximal step (in place on the exposed iterate).
+        {
+            let v = self.v.as_ref().unwrap();
+            match self.prox {
+                ProxKind::Linearized { eta } => {
+                    let inv = 1.0 / eta;
+                    for ((xi, g), vi) in x.iter_mut().zip(grad).zip(v.iter()) {
+                        *xi = (*xi * inv - g + rho * vi) / (inv + rho);
+                    }
+                }
+                ProxKind::Quadratic => {
+                    for ((xi, g), vi) in x.iter_mut().zip(grad).zip(v.iter()) {
+                        let c = *xi - g;
+                        *xi = (c + rho * vi) / (1.0 + rho);
+                    }
+                }
+            }
+        }
+        // 2. Consensus combine: a⁺ = ½ x + ½·mean(in-neighbor x).
+        let w = weights_half_mean(ctx);
+        let a_new = ctx.neighbor_allreduce_dynamic_stream(x, &w, 0)?;
+        self.rounds += 1;
+        // 3. Dual ascent: v += a⁺ − a.
+        {
+            let v = self.v.as_mut().unwrap();
+            let a = self.a.as_ref().unwrap();
+            for ((vi, an), ao) in v.iter_mut().zip(&a_new).zip(a.iter()) {
+                *vi += an - ao;
+            }
+        }
+        if let Some(old) = self.a.replace(a_new) {
+            ctx.recycle(old);
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        match self.prox {
+            ProxKind::Linearized { eta } => format!("DecentralizedADMM(linearized, eta={eta})"),
+            ProxKind::Quadratic => "DecentralizedADMM(quadratic)".into(),
+        }
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.rounds
+    }
+}

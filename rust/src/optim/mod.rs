@@ -7,29 +7,37 @@
 //! `Distributed*Optimizer` wrappers, where the communication type and
 //! topology weights are swappable per step (paper Listing 4).
 //!
-//! **Communication compression** is orthogonal to the optimizer: a
-//! [`crate::compress::CompressionSpec`] set on
-//! [`crate::launcher::SpmdConfig`] rides the [`crate::context::NodeContext`]
-//! into every neighbor combine a [`CommSpec`] issues, so each optimizer
-//! below runs compressed with zero API change at its call site (the
-//! error-feedback residuals that keep this convergent live per stream in
-//! the context, not in the optimizer). Global averaging
-//! ([`CommSpec::Global`]) stays dense — it is the exact baseline the
-//! compression probes compare against.
+//! **The composable pipeline.** Synchronous algorithms are expressed as
+//! [`AlgoStep`]s (local gradient step · neighbor communicate · correction,
+//! see [`pipeline`]) driven by a [`ScheduledOptimizer`] that composes three
+//! orthogonal policies:
 //!
-//! Implemented algorithms:
-//! - [`Dgd`] — decentralized (stochastic) gradient descent, ATC and AWC
-//!   orders (paper eq. (22)/(23));
-//! - [`ExactDiffusion`] — bias-corrected diffusion (Appendix A);
-//! - [`GradientTracking`] — DIGing-style tracking of the global gradient;
-//! - [`PushSumGradientTracking`] — push-style tracking over directed
-//!   time-varying graphs (Appendix B);
-//! - [`DmSgd`] — decentralized momentum SGD in three flavors: vanilla
-//!   (local momentum, [3]), synchronized momentum ([61]: the momentum
-//!   buffer is partially averaged too) and quasi-global momentum
-//!   (QG-DmSGD, [67]);
-//! - [`PeriodicGlobalAveraging`] — wrapper that swaps partial averaging for
-//!   a global allreduce every `period` steps (paper Listing 4 / [4]).
+//! - *when* to communicate — a [`CommSchedule`] ([`schedule`]): every step,
+//!   every `H` steps (DIGEST-style local updates), plus an optional
+//!   periodic global sync that subsumes the old standalone
+//!   [`PeriodicGlobalAveraging`] wrapper;
+//! - *with which weights* — a [`NeighborWeighting`] ([`weighting`]): the
+//!   static MH / survivor rows bit-for-bit, or AL-DSGD loss/staleness-
+//!   boosted dynamic rows;
+//! - *compressed how* — a [`crate::compress::CompressionSpec`] set on
+//!   [`crate::launcher::SpmdConfig`] rides the
+//!   [`crate::context::NodeContext`] into every combine, orthogonal to
+//!   both (error-feedback residuals live per stream in the context).
+//!
+//! The classic optimizer structs below ([`Dgd`], [`ExactDiffusion`],
+//! [`GradientTracking`], [`PushSumGradientTracking`], [`DmSgd`]) are thin
+//! wrappers over the pipeline with their pre-refactor constructors and
+//! names; `tests/optimizers.rs` pins each one bitwise against the frozen
+//! copies in [`reference`]. New families land as pipeline compositions or
+//! new [`AlgoStep`]s:
+//!
+//! - [`LocalUpdateSgd`] — `H` local steps + one gossip (DIGEST,
+//!   arXiv:2307.07652), multiplying its `H`x byte savings with TopK
+//!   compression;
+//! - [`DecentralizedAdmm`] — proximal step + neighbor consensus + dual
+//!   ascent ([`admm`]), the first non-SGD family;
+//! - [`ParallelMomentumSgd`] — the centralized baseline (global gradient
+//!   averaging every step).
 //!
 //! The *asynchronous* family — [`AsyncPushSumSgd`] and [`AsyncGossipSgd`],
 //! which communicate through one-sided window operations instead of
@@ -37,14 +45,27 @@
 //! [`AsyncDecentralizedOptimizer`] trait (the step/teardown contract
 //! differs: async optimizers own a window and a drain protocol).
 
+pub mod admm;
 pub mod asynchronous;
+pub mod pipeline;
+pub mod reference;
+pub mod schedule;
+pub mod weighting;
 
+pub use admm::{DecentralizedAdmm, ProxKind};
 pub use asynchronous::{AsyncDecentralizedOptimizer, AsyncGossipSgd, AsyncPushSumSgd};
+pub use pipeline::{
+    AlgoStep, DgdStep, DmSgdStep, ExactDiffusionStep, GradientTrackingStep, LocalUpdateSgd,
+    PushSumStep, ScheduledOptimizer,
+};
+pub use schedule::{CommSchedule, GlobalSync, LocalUpdateSpec};
+pub use weighting::{AlDsgdSpec, CommPipe, NeighborWeighting};
 
 use std::sync::Arc;
 
 use crate::collective::neighbor::NeighborWeights;
 use crate::collective::{AllreduceAlgo, ReduceOp};
+use crate::config::AlgoConfig;
 use crate::context::NodeContext;
 use crate::tensor::axpy;
 use crate::topology::dynamic::DynamicTopology;
@@ -128,6 +149,14 @@ pub trait DecentralizedOptimizer: Send {
         -> anyhow::Result<()>;
     /// Display name.
     fn name(&self) -> String;
+    /// Feed the most recent training/validation loss *before* the step —
+    /// the AL-DSGD weighting's deviation signal. Default: ignored.
+    fn observe_loss(&mut self, _loss: f32) {}
+    /// Communication rounds issued so far (gossip exchanges + global
+    /// syncs). Default 0 for optimizers that do not count.
+    fn comm_rounds(&self) -> usize {
+        0
+    }
 }
 
 impl DecentralizedOptimizer for Box<dyn DecentralizedOptimizer> {
@@ -139,6 +168,14 @@ impl DecentralizedOptimizer for Box<dyn DecentralizedOptimizer> {
     fn name(&self) -> String {
         (**self).name()
     }
+
+    fn observe_loss(&mut self, loss: f32) {
+        (**self).observe_loss(loss)
+    }
+
+    fn comm_rounds(&self) -> usize {
+        (**self).comm_rounds()
+    }
 }
 
 /// Execution order of communication vs adaptation (paper §V-C).
@@ -149,250 +186,6 @@ pub enum StepOrder {
     /// Adapt-While-Communicate: `x <- W x - γ g` (eq. 22) — the combine can
     /// overlap the gradient computation.
     Awc,
-}
-
-/// Decentralized (stochastic) gradient descent — paper eq. (16)/(17).
-pub struct Dgd {
-    /// Step size `γ`.
-    pub gamma: f32,
-    /// Communication/adaptation order (ATC vs AWC).
-    pub order: StepOrder,
-    /// Communication pattern used by the combine step.
-    pub comm: CommSpec,
-    iter: usize,
-}
-
-impl Dgd {
-    /// New DGD optimizer with step size `gamma`.
-    pub fn new(gamma: f32, order: StepOrder, comm: CommSpec) -> Self {
-        Dgd { gamma, order, comm, iter: 0 }
-    }
-}
-
-impl DecentralizedOptimizer for Dgd {
-    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
-        match self.order {
-            StepOrder::Atc => {
-                // Pooled scratch for the half-step; the replaced parameter
-                // buffer goes back to the pool for the next round.
-                let mut half = ctx.scratch_copy(x);
-                axpy(-self.gamma, grad, &mut half);
-                let combined = self.comm.combine(ctx, self.iter, &half)?;
-                ctx.recycle(std::mem::replace(x, combined));
-            }
-            StepOrder::Awc => {
-                let combined = self.comm.combine(ctx, self.iter, x)?;
-                ctx.recycle(std::mem::replace(x, combined));
-                axpy(-self.gamma, grad, x);
-            }
-        }
-        self.iter += 1;
-        Ok(())
-    }
-
-    fn name(&self) -> String {
-        format!("DGD-{:?}({})", self.order, self.comm.label())
-    }
-}
-
-/// Exact-Diffusion (Appendix A): corrects DGD's steady-state bias.
-///
-/// `psi_k = x_k - γ g_k`; `phi_k = psi_k + x_k - psi_{k-1}`;
-/// `x_{k+1} = W phi_k`.
-pub struct ExactDiffusion {
-    /// Step size `γ`.
-    pub gamma: f32,
-    /// Communication pattern used by the combine step.
-    pub comm: CommSpec,
-    prev_psi: Option<Vec<f32>>,
-    iter: usize,
-}
-
-impl ExactDiffusion {
-    /// New Exact-Diffusion optimizer with step size `gamma`.
-    pub fn new(gamma: f32, comm: CommSpec) -> Self {
-        ExactDiffusion { gamma, comm, prev_psi: None, iter: 0 }
-    }
-}
-
-impl DecentralizedOptimizer for ExactDiffusion {
-    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
-        let mut psi = ctx.vec_from(x);
-        axpy(-self.gamma, grad, &mut psi);
-        let mut phi = ctx.scratch_copy(&psi);
-        match &self.prev_psi {
-            None => {}
-            Some(prev) => {
-                for ((f, (p, xi)), pp) in
-                    phi.iter_mut().zip(psi.iter().zip(x.iter())).zip(prev.iter())
-                {
-                    *f = p + xi - pp;
-                }
-            }
-        }
-        let combined = self.comm.combine(ctx, self.iter, &phi)?;
-        ctx.recycle(std::mem::replace(x, combined));
-        if let Some(old) = self.prev_psi.replace(psi) {
-            ctx.recycle(old);
-        }
-        self.iter += 1;
-        Ok(())
-    }
-
-    fn name(&self) -> String {
-        format!("ExactDiffusion({})", self.comm.label())
-    }
-}
-
-/// Gradient tracking (DIGing): `y` tracks the network-average gradient so
-/// the fixed point is exact even under heterogeneous data.
-///
-/// `y_{k+1} = W(y_k + g_{k+1} - g_k)` (y_0 = g_0);
-/// `x_{k+1} = W(x_k - γ y_{k+1})`.
-pub struct GradientTracking {
-    /// Step size `γ`.
-    pub gamma: f32,
-    /// Communication pattern used by the combine step.
-    pub comm: CommSpec,
-    y: Option<Vec<f32>>,
-    prev_grad: Option<Vec<f32>>,
-    iter: usize,
-}
-
-impl GradientTracking {
-    /// New gradient-tracking optimizer with step size `gamma`.
-    pub fn new(gamma: f32, comm: CommSpec) -> Self {
-        GradientTracking { gamma, comm, y: None, prev_grad: None, iter: 0 }
-    }
-
-    /// The tracked global-gradient estimate (tests verify the tracking
-    /// invariant `mean_i y_i = mean_i g_i`).
-    pub fn tracker(&self) -> Option<&Vec<f32>> {
-        self.y.as_ref()
-    }
-}
-
-impl DecentralizedOptimizer for GradientTracking {
-    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
-        let y = match (&mut self.y, &self.prev_grad) {
-            (None, _) => grad.to_vec(),
-            (Some(y), Some(pg)) => {
-                let mut q = ctx.scratch_copy(y);
-                for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
-                    *qi += g - p;
-                }
-                // Stream 1: the tracker exchange must not share compression
-                // state with the same-length parameter exchange below.
-                self.comm.combine_stream(ctx, self.iter, &q, 1)?
-            }
-            (Some(_), None) => unreachable!("prev_grad set with y"),
-        };
-        let mut half = ctx.scratch_copy(x);
-        axpy(-self.gamma, &y, &mut half);
-        let combined = self.comm.combine(ctx, self.iter, &half)?;
-        ctx.recycle(std::mem::replace(x, combined));
-        if let Some(old) = self.y.replace(y) {
-            ctx.recycle(old);
-        }
-        let grad_copy = ctx.vec_from(grad);
-        if let Some(old) = self.prev_grad.replace(grad_copy) {
-            ctx.recycle(old);
-        }
-        self.iter += 1;
-        Ok(())
-    }
-
-    fn name(&self) -> String {
-        format!("GradientTracking({})", self.comm.label())
-    }
-}
-
-/// Push-sum gradient tracking (Appendix B, eq. (27)–(31)) — runs over
-/// *directed, time-varying* graphs using column-stochastic (push) weights,
-/// with the push-sum weight `v` correcting the bias.
-pub struct PushSumGradientTracking {
-    /// Step size `γ`.
-    pub gamma: f32,
-    /// Per-iteration directed topology schedule.
-    pub topo: Arc<dyn DynamicTopology>,
-    u: Option<Vec<f32>>,
-    v: f32,
-    y: Option<Vec<f32>>,
-    prev_grad: Option<Vec<f32>>,
-    iter: usize,
-}
-
-impl PushSumGradientTracking {
-    /// New push-sum gradient-tracking optimizer over `topo`.
-    pub fn new(gamma: f32, topo: Arc<dyn DynamicTopology>) -> Self {
-        PushSumGradientTracking { gamma, topo, u: None, v: 1.0, y: None, prev_grad: None, iter: 0 }
-    }
-
-    /// Push-style combine: senders scale by the column-stochastic weights.
-    fn push_combine(
-        &self,
-        ctx: &mut NodeContext,
-        iter: usize,
-        data: &[f32],
-        stream: u32,
-    ) -> anyhow::Result<Vec<f32>> {
-        let view = self.topo.view(iter, ctx.rank());
-        // Column-stochastic: self keeps self_weight, sends s_ij to dsts;
-        // receivers apply r = 1.
-        let w = NeighborWeights::push_pull(
-            view.self_weight,
-            view.src_weights.iter().map(|&(s, _)| (s, 1.0)).collect(),
-            view.dst_weights.clone(),
-        );
-        ctx.neighbor_allreduce_dynamic_stream(data, &w, stream)
-    }
-}
-
-impl DecentralizedOptimizer for PushSumGradientTracking {
-    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
-        // Initialize u from the current x, y from the first gradient.
-        if self.u.is_none() {
-            self.u = Some(x.clone());
-            self.y = Some(grad.to_vec());
-            self.prev_grad = Some(grad.to_vec());
-        } else {
-            // y_{k+1} = W^k (y_k + g_{k+1} - g_k); built in pooled scratch
-            // so `self.y` stays intact if the combine errors.
-            let mut q = ctx.scratch_copy(self.y.as_ref().unwrap());
-            let pg = self.prev_grad.as_ref().unwrap();
-            for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
-                *qi += g - p;
-            }
-            let new_y = self.push_combine(ctx, self.iter, &q, 1)?;
-            if let Some(old) = self.y.replace(new_y) {
-                ctx.recycle(old);
-            }
-            let grad_copy = ctx.vec_from(grad);
-            if let Some(old) = self.prev_grad.replace(grad_copy) {
-                ctx.recycle(old);
-            }
-        }
-        // u_{k+1} = W^k (u_k - γ y_k)
-        let mut w = ctx.scratch_copy(self.u.as_ref().unwrap());
-        axpy(-self.gamma, self.y.as_ref().unwrap(), &mut w);
-        let u_new = self.push_combine(ctx, self.iter, &w, 0)?;
-        // v_{k+1} = W^k v_k  (scalar push-sum weight)
-        let v_new = self.push_combine(ctx, self.iter, &[self.v], 2)?[0];
-        // x_{k+1} = u_{k+1} / v_{k+1}
-        if let Some(old) = self.u.replace(u_new) {
-            ctx.recycle(old);
-        }
-        self.v = v_new;
-        let u = self.u.as_ref().unwrap();
-        x.clear();
-        x.extend(u.iter().map(|ui| ui / self.v));
-        self.iter += 1;
-        Ok(())
-    }
-
-    fn name(&self) -> String {
-        "PushSumGradientTracking(dynamic)".into()
-    }
 }
 
 /// Momentum flavor of [`DmSgd`].
@@ -408,135 +201,276 @@ pub enum MomentumKind {
     QuasiGlobal,
 }
 
-/// Decentralized momentum SGD (Table III's algorithm family).
+/// Decentralized (stochastic) gradient descent — paper eq. (16)/(17).
+///
+/// Thin wrapper over [`DgdStep`] on the every-step schedule; bitwise
+/// identical to the pre-refactor implementation.
+pub struct Dgd {
+    inner: ScheduledOptimizer<DgdStep>,
+}
+
+impl Dgd {
+    /// New DGD optimizer with step size `gamma`.
+    pub fn new(gamma: f32, order: StepOrder, comm: CommSpec) -> Self {
+        Dgd {
+            inner: ScheduledOptimizer::new(
+                DgdStep::new(gamma, order),
+                comm,
+                CommSchedule::every_step(),
+            ),
+        }
+    }
+
+    /// Swap the neighbor weighting policy (AL-DSGD dynamic rows).
+    pub fn with_weighting(mut self, w: NeighborWeighting) -> Self {
+        self.inner = self.inner.with_weighting(w);
+        self
+    }
+}
+
+impl DecentralizedOptimizer for Dgd {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        self.inner.step(ctx, x, grad)
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn observe_loss(&mut self, loss: f32) {
+        self.inner.observe_loss(loss);
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.inner.comm_rounds()
+    }
+}
+
+/// Exact-Diffusion (Appendix A): corrects DGD's steady-state bias.
+///
+/// `psi_k = x_k - γ g_k`; `phi_k = psi_k + x_k - psi_{k-1}`;
+/// `x_{k+1} = W phi_k`. Thin wrapper over [`ExactDiffusionStep`].
+pub struct ExactDiffusion {
+    inner: ScheduledOptimizer<ExactDiffusionStep>,
+}
+
+impl ExactDiffusion {
+    /// New Exact-Diffusion optimizer with step size `gamma`.
+    pub fn new(gamma: f32, comm: CommSpec) -> Self {
+        ExactDiffusion {
+            inner: ScheduledOptimizer::new(
+                ExactDiffusionStep::new(gamma),
+                comm,
+                CommSchedule::every_step(),
+            ),
+        }
+    }
+
+    /// Swap the neighbor weighting policy (AL-DSGD dynamic rows).
+    pub fn with_weighting(mut self, w: NeighborWeighting) -> Self {
+        self.inner = self.inner.with_weighting(w);
+        self
+    }
+}
+
+impl DecentralizedOptimizer for ExactDiffusion {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        self.inner.step(ctx, x, grad)
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn observe_loss(&mut self, loss: f32) {
+        self.inner.observe_loss(loss);
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.inner.comm_rounds()
+    }
+}
+
+/// Gradient tracking (DIGing): `y` tracks the network-average gradient so
+/// the fixed point is exact even under heterogeneous data.
+///
+/// `y_{k+1} = W(y_k + g_{k+1} - g_k)` (y_0 = g_0);
+/// `x_{k+1} = W(x_k - γ y_{k+1})`. Thin wrapper over
+/// [`GradientTrackingStep`].
+pub struct GradientTracking {
+    inner: ScheduledOptimizer<GradientTrackingStep>,
+}
+
+impl GradientTracking {
+    /// New gradient-tracking optimizer with step size `gamma`.
+    pub fn new(gamma: f32, comm: CommSpec) -> Self {
+        GradientTracking {
+            inner: ScheduledOptimizer::new(
+                GradientTrackingStep::new(gamma),
+                comm,
+                CommSchedule::every_step(),
+            ),
+        }
+    }
+
+    /// Swap the neighbor weighting policy (AL-DSGD dynamic rows).
+    pub fn with_weighting(mut self, w: NeighborWeighting) -> Self {
+        self.inner = self.inner.with_weighting(w);
+        self
+    }
+
+    /// The tracked global-gradient estimate (tests verify the tracking
+    /// invariant `mean_i y_i = mean_i g_i`).
+    pub fn tracker(&self) -> Option<&Vec<f32>> {
+        self.inner.algo().tracker()
+    }
+}
+
+impl DecentralizedOptimizer for GradientTracking {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        self.inner.step(ctx, x, grad)
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn observe_loss(&mut self, loss: f32) {
+        self.inner.observe_loss(loss);
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.inner.comm_rounds()
+    }
+}
+
+/// Push-sum gradient tracking (Appendix B, eq. (27)–(31)) — runs over
+/// *directed, time-varying* graphs using column-stochastic (push) weights,
+/// with the push-sum weight `v` correcting the bias. Thin wrapper over
+/// [`PushSumStep`] (the weighting policy is bypassed: column-stochastic
+/// realizations are part of the algorithm).
+pub struct PushSumGradientTracking {
+    inner: ScheduledOptimizer<PushSumStep>,
+}
+
+impl PushSumGradientTracking {
+    /// New push-sum gradient-tracking optimizer over `topo`.
+    pub fn new(gamma: f32, topo: Arc<dyn DynamicTopology>) -> Self {
+        PushSumGradientTracking {
+            inner: ScheduledOptimizer::new(
+                PushSumStep::new(gamma, topo),
+                CommSpec::None,
+                CommSchedule::every_step(),
+            ),
+        }
+    }
+}
+
+impl DecentralizedOptimizer for PushSumGradientTracking {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        self.inner.step(ctx, x, grad)
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn observe_loss(&mut self, loss: f32) {
+        self.inner.observe_loss(loss);
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.inner.comm_rounds()
+    }
+}
+
+/// Decentralized momentum SGD (Table III's algorithm family). Thin
+/// wrapper over [`DmSgdStep`].
 pub struct DmSgd {
-    /// Step size `γ`.
-    pub gamma: f32,
-    /// Momentum coefficient `β`.
-    pub beta: f32,
-    /// Which momentum variant to run (Table III rows).
-    pub kind: MomentumKind,
-    /// Communication/adaptation order (ATC vs AWC).
-    pub order: StepOrder,
-    /// Communication pattern used by the combine step.
-    pub comm: CommSpec,
-    m: Option<Vec<f32>>,
-    iter: usize,
+    inner: ScheduledOptimizer<DmSgdStep>,
 }
 
 impl DmSgd {
     /// New decentralized momentum-SGD optimizer.
     pub fn new(gamma: f32, beta: f32, kind: MomentumKind, order: StepOrder, comm: CommSpec) -> Self {
-        DmSgd { gamma, beta, kind, order, comm, m: None, iter: 0 }
+        DmSgd {
+            inner: ScheduledOptimizer::new(
+                DmSgdStep::new(gamma, beta, kind, order),
+                comm,
+                CommSchedule::every_step(),
+            ),
+        }
+    }
+
+    /// Swap the neighbor weighting policy (AL-DSGD dynamic rows).
+    pub fn with_weighting(mut self, w: NeighborWeighting) -> Self {
+        self.inner = self.inner.with_weighting(w);
+        self
     }
 }
 
 impl DecentralizedOptimizer for DmSgd {
     fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
-        let d = x.len();
-        if self.m.is_none() {
-            self.m = Some(vec![0.0; d]);
-        }
-        match self.kind {
-            MomentumKind::Vanilla | MomentumKind::Synced => {
-                {
-                    let m = self.m.as_mut().unwrap();
-                    for (mi, g) in m.iter_mut().zip(grad) {
-                        *mi = self.beta * *mi + g;
-                    }
-                }
-                match self.order {
-                    StepOrder::Atc => {
-                        let mut half = ctx.scratch_copy(x);
-                        axpy(-self.gamma, self.m.as_ref().unwrap(), &mut half);
-                        let combined = self.comm.combine(ctx, self.iter, &half)?;
-                        ctx.recycle(std::mem::replace(x, combined));
-                    }
-                    StepOrder::Awc => {
-                        let combined = self.comm.combine(ctx, self.iter, x)?;
-                        ctx.recycle(std::mem::replace(x, combined));
-                        axpy(-self.gamma, self.m.as_ref().unwrap(), x);
-                    }
-                }
-                if self.kind == MomentumKind::Synced {
-                    // Stream 1: keep the momentum exchange's compression
-                    // state apart from the parameter exchange's.
-                    let synced =
-                        self.comm.combine_stream(ctx, self.iter, self.m.as_ref().unwrap(), 1)?;
-                    if let Some(old) = self.m.replace(synced) {
-                        ctx.recycle(old);
-                    }
-                }
-            }
-            MomentumKind::QuasiGlobal => {
-                // [67]: d_k = g_k + beta * m_k ; x half-step, combine, then
-                // m_{k+1} = beta * m_k + (1 - beta) * (x_k - x_{k+1}) / gamma.
-                let mut half = ctx.scratch_copy(x);
-                {
-                    let m = self.m.as_ref().unwrap();
-                    for ((h, g), mi) in half.iter_mut().zip(grad).zip(m.iter()) {
-                        *h -= self.gamma * (g + self.beta * mi);
-                    }
-                }
-                let combined = self.comm.combine(ctx, self.iter, &half)?;
-                let x_prev = std::mem::replace(x, combined);
-                let m = self.m.as_mut().unwrap();
-                for ((mi, xp), xn) in m.iter_mut().zip(&x_prev).zip(x.iter()) {
-                    *mi = self.beta * *mi + (1.0 - self.beta) * (xp - xn) / self.gamma;
-                }
-                ctx.recycle(x_prev);
-            }
-        }
-        self.iter += 1;
-        Ok(())
+        self.inner.step(ctx, x, grad)
     }
 
     fn name(&self) -> String {
-        let kind = match self.kind {
-            MomentumKind::Vanilla => "DmSGD-vanilla",
-            MomentumKind::Synced => "DmSGD",
-            MomentumKind::QuasiGlobal => "QG-DmSGD",
-        };
-        format!("{kind}({})", self.comm.label())
+        self.inner.name()
+    }
+
+    fn observe_loss(&mut self, loss: f32) {
+        self.inner.observe_loss(loss);
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.inner.comm_rounds()
     }
 }
 
 /// Wrapper that periodically replaces partial averaging with a global
 /// allreduce (paper Listing 4: `allreduce if batch_idx % 20 == 0`).
+///
+/// Thin shim over [`GlobalSync`] — the schedule layer owns the logic now
+/// ([`CommSchedule::with_global_sync`] is the composable form); this
+/// wrapper survives so existing call sites and tests don't churn.
 pub struct PeriodicGlobalAveraging<O: DecentralizedOptimizer> {
     /// The wrapped decentralized optimizer.
     pub inner: O,
-    /// A global allreduce replaces partial averaging every `period` steps.
-    pub period: usize,
-    /// Allreduce algorithm used for the periodic global average.
-    pub algo: AllreduceAlgo,
-    iter: usize,
+    sync: GlobalSync,
+    syncs_done: usize,
 }
 
 impl<O: DecentralizedOptimizer> PeriodicGlobalAveraging<O> {
     /// Wrap `inner`, averaging globally every `period` steps.
     pub fn new(inner: O, period: usize, algo: AllreduceAlgo) -> Self {
-        assert!(period > 0);
-        PeriodicGlobalAveraging { inner, period, algo, iter: 0 }
+        PeriodicGlobalAveraging { inner, sync: GlobalSync::new(period, algo), syncs_done: 0 }
     }
 }
 
 impl<O: DecentralizedOptimizer> DecentralizedOptimizer for PeriodicGlobalAveraging<O> {
     fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
         self.inner.step(ctx, x, grad)?;
-        self.iter += 1;
-        if self.iter % self.period == 0 {
-            *x = ctx.allreduce(x, ReduceOp::Average, self.algo)?;
+        if self.sync.after_step(ctx, x)? {
+            self.syncs_done += 1;
         }
         Ok(())
     }
 
     fn name(&self) -> String {
-        format!("{}+global/{}", self.inner.name(), self.period)
+        format!("{}+global/{}", self.inner.name(), self.sync.period())
+    }
+
+    fn observe_loss(&mut self, loss: f32) {
+        self.inner.observe_loss(loss);
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.inner.comm_rounds() + self.syncs_done
     }
 }
 
-/// Optimizer factory by name (CLI / bench convenience).
+/// Optimizer factory by name — thin shim over [`make_optimizer_cfg`] with
+/// the pre-registry surface (kept so existing call sites don't churn).
 ///
 /// Names: `atc`, `awc` (D-SGD orders), `dmsgd-vanilla`, `dmsgd`,
 /// `qg-dmsgd` (momentum family, ATC order), `ed` (Exact-Diffusion),
@@ -547,25 +481,139 @@ pub fn make_optimizer(
     beta: f32,
     comm: CommSpec,
 ) -> anyhow::Result<Box<dyn DecentralizedOptimizer>> {
-    Ok(match algo {
-        "atc" => Box::new(Dgd::new(gamma, StepOrder::Atc, comm)),
-        "awc" => Box::new(Dgd::new(gamma, StepOrder::Awc, comm)),
+    let cfg = AlgoConfig { algo: algo.to_string(), gamma, beta, ..AlgoConfig::default() };
+    make_optimizer_cfg(&cfg, comm)
+}
+
+/// The name→algorithm registry: build any optimizer family from an
+/// [`AlgoConfig`] (the CLI's `--algo`/`--local-steps`/`--weighting`/...
+/// surface) plus a communication spec.
+///
+/// Families: `atc`/`awc`/`dsgd` (plain D-SGD; `local_steps > 1` turns the
+/// ATC order into [`LocalUpdateSgd`]), `local-sgd`/`digest` (explicit
+/// local-update form), `dmsgd-vanilla`/`dmsgd`/`qg-dmsgd` (momentum,
+/// order from `cfg.order`), `ed`/`exact-diffusion`, `gt`/
+/// `gradient-tracking`, `psgt`/`push-sum-gt` (requires a dynamic
+/// topology), `admm` ([`DecentralizedAdmm`]), `psgd`/`parallel` (the
+/// centralized baseline). `cfg.global_period > 0` wraps the result in
+/// [`PeriodicGlobalAveraging`]; `cfg.weighting` selects the
+/// [`NeighborWeighting`] policy for the gossip families.
+pub fn make_optimizer_cfg(
+    cfg: &AlgoConfig,
+    comm: CommSpec,
+) -> anyhow::Result<Box<dyn DecentralizedOptimizer>> {
+    let weighting = match cfg.weighting.as_str() {
+        "static" => NeighborWeighting::Static,
+        "al-dsgd" | "aldsgd" => NeighborWeighting::AlDsgd(AlDsgdSpec::default()),
+        other => anyhow::bail!("unknown weighting '{other}' (expected static, al-dsgd)"),
+    };
+    if weighting != NeighborWeighting::Static {
+        anyhow::ensure!(
+            matches!(comm, CommSpec::Static),
+            "al-dsgd weighting modulates the static topology row; got comm '{}'",
+            comm.label()
+        );
+    }
+    let order = match cfg.order.as_str() {
+        "atc" => StepOrder::Atc,
+        "awc" => StepOrder::Awc,
+        other => anyhow::bail!("unknown step order '{other}' (expected atc, awc)"),
+    };
+    let h = cfg.local_steps.max(1);
+    let gossip_only = |family: &str| -> anyhow::Result<()> {
+        anyhow::ensure!(
+            h == 1,
+            "--local-steps > 1 is only sound for the plain D-SGD family, not '{family}'"
+        );
+        Ok(())
+    };
+    let (gamma, beta) = (cfg.gamma, cfg.beta);
+    let opt: Box<dyn DecentralizedOptimizer> = match cfg.algo.as_str() {
+        "atc" | "awc" | "dsgd" | "local-sgd" | "digest" => {
+            let ord = match cfg.algo.as_str() {
+                "atc" | "dsgd" | "local-sgd" | "digest" => StepOrder::Atc,
+                "awc" => StepOrder::Awc,
+                _ => order,
+            };
+            if h > 1 || matches!(cfg.algo.as_str(), "local-sgd" | "digest") {
+                anyhow::ensure!(
+                    ord == StepOrder::Atc,
+                    "local-update schedules require the ATC order"
+                );
+                Box::new(LocalUpdateSgd::new(gamma, h, comm).with_weighting(weighting))
+            } else {
+                Box::new(Dgd::new(gamma, ord, comm).with_weighting(weighting))
+            }
+        }
         "dmsgd-vanilla" => {
-            Box::new(DmSgd::new(gamma, beta, MomentumKind::Vanilla, StepOrder::Atc, comm))
+            gossip_only("dmsgd-vanilla")?;
+            Box::new(
+                DmSgd::new(gamma, beta, MomentumKind::Vanilla, order, comm)
+                    .with_weighting(weighting),
+            )
         }
-        "dmsgd" => Box::new(DmSgd::new(gamma, beta, MomentumKind::Synced, StepOrder::Atc, comm)),
+        "dmsgd" => {
+            gossip_only("dmsgd")?;
+            Box::new(
+                DmSgd::new(gamma, beta, MomentumKind::Synced, order, comm)
+                    .with_weighting(weighting),
+            )
+        }
         "qg-dmsgd" => {
-            Box::new(DmSgd::new(gamma, beta, MomentumKind::QuasiGlobal, StepOrder::Atc, comm))
+            gossip_only("qg-dmsgd")?;
+            Box::new(
+                DmSgd::new(gamma, beta, MomentumKind::QuasiGlobal, order, comm)
+                    .with_weighting(weighting),
+            )
         }
-        "ed" | "exact-diffusion" => Box::new(ExactDiffusion::new(gamma, comm)),
-        "gt" | "gradient-tracking" => Box::new(GradientTracking::new(gamma, comm)),
+        "ed" | "exact-diffusion" => {
+            gossip_only("ed")?;
+            Box::new(ExactDiffusion::new(gamma, comm).with_weighting(weighting))
+        }
+        "gt" | "gradient-tracking" => {
+            gossip_only("gt")?;
+            Box::new(GradientTracking::new(gamma, comm).with_weighting(weighting))
+        }
+        "psgt" | "push-sum-gt" => {
+            gossip_only("psgt")?;
+            anyhow::ensure!(
+                weighting == NeighborWeighting::Static,
+                "push-sum gradient tracking owns its column-stochastic weights"
+            );
+            match &comm {
+                CommSpec::Dynamic(topo) => {
+                    Box::new(PushSumGradientTracking::new(gamma, topo.clone()))
+                }
+                other => anyhow::bail!(
+                    "psgt requires a dynamic directed topology (got '{}')",
+                    other.label()
+                ),
+            }
+        }
+        "admm" => {
+            gossip_only("admm")?;
+            anyhow::ensure!(
+                weighting == NeighborWeighting::Static,
+                "admm owns its consensus weights"
+            );
+            Box::new(DecentralizedAdmm::new(
+                cfg.admm_alpha,
+                ProxKind::Linearized { eta: cfg.admm_eta },
+            ))
+        }
         "psgd" | "parallel" => {
+            gossip_only("psgd")?;
             Box::new(ParallelMomentumSgd::new(gamma, beta, AllreduceAlgo::Ring))
         }
         other => anyhow::bail!(
-            "unknown algorithm '{other}' (expected atc, awc, dmsgd-vanilla, dmsgd, \
-             qg-dmsgd, ed, gt, psgd)"
+            "unknown algorithm '{other}' (expected atc, awc, dsgd, local-sgd, digest, \
+             dmsgd-vanilla, dmsgd, qg-dmsgd, ed, gt, psgt, admm, psgd)"
         ),
+    };
+    Ok(if cfg.global_period > 0 {
+        Box::new(PeriodicGlobalAveraging::new(opt, cfg.global_period, AllreduceAlgo::Ring))
+    } else {
+        opt
     })
 }
 
@@ -579,12 +627,13 @@ pub struct ParallelMomentumSgd {
     /// Allreduce algorithm used for the per-step global gradient average.
     pub algo: AllreduceAlgo,
     m: Option<Vec<f32>>,
+    rounds: usize,
 }
 
 impl ParallelMomentumSgd {
     /// New centralized momentum-SGD baseline.
     pub fn new(gamma: f32, beta: f32, algo: AllreduceAlgo) -> Self {
-        ParallelMomentumSgd { gamma, beta, algo, m: None }
+        ParallelMomentumSgd { gamma, beta, algo, m: None, rounds: 0 }
     }
 }
 
@@ -597,10 +646,15 @@ impl DecentralizedOptimizer for ParallelMomentumSgd {
         }
         axpy(-self.gamma, &m[..], x);
         ctx.recycle(g_avg);
+        self.rounds += 1;
         Ok(())
     }
 
     fn name(&self) -> String {
         "ParallelSGD".into()
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.rounds
     }
 }

@@ -1,0 +1,632 @@
+//! The composable algorithm pipeline (paper §II's unified abstraction).
+//!
+//! Every synchronous decentralized algorithm decomposes into three phases
+//! ([`AlgoStep`]): a *local* adaptation (no communication), a
+//! *communicate* phase issuing neighbor exchanges through a
+//! [`CommPipe`], and a post-communication *correction*.
+//! [`ScheduledOptimizer`] drives the phases under a
+//! [`CommSchedule`] (every step / every `H` steps / periodic global
+//! sync) and a [`NeighborWeighting`] policy (static MH rows, survivor
+//! rows, AL-DSGD dynamic rows).
+//!
+//! The six pre-refactor optimizers are re-expressed as [`AlgoStep`]s
+//! whose phase bodies replay the frozen implementations' float-operation
+//! sequences *exactly* — `tests/optimizers.rs` pins them bitwise against
+//! the verbatim copies in [`super::reference`]. On top of the skeleton,
+//! [`LocalUpdateSgd`] (DIGEST-style `H` local steps + one gossip) falls
+//! out of `DgdStep` + `CommSchedule::local_updates(H)` for free, and
+//! composes multiplicatively with communication compression.
+
+use std::sync::Arc;
+
+use crate::collective::neighbor::NeighborWeights;
+use crate::collective::AllreduceAlgo;
+use crate::context::NodeContext;
+use crate::tensor::axpy;
+use crate::topology::dynamic::DynamicTopology;
+
+use super::schedule::CommSchedule;
+use super::weighting::{CommPipe, NeighborWeighting, WeightingState};
+use super::{CommSpec, DecentralizedOptimizer, MomentumKind, StepOrder};
+
+/// One algorithm expressed as local step · neighbor communicate ·
+/// correction, driven by a [`ScheduledOptimizer`].
+pub trait AlgoStep: Send {
+    /// Display name, given the communication spec's label.
+    fn label(&self, comm: &CommSpec) -> String;
+
+    /// Whether skipping the communicate/correct phases (an `H > 1`
+    /// schedule) leaves a sound algorithm. Only plain gradient-step
+    /// algorithms qualify; tracking/correction methods interleave state
+    /// exchanges into every step and must gossip each iteration.
+    fn supports_local_schedule(&self) -> bool {
+        false
+    }
+
+    /// Local adaptation — must not communicate.
+    fn local(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32])
+        -> anyhow::Result<()>;
+
+    /// Communication phase: neighbor exchanges through `pipe`.
+    fn communicate(
+        &mut self,
+        ctx: &mut NodeContext,
+        pipe: &mut CommPipe<'_>,
+        x: &mut Vec<f32>,
+        grad: &[f32],
+    ) -> anyhow::Result<()>;
+
+    /// Post-communication correction (momentum rebuilds, bookkeeping).
+    fn correct(
+        &mut self,
+        ctx: &mut NodeContext,
+        x: &mut Vec<f32>,
+        grad: &[f32],
+    ) -> anyhow::Result<()> {
+        let _ = (ctx, x, grad);
+        Ok(())
+    }
+}
+
+/// Drives an [`AlgoStep`] under a [`CommSchedule`] and a
+/// [`NeighborWeighting`] policy.
+pub struct ScheduledOptimizer<A: AlgoStep> {
+    algo: A,
+    comm: CommSpec,
+    schedule: CommSchedule,
+    weighting: WeightingState,
+    weighting_spec: NeighborWeighting,
+    iter: usize,
+    rounds: usize,
+    local_done: usize,
+    last_loss: f32,
+}
+
+impl<A: AlgoStep> ScheduledOptimizer<A> {
+    /// Drive `algo` over `comm` under `schedule`, with static weighting.
+    pub fn new(algo: A, comm: CommSpec, schedule: CommSchedule) -> Self {
+        assert!(
+            schedule.local_steps() == 1 || algo.supports_local_schedule(),
+            "H > 1 local-update schedules require a local-update-capable algorithm"
+        );
+        ScheduledOptimizer {
+            algo,
+            comm,
+            schedule,
+            weighting: WeightingState::new(&NeighborWeighting::Static),
+            weighting_spec: NeighborWeighting::Static,
+            iter: 0,
+            rounds: 0,
+            local_done: 0,
+            last_loss: 0.0,
+        }
+    }
+
+    /// Swap the neighbor weighting policy.
+    pub fn with_weighting(mut self, w: NeighborWeighting) -> Self {
+        self.weighting = WeightingState::new(&w);
+        self.weighting_spec = w;
+        self
+    }
+
+    /// The underlying algorithm state (tracker access etc.).
+    pub fn algo(&self) -> &A {
+        &self.algo
+    }
+
+    /// The communication spec this optimizer gossips over.
+    pub fn comm(&self) -> &CommSpec {
+        &self.comm
+    }
+
+    /// The configured weighting policy.
+    pub fn weighting(&self) -> &NeighborWeighting {
+        &self.weighting_spec
+    }
+
+    /// [`DecentralizedOptimizer::step`] with an explicit activity flag:
+    /// `active = false` skips the local adaptation (a straggler that
+    /// missed its compute window) while still joining every due gossip
+    /// and global-sync round — matched collectives stay matched, and the
+    /// AL-DSGD staleness report sees the missed steps.
+    pub fn step_with_activity(
+        &mut self,
+        ctx: &mut NodeContext,
+        x: &mut Vec<f32>,
+        grad: &[f32],
+        active: bool,
+    ) -> anyhow::Result<()> {
+        if active {
+            self.algo.local(ctx, x, grad)?;
+            self.local_done += 1;
+        }
+        if self.schedule.gossip_due(self.iter) {
+            let progress =
+                (self.local_done as f32 / self.schedule.local_steps() as f32).min(1.0);
+            let mut pipe = CommPipe {
+                comm: &self.comm,
+                weighting: &mut self.weighting,
+                iter: self.iter,
+                rounds: &mut self.rounds,
+                loss: self.last_loss,
+                progress,
+            };
+            self.algo.communicate(ctx, &mut pipe, x, grad)?;
+            self.algo.correct(ctx, x, grad)?;
+            self.local_done = 0;
+        }
+        self.iter += 1;
+        if let Some(g) = self.schedule.global_mut() {
+            if g.after_step(ctx, x)? {
+                self.rounds += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<A: AlgoStep> DecentralizedOptimizer for ScheduledOptimizer<A> {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        self.step_with_activity(ctx, x, grad, true)
+    }
+
+    fn name(&self) -> String {
+        self.algo.label(&self.comm)
+    }
+
+    fn observe_loss(&mut self, loss: f32) {
+        self.last_loss = loss;
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.rounds
+    }
+}
+
+/// D-SGD phase kernel (paper eq. (22)/(23)): ATC adapts locally then
+/// combines; AWC combines then adapts in the correction phase.
+pub struct DgdStep {
+    gamma: f32,
+    order: StepOrder,
+}
+
+impl DgdStep {
+    /// New D-SGD kernel with step size `gamma`.
+    pub fn new(gamma: f32, order: StepOrder) -> Self {
+        DgdStep { gamma, order }
+    }
+}
+
+impl AlgoStep for DgdStep {
+    fn label(&self, comm: &CommSpec) -> String {
+        format!("DGD-{:?}({})", self.order, comm.label())
+    }
+
+    fn supports_local_schedule(&self) -> bool {
+        // AWC's adaptation runs *after* the combine; skipping the combine
+        // would skip the gradient too.
+        matches!(self.order, StepOrder::Atc)
+    }
+
+    fn local(&mut self, _ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        if let StepOrder::Atc = self.order {
+            axpy(-self.gamma, grad, x);
+        }
+        Ok(())
+    }
+
+    fn communicate(
+        &mut self,
+        ctx: &mut NodeContext,
+        pipe: &mut CommPipe<'_>,
+        x: &mut Vec<f32>,
+        _grad: &[f32],
+    ) -> anyhow::Result<()> {
+        let combined = pipe.combine(ctx, x)?;
+        ctx.recycle(std::mem::replace(x, combined));
+        Ok(())
+    }
+
+    fn correct(&mut self, _ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        if let StepOrder::Awc = self.order {
+            axpy(-self.gamma, grad, x);
+        }
+        Ok(())
+    }
+}
+
+/// Exact-Diffusion phase kernel (Appendix A). The psi/phi construction
+/// consumes the *pre-communication* `x`, so the whole update lives in the
+/// communicate phase; the algorithm cannot skip gossip rounds.
+pub struct ExactDiffusionStep {
+    gamma: f32,
+    prev_psi: Option<Vec<f32>>,
+}
+
+impl ExactDiffusionStep {
+    /// New Exact-Diffusion kernel with step size `gamma`.
+    pub fn new(gamma: f32) -> Self {
+        ExactDiffusionStep { gamma, prev_psi: None }
+    }
+}
+
+impl AlgoStep for ExactDiffusionStep {
+    fn label(&self, comm: &CommSpec) -> String {
+        format!("ExactDiffusion({})", comm.label())
+    }
+
+    fn local(&mut self, _ctx: &mut NodeContext, _x: &mut Vec<f32>, _grad: &[f32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn communicate(
+        &mut self,
+        ctx: &mut NodeContext,
+        pipe: &mut CommPipe<'_>,
+        x: &mut Vec<f32>,
+        grad: &[f32],
+    ) -> anyhow::Result<()> {
+        let mut psi = ctx.vec_from(x);
+        axpy(-self.gamma, grad, &mut psi);
+        let mut phi = ctx.scratch_copy(&psi);
+        match &self.prev_psi {
+            None => {}
+            Some(prev) => {
+                for ((f, (p, xi)), pp) in
+                    phi.iter_mut().zip(psi.iter().zip(x.iter())).zip(prev.iter())
+                {
+                    *f = p + xi - pp;
+                }
+            }
+        }
+        let combined = pipe.combine(ctx, &phi)?;
+        ctx.recycle(std::mem::replace(x, combined));
+        if let Some(old) = self.prev_psi.replace(psi) {
+            ctx.recycle(old);
+        }
+        Ok(())
+    }
+}
+
+/// Gradient-tracking phase kernel (DIGing). The tracker update is itself
+/// a combine, so both exchanges live in the communicate phase.
+pub struct GradientTrackingStep {
+    gamma: f32,
+    y: Option<Vec<f32>>,
+    prev_grad: Option<Vec<f32>>,
+}
+
+impl GradientTrackingStep {
+    /// New gradient-tracking kernel with step size `gamma`.
+    pub fn new(gamma: f32) -> Self {
+        GradientTrackingStep { gamma, y: None, prev_grad: None }
+    }
+
+    /// The tracked global-gradient estimate.
+    pub fn tracker(&self) -> Option<&Vec<f32>> {
+        self.y.as_ref()
+    }
+}
+
+impl AlgoStep for GradientTrackingStep {
+    fn label(&self, comm: &CommSpec) -> String {
+        format!("GradientTracking({})", comm.label())
+    }
+
+    fn local(&mut self, _ctx: &mut NodeContext, _x: &mut Vec<f32>, _grad: &[f32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn communicate(
+        &mut self,
+        ctx: &mut NodeContext,
+        pipe: &mut CommPipe<'_>,
+        x: &mut Vec<f32>,
+        grad: &[f32],
+    ) -> anyhow::Result<()> {
+        let y = match (&mut self.y, &self.prev_grad) {
+            (None, _) => grad.to_vec(),
+            (Some(y), Some(pg)) => {
+                let mut q = ctx.scratch_copy(y);
+                for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
+                    *qi += g - p;
+                }
+                // Stream 1: the tracker exchange must not share compression
+                // state with the same-length parameter exchange below.
+                pipe.combine_stream(ctx, &q, 1)?
+            }
+            (Some(_), None) => unreachable!("prev_grad set with y"),
+        };
+        let mut half = ctx.scratch_copy(x);
+        axpy(-self.gamma, &y, &mut half);
+        let combined = pipe.combine(ctx, &half)?;
+        ctx.recycle(std::mem::replace(x, combined));
+        if let Some(old) = self.y.replace(y) {
+            ctx.recycle(old);
+        }
+        let grad_copy = ctx.vec_from(grad);
+        if let Some(old) = self.prev_grad.replace(grad_copy) {
+            ctx.recycle(old);
+        }
+        Ok(())
+    }
+}
+
+/// Push-sum gradient-tracking phase kernel (Appendix B): push-style
+/// combines over a directed time-varying topology with the scalar
+/// push-sum weight correcting the bias. Bypasses the weighting policy —
+/// its column-stochastic realizations are part of the algorithm.
+pub struct PushSumStep {
+    gamma: f32,
+    topo: Arc<dyn DynamicTopology>,
+    u: Option<Vec<f32>>,
+    v: f32,
+    y: Option<Vec<f32>>,
+    prev_grad: Option<Vec<f32>>,
+}
+
+impl PushSumStep {
+    /// New push-sum tracking kernel over `topo`.
+    pub fn new(gamma: f32, topo: Arc<dyn DynamicTopology>) -> Self {
+        PushSumStep { gamma, topo, u: None, v: 1.0, y: None, prev_grad: None }
+    }
+
+    /// Push-style combine: senders scale by the column-stochastic weights.
+    fn push_combine(
+        &self,
+        ctx: &mut NodeContext,
+        pipe: &mut CommPipe<'_>,
+        data: &[f32],
+        stream: u32,
+    ) -> anyhow::Result<Vec<f32>> {
+        let view = self.topo.view(pipe.iter(), ctx.rank());
+        // Column-stochastic: self keeps self_weight, sends s_ij to dsts;
+        // receivers apply r = 1.
+        let w = NeighborWeights::push_pull(
+            view.self_weight,
+            view.src_weights.iter().map(|&(s, _)| (s, 1.0)).collect(),
+            view.dst_weights.clone(),
+        );
+        pipe.combine_with(ctx, data, &w, stream)
+    }
+}
+
+impl AlgoStep for PushSumStep {
+    fn label(&self, _comm: &CommSpec) -> String {
+        "PushSumGradientTracking(dynamic)".into()
+    }
+
+    fn local(&mut self, _ctx: &mut NodeContext, _x: &mut Vec<f32>, _grad: &[f32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn communicate(
+        &mut self,
+        ctx: &mut NodeContext,
+        pipe: &mut CommPipe<'_>,
+        x: &mut Vec<f32>,
+        grad: &[f32],
+    ) -> anyhow::Result<()> {
+        // Initialize u from the current x, y from the first gradient.
+        if self.u.is_none() {
+            self.u = Some(x.clone());
+            self.y = Some(grad.to_vec());
+            self.prev_grad = Some(grad.to_vec());
+        } else {
+            // y_{k+1} = W^k (y_k + g_{k+1} - g_k); built in pooled scratch
+            // so `self.y` stays intact if the combine errors.
+            let mut q = ctx.scratch_copy(self.y.as_ref().unwrap());
+            let pg = self.prev_grad.as_ref().unwrap();
+            for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
+                *qi += g - p;
+            }
+            let new_y = self.push_combine(ctx, pipe, &q, 1)?;
+            if let Some(old) = self.y.replace(new_y) {
+                ctx.recycle(old);
+            }
+            let grad_copy = ctx.vec_from(grad);
+            if let Some(old) = self.prev_grad.replace(grad_copy) {
+                ctx.recycle(old);
+            }
+        }
+        // u_{k+1} = W^k (u_k - γ y_k)
+        let mut w = ctx.scratch_copy(self.u.as_ref().unwrap());
+        axpy(-self.gamma, self.y.as_ref().unwrap(), &mut w);
+        let u_new = self.push_combine(ctx, pipe, &w, 0)?;
+        // v_{k+1} = W^k v_k  (scalar push-sum weight)
+        let v_new = self.push_combine(ctx, pipe, &[self.v], 2)?[0];
+        // x_{k+1} = u_{k+1} / v_{k+1}
+        if let Some(old) = self.u.replace(u_new) {
+            ctx.recycle(old);
+        }
+        self.v = v_new;
+        let u = self.u.as_ref().unwrap();
+        x.clear();
+        x.extend(u.iter().map(|ui| ui / self.v));
+        Ok(())
+    }
+}
+
+/// Decentralized momentum-SGD phase kernel (Table III's family): the
+/// momentum update is the local phase; combines and the QG rebuild live
+/// in communicate.
+pub struct DmSgdStep {
+    gamma: f32,
+    beta: f32,
+    kind: MomentumKind,
+    order: StepOrder,
+    m: Option<Vec<f32>>,
+}
+
+impl DmSgdStep {
+    /// New momentum kernel.
+    pub fn new(gamma: f32, beta: f32, kind: MomentumKind, order: StepOrder) -> Self {
+        DmSgdStep { gamma, beta, kind, order, m: None }
+    }
+}
+
+impl AlgoStep for DmSgdStep {
+    fn label(&self, comm: &CommSpec) -> String {
+        let kind = match self.kind {
+            MomentumKind::Vanilla => "DmSGD-vanilla",
+            MomentumKind::Synced => "DmSGD",
+            MomentumKind::QuasiGlobal => "QG-DmSGD",
+        };
+        format!("{kind}({})", comm.label())
+    }
+
+    fn local(&mut self, _ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        if self.m.is_none() {
+            self.m = Some(vec![0.0; x.len()]);
+        }
+        if let MomentumKind::Vanilla | MomentumKind::Synced = self.kind {
+            let m = self.m.as_mut().unwrap();
+            for (mi, g) in m.iter_mut().zip(grad) {
+                *mi = self.beta * *mi + g;
+            }
+            if let StepOrder::Atc = self.order {
+                axpy(-self.gamma, m, x);
+            }
+        }
+        Ok(())
+    }
+
+    fn communicate(
+        &mut self,
+        ctx: &mut NodeContext,
+        pipe: &mut CommPipe<'_>,
+        x: &mut Vec<f32>,
+        grad: &[f32],
+    ) -> anyhow::Result<()> {
+        match self.kind {
+            MomentumKind::Vanilla | MomentumKind::Synced => {
+                let combined = pipe.combine(ctx, x)?;
+                ctx.recycle(std::mem::replace(x, combined));
+                if self.kind == MomentumKind::Synced {
+                    // Stream 1: keep the momentum exchange's compression
+                    // state apart from the parameter exchange's.
+                    let synced = pipe.combine_stream(ctx, self.m.as_ref().unwrap(), 1)?;
+                    if let Some(old) = self.m.replace(synced) {
+                        ctx.recycle(old);
+                    }
+                }
+            }
+            MomentumKind::QuasiGlobal => {
+                // [67]: d_k = g_k + beta * m_k ; x half-step, combine, then
+                // m_{k+1} = beta * m_k + (1 - beta) * (x_k - x_{k+1}) / gamma.
+                let mut half = ctx.scratch_copy(x);
+                {
+                    let m = self.m.as_ref().unwrap();
+                    for ((h, g), mi) in half.iter_mut().zip(grad).zip(m.iter()) {
+                        *h -= self.gamma * (g + self.beta * mi);
+                    }
+                }
+                let combined = pipe.combine(ctx, &half)?;
+                let x_prev = std::mem::replace(x, combined);
+                let m = self.m.as_mut().unwrap();
+                for ((mi, xp), xn) in m.iter_mut().zip(&x_prev).zip(x.iter()) {
+                    *mi = self.beta * *mi + (1.0 - self.beta) * (xp - xn) / self.gamma;
+                }
+                ctx.recycle(x_prev);
+            }
+        }
+        Ok(())
+    }
+
+    fn correct(&mut self, _ctx: &mut NodeContext, x: &mut Vec<f32>, _grad: &[f32]) -> anyhow::Result<()> {
+        if let (MomentumKind::Vanilla | MomentumKind::Synced, StepOrder::Awc) =
+            (self.kind, self.order)
+        {
+            axpy(-self.gamma, self.m.as_ref().unwrap(), x);
+        }
+        Ok(())
+    }
+}
+
+/// DIGEST-style local-update SGD (arXiv:2307.07652): `H` local gradient
+/// steps, then one gossip exchange of the parameters — `H`x fewer
+/// communication rounds, and the savings multiply with TopK compression
+/// (k = d/16 × H = 8 ≈ two orders of magnitude fewer bytes on the wire;
+/// EXPERIMENTS.md E17). At `H = 1` this is bitwise identical to
+/// ATC D-SGD.
+pub struct LocalUpdateSgd {
+    inner: ScheduledOptimizer<DgdStep>,
+    local_steps: usize,
+}
+
+impl LocalUpdateSgd {
+    /// `H = local_steps` local steps per gossip over `comm`.
+    pub fn new(gamma: f32, local_steps: usize, comm: CommSpec) -> Self {
+        LocalUpdateSgd {
+            inner: ScheduledOptimizer::new(
+                DgdStep::new(gamma, StepOrder::Atc),
+                comm,
+                CommSchedule::local_updates(local_steps),
+            ),
+            local_steps,
+        }
+    }
+
+    /// `H` local steps with an additional global allreduce every `period`
+    /// completed steps.
+    pub fn with_global_sync(
+        gamma: f32,
+        local_steps: usize,
+        comm: CommSpec,
+        period: usize,
+        algo: AllreduceAlgo,
+    ) -> Self {
+        LocalUpdateSgd {
+            inner: ScheduledOptimizer::new(
+                DgdStep::new(gamma, StepOrder::Atc),
+                comm,
+                CommSchedule::local_updates(local_steps).with_global_sync(period, algo),
+            ),
+            local_steps,
+        }
+    }
+
+    /// Swap the neighbor weighting policy (AL-DSGD dynamic rows).
+    pub fn with_weighting(mut self, w: NeighborWeighting) -> Self {
+        self.inner = self.inner.with_weighting(w);
+        self
+    }
+
+    /// Step with an explicit activity flag — see
+    /// [`ScheduledOptimizer::step_with_activity`].
+    pub fn step_with_activity(
+        &mut self,
+        ctx: &mut NodeContext,
+        x: &mut Vec<f32>,
+        grad: &[f32],
+        active: bool,
+    ) -> anyhow::Result<()> {
+        self.inner.step_with_activity(ctx, x, grad, active)
+    }
+}
+
+impl DecentralizedOptimizer for LocalUpdateSgd {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        self.inner.step(ctx, x, grad)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "LocalUpdateSGD(H={}, {}, {})",
+            self.local_steps,
+            self.inner.comm().label(),
+            match self.inner.weighting() {
+                NeighborWeighting::Static => "static-w",
+                NeighborWeighting::AlDsgd(_) => "al-dsgd",
+            }
+        )
+    }
+
+    fn observe_loss(&mut self, loss: f32) {
+        self.inner.observe_loss(loss);
+    }
+
+    fn comm_rounds(&self) -> usize {
+        self.inner.comm_rounds()
+    }
+}

@@ -1,0 +1,391 @@
+//! Frozen pre-refactor optimizer implementations — parity oracles only.
+//!
+//! These are *verbatim* copies of the algorithm bodies as they existed
+//! before the pipeline refactor (`AlgoStep` / [`super::ScheduledOptimizer`]).
+//! `tests/optimizers.rs` runs each re-expressed optimizer side by side with
+//! its `Ref*` twin and asserts the parameter traces match **bitwise**
+//! (`f32::to_bits`), which is the acceptance gate for the refactor.
+//!
+//! Do not "fix" or modernize anything here: the whole point is that this
+//! module does not evolve with the pipeline. It is not part of the public
+//! algorithm surface and should never be used outside parity tests.
+
+use std::sync::Arc;
+
+use crate::collective::neighbor::NeighborWeights;
+use crate::collective::{AllreduceAlgo, ReduceOp};
+use crate::context::NodeContext;
+use crate::tensor::axpy;
+use crate::topology::dynamic::DynamicTopology;
+
+use super::{CommSpec, DecentralizedOptimizer, MomentumKind, StepOrder};
+
+/// Frozen pre-refactor [`super::Dgd`].
+pub struct RefDgd {
+    /// Step size `γ`.
+    pub gamma: f32,
+    /// Communication/adaptation order (ATC vs AWC).
+    pub order: StepOrder,
+    /// Communication pattern used by the combine step.
+    pub comm: CommSpec,
+    iter: usize,
+}
+
+impl RefDgd {
+    /// New frozen DGD oracle with step size `gamma`.
+    pub fn new(gamma: f32, order: StepOrder, comm: CommSpec) -> Self {
+        RefDgd { gamma, order, comm, iter: 0 }
+    }
+}
+
+impl DecentralizedOptimizer for RefDgd {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        match self.order {
+            StepOrder::Atc => {
+                // Pooled scratch for the half-step; the replaced parameter
+                // buffer goes back to the pool for the next round.
+                let mut half = ctx.scratch_copy(x);
+                axpy(-self.gamma, grad, &mut half);
+                let combined = self.comm.combine(ctx, self.iter, &half)?;
+                ctx.recycle(std::mem::replace(x, combined));
+            }
+            StepOrder::Awc => {
+                let combined = self.comm.combine(ctx, self.iter, x)?;
+                ctx.recycle(std::mem::replace(x, combined));
+                axpy(-self.gamma, grad, x);
+            }
+        }
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("RefDGD-{:?}({})", self.order, self.comm.label())
+    }
+}
+
+/// Frozen pre-refactor [`super::ExactDiffusion`].
+pub struct RefExactDiffusion {
+    /// Step size `γ`.
+    pub gamma: f32,
+    /// Communication pattern used by the combine step.
+    pub comm: CommSpec,
+    prev_psi: Option<Vec<f32>>,
+    iter: usize,
+}
+
+impl RefExactDiffusion {
+    /// New frozen Exact-Diffusion oracle with step size `gamma`.
+    pub fn new(gamma: f32, comm: CommSpec) -> Self {
+        RefExactDiffusion { gamma, comm, prev_psi: None, iter: 0 }
+    }
+}
+
+impl DecentralizedOptimizer for RefExactDiffusion {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let mut psi = ctx.vec_from(x);
+        axpy(-self.gamma, grad, &mut psi);
+        let mut phi = ctx.scratch_copy(&psi);
+        match &self.prev_psi {
+            None => {}
+            Some(prev) => {
+                for ((f, (p, xi)), pp) in
+                    phi.iter_mut().zip(psi.iter().zip(x.iter())).zip(prev.iter())
+                {
+                    *f = p + xi - pp;
+                }
+            }
+        }
+        let combined = self.comm.combine(ctx, self.iter, &phi)?;
+        ctx.recycle(std::mem::replace(x, combined));
+        if let Some(old) = self.prev_psi.replace(psi) {
+            ctx.recycle(old);
+        }
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("RefExactDiffusion({})", self.comm.label())
+    }
+}
+
+/// Frozen pre-refactor [`super::GradientTracking`].
+pub struct RefGradientTracking {
+    /// Step size `γ`.
+    pub gamma: f32,
+    /// Communication pattern used by the combine step.
+    pub comm: CommSpec,
+    y: Option<Vec<f32>>,
+    prev_grad: Option<Vec<f32>>,
+    iter: usize,
+}
+
+impl RefGradientTracking {
+    /// New frozen gradient-tracking oracle with step size `gamma`.
+    pub fn new(gamma: f32, comm: CommSpec) -> Self {
+        RefGradientTracking { gamma, comm, y: None, prev_grad: None, iter: 0 }
+    }
+
+    /// The tracked global-gradient estimate.
+    pub fn tracker(&self) -> Option<&Vec<f32>> {
+        self.y.as_ref()
+    }
+}
+
+impl DecentralizedOptimizer for RefGradientTracking {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let y = match (&mut self.y, &self.prev_grad) {
+            (None, _) => grad.to_vec(),
+            (Some(y), Some(pg)) => {
+                let mut q = ctx.scratch_copy(y);
+                for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
+                    *qi += g - p;
+                }
+                // Stream 1: the tracker exchange must not share compression
+                // state with the same-length parameter exchange below.
+                self.comm.combine_stream(ctx, self.iter, &q, 1)?
+            }
+            (Some(_), None) => unreachable!("prev_grad set with y"),
+        };
+        let mut half = ctx.scratch_copy(x);
+        axpy(-self.gamma, &y, &mut half);
+        let combined = self.comm.combine(ctx, self.iter, &half)?;
+        ctx.recycle(std::mem::replace(x, combined));
+        if let Some(old) = self.y.replace(y) {
+            ctx.recycle(old);
+        }
+        let grad_copy = ctx.vec_from(grad);
+        if let Some(old) = self.prev_grad.replace(grad_copy) {
+            ctx.recycle(old);
+        }
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("RefGradientTracking({})", self.comm.label())
+    }
+}
+
+/// Frozen pre-refactor [`super::PushSumGradientTracking`].
+pub struct RefPushSumGradientTracking {
+    /// Step size `γ`.
+    pub gamma: f32,
+    /// Per-iteration directed topology schedule.
+    pub topo: Arc<dyn DynamicTopology>,
+    u: Option<Vec<f32>>,
+    v: f32,
+    y: Option<Vec<f32>>,
+    prev_grad: Option<Vec<f32>>,
+    iter: usize,
+}
+
+impl RefPushSumGradientTracking {
+    /// New frozen push-sum gradient-tracking oracle over `topo`.
+    pub fn new(gamma: f32, topo: Arc<dyn DynamicTopology>) -> Self {
+        RefPushSumGradientTracking {
+            gamma,
+            topo,
+            u: None,
+            v: 1.0,
+            y: None,
+            prev_grad: None,
+            iter: 0,
+        }
+    }
+
+    /// Push-style combine: senders scale by the column-stochastic weights.
+    fn push_combine(
+        &self,
+        ctx: &mut NodeContext,
+        iter: usize,
+        data: &[f32],
+        stream: u32,
+    ) -> anyhow::Result<Vec<f32>> {
+        let view = self.topo.view(iter, ctx.rank());
+        // Column-stochastic: self keeps self_weight, sends s_ij to dsts;
+        // receivers apply r = 1.
+        let w = NeighborWeights::push_pull(
+            view.self_weight,
+            view.src_weights.iter().map(|&(s, _)| (s, 1.0)).collect(),
+            view.dst_weights.clone(),
+        );
+        ctx.neighbor_allreduce_dynamic_stream(data, &w, stream)
+    }
+}
+
+impl DecentralizedOptimizer for RefPushSumGradientTracking {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        // Initialize u from the current x, y from the first gradient.
+        if self.u.is_none() {
+            self.u = Some(x.clone());
+            self.y = Some(grad.to_vec());
+            self.prev_grad = Some(grad.to_vec());
+        } else {
+            // y_{k+1} = W^k (y_k + g_{k+1} - g_k); built in pooled scratch
+            // so `self.y` stays intact if the combine errors.
+            let mut q = ctx.scratch_copy(self.y.as_ref().unwrap());
+            let pg = self.prev_grad.as_ref().unwrap();
+            for ((qi, g), p) in q.iter_mut().zip(grad).zip(pg.iter()) {
+                *qi += g - p;
+            }
+            let new_y = self.push_combine(ctx, self.iter, &q, 1)?;
+            if let Some(old) = self.y.replace(new_y) {
+                ctx.recycle(old);
+            }
+            let grad_copy = ctx.vec_from(grad);
+            if let Some(old) = self.prev_grad.replace(grad_copy) {
+                ctx.recycle(old);
+            }
+        }
+        // u_{k+1} = W^k (u_k - γ y_k)
+        let mut w = ctx.scratch_copy(self.u.as_ref().unwrap());
+        axpy(-self.gamma, self.y.as_ref().unwrap(), &mut w);
+        let u_new = self.push_combine(ctx, self.iter, &w, 0)?;
+        // v_{k+1} = W^k v_k  (scalar push-sum weight)
+        let v_new = self.push_combine(ctx, self.iter, &[self.v], 2)?[0];
+        // x_{k+1} = u_{k+1} / v_{k+1}
+        if let Some(old) = self.u.replace(u_new) {
+            ctx.recycle(old);
+        }
+        self.v = v_new;
+        let u = self.u.as_ref().unwrap();
+        x.clear();
+        x.extend(u.iter().map(|ui| ui / self.v));
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        "RefPushSumGradientTracking(dynamic)".into()
+    }
+}
+
+/// Frozen pre-refactor [`super::DmSgd`].
+pub struct RefDmSgd {
+    /// Step size `γ`.
+    pub gamma: f32,
+    /// Momentum coefficient `β`.
+    pub beta: f32,
+    /// Which momentum variant to run (Table III rows).
+    pub kind: MomentumKind,
+    /// Communication/adaptation order (ATC vs AWC).
+    pub order: StepOrder,
+    /// Communication pattern used by the combine step.
+    pub comm: CommSpec,
+    m: Option<Vec<f32>>,
+    iter: usize,
+}
+
+impl RefDmSgd {
+    /// New frozen decentralized momentum-SGD oracle.
+    pub fn new(gamma: f32, beta: f32, kind: MomentumKind, order: StepOrder, comm: CommSpec) -> Self {
+        RefDmSgd { gamma, beta, kind, order, comm, m: None, iter: 0 }
+    }
+}
+
+impl DecentralizedOptimizer for RefDmSgd {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        let d = x.len();
+        if self.m.is_none() {
+            self.m = Some(vec![0.0; d]);
+        }
+        match self.kind {
+            MomentumKind::Vanilla | MomentumKind::Synced => {
+                {
+                    let m = self.m.as_mut().unwrap();
+                    for (mi, g) in m.iter_mut().zip(grad) {
+                        *mi = self.beta * *mi + g;
+                    }
+                }
+                match self.order {
+                    StepOrder::Atc => {
+                        let mut half = ctx.scratch_copy(x);
+                        axpy(-self.gamma, self.m.as_ref().unwrap(), &mut half);
+                        let combined = self.comm.combine(ctx, self.iter, &half)?;
+                        ctx.recycle(std::mem::replace(x, combined));
+                    }
+                    StepOrder::Awc => {
+                        let combined = self.comm.combine(ctx, self.iter, x)?;
+                        ctx.recycle(std::mem::replace(x, combined));
+                        axpy(-self.gamma, self.m.as_ref().unwrap(), x);
+                    }
+                }
+                if self.kind == MomentumKind::Synced {
+                    // Stream 1: keep the momentum exchange's compression
+                    // state apart from the parameter exchange's.
+                    let synced =
+                        self.comm.combine_stream(ctx, self.iter, self.m.as_ref().unwrap(), 1)?;
+                    if let Some(old) = self.m.replace(synced) {
+                        ctx.recycle(old);
+                    }
+                }
+            }
+            MomentumKind::QuasiGlobal => {
+                // [67]: d_k = g_k + beta * m_k ; x half-step, combine, then
+                // m_{k+1} = beta * m_k + (1 - beta) * (x_k - x_{k+1}) / gamma.
+                let mut half = ctx.scratch_copy(x);
+                {
+                    let m = self.m.as_ref().unwrap();
+                    for ((h, g), mi) in half.iter_mut().zip(grad).zip(m.iter()) {
+                        *h -= self.gamma * (g + self.beta * mi);
+                    }
+                }
+                let combined = self.comm.combine(ctx, self.iter, &half)?;
+                let x_prev = std::mem::replace(x, combined);
+                let m = self.m.as_mut().unwrap();
+                for ((mi, xp), xn) in m.iter_mut().zip(&x_prev).zip(x.iter()) {
+                    *mi = self.beta * *mi + (1.0 - self.beta) * (xp - xn) / self.gamma;
+                }
+                ctx.recycle(x_prev);
+            }
+        }
+        self.iter += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        let kind = match self.kind {
+            MomentumKind::Vanilla => "RefDmSGD-vanilla",
+            MomentumKind::Synced => "RefDmSGD",
+            MomentumKind::QuasiGlobal => "RefQG-DmSGD",
+        };
+        format!("{kind}({})", self.comm.label())
+    }
+}
+
+/// Frozen pre-refactor [`super::PeriodicGlobalAveraging`] (the standalone
+/// wrapper logic, before it was folded into the schedule layer).
+pub struct RefPeriodicGlobalAveraging<O: DecentralizedOptimizer> {
+    /// The wrapped decentralized optimizer.
+    pub inner: O,
+    /// A global allreduce replaces partial averaging every `period` steps.
+    pub period: usize,
+    /// Allreduce algorithm used for the periodic global average.
+    pub algo: AllreduceAlgo,
+    iter: usize,
+}
+
+impl<O: DecentralizedOptimizer> RefPeriodicGlobalAveraging<O> {
+    /// Wrap `inner`, averaging globally every `period` steps.
+    pub fn new(inner: O, period: usize, algo: AllreduceAlgo) -> Self {
+        assert!(period > 0);
+        RefPeriodicGlobalAveraging { inner, period, algo, iter: 0 }
+    }
+}
+
+impl<O: DecentralizedOptimizer> DecentralizedOptimizer for RefPeriodicGlobalAveraging<O> {
+    fn step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>, grad: &[f32]) -> anyhow::Result<()> {
+        self.inner.step(ctx, x, grad)?;
+        self.iter += 1;
+        if self.iter % self.period == 0 {
+            *x = ctx.allreduce(x, ReduceOp::Average, self.algo)?;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("{}+global/{}", self.inner.name(), self.period)
+    }
+}

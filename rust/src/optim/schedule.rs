@@ -1,0 +1,138 @@
+//! Communication schedules: *when* an optimizer communicates.
+//!
+//! The composable pipeline (DESIGN.md §Algorithms) factors every
+//! decentralized algorithm into local adaptation, neighbor communication
+//! and correction; a [`CommSchedule`] decides at which iterations the
+//! communication phases actually run:
+//!
+//! - every step — the classical synchronous regime;
+//! - every `H` steps ([`LocalUpdateSpec`]) — DIGEST-style local updates
+//!   (arXiv:2307.07652): `H` local gradient steps between gossip
+//!   exchanges cut communication by `H`x while preserving the rate;
+//! - periodic global sync ([`GlobalSync`]) — a global allreduce every
+//!   `period` completed steps, subsuming the old standalone
+//!   `PeriodicGlobalAveraging` wrapper (paper Listing 4), whose
+//!   constructor survives as a thin shim over this state.
+
+use crate::collective::{AllreduceAlgo, ReduceOp};
+use crate::context::NodeContext;
+
+/// DIGEST-style local-update specification: how many local gradient steps
+/// run between consecutive gossip exchanges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LocalUpdateSpec {
+    /// Local steps per gossip exchange (`H >= 1`; 1 = gossip every step).
+    pub local_steps: usize,
+}
+
+impl LocalUpdateSpec {
+    /// `H` local steps per gossip exchange.
+    pub fn new(local_steps: usize) -> Self {
+        assert!(local_steps >= 1, "local_steps must be >= 1");
+        LocalUpdateSpec { local_steps }
+    }
+
+    /// Gossip on every step (the classical synchronous schedule).
+    pub fn every_step() -> Self {
+        LocalUpdateSpec { local_steps: 1 }
+    }
+}
+
+/// Periodic global allreduce, folded into the schedule layer. This *is*
+/// the old `PeriodicGlobalAveraging` logic — the wrapper now delegates
+/// here, so the replace-`x`-by-the-global-average rule exists once.
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalSync {
+    period: usize,
+    algo: AllreduceAlgo,
+    iter: usize,
+}
+
+impl GlobalSync {
+    /// Globally average every `period` completed steps (`period > 0`).
+    pub fn new(period: usize, algo: AllreduceAlgo) -> Self {
+        assert!(period > 0);
+        GlobalSync { period, algo, iter: 0 }
+    }
+
+    /// The configured period.
+    pub fn period(&self) -> usize {
+        self.period
+    }
+
+    /// Advance one completed optimizer step; when the period elapses,
+    /// replace `x` by the global average. Returns whether a sync ran.
+    pub fn after_step(&mut self, ctx: &mut NodeContext, x: &mut Vec<f32>) -> anyhow::Result<bool> {
+        self.iter += 1;
+        if self.iter % self.period == 0 {
+            *x = ctx.allreduce(x, ReduceOp::Average, self.algo)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// When the communication phases of a pipelined optimizer run.
+#[derive(Debug, Clone, Copy)]
+pub struct CommSchedule {
+    local: LocalUpdateSpec,
+    global: Option<GlobalSync>,
+}
+
+impl CommSchedule {
+    /// Gossip every step, never sync globally.
+    pub fn every_step() -> Self {
+        CommSchedule { local: LocalUpdateSpec::every_step(), global: None }
+    }
+
+    /// Gossip every `local_steps` steps (DIGEST-style local updates).
+    pub fn local_updates(local_steps: usize) -> Self {
+        CommSchedule { local: LocalUpdateSpec::new(local_steps), global: None }
+    }
+
+    /// Add a periodic global allreduce every `period` completed steps.
+    pub fn with_global_sync(mut self, period: usize, algo: AllreduceAlgo) -> Self {
+        self.global = Some(GlobalSync::new(period, algo));
+        self
+    }
+
+    /// Whether iteration `iter` (0-based) ends with a gossip exchange.
+    pub fn gossip_due(&self, iter: usize) -> bool {
+        (iter + 1) % self.local.local_steps == 0
+    }
+
+    /// Local steps per gossip exchange (`H`).
+    pub fn local_steps(&self) -> usize {
+        self.local.local_steps
+    }
+
+    /// Mutable access to the global-sync state, if configured.
+    pub(crate) fn global_mut(&mut self) -> Option<&mut GlobalSync> {
+        self.global.as_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_step_gossips_always() {
+        let s = CommSchedule::every_step();
+        assert!((0..10).all(|i| s.gossip_due(i)));
+        assert_eq!(s.local_steps(), 1);
+    }
+
+    #[test]
+    fn local_updates_gossip_every_h() {
+        let s = CommSchedule::local_updates(4);
+        let due: Vec<usize> = (0..12).filter(|&i| s.gossip_due(i)).collect();
+        assert_eq!(due, vec![3, 7, 11]);
+    }
+
+    #[test]
+    #[should_panic(expected = "local_steps")]
+    fn zero_local_steps_rejected() {
+        LocalUpdateSpec::new(0);
+    }
+}

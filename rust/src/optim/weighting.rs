@@ -1,0 +1,196 @@
+//! Neighbor weighting policies: *with which weights* an optimizer gossips.
+//!
+//! The pipeline's communication phase goes through a [`CommPipe`], which
+//! applies the configured [`NeighborWeighting`] to every combine:
+//!
+//! - [`NeighborWeighting::Static`] — the [`CommSpec`]'s own weights,
+//!   bit-for-bit (static Metropolis–Hastings rows; under active fault
+//!   injection the static path already re-derives survivor MH rows, so
+//!   survivor weighting is subsumed here);
+//! - [`NeighborWeighting::AlDsgd`] — AL-DSGD-style dynamic rows
+//!   (arXiv:2405.11389, adapted): each gossip round, edge `(i, j)` of the
+//!   static MH row is boosted by how *deviant* (high validation loss,
+//!   normalized to the fleet's range) and how *stale* (fraction of the
+//!   scheduled local steps actually completed) its worse endpoint is. The
+//!   boost is symmetric in `(i, j)` and capped so every self-weight keeps
+//!   an `eps` floor — the modulated matrix therefore stays doubly
+//!   stochastic, which is what turns the boost into a consensus-spread
+//!   win instead of a mean-drag (row-stochastic softmax reweighting, the
+//!   paper's literal form, moves the average around and loses the spread
+//!   it gains; see EXPERIMENTS.md E17).
+//!
+//! The per-round fleet report (loss, staleness, MH self-weight) is shared
+//! through a one-hot sum-allreduce of `3n` floats — each slot has exactly
+//! one nonzero contributor, so the exchange is order-independent and
+//! bitwise deterministic on every backend.
+
+use crate::collective::neighbor::NeighborWeights;
+use crate::collective::{AllreduceAlgo, ReduceOp};
+use crate::context::NodeContext;
+
+use super::CommSpec;
+
+/// Tuning constants of the AL-DSGD dynamic weighting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlDsgdSpec {
+    /// Boost per unit of loss deviation (normalized to the fleet range).
+    pub kappa: f32,
+    /// Boost per unit of staleness (missed fraction of scheduled steps).
+    pub lambda: f32,
+    /// Self-weight floor: boosts are capped so `w_ii >= eps`.
+    pub eps: f32,
+}
+
+impl Default for AlDsgdSpec {
+    fn default() -> Self {
+        AlDsgdSpec { kappa: 2.0, lambda: 1.0, eps: 0.02 }
+    }
+}
+
+/// Per-gossip-round neighbor weighting policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NeighborWeighting {
+    /// The communication spec's own weights (static MH / survivor rows).
+    Static,
+    /// Loss/staleness-boosted dynamic rows over the static topology.
+    AlDsgd(AlDsgdSpec),
+}
+
+/// Runtime state of a weighting policy (row cache per gossip round).
+pub(crate) enum WeightingState {
+    Static,
+    AlDsgd { spec: AlDsgdSpec, cached: Option<(usize, NeighborWeights)> },
+}
+
+impl WeightingState {
+    pub(crate) fn new(w: &NeighborWeighting) -> Self {
+        match w {
+            NeighborWeighting::Static => WeightingState::Static,
+            NeighborWeighting::AlDsgd(spec) => WeightingState::AlDsgd { spec: *spec, cached: None },
+        }
+    }
+}
+
+/// Compute this rank's boosted pull row for the current gossip round.
+///
+/// `loss` is the rank's last observed training/validation loss and
+/// `progress` the fraction of scheduled local steps it completed this
+/// window (1.0 = on pace). Symmetry of the boost plus the shared caps
+/// keep the implied global matrix doubly stochastic.
+fn al_dsgd_row(
+    ctx: &mut NodeContext,
+    spec: &AlDsgdSpec,
+    loss: f32,
+    progress: f32,
+) -> anyhow::Result<NeighborWeights> {
+    let n = ctx.size();
+    let me = ctx.rank();
+    let (self_w, srcs, dsts) = ctx.static_pull_row();
+    // Fleet report: [loss, staleness, mh_self_weight] per rank, exchanged
+    // as a one-hot sum so every slot is exact.
+    let mut report = vec![0.0f32; 3 * n];
+    report[3 * me] = loss;
+    report[3 * me + 1] = (1.0 - progress).clamp(0.0, 1.0);
+    report[3 * me + 2] = self_w as f32;
+    let table = ctx.allreduce(&report, ReduceOp::Sum, AllreduceAlgo::Ring)?;
+    let (mut lmin, mut lmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for r in 0..n {
+        lmin = lmin.min(table[3 * r]);
+        lmax = lmax.max(table[3 * r]);
+    }
+    let range = (lmax - lmin).max(1e-12);
+    let dev = |r: usize| (table[3 * r] - lmin) / range;
+    let stale = |r: usize| table[3 * r + 1];
+    let cap = |r: usize| {
+        let sw = table[3 * r + 2];
+        if sw >= 1.0 - 1e-6 {
+            1.0
+        } else {
+            (1.0 - spec.eps) / (1.0 - sw)
+        }
+    };
+    let mut kept = 1.0f64;
+    let boosted: Vec<(usize, f64)> = srcs
+        .iter()
+        .map(|&(j, w)| {
+            let b = (1.0 + spec.kappa * dev(me).max(dev(j)) + spec.lambda * stale(me).max(stale(j)))
+                .min(cap(me))
+                .min(cap(j));
+            let wj = w * b as f64;
+            kept -= wj;
+            (j, wj)
+        })
+        .collect();
+    ctx.recycle(table);
+    Ok(NeighborWeights::push_pull(kept, boosted, dsts.into_iter().map(|d| (d, 1.0)).collect()))
+}
+
+/// The pipeline's communication handle: every combine an [`super::AlgoStep`]
+/// issues goes through here, so the weighting policy applies uniformly and
+/// communication rounds are counted in one place.
+pub struct CommPipe<'a> {
+    pub(crate) comm: &'a CommSpec,
+    pub(crate) weighting: &'a mut WeightingState,
+    pub(crate) iter: usize,
+    pub(crate) rounds: &'a mut usize,
+    pub(crate) loss: f32,
+    pub(crate) progress: f32,
+}
+
+impl CommPipe<'_> {
+    /// The driver iteration this gossip round belongs to (indexes dynamic
+    /// topologies exactly as the pre-refactor optimizers did).
+    pub fn iter(&self) -> usize {
+        self.iter
+    }
+
+    /// Combine on stream 0.
+    pub fn combine(&mut self, ctx: &mut NodeContext, data: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.combine_stream(ctx, data, 0)
+    }
+
+    /// Combine `data` under the configured weighting policy on an explicit
+    /// compression stream id. With [`NeighborWeighting::Static`] this is
+    /// exactly [`CommSpec::combine_stream`] — bitwise identical to the
+    /// pre-refactor paths.
+    pub fn combine_stream(
+        &mut self,
+        ctx: &mut NodeContext,
+        data: &[f32],
+        stream: u32,
+    ) -> anyhow::Result<Vec<f32>> {
+        *self.rounds += 1;
+        match self.weighting {
+            WeightingState::Static => self.comm.combine_stream(ctx, self.iter, data, stream),
+            WeightingState::AlDsgd { spec, cached } => {
+                anyhow::ensure!(
+                    matches!(self.comm, CommSpec::Static),
+                    "al-dsgd weighting modulates the static topology row; got comm '{}'",
+                    self.comm.label()
+                );
+                let w = match cached {
+                    Some((it, w)) if *it == self.iter => w.clone(),
+                    _ => {
+                        let w = al_dsgd_row(ctx, spec, self.loss, self.progress)?;
+                        *cached = Some((self.iter, w.clone()));
+                        w
+                    }
+                };
+                ctx.neighbor_allreduce_dynamic_stream(data, &w, stream)
+            }
+        }
+    }
+
+    /// Combine with caller-supplied weights (push-sum's column-stochastic
+    /// realizations bypass the weighting policy but still count as rounds).
+    pub fn combine_with(
+        &mut self,
+        ctx: &mut NodeContext,
+        data: &[f32],
+        weights: &NeighborWeights,
+        stream: u32,
+    ) -> anyhow::Result<Vec<f32>> {
+        *self.rounds += 1;
+        ctx.neighbor_allreduce_dynamic_stream(data, weights, stream)
+    }
+}

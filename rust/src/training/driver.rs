@@ -15,7 +15,7 @@ use crate::context::NodeContext;
 use crate::optim::{AsyncDecentralizedOptimizer, DecentralizedOptimizer};
 use crate::rng::Rng;
 use crate::runtime::{DeviceHandle, InputBuf, Manifest, TensorSpec};
-use crate::training::corpus::Corpus;
+use crate::training::corpus::{Corpus, ShardSpec};
 
 /// Flat parameter vector with the manifest-derived layout.
 #[derive(Debug, Clone)]
@@ -119,6 +119,10 @@ pub struct StepLog {
     pub vtime: f64,
     /// Wall-clock seconds since training started.
     pub wall: f64,
+    /// Cumulative communication rounds the optimizer has issued (gossip
+    /// exchanges + global syncs; 0 for optimizers that do not count).
+    /// Local-update schedules show up here as a sub-linear slope.
+    pub comm_rounds: usize,
 }
 
 /// Training-run configuration.
@@ -144,6 +148,8 @@ pub struct TrainRun {
     pub artifacts_dir: String,
     /// Use the `_pallas` artifact variant (L1 kernels inside the step).
     pub use_pallas: bool,
+    /// Label-skew non-IID sharding; `None` keeps the contiguous split.
+    pub noniid: Option<ShardSpec>,
 }
 
 impl TrainRun {
@@ -160,6 +166,16 @@ impl TrainRun {
             init_seed: 13,
             artifacts_dir: "artifacts".into(),
             use_pallas: false,
+            noniid: None,
+        }
+    }
+
+    /// The per-rank shard this run assigns: label-skew non-IID when
+    /// configured, the contiguous split otherwise.
+    pub fn shard_for(&self, corpus: &Corpus, rank: usize, size: usize) -> Corpus {
+        match &self.noniid {
+            Some(spec) => corpus.shard_noniid(rank, size, spec),
+            None => corpus.shard(rank, size),
         }
     }
 
@@ -220,9 +236,10 @@ pub fn train_node_resumable(
     let layout = ParamLayout::from_manifest(&manifest);
     device.load(&run.artifact(), &run.hlo_path())?;
 
-    // Heterogeneous shards: one big corpus, contiguous split per rank.
+    // Heterogeneous shards: one big corpus, split per rank (contiguous by
+    // default, label-skew non-IID when the run configures it).
     let corpus = Corpus::synthetic(run.data_seed, run.shard_tokens * ctx.size());
-    let shard = corpus.shard(ctx.rank(), ctx.size());
+    let shard = run.shard_for(&corpus, ctx.rank(), ctx.size());
     let mut data_rng = ctx.rng.fork(0xda7a ^ step_offset as u64);
 
     let mut params = match initial {
@@ -252,6 +269,9 @@ pub fn train_node_resumable(
         ctx.timeline.record(ctx.rank(), "train_step", "compute", wall_exec, v_before, ctx.vtime());
         let loss = outputs[0][0];
         let grads = layout.flatten_grads(&outputs[1..])?;
+        // Feed the loss *before* stepping: dynamic weighting policies
+        // (AL-DSGD) boost neighbors by the deviation this round observed.
+        opt.observe_loss(loss);
         opt.step(ctx, &mut params, &grads)?;
         if step % run.log_every == 0 || step + 1 == run.steps {
             logs.push(StepLog {
@@ -259,6 +279,7 @@ pub fn train_node_resumable(
                 loss,
                 vtime: ctx.vtime(),
                 wall: t0.elapsed().as_secs_f64(),
+                comm_rounds: opt.comm_rounds(),
             });
         }
     }
@@ -326,7 +347,7 @@ pub fn train_node_async(
     device.load(&run.artifact(), &run.hlo_path())?;
 
     let corpus = Corpus::synthetic(run.data_seed, run.shard_tokens * ctx.size());
-    let shard = corpus.shard(ctx.rank(), ctx.size());
+    let shard = run.shard_for(&corpus, ctx.rank(), ctx.size());
     let mut data_rng = ctx.rng.fork(0xa57a);
 
     fn log_entry(

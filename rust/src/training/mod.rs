@@ -5,7 +5,7 @@
 pub mod corpus;
 pub mod driver;
 
-pub use corpus::Corpus;
+pub use corpus::{Corpus, ShardSpec};
 pub use driver::{
     eval_node, train_node, train_node_async, train_node_resumable, AsyncStepLog, ParamLayout,
     StepLog, TrainRun,

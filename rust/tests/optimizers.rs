@@ -5,10 +5,14 @@ use std::sync::Arc;
 
 use bluefog::collective::AllreduceAlgo;
 use bluefog::launcher::{run_spmd, SpmdConfig};
+use bluefog::optim::reference::{
+    RefDgd, RefDmSgd, RefExactDiffusion, RefGradientTracking, RefPeriodicGlobalAveraging,
+    RefPushSumGradientTracking,
+};
 use bluefog::optim::{
-    make_optimizer, CommSpec, DecentralizedOptimizer, Dgd, DmSgd, ExactDiffusion,
-    GradientTracking, MomentumKind, ParallelMomentumSgd, PeriodicGlobalAveraging,
-    PushSumGradientTracking, StepOrder,
+    make_optimizer, CommSpec, DecentralizedAdmm, DecentralizedOptimizer, Dgd, DmSgd,
+    ExactDiffusion, GradientTracking, LocalUpdateSgd, MomentumKind, ParallelMomentumSgd,
+    PeriodicGlobalAveraging, ProxKind, PushSumGradientTracking, StepOrder,
 };
 use bluefog::topology::builders;
 use bluefog::topology::dynamic::{OnePeerExpo, OnePeerFromGraph};
@@ -165,6 +169,182 @@ fn factory_rejects_unknown_and_builds_known() {
         let opt = make_optimizer(algo, 0.1, 0.9, CommSpec::Static).unwrap();
         assert!(!opt.name().is_empty());
     }
+}
+
+/// Runs the heterogeneous quadratic of [`solve`] and records the full
+/// bit pattern of every rank's iterate after every step — the equality
+/// oracle for the pipeline-vs-frozen-reference parity tests.
+fn trace(
+    make_opt: impl Fn(usize) -> Box<dyn DecentralizedOptimizer> + Send + Sync + 'static,
+    topo_name: &str,
+    iters: usize,
+) -> Vec<Vec<u32>> {
+    let (graph, weights) = builders::by_name(topo_name, N).unwrap();
+    run_spmd(SpmdConfig::new(N).with_topology(graph, weights), move |ctx| {
+        let d = 4;
+        let c: Vec<f32> = (0..d).map(|j| (ctx.rank() * d + j) as f32).collect();
+        let mut x = vec![0.0f32; d];
+        let mut opt = make_opt(ctx.size());
+        let mut bits = Vec::with_capacity(iters * d);
+        for _ in 0..iters {
+            let grad: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| xi - ci).collect();
+            opt.step(ctx, &mut x, &grad)?;
+            bits.extend(x.iter().map(|v| v.to_bits()));
+        }
+        Ok(bits)
+    })
+    .unwrap()
+}
+
+#[test]
+fn pipeline_matches_frozen_references_bitwise() {
+    const ITERS: usize = 60;
+    type Maker = Box<dyn Fn(usize) -> Box<dyn DecentralizedOptimizer> + Send + Sync>;
+    let mut cases: Vec<(&str, &str, Maker, Maker)> = vec![
+        (
+            "dgd-atc",
+            "ring",
+            Box::new(|_| Box::new(Dgd::new(0.1, StepOrder::Atc, CommSpec::Static))),
+            Box::new(|_| Box::new(RefDgd::new(0.1, StepOrder::Atc, CommSpec::Static))),
+        ),
+        (
+            "dgd-awc",
+            "ring",
+            Box::new(|_| Box::new(Dgd::new(0.1, StepOrder::Awc, CommSpec::Static))),
+            Box::new(|_| Box::new(RefDgd::new(0.1, StepOrder::Awc, CommSpec::Static))),
+        ),
+        (
+            "dgd-dynamic",
+            "expo2",
+            Box::new(|n| {
+                Box::new(Dgd::new(
+                    0.05,
+                    StepOrder::Atc,
+                    CommSpec::Dynamic(Arc::new(OnePeerExpo::new(n))),
+                ))
+            }),
+            Box::new(|n| {
+                Box::new(RefDgd::new(
+                    0.05,
+                    StepOrder::Atc,
+                    CommSpec::Dynamic(Arc::new(OnePeerExpo::new(n))),
+                ))
+            }),
+        ),
+        (
+            "exact-diffusion",
+            "ring",
+            Box::new(|_| Box::new(ExactDiffusion::new(0.1, CommSpec::Static))),
+            Box::new(|_| Box::new(RefExactDiffusion::new(0.1, CommSpec::Static))),
+        ),
+        (
+            "gradient-tracking",
+            "ring",
+            Box::new(|_| Box::new(GradientTracking::new(0.1, CommSpec::Static))),
+            Box::new(|_| Box::new(RefGradientTracking::new(0.1, CommSpec::Static))),
+        ),
+        (
+            "push-sum-gt",
+            "mesh",
+            Box::new(|n| {
+                let base = builders::mesh_grid_2d(n);
+                Box::new(PushSumGradientTracking::new(0.05, Arc::new(OnePeerFromGraph::new(&base))))
+            }),
+            Box::new(|n| {
+                let base = builders::mesh_grid_2d(n);
+                Box::new(RefPushSumGradientTracking::new(
+                    0.05,
+                    Arc::new(OnePeerFromGraph::new(&base)),
+                ))
+            }),
+        ),
+        (
+            "periodic-global",
+            "ring",
+            Box::new(|_| {
+                Box::new(PeriodicGlobalAveraging::new(
+                    Dgd::new(0.1, StepOrder::Atc, CommSpec::Static),
+                    10,
+                    AllreduceAlgo::Ring,
+                ))
+            }),
+            Box::new(|_| {
+                Box::new(RefPeriodicGlobalAveraging::new(
+                    RefDgd::new(0.1, StepOrder::Atc, CommSpec::Static),
+                    10,
+                    AllreduceAlgo::Ring,
+                ))
+            }),
+        ),
+    ];
+    for (label, kind, ord) in [
+        ("dmsgd-vanilla-atc", MomentumKind::Vanilla, StepOrder::Atc),
+        ("dmsgd-vanilla-awc", MomentumKind::Vanilla, StepOrder::Awc),
+        ("dmsgd-synced", MomentumKind::Synced, StepOrder::Atc),
+        ("qg-dmsgd", MomentumKind::QuasiGlobal, StepOrder::Atc),
+    ] {
+        cases.push((
+            label,
+            "expo2",
+            Box::new(move |_| Box::new(DmSgd::new(0.05, 0.9, kind, ord, CommSpec::Static))),
+            Box::new(move |_| Box::new(RefDmSgd::new(0.05, 0.9, kind, ord, CommSpec::Static))),
+        ));
+    }
+    for (label, topo, new, old) in cases {
+        let got = trace(new, topo, ITERS);
+        let want = trace(old, topo, ITERS);
+        assert_eq!(got, want, "{label}: pipeline diverged bitwise from the frozen reference");
+    }
+}
+
+#[test]
+fn local_update_h1_is_plain_dsgd_bitwise() {
+    let h1 = trace(|_| Box::new(LocalUpdateSgd::new(0.1, 1, CommSpec::Static)), "ring", 80);
+    let dgd = trace(|_| Box::new(Dgd::new(0.1, StepOrder::Atc, CommSpec::Static)), "ring", 80);
+    assert_eq!(h1, dgd, "LocalUpdateSgd(H=1) must be bitwise plain ATC D-SGD");
+}
+
+/// ADMM on the ring: returns (distance of the network-mean iterate from
+/// the true optimum c_bar, max-node spread around the network mean).
+fn admm_ring(alpha: f32, iters: usize) -> (f64, f64) {
+    let results = trace(
+        move |_| Box::new(DecentralizedAdmm::new(alpha, ProxKind::Quadratic)),
+        "ring",
+        iters,
+    );
+    let d = 4;
+    // Final iterate of each rank = the last d bit patterns of its trace.
+    let finals: Vec<Vec<f64>> = results
+        .iter()
+        .map(|bits| {
+            bits[bits.len() - d..].iter().map(|&b| f32::from_bits(b) as f64).collect()
+        })
+        .collect();
+    let mean: Vec<f64> =
+        (0..d).map(|j| finals.iter().map(|x| x[j]).sum::<f64>() / N as f64).collect();
+    let want: Vec<f64> =
+        (0..d).map(|j| (0..N).map(|r| (r * d + j) as f64).sum::<f64>() / N as f64).collect();
+    let mean_err =
+        mean.iter().zip(&want).map(|(m, w)| (m - w).powi(2)).sum::<f64>().sqrt();
+    let spread = finals
+        .iter()
+        .map(|x| x.iter().zip(&mean).map(|(xi, m)| (xi - m).powi(2)).sum::<f64>().sqrt())
+        .fold(0.0, f64::max);
+    (mean_err, spread)
+}
+
+#[test]
+fn admm_consensus_on_ring() {
+    // Fixed point: the network mean lands on the global optimum, and a
+    // larger penalty alpha tightens the consensus spread.
+    let (mean_err, _) = admm_ring(2.0, 300);
+    assert!(mean_err < 1e-2, "ADMM mean iterate off the optimum: {mean_err}");
+    let (_, tight) = admm_ring(4.0, 300);
+    let (_, loose) = admm_ring(1.0, 300);
+    assert!(
+        tight < loose,
+        "larger alpha must tighten ADMM consensus: alpha=4 {tight} vs alpha=1 {loose}"
+    );
 }
 
 #[test]
